@@ -1,0 +1,86 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): the full regularization
+//! path on a real-sized synthetic workload, with and without DPC, on both
+//! engines — proving all layers compose:
+//!
+//!   L1 Pallas screen kernel + L2 FISTA scan  →  HLO artifacts  →
+//!   L3 rust coordinator (this binary) via PJRT, against the exact engine.
+//!
+//! Reports the paper's headline metrics: rejection-ratio curve and speedup.
+//!
+//!     make artifacts && cargo run --release --example e2e_path
+//!     (add --quick for a CI-sized run)
+
+use mtfl_dpc::coordinator::metrics::{mean_rejection_curve, speedup_row};
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, ScreenerKind};
+use mtfl_dpc::coordinator::report;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::experiments::exp_opts;
+use mtfl_dpc::runtime::AotEngine;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // synth2k config shape (T=20, N=50, d=2000) so the AOT engine can run
+    // the same problem; --quick uses the `quick` artifact config shape.
+    let (t, n, d, grid) = if quick { (4, 16, 256, 12) } else { (20, 50, 2000, 50) };
+    let cfg_note = if quick { "quick" } else { "synth2k" };
+    let (ds, _) = synthetic1(&SynthOptions { t, n, d, seed: 7, ..Default::default() });
+    println!("== e2e: {} (T={t}, N={n}, d={d}), {grid}-value grid ==\n", ds.name);
+
+    // ---- exact engine: baseline (no screening) vs DPC ----
+    let base = run_path(&ds, &exp_opts(grid, ScreenerKind::None), &EngineKind::Exact)?;
+    println!(
+        "exact baseline: {:.2}s total ({} lambda values)",
+        base.total_secs,
+        base.records.len()
+    );
+    let dpc = run_path(&ds, &exp_opts(grid, ScreenerKind::Dpc), &EngineKind::Exact)?;
+    println!(
+        "exact DPC+solver: {:.2}s total (screen {:.3}s)",
+        dpc.total_secs, dpc.screen_secs
+    );
+
+    let row = speedup_row(&base, &dpc);
+    println!("\n{}", report::render_table1(&[row]));
+
+    let curve = mean_rejection_curve(&[dpc.clone()]);
+    println!("{}", report::render_rejection_curve("e2e rejection curve (exact)", &curve));
+
+    // ---- AOT engine (PJRT) if artifacts are present ----
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        match AotEngine::new(&dir) {
+            Ok(engine) => {
+                let mut opts = exp_opts(grid, ScreenerKind::Dpc);
+                opts.margin = 1e-3; // f32 engine float-safety margin
+                match run_path(&ds, &opts, &EngineKind::Aot(&engine)) {
+                    Ok(aot) => {
+                        println!(
+                            "AOT engine (PJRT, {cfg_note} config): {:.2}s total \
+                             (screen {:.3}s), mean rejection {:.4}",
+                            aot.total_secs,
+                            aot.screen_secs,
+                            aot.mean_rejection_ratio()
+                        );
+                        // cross-engine agreement on the path objectives
+                        let mut max_rel = 0.0f64;
+                        for (a, b) in aot.records.iter().zip(&dpc.records) {
+                            let rel = (a.obj - b.obj).abs() / b.obj.abs().max(1.0);
+                            max_rel = max_rel.max(rel);
+                        }
+                        println!("max relative objective deviation AOT vs exact: {max_rel:.2e}");
+                    }
+                    Err(e) => println!("AOT path skipped: {e}"),
+                }
+            }
+            Err(e) => println!("AOT engine unavailable: {e}"),
+        }
+    } else {
+        println!("(no artifacts/ — run `make artifacts` to exercise the AOT engine)");
+    }
+
+    println!("\nheadline: speedup {:.1}x, mean rejection {:.4}",
+        base.total_secs / dpc.total_secs.max(1e-9),
+        dpc.mean_rejection_ratio());
+    Ok(())
+}

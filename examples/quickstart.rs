@@ -1,0 +1,92 @@
+//! Quickstart: generate a small multi-task problem, compute λ_max, screen
+//! with DPC at one λ, and solve — the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::ops;
+use mtfl_dpc::screening::dpc::{DpcScreener, DualRef};
+use mtfl_dpc::solver::{fista, SolveOptions};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A multi-task dataset: 5 tasks, 40 samples each, 500 shared features.
+    let (ds, truth) = synthetic1(&SynthOptions {
+        t: 5,
+        n: 40,
+        d: 500,
+        support_frac: 0.05,
+        noise: 0.01,
+        seed: 42,
+    });
+    println!("dataset: T={} tasks, N=40 samples each, d={} features", ds.t(), ds.d);
+    println!("true support: {} features", truth.active.len());
+
+    // 2. λ_max — above it the solution is exactly zero (Theorem 1).
+    let (dref, lam_max) = DualRef::at_lambda_max(&ds);
+    println!("lambda_max = {lam_max:.4}");
+
+    // 3. Screen at λ = 0.7 λ_max with DPC (safe: rejected features are
+    //    *guaranteed* zero rows of the solution), solve the reduced
+    //    problem, then screen *sequentially* (Corollary 9) at λ = 0.3 λ_max
+    //    from that solution — the reference tightens as λ decreases.
+    let screener = DpcScreener::new(&ds);
+    let t_count = ds.t();
+    let mut dref_seq = dref;
+    let mut outcome = screener.screen(&ds, &dref_seq, 0.7 * lam_max);
+    let mut lam = 0.7 * lam_max;
+    for &ratio in &[0.7, 0.55, 0.42, 0.3] {
+        lam = ratio * lam_max;
+        outcome = screener.screen(&ds, &dref_seq, lam);
+        println!(
+            "DPC at lambda/lambda_max={ratio}: rejected {}/{} (sequential, Cor. 9)",
+            outcome.num_rejected(),
+            ds.d
+        );
+        // solve the reduced problem, embed, and move the dual reference
+        let keep = outcome.kept_indices();
+        let sol = fista(&ds.restrict(&keep), lam, None, &SolveOptions::default());
+        let mut w_full = vec![0.0f64; ds.d * t_count];
+        for (j, &l) in keep.iter().enumerate() {
+            w_full[l * t_count..(l + 1) * t_count]
+                .copy_from_slice(&sol.w[j * t_count..(j + 1) * t_count]);
+        }
+        dref_seq = DualRef::from_solution(&ds, lam, &w_full);
+    }
+
+    // 4. Solve on the compacted problem; embed the solution back.
+    let keep = outcome.kept_indices();
+    let reduced = ds.restrict(&keep);
+    let sol = fista(&reduced, lam, None, &SolveOptions::default());
+    println!(
+        "solved reduced problem (d={} -> {}): obj={:.5}, gap={:.2e}, {} iters",
+        ds.d,
+        reduced.d,
+        sol.obj,
+        sol.gap,
+        sol.iters
+    );
+
+    // 5. Verify against the full solve: identical objective.
+    let full = fista(&ds, lam, None, &SolveOptions::default());
+    println!(
+        "full problem objective: {:.5}  (difference {:.2e})",
+        full.obj,
+        (full.obj - sol.obj).abs()
+    );
+
+    let active = full.active_set(ds.t(), 1e-7);
+    let recovered = truth.active.iter().filter(|l| active.contains(l)).count();
+    println!("active set: {} features ({recovered} of the true support)", active.len());
+
+    // the screening certificate must agree with the solution
+    let g = ops::gscore(
+        &ds,
+        &ops::stacked_scale(&ops::residual(&ds, &full.w), -1.0 / lam),
+    );
+    let max_rejected_g =
+        outcome.rejected.iter().zip(&g).filter(|(r, _)| **r).map(|(_, &v)| v).fold(0.0, f64::max);
+    println!("max g_l(theta*) over rejected features: {max_rejected_g:.4} (< 1 = safe)");
+    assert!(max_rejected_g < 1.0);
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! TDT2-style one-vs-rest text classification: sparse Zipf-weighted
+//! documents, dead-vocabulary pruning, then a screened λ-path that picks a
+//! shared topical vocabulary across categories.
+//!
+//!     cargo run --release --example text_multitask
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use mtfl_dpc::data::textsim::{nonzero_features, textsim, TextSimOptions};
+use mtfl_dpc::solver::SolveOptions;
+
+fn main() -> anyhow::Result<()> {
+    let raw = textsim(&TextSimOptions {
+        categories: 8,
+        n_pos: 25,
+        d: 6000,
+        doc_len: 120,
+        topic_terms: 40,
+        seed: 11,
+    });
+    println!(
+        "corpus: {} one-vs-rest tasks, {} docs/task, vocabulary {}",
+        raw.t(),
+        raw.tasks[0].n,
+        raw.d
+    );
+
+    // the paper prunes all-zero features first (36771 -> 24262 on TDT2)
+    let kept_vocab = nonzero_features(&raw);
+    let ds = raw.restrict(&kept_vocab);
+    println!("after dead-term pruning: {} of {} terms", ds.d, raw.d);
+
+    let opts = PathOptions {
+        ratios: lambda_grid(40, 1.0, 0.01),
+        solve: SolveOptions { tol: 1e-6, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    let res = run_path(&ds, &opts, &EngineKind::Exact)?;
+
+    println!(
+        "path: {:.2}s (screen {:.2}s); mean rejection {:.4}",
+        res.total_secs,
+        res.screen_secs,
+        res.mean_rejection_ratio()
+    );
+
+    // show the selection trajectory: shared vocabulary size along the path
+    println!("\n lambda/lmax   kept-by-DPC   active-terms");
+    for r in res.records.iter().step_by(5) {
+        println!(
+            "   {:8.4}   {:>10}   {:>10}",
+            r.ratio,
+            r.kept,
+            ds.d - r.inactive
+        );
+    }
+
+    let t = ds.t();
+    let shared_terms = res
+        .last_w
+        .chunks_exact(t)
+        .filter(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt() > 1e-7)
+        .count();
+    println!(
+        "\nsmallest lambda selects {shared_terms} terms shared across all {} categories",
+        ds.t()
+    );
+    Ok(())
+}

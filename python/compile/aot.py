@@ -1,0 +1,168 @@
+"""AOT lowering: jax (L2, calling L1 Pallas) -> HLO *text* artifacts.
+
+HLO text (NOT `lowered.compile()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published `xla` rust
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Config selection: --configs quick,synth2k (or env MTFL_AOT_CONFIGS).
+
+Every artifact is registered in <out>/manifest.tsv with its full ABI
+(shapes/dtypes of inputs and outputs) so the rust runtime can type-check
+calls before touching PJRT.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+# (T, N, D, solver buckets, fista chunk steps). Buckets are the reduced
+# dimensions the coordinator packs screened problems into; each gets its
+# own fixed-shape fista/lipschitz executable.
+CONFIGS = {
+    # tiny shapes for unit/integration tests — compile in seconds
+    "quick": dict(T=4, N=16, D=256, buckets=[64, 128, 256], steps=40),
+    # synthetic-experiment scale (scaled from the paper's 50x50x10k+)
+    "synth2k": dict(T=20, N=50, D=2000, buckets=[250, 500, 1000, 2000], steps=50),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lower_one(fn, in_specs):
+    lowered = jax.jit(fn).lower(*in_specs)
+    out_tree = lowered.out_info
+    outs = jax.tree_util.tree_leaves(out_tree)
+    return to_hlo_text(lowered), [(tuple(o.shape), "f32") for o in outs]
+
+
+def fmt_shapes(specs):
+    return ";".join("x".join(map(str, s.shape)) + ":f32" for s in specs)
+
+
+def fmt_out(outs):
+    return ";".join("x".join(map(str, s)) + ":" + d for s, d in outs)
+
+
+def emit(out_dir, rows, name, fn, in_specs, kind, cfg_name, cfg, bucket=0, steps=0):
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    text, outs = lower_one(fn, in_specs)
+    with open(path, "w") as f:
+        f.write(text)
+    rows.append(
+        "\t".join(
+            [
+                name,
+                kind,
+                cfg_name,
+                str(cfg["T"]),
+                str(cfg["N"]),
+                str(cfg["D"]),
+                str(bucket),
+                str(steps),
+                fmt_shapes(in_specs),
+                fmt_out(outs),
+            ]
+        )
+    )
+    print(f"  wrote {name}.hlo.txt ({len(text)} chars)")
+
+
+def build_config(out_dir, rows, cfg_name, cfg):
+    T, N, D = cfg["T"], cfg["N"], cfg["D"]
+    print(f"config {cfg_name}: T={T} N={N} D={D} buckets={cfg['buckets']}")
+
+    x = spec(T, N, D)
+    y = spec(T, N)
+    s1 = spec(1)
+
+    emit(out_dir, rows, f"lammax_{cfg_name}", model.lammax_fn, [x, y], "lammax", cfg_name, cfg)
+
+    block_d = model.pick_block(D)
+    emit(
+        out_dir,
+        rows,
+        f"screen_{cfg_name}",
+        model.make_screen_fn(block_d),
+        [x, y, spec(T, N), spec(T, N), s1],
+        "screen",
+        cfg_name,
+        cfg,
+    )
+
+    for b in cfg["buckets"]:
+        xb = spec(T, N, b)
+        wb = spec(b, T)
+        emit(
+            out_dir,
+            rows,
+            f"lipschitz_{cfg_name}_b{b}",
+            model.lipschitz_fn,
+            [xb],
+            "lipschitz",
+            cfg_name,
+            cfg,
+            bucket=b,
+        )
+        emit(
+            out_dir,
+            rows,
+            f"fista_{cfg_name}_b{b}",
+            model.make_fista_fn(cfg["steps"]),
+            [xb, y, wb, wb, s1, s1, s1],
+            "fista",
+            cfg_name,
+            cfg,
+            bucket=b,
+            steps=cfg["steps"],
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=os.environ.get("MTFL_AOT_CONFIGS", "quick,synth2k"),
+        help="comma-separated subset of: " + ",".join(CONFIGS),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    rows = []
+    for cfg_name in args.configs.split(","):
+        cfg_name = cfg_name.strip()
+        if not cfg_name:
+            continue
+        build_config(args.out, rows, cfg_name, CONFIGS[cfg_name])
+
+    header = "name\tkind\tcfg\tT\tN\tD\tbucket\tsteps\tinputs\toutputs"
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write(header + "\n" + "\n".join(rows) + "\n")
+    print(f"manifest: {len(rows)} artifacts -> {args.out}/manifest.tsv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only) + the pure-jnp oracle (ref)."""
+
+from . import ref  # noqa: F401
+from .gscore import gscore  # noqa: F401
+from .matmul import grad21, matmul_xw  # noqa: F401
+from .prox21 import prox21  # noqa: F401
+from .screen import screen_scores, secular_newton_batch  # noqa: F401

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: dual constraint scores g_l(theta) for all features.
+
+g_l(theta) = sum_t <x_l^{(t)}, theta_t>^2  (Eq. 16) is the sweep behind
+lambda_max (Thm 1), the dual-feasibility scaling in duality gaps, and the
+KKT screening check.  Tiled over d: each grid step holds a (T, N, d_blk)
+slab in VMEM and issues per-task (1,N)x(N,d_blk) MXU contractions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gscore_kernel(x_ref, th_ref, g_ref):
+    x = x_ref[...]       # (T, N, d_blk)
+    th = th_ref[...]     # (T, N)
+    c = jnp.einsum("tnd,tn->dt", x, th)
+    g_ref[...] = jnp.sum(c * c, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def gscore(X, theta, block_d=512):
+    """g: (D,). D must divide by block_d (pad with zero columns: g=0)."""
+    T, N, D = X.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    return pl.pallas_call(
+        _gscore_kernel,
+        grid=(D // block_d,),
+        in_specs=[
+            pl.BlockSpec((T, N, block_d), lambda i: (0, 0, i)),
+            pl.BlockSpec((T, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((D,), X.dtype),
+        interpret=True,
+    )(X, theta)

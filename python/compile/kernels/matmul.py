@@ -1,0 +1,70 @@
+"""L1 Pallas kernels for the multi-matrix matmuls in the FISTA hot loop.
+
+matmul_xw : Z[t] = X_t w_t     — forward residual sweep, accumulated
+            across d-blocks (the grid is the reduction axis; the output
+            block is revisited every step, the canonical Pallas
+            accumulation pattern).
+grad21    : G[l,t] = <x_l^{(t)}, R_t>  — gradient sweep, tiled over d.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xw_kernel(x_ref, w_ref, z_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    x = x_ref[...]     # (T, N, d_blk)
+    w = w_ref[...]     # (d_blk, T)
+    z_ref[...] += jnp.einsum("tnd,dt->tn", x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def matmul_xw(X, W, block_d=512):
+    """Z: (T, N) = stack_t X_t w_t."""
+    T, N, D = X.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    return pl.pallas_call(
+        _xw_kernel,
+        grid=(D // block_d,),
+        in_specs=[
+            pl.BlockSpec((T, N, block_d), lambda i: (0, 0, i)),
+            pl.BlockSpec((block_d, T), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, N), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, N), X.dtype),
+        interpret=True,
+    )(X, W)
+
+
+def _grad_kernel(x_ref, r_ref, g_ref):
+    x = x_ref[...]     # (T, N, d_blk)
+    r = r_ref[...]     # (T, N)
+    g_ref[...] = jnp.einsum("tnd,tn->dt", x, r)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def grad21(X, R, block_d=512):
+    """G: (D, T) with G[l,t] = <x_l^{(t)}, R_t>."""
+    T, N, D = X.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=(D // block_d,),
+        in_specs=[
+            pl.BlockSpec((T, N, block_d), lambda i: (0, 0, i)),
+            pl.BlockSpec((T, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d, T), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((D, T), X.dtype),
+        interpret=True,
+    )(X, R)

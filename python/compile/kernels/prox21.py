@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: row-wise group soft-threshold (prox of kappa*||.||_2,1).
+
+The prox in every FISTA step: each row w^l of W shrinks toward 0 by
+max(0, 1 - kappa/||w^l||).  Tiled over d; pure VPU elementwise work on a
+(d_blk, T) block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prox_kernel(w_ref, k_ref, o_ref):
+    w = w_ref[...]            # (d_blk, T)
+    kappa = k_ref[0]
+    rn = jnp.sqrt(jnp.sum(w * w, axis=1, keepdims=True))
+    scale = jnp.maximum(0.0, 1.0 - kappa / jnp.maximum(rn, 1e-38))
+    o_ref[...] = scale * w
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def prox21(W, kappa, block_d=2048):
+    """W: (D,T), kappa: (1,) array -> shrunk W."""
+    D, T = W.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    return pl.pallas_call(
+        _prox_kernel,
+        grid=(D // block_d,),
+        in_specs=[
+            pl.BlockSpec((block_d, T), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_d, T), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((D, T), W.dtype),
+        interpret=True,
+    )(W, jnp.reshape(kappa, (1,)))

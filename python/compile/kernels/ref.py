@@ -1,0 +1,238 @@
+"""Pure-jnp oracles for every Pallas kernel and for the DPC math.
+
+These are the *reference semantics*: deliberately simple, written straight
+from the paper's equations, and independent of the Pallas implementations
+(e.g. the QP1QC oracle uses bisection on the secular equation while the
+kernel uses safeguarded Newton). pytest compares kernels against this file.
+
+Conventions (shared across the whole repo):
+  X      : (T, N, D)  — task-stacked data matrices, equal N per task
+  y      : (T, N)     — responses
+  theta  : (T, N)     — dual variable (one block per task)
+  W      : (D, T)     — weight matrix, rows are feature groups
+  o      : (T, N)     — ball center from Theorem 5
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Elementary pieces
+# ---------------------------------------------------------------------------
+
+
+def task_corr(X, v):
+    """c[l, t] = <x_l^{(t)}, v_t>   (the dual correlation sweep).  -> (D, T)."""
+    return jnp.einsum("tnd,tn->dt", X, v)
+
+
+def gscore(X, theta):
+    """g_l(theta) = sum_t <x_l^{(t)}, theta_t>^2  (Eq. 16).  -> (D,)."""
+    c = task_corr(X, theta)
+    return jnp.sum(c * c, axis=1)
+
+
+def col_sqnorms(X):
+    """b2[l, t] = ||x_l^{(t)}||^2.  -> (D, T)."""
+    return jnp.einsum("tnd,tnd->dt", X, X)
+
+
+def lambda_max(X, y):
+    """Theorem 1: lambda_max = max_l sqrt(g_l(y)); also returns argmax l*."""
+    g = gscore(X, y)
+    lstar = jnp.argmax(g)
+    return jnp.sqrt(g[lstar]), lstar
+
+
+def normal_at_lmax(X, y):
+    """n(lambda_max) = grad g_{l*}(y / lambda_max)  (Eq. 20, second case).
+
+    n_t = 2 <x_{l*}^{(t)}, y_t/lmax> x_{l*}^{(t)}    -> (T, N)
+    """
+    lmax, lstar = lambda_max(X, y)
+    xs = X[:, :, lstar]  # (T, N)
+    coef = 2.0 * jnp.einsum("tn,tn->t", xs, y) / lmax  # (T,)
+    return coef[:, None] * xs
+
+
+def prox21(W, kappa):
+    """Row-wise group soft-threshold: prox of kappa * ||.||_{2,1}."""
+    rn = jnp.sqrt(jnp.sum(W * W, axis=1, keepdims=True))
+    scale = jnp.maximum(0.0, 1.0 - kappa / jnp.maximum(rn, 1e-38))
+    return scale * W
+
+
+def matmul_xw(X, W):
+    """Z[t, n] = (X_t w_t)[n].  -> (T, N)."""
+    return jnp.einsum("tnd,dt->tn", X, W)
+
+
+def grad21(X, R):
+    """G[l, t] = <x_l^{(t)}, R_t> — gradient of the smooth loss when
+    R = X W - y.  -> (D, T)."""
+    return jnp.einsum("tnd,tn->dt", X, R)
+
+
+def primal_obj(X, y, W, lam):
+    R = matmul_xw(X, W) - y
+    return 0.5 * jnp.sum(R * R) + lam * jnp.sum(jnp.sqrt(jnp.sum(W * W, axis=1)))
+
+
+def dual_obj(y, theta, lam):
+    """D(theta) = 0.5||y||^2 - lam^2/2 ||y/lam - theta||^2  (Eq. 11)."""
+    diff = y / lam - theta
+    return 0.5 * jnp.sum(y * y) - 0.5 * lam * lam * jnp.sum(diff * diff)
+
+
+def dual_feasible_point(X, y, W, lam):
+    """Scale the residual into the dual feasible set F (for duality gaps)."""
+    z = (y - matmul_xw(X, W)) / lam
+    m = jnp.sqrt(jnp.max(gscore(X, z)))
+    return z / jnp.maximum(1.0, m)
+
+
+def duality_gap(X, y, W, lam):
+    th = dual_feasible_point(X, y, W, lam)
+    return primal_obj(X, y, W, lam) - dual_obj(y, th, lam)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5: the ball containing theta*(lambda)
+# ---------------------------------------------------------------------------
+
+
+def dpc_ball(y, theta0, n, lam, lam0):
+    """Center o(lam, lam0) and radius Delta of Theta(lam, lam0)  (Eqs. 21-24).
+
+    `theta0` is theta*(lam0); `n` is n(lam0) (Eq. 20) — the caller picks the
+    residual vector (lam0 < lmax) or the gradient at y/lmax (lam0 = lmax).
+    """
+    r = y / lam - theta0
+    nn = jnp.sum(n * n)
+    rp = r - (jnp.sum(n * r) / jnp.maximum(nn, 1e-38)) * n
+    o = theta0 + 0.5 * rp
+    delta = 0.5 * jnp.sqrt(jnp.sum(rp * rp))
+    return o, delta
+
+
+# ---------------------------------------------------------------------------
+# QP1QC oracle (Theorem 7) — bisection on the secular equation.
+# ---------------------------------------------------------------------------
+
+
+def secular_bisect(a, b2, delta, iters=200):
+    """Reference solve of s_l = max_{theta in ball} g_l(theta), vectorized
+    over features.
+
+    a  : (D, T)  a[l,t] = <x_l^{(t)}, o_t>
+    b2 : (D, T)  b2[l,t] = ||x_l^{(t)}||^2
+    delta : scalar ball radius.
+
+    Implements Theorem 7 with H = -2 diag(b2), q = -2 b |a| and solves
+    ||u(alpha)|| = Delta on (2 rho^2, inf) by bisection — slow but
+    unconditionally correct, which is what an oracle should be.
+    """
+    a = jnp.asarray(a, jnp.float64)
+    b2 = jnp.asarray(b2, jnp.float64)
+    delta = jnp.asarray(delta, jnp.float64)
+
+    absa = jnp.abs(a)
+    c = 2.0 * jnp.sqrt(b2) * absa  # -q  (so u(alpha) = c / (alpha - beta))
+    beta = 2.0 * b2  # -diag(H)
+    amin = jnp.max(beta, axis=1)  # 2 rho_l^2, (D,)
+    ssq = jnp.sum(a * a, axis=1)  # sum_t <x,o>^2
+
+    # Closed-form branch (Thm 7.2): the linear term vanishes on the active
+    # index set I (where b2 attains rho^2) and ||ubar|| <= Delta.
+    is_I = beta >= amin[:, None] * (1.0 - 1e-12)
+    denom = jnp.maximum(amin[:, None] - beta, 1e-300)
+    ubar = jnp.where(is_I, 0.0, c / denom)
+    ctol = 1e-12 * (1.0 + jnp.max(c))
+    qI_zero = jnp.all(jnp.where(is_I, c <= ctol, True), axis=1)
+    closed = qI_zero & (jnp.sqrt(jnp.sum(ubar * ubar, axis=1)) <= delta)
+    s_closed = ssq + 0.5 * amin * delta**2 + 0.5 * jnp.sum(c * ubar, axis=1)
+
+    # Bisection branch on [amin, amin + ||c||/Delta]:
+    # ||u(alpha)|| <= ||c|| / (alpha - amin), so phi(hi) >= 0.
+    lo = amin
+    hi = amin + jnp.sqrt(jnp.sum(c * c, axis=1)) / jnp.maximum(delta, 1e-300)
+    hi = jnp.maximum(hi, amin * (1 + 1e-6) + 1e-6)
+
+    def norm_u(alpha):
+        u = c / jnp.maximum(alpha[:, None] - beta, 1e-300)
+        return jnp.sqrt(jnp.sum(u * u, axis=1))
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_big = norm_u(mid) > delta  # alpha too small
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    alpha = 0.5 * (lo + hi)
+    u = c / jnp.maximum(alpha[:, None] - beta, 1e-300)
+    s_active = ssq + 0.5 * alpha * delta**2 + 0.5 * jnp.sum(c * u, axis=1)
+
+    trivial = (delta <= 0.0) | (amin <= 1e-300)
+    return jnp.where(trivial, ssq, jnp.where(closed, s_closed, s_active))
+
+
+def screen_scores(X, o, delta, iters=200):
+    """s_l(lam, lam0) for every feature (the left side of R*)."""
+    a = task_corr(X, o)
+    b2 = col_sqnorms(X)
+    return secular_bisect(a, b2, delta, iters=iters)
+
+
+def dpc_rejects(X, y, theta0, n, lam, lam0):
+    """Full DPC rule (Thm 8): boolean mask of features certified inactive."""
+    o, delta = dpc_ball(y, theta0, n, lam, lam0)
+    s = screen_scores(X, o, delta)
+    return s < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Reference FISTA solver (used to validate the L2 scan and the rust solver)
+# ---------------------------------------------------------------------------
+
+
+def lipschitz(X, iters=100, seed=0):
+    """L = max_t sigma_max(X_t)^2 by simultaneous power iteration."""
+    T, N, D = X.shape
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (T, D), dtype=X.dtype)
+
+    def body(_, v):
+        w = jnp.einsum("tnd,td->tn", X, v)
+        u = jnp.einsum("tnd,tn->td", X, w)
+        return u / jnp.maximum(jnp.sqrt(jnp.sum(u * u, axis=1, keepdims=True)), 1e-38)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    w = jnp.einsum("tnd,td->tn", X, v)
+    return jnp.max(jnp.sum(w * w, axis=1) / jnp.maximum(jnp.sum(v * v, axis=1), 1e-38))
+
+
+def fista(X, y, lam, W0=None, steps=500, L=None):
+    """Plain-jnp FISTA on problem (1); returns (W, obj, gap)."""
+    T, N, D = X.shape
+    if W0 is None:
+        W0 = jnp.zeros((D, T), X.dtype)
+    if L is None:
+        L = lipschitz(X)
+    L = jnp.maximum(L, 1e-12)
+
+    def step(carry, _):
+        W, V, t = carry
+        R = matmul_xw(X, V) - y
+        G = grad21(X, R)
+        Wn = prox21(V - G / L, lam / L)
+        tn = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        Vn = Wn + ((t - 1.0) / tn) * (Wn - W)
+        return (Wn, Vn, tn), None
+
+    (W, _, _), _ = jax.lax.scan(
+        step, (W0, W0, jnp.asarray(1.0, X.dtype)), None, length=steps
+    )
+    return W, primal_obj(X, y, W, lam), duality_gap(X, y, W, lam)

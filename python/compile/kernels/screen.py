@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: fused DPC screening scores (the paper's hot spot).
+
+For every feature l the kernel computes, in one pass over a VMEM-resident
+(T, N, d_blk) slab of X:
+
+    a[l,t]  = <x_l^{(t)}, o_t>          (MXU: (1,N)x(N,d_blk) per task)
+    b2[l,t] = ||x_l^{(t)}||^2
+    s_l     = max_{theta in ball(o, Delta)} g_l(theta)   (Theorem 7)
+
+The inner max is the QP1QC of Theorem 7: minimize
+psi(u) = 1/2 u^T H u + q^T u over ||u|| <= Delta with H = -2 diag(b2),
+q_t = -2 b_t |a_t|.  alpha* solves the secular equation
+||u(alpha)|| = Delta, u_t(alpha) = c_t/(alpha - beta_t) with c = -q,
+beta = -diag(H); we run a *safeguarded Newton* (Eqs. 29-30, bracketed by
+[2 rho^2, 2 rho^2 + ||c||/Delta]) vectorized across the d_blk features —
+pure VPU work, no HBM round-trip between the moments and the solve.
+
+Fusing the moment computation with the secular solve is the point of this
+kernel: a naive implementation writes a, b2 back to HBM (2*d*T floats) and
+re-reads them; here they never leave VMEM/registers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEWTON_ITERS = 30
+
+
+def secular_newton_batch(a, b2, delta):
+    """Vectorized Theorem-7 solve; a, b2: (D, T), delta scalar -> s: (D,).
+
+    Same math as ref.secular_bisect but with a bracketed Newton iteration
+    (monotone from the left since 1/||u(alpha)|| is concave increasing;
+    the bracket is only a float-safety net).
+    """
+    dt = a.dtype
+    absa = jnp.abs(a)
+    b = jnp.sqrt(b2)
+    c = 2.0 * b * absa                     # -q
+    beta = 2.0 * b2                        # -diag(H)
+    amin = jnp.max(beta, axis=1)           # 2 rho^2
+    ssq = jnp.sum(a * a, axis=1)
+    delta = jnp.asarray(delta, dt)
+
+    eps = jnp.asarray(1e-6 if dt == jnp.float32 else 1e-12, dt)
+    tiny = jnp.asarray(1e-30 if dt == jnp.float32 else 1e-290, dt)
+
+    # ---- closed-form branch (Thm 7.2/7.3) ----
+    is_I = beta >= amin[:, None] * (1.0 - 8.0 * eps)
+    denom = jnp.maximum(amin[:, None] - beta, tiny)
+    ubar = jnp.where(is_I, 0.0, c / denom)
+    ctol = eps * (1.0 + jnp.max(c))
+    qI_zero = jnp.all(jnp.where(is_I, c <= ctol, True), axis=1)
+    closed = qI_zero & (jnp.sqrt(jnp.sum(ubar * ubar, axis=1)) <= delta)
+    s_closed = ssq + 0.5 * amin * delta * delta + 0.5 * jnp.sum(c * ubar, axis=1)
+
+    # ---- Newton branch ----
+    cnorm = jnp.sqrt(jnp.sum(c * c, axis=1))
+    lo0 = amin * (1.0 + eps) + tiny
+    hi0 = amin + cnorm / jnp.maximum(delta, tiny) + tiny
+    alpha0 = jnp.minimum(lo0, hi0)  # start at the left end: phi < 0 there
+
+    def newton_body(_, state):
+        alpha, lo, hi = state
+        gap = jnp.maximum(alpha[:, None] - beta, tiny)
+        u = c / gap
+        un2 = jnp.sum(u * u, axis=1)
+        un = jnp.sqrt(un2)
+        # phi = 1/un - 1/delta ; phi' = sum(u^2/gap) / un^3
+        uhu = jnp.sum(u * u / gap, axis=1)
+        # Paper Eq. (30): alpha += un^2 (un - delta) / (delta * u^T (H+aI)^-1 u)
+        step = un2 * (un - delta) / jnp.maximum(delta * uhu, tiny)
+        anew = alpha + step
+        # bracket maintenance: phi<0 (un>delta) => alpha* above; else below
+        lo = jnp.where(un > delta, alpha, lo)
+        hi = jnp.where(un > delta, hi, alpha)
+        bad = (anew <= lo) | (anew >= hi) | ~jnp.isfinite(anew)
+        anew = jnp.where(bad, 0.5 * (lo + hi), anew)
+        return anew, lo, hi
+
+    alpha, _, _ = jax.lax.fori_loop(
+        0, NEWTON_ITERS, newton_body, (alpha0, lo0 * 0.0 + amin, hi0)
+    )
+    u = c / jnp.maximum(alpha[:, None] - beta, tiny)
+    s_active = ssq + 0.5 * alpha * delta * delta + 0.5 * jnp.sum(c * u, axis=1)
+
+    trivial = (delta <= 0.0) | (amin <= tiny)
+    return jnp.where(trivial, ssq, jnp.where(closed, s_closed, s_active))
+
+
+def _screen_kernel(x_ref, o_ref, d_ref, s_ref):
+    x = x_ref[...]          # (T, N, d_blk)
+    o = o_ref[...]          # (T, N)
+    delta = d_ref[0]
+    a = jnp.einsum("tnd,tn->dt", x, o)
+    b2 = jnp.einsum("tnd,tnd->dt", x, x)
+    s_ref[...] = secular_newton_batch(a, b2, delta)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def screen_scores(X, o, delta, block_d=512):
+    """s_l for all features via the fused Pallas kernel.
+
+    X: (T,N,D), o: (T,N), delta: (1,) array. D must be divisible by block_d
+    (aot.py pads datasets to the block size; zero columns give s=0 < 1 and
+    are screened, which is correct).
+    """
+    T, N, D = X.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0, (D, block_d)
+    grid = (D // block_d,)
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, N, block_d), lambda i: (0, 0, i)),
+            pl.BlockSpec((T, N), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((D,), X.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(X, o, jnp.reshape(delta, (1,)))

@@ -1,0 +1,162 @@
+"""L2 JAX graphs — the compute surfaces lowered to HLO artifacts.
+
+Each public function here is one AOT artifact (see aot.py). All scalars
+cross the FFI boundary as shape-(1,) f32 arrays (the rust runtime passes
+rank-1 literals; XLA scalars add no value and the crate's Literal API is
+simplest for vectors). Every function returns a flat tuple of arrays.
+
+Graphs:
+  lammax_fn    : (X, y) -> (lam_max(1,), n(T,N), g(D,))          [Thm 1 + Eq. 20]
+  screen_fn    : (X, y, theta0, n, lam, lam0) -> (s(D,),)        [Thm 5 + 7 + 8]
+  lipschitz_fn : (X,) -> (L(1,),)                                [power iteration]
+  fista_fn     : (X, y, W0, V0, t0, lam, L) ->
+                 (W, V, t(1,), R(T,N), obj(1,), gap(1,))         [K-step chunk]
+
+The screening graph calls the fused Pallas `screen` kernel (L1) so the
+kernel lowers into the same HLO module; FISTA's matmuls are plain jnp
+einsums (XLA's native gemm fusion beats an interpret-mode Pallas matmul
+on CPU — see DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.screen import screen_scores
+
+
+def pick_block(d: int, target: int = 512) -> int:
+    """Largest divisor of d that is <= target (Pallas d-tiling)."""
+    best = 1
+    for b in range(1, min(d, target) + 1):
+        if d % b == 0:
+            best = b
+    return best
+
+
+# ---------------------------------------------------------------------------
+
+
+def lammax_fn(X, y):
+    """lambda_max, the normal-cone vector n(lambda_max), and g_l(y)."""
+    g = ref.gscore(X, y)
+    lstar = jnp.argmax(g)
+    lmax = jnp.sqrt(g[lstar])
+    xs = X[:, :, lstar]                                   # (T, N)
+    coef = 2.0 * jnp.einsum("tn,tn->t", xs, y) / lmax     # (T,)
+    n = coef[:, None] * xs
+    return jnp.reshape(lmax, (1,)), n, g
+
+
+def make_screen_fn(block_d: int):
+    def screen_fn(X, y, theta0, n, lam):
+        """DPC scores s_l(lam, lam0) for all features (Theorem 7).
+
+        The ball needs only theta0/n(lam0)/lam — lam0 itself is folded into
+        those vectors, so it is not part of the ABI (jax would DCE an unused
+        parameter out of the lowered HLO anyway).
+        """
+        o, delta = ref.dpc_ball(y, theta0, n, lam[0], 1.0)
+        s = screen_scores(X, o, delta, block_d=block_d)
+        return (s,)
+
+    return screen_fn
+
+
+def lipschitz_fn(X):
+    """L = max_t sigma_max(X_t)^2 — 80 rounds of simultaneous power iteration.
+
+    Deterministic pseudo-random init (no RNG key in the artifact ABI):
+    a Weyl sequence over feature indices, strictly positive so it cannot be
+    orthogonal to the top eigenvector of the PSD Gram by accident.
+    """
+    T, N, D = X.shape
+    idx = jnp.arange(T * D, dtype=X.dtype).reshape(T, D)
+    v = 1.0 + 0.5 * jnp.sin(idx * 0.6180339887)
+
+    def body(_, v):
+        w = jnp.einsum("tnd,td->tn", X, v)
+        u = jnp.einsum("tnd,tn->td", X, w)
+        return u / jnp.maximum(jnp.sqrt(jnp.sum(u * u, axis=1, keepdims=True)), 1e-38)
+
+    v = jax.lax.fori_loop(0, 80, body, v)
+    w = jnp.einsum("tnd,td->tn", X, v)
+    L = jnp.max(jnp.sum(w * w, axis=1) / jnp.maximum(jnp.sum(v * v, axis=1), 1e-38))
+    return (jnp.reshape(L * 1.0001, (1,)),)  # 1e-4 safety factor on the step bound
+
+
+def make_fista_fn(steps: int):
+    def fista_fn(X, y, W0, V0, t0, lam, L):
+        """One `steps`-iteration FISTA chunk + duality gap at the end."""
+        lam_s = lam[0]
+        L_s = jnp.maximum(L[0], 1e-12)
+
+        def step(carry, _):
+            W, V, t = carry
+            R = ref.matmul_xw(X, V) - y
+            G = ref.grad21(X, R)
+            Wn = ref.prox21(V - G / L_s, lam_s / L_s)
+            tn = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            Vn = Wn + ((t - 1.0) / tn) * (Wn - W)
+            return (Wn, Vn, tn), None
+
+        (W, V, t), _ = jax.lax.scan(step, (W0, V0, t0[0]), None, length=steps)
+        R = ref.matmul_xw(X, W) - y
+        obj = 0.5 * jnp.sum(R * R) + lam_s * jnp.sum(jnp.sqrt(jnp.sum(W * W, axis=1)))
+        # dual feasible point from the residual
+        z = -R / lam_s
+        m = jnp.sqrt(jnp.maximum(jnp.max(ref.gscore(X, z)), 1e-38))
+        thf = z / jnp.maximum(1.0, m)
+        dob = ref.dual_obj(y, thf, lam_s)
+        gap = obj - dob
+        return (
+            W,
+            V,
+            jnp.reshape(t, (1,)),
+            R,
+            jnp.reshape(obj, (1,)),
+            jnp.reshape(gap, (1,)),
+        )
+
+    return fista_fn
+
+
+# ---------------------------------------------------------------------------
+# Convenience: an end-to-end jnp path step (used by python tests only;
+# the production path lives in the rust coordinator).
+# ---------------------------------------------------------------------------
+
+
+def path_with_dpc(X, y, lams, fista_steps=800):
+    """Sequential-DPC lambda path in pure jax — the oracle for the rust
+    coordinator's integration tests. Returns per-lambda (W, keep_mask)."""
+    T, N, D = X.shape
+    lmax_arr, n0, _ = lammax_fn(X, y)
+    lmax = float(lmax_arr[0])
+    out = []
+    theta0 = y / lmax
+    n = n0
+    Wprev = jnp.zeros((D, T), X.dtype)
+    lam0 = lmax
+    for lam in lams:
+        lam = float(lam)
+        o, delta = ref.dpc_ball(y, theta0, n, lam, lam0)
+        s = ref.screen_scores(X, o, delta)
+        keep = s >= 1.0
+        Xr = X[:, :, keep]
+        if Xr.shape[2] == 0:
+            W = jnp.zeros((D, T), X.dtype)
+        else:
+            Wr, _, _ = ref.fista(Xr, y, lam, W0=Wprev[keep, :], steps=fista_steps)
+            W = jnp.zeros((D, T), X.dtype).at[keep, :].set(Wr)
+        out.append((W, keep))
+        R = ref.matmul_xw(X, W) - y
+        theta0 = -R / lam
+        n = y / lam - theta0
+        lam0 = lam
+        Wprev = W
+    return out

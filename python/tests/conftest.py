@@ -1,0 +1,5 @@
+import jax
+
+# Build-time tests run in f64 so oracles are tight; artifacts themselves are
+# lowered without x64 (aot.py) and stay f32.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,196 @@
+"""Pallas kernels vs the pure-jnp oracle (ref.py) — the core L1 signal.
+
+Hypothesis sweeps shapes/dtypes; every kernel must match ref to float
+tolerance on arbitrary inputs, including adversarial ones (zero columns,
+duplicate column norms, huge dynamic range).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gscore, grad21, matmul_xw, prox21, screen_scores
+from compile.kernels import ref
+from compile.kernels.screen import secular_newton_batch
+
+RNG = np.random.default_rng(0)
+
+
+def rand_problem(t, n, d, dtype=np.float32, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    X = (rng.standard_normal((t, n, d)) * scale).astype(dtype)
+    o = rng.standard_normal((t, n)).astype(dtype)
+    return X, o
+
+
+shape_st = st.tuples(
+    st.integers(1, 5),               # T
+    st.integers(1, 24),              # N
+    st.sampled_from([4, 8, 16, 64]), # D (divisible by the chosen blocks)
+    st.sampled_from([np.float32, np.float64]),
+    st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st)
+def test_gscore_matches_ref(args):
+    t, n, d, dtype, seed = args
+    X, th = rand_problem(t, n, d, dtype, seed=seed)
+    got = gscore(jnp.asarray(X), jnp.asarray(th), block_d=4)
+    want = ref.gscore(jnp.asarray(X), jnp.asarray(th))
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st)
+def test_matmul_xw_matches_ref(args):
+    t, n, d, dtype, seed = args
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((t, n, d)).astype(dtype)
+    W = rng.standard_normal((d, t)).astype(dtype)
+    got = matmul_xw(jnp.asarray(X), jnp.asarray(W), block_d=4)
+    want = ref.matmul_xw(jnp.asarray(X), jnp.asarray(W))
+    rtol = 2e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st)
+def test_grad21_matches_ref(args):
+    t, n, d, dtype, seed = args
+    X, r = rand_problem(t, n, d, dtype, seed=seed)
+    got = grad21(jnp.asarray(X), jnp.asarray(r), block_d=4)
+    want = ref.grad21(jnp.asarray(X), jnp.asarray(r))
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st, st.floats(0.0, 5.0))
+def test_prox21_matches_ref(args, kappa):
+    t, _, d, dtype, seed = args
+    rng = np.random.default_rng(seed)
+    W = rng.standard_normal((d, t)).astype(dtype)
+    got = prox21(jnp.asarray(W), jnp.asarray([kappa], dtype=dtype), block_d=4)
+    want = ref.prox21(jnp.asarray(W), kappa)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_prox21_zero_row_stays_zero():
+    W = np.zeros((8, 3), np.float32)
+    got = prox21(jnp.asarray(W), jnp.asarray([1.0], jnp.float32), block_d=4)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_prox21_exact_shrink_value():
+    # a single row with norm 5, kappa=2 -> scaled by 3/5
+    W = np.zeros((4, 2), np.float32)
+    W[1] = [3.0, 4.0]
+    got = np.asarray(prox21(jnp.asarray(W), jnp.asarray([2.0], jnp.float32), block_d=4))
+    np.testing.assert_allclose(got[1], [1.8, 2.4], rtol=1e-6)
+    assert np.all(got[0] == 0) and np.all(got[2:] == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape_st, st.floats(1e-3, 10.0))
+def test_screen_kernel_matches_oracle(args, delta):
+    t, n, d, dtype, seed = args
+    X, o = rand_problem(t, n, d, dtype, seed=seed)
+    Xj, oj = jnp.asarray(X), jnp.asarray(o)
+    got = screen_scores(Xj, oj, jnp.asarray([delta], dtype), block_d=4)
+    want = ref.screen_scores(Xj, oj, delta)
+    rtol = 2e-4 if dtype == np.float32 else 1e-9
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-5)
+
+
+def test_screen_zero_columns_rejected():
+    # zero feature columns must give s = 0 < 1 (padding-correctness)
+    X = np.zeros((2, 8, 8), np.float32)
+    X[:, :, :4] = RNG.standard_normal((2, 8, 4)).astype(np.float32)
+    o = RNG.standard_normal((2, 8)).astype(np.float32)
+    s = np.asarray(screen_scores(jnp.asarray(X), jnp.asarray(o), jnp.asarray([0.5], jnp.float32), block_d=4))
+    assert np.all(s[4:] == 0.0)
+    assert np.all(s[:4] > 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 6),
+    st.integers(1, 64),
+    st.floats(1e-4, 100.0),
+    st.integers(0, 2**31 - 1),
+)
+def test_secular_newton_matches_bisect_f64(t, d, delta, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((d, t)) * 3.0
+    b2 = np.abs(rng.standard_normal((d, t))) ** 2 + 1e-8
+    got = secular_newton_batch(jnp.asarray(a), jnp.asarray(b2), delta)
+    want = ref.secular_bisect(jnp.asarray(a), jnp.asarray(b2), delta, iters=400)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-8, atol=1e-10)
+
+
+def test_secular_closed_form_branch():
+    # q vanishes on the active set (a=0 at the max-norm task) and ||ubar||<=Delta:
+    # alpha* = 2 rho^2 exactly, s = sum a^2 + rho^2 Delta^2 + 1/2 q^T ubar.
+    a = np.array([[0.0, 0.1]])
+    b2 = np.array([[4.0, 1.0]])  # rho^2 = 4 attained at t=0, a_0 = 0
+    delta = 10.0  # large so ||ubar|| <= Delta
+    got = float(secular_newton_batch(jnp.asarray(a), jnp.asarray(b2), delta)[0])
+    # ubar_1 = c_1/(amin-beta_1) = (2*1*0.1)/(8-2) = 1/30
+    ubar1 = 0.2 / 6.0
+    want = 0.1**2 + 4.0 * delta**2 + 0.5 * 0.2 * ubar1
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_secular_pure_quadratic():
+    # all a = 0: s = rho^2 Delta^2 (maximize sum b^2 u^2 over ||u||<=Delta)
+    a = np.zeros((3, 4))
+    b2 = np.abs(np.random.default_rng(1).standard_normal((3, 4))) + 0.1
+    delta = 2.5
+    got = np.asarray(secular_newton_batch(jnp.asarray(a), jnp.asarray(b2), delta))
+    want = np.max(b2, axis=1) * delta**2
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_secular_is_upper_bound_by_sampling():
+    # s_l >= g_l(theta) for theta sampled in the ball (safety of the max),
+    # and the max over boundary samples approaches s_l in low dimension.
+    rng = np.random.default_rng(7)
+    t, n, d = 2, 6, 8
+    X = rng.standard_normal((t, n, d)).astype(np.float64)
+    o = rng.standard_normal((t, n))
+    delta = 0.7
+    s = np.asarray(ref.screen_scores(jnp.asarray(X), jnp.asarray(o), delta))
+    best = np.zeros(d)
+    for _ in range(4000):
+        pert = rng.standard_normal((t, n))
+        pert *= delta / np.linalg.norm(pert)
+        th = o + pert
+        g = np.asarray(ref.gscore(jnp.asarray(X), jnp.asarray(th)))
+        assert np.all(g <= s + 1e-9), "sampled g exceeded the certified max"
+        best = np.maximum(best, g)
+    # in (t*n)=12 dims random boundary sampling gets within ~25%
+    assert np.all(best >= 0.5 * s)
+
+
+def test_secular_delta_zero_is_center_score():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((5, 3))
+    b2 = np.abs(rng.standard_normal((5, 3)))
+    got = np.asarray(secular_newton_batch(jnp.asarray(a), jnp.asarray(b2), 0.0))
+    np.testing.assert_allclose(got, np.sum(a * a, axis=1), rtol=1e-12)
+
+
+def test_secular_monotone_in_delta():
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((16, 4))
+    b2 = np.abs(rng.standard_normal((16, 4))) + 0.05
+    prev = None
+    for delta in [0.0, 0.1, 0.5, 1.0, 3.0]:
+        s = np.asarray(secular_newton_batch(jnp.asarray(a), jnp.asarray(b2), delta))
+        if prev is not None:
+            assert np.all(s >= prev - 1e-10)
+        prev = s

@@ -1,0 +1,203 @@
+"""L2 graph tests: FISTA chunks, lambda_max, Theorem 5 ball, DPC safety."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(t=3, n=12, d=40, sparsity=0.2, noise=0.01, seed=0, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((t, n, d)).astype(dtype)
+    W = np.zeros((d, t), dtype)
+    active = rng.choice(d, max(1, int(sparsity * d)), replace=False)
+    W[active] = rng.standard_normal((len(active), t))
+    y = np.einsum("tnd,dt->tn", X, W) + noise * rng.standard_normal((t, n))
+    return jnp.asarray(X), jnp.asarray(y.astype(dtype))
+
+
+def solve_tight(X, y, lam, steps=4000):
+    W, obj, gap = ref.fista(X, y, lam, steps=steps)
+    assert float(gap) < 1e-8 * max(1.0, float(obj)), f"gap={float(gap)}"
+    return W
+
+
+# ---------------------------------------------------------------------------
+# lambda_max (Theorem 1)
+# ---------------------------------------------------------------------------
+
+
+def test_lammax_zero_solution_above():
+    X, y = make_problem(seed=1)
+    lmax, _ = ref.lambda_max(X, y)
+    W = solve_tight(X, y, float(lmax) * 1.0001)
+    assert float(jnp.max(jnp.abs(W))) < 1e-7
+
+
+def test_lammax_nonzero_solution_below():
+    X, y = make_problem(seed=2)
+    lmax, _ = ref.lambda_max(X, y)
+    W = solve_tight(X, y, float(lmax) * 0.95)
+    assert float(jnp.max(jnp.abs(W))) > 1e-6
+
+
+def test_lammax_fn_matches_ref():
+    X, y = make_problem(seed=3, dtype=np.float32)
+    lm_arr, n, g = model.lammax_fn(X, y)
+    lmax, lstar = ref.lambda_max(X, y)
+    np.testing.assert_allclose(float(lm_arr[0]), float(lmax), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref.gscore(X, y)), rtol=1e-5)
+    want_n = ref.normal_at_lmax(X, y)
+    np.testing.assert_allclose(np.asarray(n), np.asarray(want_n), rtol=1e-5, atol=1e-6)
+
+
+def test_theta_at_lammax_is_feasible():
+    X, y = make_problem(seed=4)
+    lmax, _ = ref.lambda_max(X, y)
+    g = ref.gscore(X, y / lmax)
+    assert float(jnp.max(g)) <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Theorem 5: the ball really contains theta*(lambda)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ratio,ratio0", [(0.5, 1.0), (0.3, 0.5), (0.8, 1.0), (0.05, 0.1)])
+def test_ball_contains_dual_optimum(ratio, ratio0):
+    X, y = make_problem(t=2, n=10, d=30, seed=5)
+    lmax, _ = ref.lambda_max(X, y)
+    lam, lam0 = float(lmax) * ratio, float(lmax) * ratio0
+    if ratio0 >= 1.0:
+        theta0 = y / lam0
+        n = ref.normal_at_lmax(X, y)
+    else:
+        W0 = solve_tight(X, y, lam0)
+        theta0 = (y - ref.matmul_xw(X, W0)) / lam0
+        n = y / lam0 - theta0
+    o, delta = ref.dpc_ball(y, theta0, n, lam, lam0)
+    W = solve_tight(X, y, lam)
+    theta = (y - ref.matmul_xw(X, W)) / lam
+    dist = float(jnp.sqrt(jnp.sum((theta - o) ** 2)))
+    # allow solver tolerance on top of the certified radius
+    assert dist <= float(delta) + 1e-5, (dist, float(delta))
+
+
+def test_ball_geometry_signs():
+    # Theorem 5 parts 2-3: <y, n> >= 0 and <r, n> >= 0
+    X, y = make_problem(t=2, n=10, d=30, seed=6)
+    lmax, _ = ref.lambda_max(X, y)
+    lam0 = float(lmax) * 0.6
+    W0 = solve_tight(X, y, lam0)
+    theta0 = (y - ref.matmul_xw(X, W0)) / lam0
+    n = y / lam0 - theta0
+    assert float(jnp.sum(y * n)) >= -1e-8
+    for ratio in [0.5, 0.3, 0.1]:
+        r = y / (float(lmax) * ratio) - theta0
+        assert float(jnp.sum(r * n)) >= -1e-8
+
+
+# ---------------------------------------------------------------------------
+# DPC safety (Theorem 8) — the headline property
+# ---------------------------------------------------------------------------
+
+
+def test_dpc_rejects_only_true_zero_rows():
+    X, y = make_problem(t=2, n=10, d=50, sparsity=0.1, seed=7)
+    lmax, _ = ref.lambda_max(X, y)
+    lam0, lam = float(lmax), float(lmax) * 0.5
+    rejected = ref.dpc_rejects(X, y, y / lam0, ref.normal_at_lmax(X, y), lam, lam0)
+    W = solve_tight(X, y, lam)
+    row_norms = np.asarray(jnp.sqrt(jnp.sum(W * W, axis=1)))
+    assert np.all(row_norms[np.asarray(rejected)] < 1e-7)
+    assert int(np.sum(np.asarray(rejected))) > 0  # the rule does something
+
+
+def test_dpc_sequential_safety_along_grid():
+    X, y = make_problem(t=2, n=8, d=40, sparsity=0.15, seed=8)
+    lmax, _ = ref.lambda_max(X, y)
+    lams = float(lmax) * np.logspace(0, -2, 12)[1:]
+    theta0, n, lam0 = y / float(lmax), ref.normal_at_lmax(X, y), float(lmax)
+    for lam in lams:
+        lam = float(lam)
+        rejected = np.asarray(ref.dpc_rejects(X, y, theta0, n, lam, lam0))
+        W = solve_tight(X, y, lam, steps=20000)  # small lam converges slowly
+        rn = np.asarray(jnp.sqrt(jnp.sum(W * W, axis=1)))
+        assert np.all(rn[rejected] < 1e-7), f"unsafe rejection at lam={lam}"
+        theta0 = (y - ref.matmul_xw(X, W)) / lam
+        n = y / lam - theta0
+        lam0 = lam
+
+
+def test_path_with_dpc_matches_unscreened_path():
+    X, y = make_problem(t=2, n=8, d=30, sparsity=0.2, seed=9)
+    lmax, _ = ref.lambda_max(X, y)
+    lams = [float(lmax) * r for r in (0.7, 0.4, 0.2)]
+    screened = model.path_with_dpc(X, y, lams, fista_steps=3000)
+    for (W_s, keep), lam in zip(screened, lams):
+        W_full = solve_tight(X, y, lam, steps=3000)
+        np.testing.assert_allclose(
+            np.asarray(W_s), np.asarray(W_full), atol=5e-5,
+            err_msg=f"screened/unscreened mismatch at lam={lam}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# FISTA chunk graph (the AOT solver ABI)
+# ---------------------------------------------------------------------------
+
+
+def test_fista_chunks_equal_monolithic():
+    X, y = make_problem(t=3, n=10, d=24, seed=10, dtype=np.float32)
+    lmax, _ = ref.lambda_max(X, y)
+    lam = float(lmax) * 0.4
+    L = ref.lipschitz(X)
+    # two 30-step chunks == one 60-step run
+    fn = model.make_fista_fn(30)
+    T, N, D = X.shape
+    W = V = jnp.zeros((D, T), jnp.float32)
+    t = jnp.asarray([1.0], jnp.float32)
+    lam_a = jnp.asarray([lam], jnp.float32)
+    L_a = jnp.asarray([float(L)], jnp.float32)
+    for _ in range(2):
+        W, V, t, R, obj, gap = fn(X, y, W, V, t, lam_a, L_a)
+    W_ref, _, _ = ref.fista(X, y, lam, steps=60, L=float(L))
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W_ref), rtol=2e-4, atol=2e-5)
+    # returned residual must be consistent with W
+    np.testing.assert_allclose(
+        np.asarray(R), np.asarray(ref.matmul_xw(X, W) - y), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_fista_gap_decreases_and_bounds_suboptimality():
+    X, y = make_problem(t=2, n=10, d=20, seed=11)
+    lmax, _ = ref.lambda_max(X, y)
+    lam = float(lmax) * 0.3
+    gaps = [float(ref.fista(X, y, lam, steps=s)[2]) for s in (20, 100, 600)]
+    assert gaps[2] < gaps[1] < gaps[0]
+    assert gaps[2] >= -1e-10  # weak duality
+
+
+def test_lipschitz_fn_upper_bounds_spectral_norms():
+    X, _ = make_problem(t=4, n=12, d=16, seed=12, dtype=np.float32)
+    (L,) = model.lipschitz_fn(X)
+    true = max(
+        float(np.linalg.norm(np.asarray(X)[t], 2) ** 2) for t in range(X.shape[0])
+    )
+    assert float(L[0]) >= true * 0.999
+    assert float(L[0]) <= true * 1.01
+
+
+def test_screen_fn_matches_ref_pipeline():
+    X, y = make_problem(t=2, n=10, d=32, seed=13, dtype=np.float32)
+    lmax, _ = ref.lambda_max(X, y)
+    lam0, lam = float(lmax), 0.5 * float(lmax)
+    theta0 = y / lam0
+    n = ref.normal_at_lmax(X, y)
+    fn = model.make_screen_fn(model.pick_block(32))
+    (s,) = fn(X, y, theta0, n, jnp.asarray([lam], jnp.float32))
+    o, delta = ref.dpc_ball(y, theta0, n, lam, lam0)
+    want = ref.screen_scores(X, o, float(delta))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(want), rtol=5e-4, atol=1e-5)

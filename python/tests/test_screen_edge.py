@@ -1,0 +1,99 @@
+"""Adversarial edge cases for the QP1QC secular solver (the numerical core
+of DPC): branch boundaries, degenerate inputs, extreme dynamic range, and
+f32 behaviour of the fused kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, screen_scores
+from compile.kernels.screen import secular_newton_batch
+
+
+def newton(a, b2, delta):
+    return np.asarray(
+        secular_newton_batch(jnp.asarray(a, jnp.float64), jnp.asarray(b2, jnp.float64), delta)
+    )
+
+
+def bisect(a, b2, delta):
+    return np.asarray(
+        ref.secular_bisect(jnp.asarray(a, jnp.float64), jnp.asarray(b2, jnp.float64), delta, iters=400)
+    )
+
+
+def test_duplicate_max_norms_with_nonzero_a():
+    # |I| = 2 with q nonzero on I: the Newton branch must handle the pole
+    a = np.array([[1.0, -1.0, 0.2]])
+    b2 = np.array([[2.0, 2.0, 0.5]])
+    for delta in [0.1, 1.0, 10.0]:
+        np.testing.assert_allclose(newton(a, b2, delta), bisect(a, b2, delta), rtol=1e-9)
+
+
+def test_duplicate_max_norms_with_zero_a():
+    # |I| = 3, q = 0 on I: closed-form branch with free boundary directions
+    a = np.array([[0.0, 0.0, 0.0, 0.3]])
+    b2 = np.array([[1.5, 1.5, 1.5, 0.2]])
+    delta = 5.0
+    got = newton(a, b2, delta)[0]
+    # ubar_3 = c_3/(amin - beta_3), c_3 = 2*sqrt(0.2)*0.3
+    c3 = 2.0 * np.sqrt(0.2) * 0.3
+    ub3 = c3 / (3.0 - 0.4)
+    want = 0.09 + 1.5 * delta**2 + 0.5 * c3 * ub3
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_extreme_dynamic_range():
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((64, 4)) * np.logspace(-4, 4, 64)[:, None]
+    b2 = np.abs(rng.standard_normal((64, 4))) * np.logspace(4, -4, 64)[:, None] + 1e-12
+    for delta in [1e-4, 1.0, 1e4]:
+        np.testing.assert_allclose(
+            newton(a, b2, delta), bisect(a, b2, delta), rtol=1e-7,
+            err_msg=f"delta={delta}",
+        )
+
+
+def test_single_task_equals_cauchy_schwarz():
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((32, 1))
+    b2 = np.abs(rng.standard_normal((32, 1))) + 1e-6
+    delta = 0.8
+    want = (np.abs(a[:, 0]) + np.sqrt(b2[:, 0]) * delta) ** 2
+    np.testing.assert_allclose(newton(a, b2, delta), want, rtol=1e-9)
+
+
+def test_one_zero_norm_task_is_inert():
+    # a task with a zero column contributes nothing
+    rng = np.random.default_rng(7)
+    a2 = rng.standard_normal((16, 2))
+    b2_2 = np.abs(rng.standard_normal((16, 2))) + 0.1
+    a3 = np.concatenate([a2, np.zeros((16, 1))], axis=1)
+    b2_3 = np.concatenate([b2_2, np.zeros((16, 1))], axis=1)
+    np.testing.assert_allclose(newton(a3, b2_3, 0.7), newton(a2, b2_2, 0.7), rtol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1e-6, 1e3))
+def test_newton_vs_bisect_fuzz(seed, delta):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, 8))
+    d = int(rng.integers(1, 40))
+    a = rng.standard_normal((d, t)) * rng.uniform(1e-3, 1e2)
+    b2 = np.abs(rng.standard_normal((d, t))) * rng.uniform(1e-3, 1e2)
+    np.testing.assert_allclose(newton(a, b2, delta), bisect(a, b2, delta), rtol=1e-7, atol=1e-12)
+
+
+def test_f32_kernel_close_to_f64_truth():
+    # the AOT engine runs the kernel in f32 with a 1e-3 safety margin;
+    # verify the margin covers the f32 error for realistic score ranges
+    rng = np.random.default_rng(9)
+    t, n, d = 4, 16, 64
+    X = rng.standard_normal((t, n, d)).astype(np.float32)
+    o = (rng.standard_normal((t, n)) * 0.3).astype(np.float32)
+    delta = 0.25
+    s32 = np.asarray(screen_scores(jnp.asarray(X), jnp.asarray(o), jnp.asarray([delta], jnp.float32), block_d=16))
+    s64 = np.asarray(ref.screen_scores(jnp.asarray(X, jnp.float64), jnp.asarray(o, jnp.float64), delta))
+    near_one = (s64 > 0.2) & (s64 < 5.0)
+    rel = np.abs(s32[near_one] - s64[near_one]) / s64[near_one]
+    assert rel.max() < 1e-3, f"f32 error {rel.max()} exceeds the engine margin"

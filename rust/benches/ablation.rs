@@ -1,0 +1,17 @@
+//! Bench target for the design-choice ablations (DESIGN.md §8):
+//!   ABL1 — exact QP1QC scores vs the Cauchy–Schwarz bound;
+//!   ABL2 — sequential (Corollary 9) vs one-shot screening.
+//!
+//!     cargo bench --bench ablation
+//!     MTFL_BENCH_SCALE=default cargo bench --bench ablation
+
+use mtfl_dpc::experiments::{run_ablation, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(
+        &std::env::var("MTFL_BENCH_SCALE").unwrap_or_else(|_| "quick".into()),
+    )?;
+    println!("== screener ablations (scale: {scale:?}) ==\n");
+    println!("{}", run_ablation(scale)?);
+    Ok(())
+}

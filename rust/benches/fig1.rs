@@ -1,0 +1,18 @@
+//! Bench target reproducing **Figure 1**: DPC rejection ratios on
+//! Synthetic 1 / Synthetic 2 at three feature dimensions, averaged over
+//! trials (paper: 6 panels, ratios > 0.9 everywhere, rising with d).
+//!
+//!     cargo bench --bench fig1
+//!     MTFL_BENCH_SCALE=default cargo bench --bench fig1
+
+use mtfl_dpc::coordinator::path::EngineKind;
+use mtfl_dpc::experiments::{run_fig1, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(
+        &std::env::var("MTFL_BENCH_SCALE").unwrap_or_else(|_| "quick".into()),
+    )?;
+    println!("== Figure 1 reproduction (scale: {scale:?}) ==\n");
+    println!("{}", run_fig1(scale, &EngineKind::Exact)?);
+    Ok(())
+}

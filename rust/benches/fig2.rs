@@ -1,0 +1,18 @@
+//! Bench target reproducing **Figure 2**: DPC rejection ratios on the
+//! three simulated real datasets (Animal, TDT2, ADNI analogues).
+//! Paper shape: all curves > 0.9; ADNI (largest d/N) > 0.99 everywhere.
+//!
+//!     cargo bench --bench fig2
+//!     MTFL_BENCH_SCALE=default cargo bench --bench fig2
+
+use mtfl_dpc::coordinator::path::EngineKind;
+use mtfl_dpc::experiments::{run_fig2, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(
+        &std::env::var("MTFL_BENCH_SCALE").unwrap_or_else(|_| "quick".into()),
+    )?;
+    println!("== Figure 2 reproduction (scale: {scale:?}) ==\n");
+    println!("{}", run_fig2(scale, &EngineKind::Exact)?);
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the hot paths on both engines (EXPERIMENTS.md §Perf
+//! feeds from this target):
+//!
+//!   * the correlation sweep `task_corr` (the dominant cost of DPC);
+//!   * the per-feature QP1QC secular solve;
+//!   * full DPC screen at one λ;
+//!   * one FISTA iteration (exact) / one FISTA chunk step (AOT);
+//!   * the AOT screen artifact (PJRT end-to-end including marshalling).
+//!
+//!     cargo bench --bench kernels
+
+use mtfl_dpc::bench::Bencher;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::ops;
+use mtfl_dpc::runtime::AotEngine;
+use mtfl_dpc::screening::dpc::{ball, DpcScreener, DualRef};
+use mtfl_dpc::screening::secular::qp1qc_max;
+use mtfl_dpc::util::Pcg64;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bencher::default();
+    let (t, n, d) = (20usize, 50usize, 2000usize);
+    let (ds, _) = synthetic1(&SynthOptions { t, n, d, seed: 3, ..Default::default() });
+    let y = ops::y64(&ds);
+    println!("== kernel micro-benches (T={t}, N={n}, d={d}) ==\n");
+
+    // correlation sweep: 2*T*N*d flops
+    let flops = 2.0 * (t * n * d) as f64;
+    let stats = b.run("task_corr (screening sweep, f64 acc)", || ops::task_corr(&ds, &y));
+    println!("   -> {:.2} GFLOP/s\n", flops / stats.median() / 1e9);
+
+    // secular solves alone (screening minus the sweep)
+    let mut rng = Pcg64::new(7);
+    let a_batch: Vec<Vec<f64>> =
+        (0..d).map(|_| (0..t).map(|_| rng.normal()).collect()).collect();
+    let b2_batch: Vec<Vec<f64>> =
+        (0..d).map(|_| (0..t).map(|_| rng.normal().abs() + 0.01).collect()).collect();
+    b.run(&format!("qp1qc_max x{d} (Newton secular)"), || {
+        let mut acc = 0.0;
+        for l in 0..d {
+            acc += qp1qc_max(&a_batch[l], &b2_batch[l], 0.7).s;
+        }
+        acc
+    });
+
+    // full screen at one lambda
+    let (dref, lmax) = DualRef::at_lambda_max(&ds);
+    let screener = DpcScreener::new(&ds);
+    let (o, delta) = ball(&ds, &dref, 0.4 * lmax);
+    b.run("DPC screen (scores, all features)", || screener.scores(&ds, &o, delta));
+
+    // one FISTA gradient step (forward + corr) on the full problem
+    let w = vec![0.01f64; d * t];
+    b.run("FISTA grad step (forward + task_corr)", || {
+        let r = ops::residual(&ds, &w);
+        ops::task_corr(&ds, &r)
+    });
+
+    // exact lambda_max
+    b.run("lambda_max (exact)", || ops::lambda_max(&ds));
+
+    // AOT engine micro-benches if artifacts exist
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        let engine = AotEngine::new(&dir)?;
+        if engine.manifest.config_for(t, n, d).is_some() {
+            engine.warmup_config("synth2k")?;
+            let x = ds.to_tnd()?;
+            let ytn = ds.y_tn()?;
+            println!();
+            b.run("AOT lammax artifact (PJRT)", || {
+                engine.lammax("synth2k", &x, &ytn).unwrap()
+            });
+            let theta0: Vec<f32> = ytn.iter().map(|&v| v / lmax as f32).collect();
+            let lm = engine.lammax("synth2k", &x, &ytn)?;
+            b.run("AOT screen artifact (PJRT, incl. marshalling)", || {
+                engine
+                    .screen("synth2k", &x, &ytn, &theta0, &lm.normal, 0.4 * lm.lam_max)
+                    .unwrap()
+            });
+            let w0 = vec![0.0f32; 250 * t];
+            let keep: Vec<usize> = (0..250).collect();
+            let xr = mtfl_dpc::runtime::buckets::pack_tnd(&ds.tasks, &keep, 250);
+            b.run("AOT fista chunk b250 (50 iters)", || {
+                engine
+                    .fista_chunk("synth2k", 250, &xr, &ytn, &w0, &w0, 1.0, 0.4 * lm.lam_max, 4000.0)
+                    .unwrap()
+            });
+        } else {
+            println!("\n(no synth2k artifacts; skipping AOT micro-benches)");
+        }
+    } else {
+        println!("\n(no artifacts/; skipping AOT micro-benches)");
+    }
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Bench target reproducing **Table 1**: running time of the path solver
+//! with and without DPC on all five workloads, plus speedup.
+//!
+//!     cargo bench --bench table1                       (scaled dims)
+//!     MTFL_BENCH_SCALE=quick cargo bench --bench table1
+//!     MTFL_BENCH_SCALE=paper cargo bench --bench table1 (printed dims; hours)
+
+use mtfl_dpc::coordinator::path::EngineKind;
+use mtfl_dpc::experiments::{run_table1, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::parse(
+        &std::env::var("MTFL_BENCH_SCALE").unwrap_or_else(|_| "quick".into()),
+    )?;
+    println!("== Table 1 reproduction (scale: {scale:?}, exact engine) ==");
+    println!(
+        "paper shape to expect: DPC cost << solver cost; speedup grows with d\n"
+    );
+    let out = run_table1(scale, &EngineKind::Exact)?;
+    println!("{out}");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Criterion-lite: a small measurement harness for the `benches/` targets
+//! (criterion itself is not vendored offline). Warmup + timed samples +
+//! robust summary stats, plus table/CSV printers shared by the paper
+//! reproduction benches.
+
+use crate::util::timer::format_duration;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds
+}
+
+impl BenchStats {
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+    pub fn p25(&self) -> f64 {
+        percentile(&self.samples, 25.0)
+    }
+    pub fn p75(&self) -> f64 {
+        percentile(&self.samples, 75.0)
+    }
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} median {:>10}  IQR [{:>10}, {:>10}]  n={}",
+            self.name,
+            format_duration(Duration::from_secs_f64(self.median())),
+            format_duration(Duration::from_secs_f64(self.p25())),
+            format_duration(Duration::from_secs_f64(self.p75())),
+            self.samples.len()
+        )
+    }
+}
+
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = (p / 100.0 * (s.len() - 1) as f64).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+/// Benchmark runner: warms up for `warmup` iterations, then measures until
+/// `min_samples` samples or `max_time` is exhausted (at least 1 sample).
+pub struct Bencher {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, min_samples: 5, max_time: Duration::from_secs(30) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, min_samples: 3, max_time: Duration::from_secs(10) }
+    }
+
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while samples.len() < self.min_samples && t0.elapsed() < self.max_time
+            || samples.is_empty()
+        {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        let stats = BenchStats { name: name.to_string(), samples };
+        println!("{}", stats.summary());
+        stats
+    }
+}
+
+/// Fixed-width ASCII table printer (paper-style tables).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("| {:>w$} ", c, w = widths[i]))
+                .collect::<String>()
+                + "|"
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bencher { warmup: 1, min_samples: 3, max_time: Duration::from_secs(5) };
+        let stats = b.run("noop", || 1 + 1);
+        assert!(stats.samples.len() >= 3);
+        assert!(stats.median() >= 0.0);
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let s = BenchStats { name: "x".into(), samples: vec![5.0, 1.0, 3.0, 2.0, 4.0] };
+        assert_eq!(s.median(), 3.0);
+        assert!(s.p25() <= s.median() && s.median() <= s.p75());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1.23".into()]);
+        t.row(&["long-name".into(), "4".into()]);
+        let r = t.render();
+        assert!(r.contains("| long-name |"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

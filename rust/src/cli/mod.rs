@@ -1,0 +1,147 @@
+//! Minimal CLI argument parser (clap is not vendored offline).
+//!
+//! Supports: `binary <subcommand> [--flag] [--key value] [--key=value]`.
+//! Typed getters with defaults + "unknown argument" detection.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand unless
+    /// it starts with `--`).
+    pub fn parse_from(tokens: &[String]) -> Result<Args> {
+        let mut subcommand = None;
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0usize;
+        if let Some(first) = tokens.first() {
+            if !first.starts_with("--") {
+                subcommand = Some(first.clone());
+                i = 1;
+            }
+        }
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            let Some(stripped) = tok.strip_prefix("--") else {
+                bail!("positional argument '{tok}' not understood (flags are --key value)");
+            };
+            if let Some((k, v)) = stripped.split_once('=') {
+                values.insert(k.to_string(), v.to_string());
+            } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                values.insert(stripped.to_string(), tokens[i + 1].clone());
+                i += 1;
+            } else {
+                flags.push(stripped.to_string());
+            }
+            i += 1;
+        }
+        Ok(Args { subcommand, values, flags, consumed: Default::default() })
+    }
+
+    pub fn parse() -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_from(&tokens)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Error if any provided argument was never consumed (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .values
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k.as_str()))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown argument(s): {:?}", unknown);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_and_flags() {
+        let a = Args::parse_from(&toks(&["table1", "--d", "5000", "--scale=paper", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.get_usize("d", 0).unwrap(), 5000);
+        assert_eq!(a.get("scale"), Some("paper"));
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let a = Args::parse_from(&toks(&["run", "--oops", "1"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse_from(&toks(&["run", "--d", "abc"])).unwrap();
+        assert!(a.get_usize("d", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse_from(&toks(&["run", "stray"])).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse_from(&toks(&["--k", "v"])).unwrap();
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get("k"), Some("v"));
+    }
+}

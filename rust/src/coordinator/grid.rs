@@ -1,0 +1,41 @@
+//! The paper's tuning grid: K values of λ/λ_max equally spaced on a log
+//! scale from `hi` down to `lo` (§5: 100 values, 1.0 → 0.01).
+
+/// Ratios λ/λ_max, descending from `hi` to `lo` inclusive.
+pub fn lambda_grid(k: usize, hi: f64, lo: f64) -> Vec<f64> {
+    assert!(k >= 2 && hi > lo && lo > 0.0);
+    let (lh, ll) = (hi.ln(), lo.ln());
+    (0..k)
+        .map(|i| (lh + (ll - lh) * i as f64 / (k - 1) as f64).exp())
+        .collect()
+}
+
+/// The paper's default grid.
+pub fn paper_grid(k: usize) -> Vec<f64> {
+    lambda_grid(k, 1.0, 0.01)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_and_monotone() {
+        let g = paper_grid(100);
+        assert_eq!(g.len(), 100);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[99] - 0.01).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn log_spacing_is_uniform() {
+        let g = lambda_grid(5, 1.0, 0.0001);
+        for i in 0..4 {
+            let r = g[i + 1] / g[i];
+            assert!((r - 0.1).abs() < 1e-12, "ratio {r}");
+        }
+    }
+}

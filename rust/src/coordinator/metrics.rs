@@ -1,0 +1,103 @@
+//! Experiment metrics: rejection-ratio aggregation across trials and the
+//! Table-1 speedup accounting.
+
+use super::path::PathRunResult;
+
+/// Mean rejection ratio per grid index across repeated trials
+/// (the curves of Figs. 1–2).
+pub fn mean_rejection_curve(runs: &[PathRunResult]) -> Vec<(f64, f64)> {
+    assert!(!runs.is_empty());
+    let k = runs[0].records.len();
+    assert!(runs.iter().all(|r| r.records.len() == k), "trials must share the grid");
+    (0..k)
+        .map(|i| {
+            let ratio = runs[0].records[i].ratio;
+            let mean = runs.iter().map(|r| r.records[i].rejection_ratio).sum::<f64>()
+                / runs.len() as f64;
+            (ratio, mean)
+        })
+        .collect()
+}
+
+/// One Table-1 row: timing comparison of a baseline (no screening) run
+/// against a screened run of the *same* problem.
+#[derive(Debug, Clone)]
+pub struct SpeedupRow {
+    pub dataset: String,
+    pub d: usize,
+    /// solver without screening (total path seconds)
+    pub solver_secs: f64,
+    /// screening rule cost alone
+    pub dpc_secs: f64,
+    /// screened path total (screen + reduced solve)
+    pub combined_secs: f64,
+    pub speedup: f64,
+    pub mean_rejection: f64,
+}
+
+pub fn speedup_row(baseline: &PathRunResult, screened: &PathRunResult) -> SpeedupRow {
+    let solver_secs = baseline.total_secs;
+    let combined = screened.total_secs;
+    SpeedupRow {
+        dataset: baseline.dataset.clone(),
+        d: baseline.d,
+        solver_secs,
+        dpc_secs: screened.screen_secs,
+        combined_secs: combined,
+        speedup: solver_secs / combined.max(1e-12),
+        mean_rejection: screened.mean_rejection_ratio(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::path::{LambdaRecord, PathRunResult};
+
+    fn fake_run(rr: &[f64], total: f64, screen: f64) -> PathRunResult {
+        PathRunResult {
+            dataset: "fake".into(),
+            d: 10,
+            lam_max: 1.0,
+            records: rr
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| LambdaRecord {
+                    ratio: 1.0 / (i + 1) as f64,
+                    lam: 0.0,
+                    rejected: 0,
+                    kept: 0,
+                    inactive: 0,
+                    rejection_ratio: r,
+                    screen_secs: screen / rr.len() as f64,
+                    solve_secs: 0.0,
+                    solver_iters: 0,
+                    obj: 0.0,
+                    gap: 0.0,
+                })
+                .collect(),
+            screen_secs: screen,
+            solve_secs: 0.0,
+            total_secs: total,
+            last_w: vec![],
+        }
+    }
+
+    #[test]
+    fn curve_averages_trials() {
+        let a = fake_run(&[1.0, 0.8], 1.0, 0.1);
+        let b = fake_run(&[0.5, 1.0], 1.0, 0.1);
+        let c = mean_rejection_curve(&[a, b]);
+        assert!((c[0].1 - 0.75).abs() < 1e-12);
+        assert!((c[1].1 - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_math() {
+        let base = fake_run(&[0.0], 100.0, 0.0);
+        let scr = fake_run(&[0.9], 5.0, 1.0);
+        let row = speedup_row(&base, &scr);
+        assert!((row.speedup - 20.0).abs() < 1e-9);
+        assert!((row.dpc_secs - 1.0).abs() < 1e-12);
+    }
+}

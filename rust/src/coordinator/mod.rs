@@ -1,0 +1,13 @@
+//! L3 coordination: the λ-path runner with sequential DPC screening
+//! (Corollary 9), the experiment metrics, and the report renderers that
+//! regenerate the paper's tables and figures.
+
+pub mod cv;
+pub mod grid;
+pub mod stability;
+pub mod metrics;
+pub mod path;
+pub mod report;
+
+pub use grid::lambda_grid;
+pub use path::{run_path, EngineKind, PathOptions, PathRunResult, ScreenerKind, SolverKind};

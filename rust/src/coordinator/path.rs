@@ -1,0 +1,509 @@
+//! The λ-path runner: solve the MTFL model along the tuning grid, with or
+//! without screening, on the exact engine or the AOT (PJRT) engine.
+//!
+//! Sequential DPC (Corollary 9): at step k+1, the dual reference is
+//! recovered from the *solved* primal at λ_k via Eq. (14); features whose
+//! Theorem-7 score stays below 1 are deleted before the solver runs, and
+//! the solver is warm-started from the previous solution.
+
+use crate::data::Dataset;
+use crate::ops;
+use crate::runtime::{buckets, AotEngine};
+use crate::screening::bounds::CsScreener;
+use crate::screening::dpc::{DpcScreener, DualRef};
+use crate::screening::safety;
+use crate::solver::{bcd, fista, SolveOptions};
+use crate::util::Stopwatch;
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScreenerKind {
+    /// no screening: the solver sees all d features at every λ (baseline)
+    None,
+    /// sequential DPC (the paper's rule, Corollary 9)
+    Dpc,
+    /// DPC ball but Cauchy–Schwarz scores (ablation ABL1)
+    DpcCs,
+    /// DPC screened only from the λ_max reference (ablation ABL2)
+    DpcOneShot,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    Fista,
+    Bcd,
+}
+
+pub enum EngineKind<'a> {
+    /// exact f64 path (self-contained, no artifacts)
+    Exact,
+    /// AOT artifacts through PJRT; dataset shape must match a config
+    Aot(&'a AotEngine),
+}
+
+#[derive(Debug, Clone)]
+pub struct PathOptions {
+    /// λ/λ_max ratios, descending (see [`crate::coordinator::lambda_grid`])
+    pub ratios: Vec<f64>,
+    pub solve: SolveOptions,
+    pub screener: ScreenerKind,
+    pub solver: SolverKind,
+    /// keep features scoring within this margin below 1 (float safety for
+    /// the f32 AOT engine; 0.0 = the exact rule)
+    pub margin: f64,
+    /// row norm below which a solved feature counts as inactive (ground
+    /// truth for rejection ratios)
+    pub active_tol: f64,
+    /// run the post-hoc safety verifier at every λ (slow; for tests)
+    pub verify_safety: bool,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        PathOptions {
+            ratios: super::grid::paper_grid(100),
+            solve: SolveOptions::default(),
+            screener: ScreenerKind::Dpc,
+            solver: SolverKind::Fista,
+            margin: 0.0,
+            active_tol: 1e-8,
+            verify_safety: false,
+        }
+    }
+}
+
+/// Per-λ record (one row of the figures' series).
+#[derive(Debug, Clone)]
+pub struct LambdaRecord {
+    pub ratio: f64,
+    pub lam: f64,
+    /// features rejected by screening
+    pub rejected: usize,
+    /// features handed to the solver
+    pub kept: usize,
+    /// ground-truth inactive count (from the solution)
+    pub inactive: usize,
+    /// rejected / inactive  (the paper's rejection ratio; 1.0 if inactive=0)
+    pub rejection_ratio: f64,
+    pub screen_secs: f64,
+    pub solve_secs: f64,
+    pub solver_iters: usize,
+    pub obj: f64,
+    pub gap: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct PathRunResult {
+    pub dataset: String,
+    pub d: usize,
+    pub lam_max: f64,
+    pub records: Vec<LambdaRecord>,
+    pub screen_secs: f64,
+    pub solve_secs: f64,
+    pub total_secs: f64,
+    /// final-λ solution (row-major d x T) for downstream consumers
+    pub last_w: Vec<f64>,
+}
+
+impl PathRunResult {
+    pub fn mean_rejection_ratio(&self) -> f64 {
+        let rs: Vec<f64> = self.records.iter().map(|r| r.rejection_ratio).collect();
+        rs.iter().sum::<f64>() / rs.len().max(1) as f64
+    }
+}
+
+/// Run the full path. Dispatches on engine.
+pub fn run_path(ds: &Dataset, opts: &PathOptions, engine: &EngineKind) -> Result<PathRunResult> {
+    match engine {
+        EngineKind::Exact => run_path_exact(ds, opts),
+        EngineKind::Aot(e) => run_path_aot(ds, opts, e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// exact engine
+// ---------------------------------------------------------------------------
+
+fn solve_exact(
+    ds: &Dataset,
+    lam: f64,
+    w0: Option<&[f64]>,
+    opts: &PathOptions,
+) -> crate::solver::SolveResult {
+    match opts.solver {
+        SolverKind::Fista => fista(ds, lam, w0, &opts.solve),
+        SolverKind::Bcd => bcd(ds, lam, w0, &opts.solve),
+    }
+}
+
+fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
+    ds.validate()?;
+    let t_count = ds.t();
+    let mut total = Stopwatch::new();
+    total.start();
+
+    let screener = DpcScreener::with_margin(ds, opts.margin);
+    let cs = matches!(opts.screener, ScreenerKind::DpcCs).then(|| CsScreener::new(ds));
+    let (dref0, lam_max) = DualRef::at_lambda_max(ds);
+    let mut dref = dref0.clone();
+
+    let mut prev_w = vec![0.0f64; ds.d * t_count];
+    let mut records = Vec::with_capacity(opts.ratios.len());
+
+    for &ratio in &opts.ratios {
+        let lam = ratio * lam_max;
+        // -- screening phase --
+        let mut step_screen = Stopwatch::new();
+        let keep: Vec<usize> = if ratio >= 1.0 - 1e-12 {
+            Vec::new() // Theorem 1: W*=0, keep nothing
+        } else {
+            match opts.screener {
+                ScreenerKind::None => (0..ds.d).collect(),
+                ScreenerKind::Dpc => {
+                    step_screen.time(|| screener.screen(ds, &dref, lam)).kept_indices()
+                }
+                ScreenerKind::DpcOneShot => {
+                    step_screen.time(|| screener.screen(ds, &dref0, lam)).kept_indices()
+                }
+                ScreenerKind::DpcCs => step_screen
+                    .time(|| cs.as_ref().unwrap().screen(ds, &dref, lam))
+                    .kept_indices(),
+            }
+        };
+
+        // -- solve phase (on the compacted problem) --
+        let mut step_solve = Stopwatch::new();
+        let mut w_full = vec![0.0f64; ds.d * t_count];
+        let (obj, gap, iters) = if keep.is_empty() {
+            let (o, g, _) = ops::duality_gap(ds, &w_full, lam);
+            (o, g, 0)
+        } else if keep.len() == ds.d {
+            let res = step_solve.time(|| solve_exact(ds, lam, Some(&prev_w), opts));
+            w_full = res.w.clone();
+            (res.obj, res.gap, res.iters)
+        } else {
+            let ds_r = ds.restrict(&keep);
+            let mut w0 = vec![0.0f64; keep.len() * t_count];
+            for (j, &l) in keep.iter().enumerate() {
+                w0[j * t_count..(j + 1) * t_count]
+                    .copy_from_slice(&prev_w[l * t_count..(l + 1) * t_count]);
+            }
+            let res = step_solve.time(|| solve_exact(&ds_r, lam, Some(&w0), opts));
+            for (j, &l) in keep.iter().enumerate() {
+                w_full[l * t_count..(l + 1) * t_count]
+                    .copy_from_slice(&res.w[j * t_count..(j + 1) * t_count]);
+            }
+            (res.obj, res.gap, res.iters)
+        };
+
+        // -- bookkeeping --
+        let rejected = ds.d - keep.len();
+        let active = w_full
+            .chunks_exact(t_count)
+            .filter(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt() > opts.active_tol)
+            .count();
+        let inactive = ds.d - active;
+        let rejection_ratio =
+            if inactive == 0 { 1.0 } else { rejected as f64 / inactive as f64 };
+
+        if opts.verify_safety && rejected > 0 {
+            let mask: Vec<bool> = {
+                let mut m = vec![true; ds.d];
+                for &l in &keep {
+                    m[l] = false;
+                }
+                m
+            };
+            let report = safety::verify(ds, &w_full, lam, &mask, 10.0 * opts.active_tol);
+            anyhow::ensure!(
+                report.is_safe(),
+                "screening violated safety at ratio {ratio}: {:?}",
+                report.violations
+            );
+        }
+
+        records.push(LambdaRecord {
+            ratio,
+            lam,
+            rejected,
+            kept: keep.len(),
+            inactive,
+            rejection_ratio,
+            screen_secs: step_screen.secs(),
+            solve_secs: step_solve.secs(),
+            solver_iters: iters,
+            obj,
+            gap,
+        });
+
+        // sequential reference update (Cor. 9): from this λ's solution.
+        // At the grid head (λ ≥ λ_max, W = 0) keep the λ_max reference —
+        // its Eq. 20 gradient normal is strictly better than the zero
+        // normal a W=0 solution would produce.
+        if !matches!(opts.screener, ScreenerKind::DpcOneShot) && ratio < 1.0 - 1e-12 {
+            dref = DualRef::from_solution(ds, lam, &w_full);
+        }
+        prev_w = w_full;
+    }
+
+    total.stop();
+    let screen_secs: f64 = records.iter().map(|r| r.screen_secs).sum();
+    let solve_secs: f64 = records.iter().map(|r| r.solve_secs).sum();
+    Ok(PathRunResult {
+        dataset: ds.name.clone(),
+        d: ds.d,
+        lam_max,
+        records,
+        screen_secs,
+        solve_secs,
+        total_secs: total.secs(),
+        last_w: prev_w,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// AOT engine
+// ---------------------------------------------------------------------------
+
+fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<PathRunResult> {
+    ds.validate()?;
+    let t_count = ds.t();
+    let n = ds
+        .uniform_n()
+        .context("AOT engine requires uniform task sizes (use the exact engine)")?;
+    let cfg = engine
+        .manifest
+        .config_for(t_count, n, ds.d)
+        .with_context(|| {
+            format!(
+                "no AOT config for shape T={t_count} N={n} D={} — regenerate artifacts \
+                 or use the exact engine",
+                ds.d
+            )
+        })?
+        .to_string();
+    let bucket_list = engine.manifest.buckets_for(&cfg);
+    anyhow::ensure!(!bucket_list.is_empty(), "config {cfg} has no solver buckets");
+    anyhow::ensure!(
+        matches!(opts.solver, SolverKind::Fista),
+        "the AOT engine only ships FISTA executables"
+    );
+    anyhow::ensure!(
+        opts.margin > 0.0 || matches!(opts.screener, ScreenerKind::None),
+        "AOT screening runs in f32: a positive safety margin is required"
+    );
+    engine.warmup_config(&cfg)?;
+
+    let mut total = Stopwatch::new();
+    total.start();
+
+    let x_full = ds.to_tnd()?;
+    let y = ds.y_tn()?;
+
+    // reference at λ_max via the lammax artifact
+    let lm = engine.lammax(&cfg, &x_full, &y)?;
+    let lam_max = lm.lam_max as f64;
+    let theta0_init: Vec<f32> = y.iter().map(|&v| v / lm.lam_max).collect();
+    let normal_init = lm.normal.clone();
+    let mut theta0 = theta0_init.clone();
+    let mut normal = normal_init.clone();
+
+    let mut prev_w = vec![0.0f64; ds.d * t_count];
+    let mut records = Vec::with_capacity(opts.ratios.len());
+    let chunk_steps = engine
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.cfg == cfg && a.kind == "fista")
+        .map(|a| a.steps)
+        .unwrap_or(50);
+    let max_chunks = (opts.solve.max_iters / chunk_steps.max(1)).max(1);
+
+    for &ratio in &opts.ratios {
+        let lam = (ratio * lam_max) as f32;
+        let mut step_screen = Stopwatch::new();
+        let keep: Vec<usize> = if ratio >= 1.0 - 1e-12 {
+            Vec::new()
+        } else {
+            match opts.screener {
+                ScreenerKind::None => (0..ds.d).collect(),
+                ScreenerKind::Dpc | ScreenerKind::DpcOneShot => {
+                    let (t0, n0) = if matches!(opts.screener, ScreenerKind::DpcOneShot) {
+                        (&theta0_init, &normal_init)
+                    } else {
+                        (&theta0, &normal)
+                    };
+                    let s = step_screen.time(|| {
+                        engine.screen(&cfg, &x_full, &y, t0, n0, lam)
+                    })?;
+                    let thr = (1.0 - opts.margin) as f32;
+                    s.iter().enumerate().filter_map(|(l, &v)| (v >= thr).then_some(l)).collect()
+                }
+                ScreenerKind::DpcCs => {
+                    anyhow::bail!("CS ablation is exact-engine only")
+                }
+            }
+        };
+
+        let mut step_solve = Stopwatch::new();
+        let mut w_full = vec![0.0f64; ds.d * t_count];
+        let (obj, gap, iters, residual): (f64, f64, usize, Option<Vec<f32>>) = if keep.is_empty()
+        {
+            let (o, g, _) = ops::duality_gap(ds, &w_full, lam as f64);
+            (o, g, 0, None)
+        } else {
+            let db = buckets::pick_bucket(&bucket_list, keep.len())
+                .with_context(|| format!("no bucket ≥ {} in {bucket_list:?}", keep.len()))?;
+            let x_r = buckets::pack_tnd(&ds.tasks, &keep, db);
+            let w0 = buckets::pack_w(&prev_w, t_count, &keep, db);
+            let (out, chunks) = step_solve.time(|| {
+                engine.fista_solve(
+                    &cfg,
+                    db,
+                    &x_r,
+                    &y,
+                    &w0,
+                    lam,
+                    opts.solve.tol as f32,
+                    max_chunks,
+                )
+            })?;
+            w_full = buckets::unpack_w(&out.w, t_count, &keep, db, ds.d);
+            (out.obj as f64, out.gap as f64, chunks * chunk_steps, Some(out.r))
+        };
+
+        let rejected = ds.d - keep.len();
+        let active = w_full
+            .chunks_exact(t_count)
+            .filter(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt() > opts.active_tol)
+            .count();
+        let inactive = ds.d - active;
+        let rejection_ratio =
+            if inactive == 0 { 1.0 } else { rejected as f64 / inactive as f64 };
+
+        records.push(LambdaRecord {
+            ratio,
+            lam: lam as f64,
+            rejected,
+            kept: keep.len(),
+            inactive,
+            rejection_ratio,
+            screen_secs: step_screen.secs(),
+            solve_secs: step_solve.secs(),
+            solver_iters: iters,
+            obj,
+            gap,
+        });
+
+        // sequential dual reference from the residual (Eq. 14): θ = −R/λ
+        if let Some(r) = residual {
+            theta0 = r.iter().map(|&v| -v / lam).collect();
+            normal = y.iter().zip(&theta0).map(|(&yi, &ti)| yi / lam - ti).collect();
+        } else {
+            // W = 0 at this λ: θ = y/λ is the exact dual optimum; at the
+            // grid head (λ = λ_max) the normal is the Eq. 20 gradient
+            theta0 = y.iter().map(|&v| v / lam).collect();
+            normal = if ratio >= 1.0 - 1e-12 {
+                normal_init.clone()
+            } else {
+                y.iter().zip(&theta0).map(|(&yi, &ti)| yi / lam - ti).collect()
+            };
+        }
+        prev_w = w_full;
+    }
+
+    total.stop();
+    let screen_secs: f64 = records.iter().map(|r| r.screen_secs).sum();
+    let solve_secs: f64 = records.iter().map(|r| r.solve_secs).sum();
+    Ok(PathRunResult {
+        dataset: ds.name.clone(),
+        d: ds.d,
+        lam_max,
+        records,
+        screen_secs,
+        solve_secs,
+        total_secs: total.secs(),
+        last_w: prev_w,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::grid::lambda_grid;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+
+    fn small() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 12, d: 50, seed: 17, ..Default::default() }).0
+    }
+
+    fn opts(k: ScreenerKind) -> PathOptions {
+        PathOptions {
+            ratios: lambda_grid(8, 1.0, 0.05),
+            screener: k,
+            verify_safety: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn screened_path_matches_unscreened() {
+        let ds = small();
+        let with = run_path(&ds, &opts(ScreenerKind::Dpc), &EngineKind::Exact).unwrap();
+        let without = run_path(&ds, &opts(ScreenerKind::None), &EngineKind::Exact).unwrap();
+        for (a, b) in with.records.iter().zip(&without.records) {
+            assert!((a.obj - b.obj).abs() <= 1e-6 * b.obj.abs().max(1.0),
+                "objective mismatch at ratio {}: {} vs {}", a.ratio, a.obj, b.obj);
+            assert_eq!(a.inactive, b.inactive, "active-set mismatch at {}", a.ratio);
+        }
+        let dmax = with
+            .last_w
+            .iter()
+            .zip(&without.last_w)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(dmax < 1e-5, "final W mismatch {dmax}");
+    }
+
+    #[test]
+    fn rejection_ratios_are_high_and_valid() {
+        let ds = small();
+        let res = run_path(&ds, &opts(ScreenerKind::Dpc), &EngineKind::Exact).unwrap();
+        for r in &res.records[1..] {
+            assert!(r.rejection_ratio >= 0.0 && r.rejection_ratio <= 1.0 + 1e-12);
+        }
+        assert!(res.mean_rejection_ratio() > 0.5, "mean {}", res.mean_rejection_ratio());
+    }
+
+    #[test]
+    fn oneshot_rejects_no_more_than_sequential() {
+        let ds = small();
+        let seq = run_path(&ds, &opts(ScreenerKind::Dpc), &EngineKind::Exact).unwrap();
+        let one = run_path(&ds, &opts(ScreenerKind::DpcOneShot), &EngineKind::Exact).unwrap();
+        let s: usize = seq.records.iter().map(|r| r.rejected).sum();
+        let o: usize = one.records.iter().map(|r| r.rejected).sum();
+        assert!(o <= s, "one-shot {o} > sequential {s}");
+    }
+
+    #[test]
+    fn cs_is_safe_but_looser() {
+        let ds = small();
+        let cs = run_path(&ds, &opts(ScreenerKind::DpcCs), &EngineKind::Exact).unwrap();
+        let dpc = run_path(&ds, &opts(ScreenerKind::Dpc), &EngineKind::Exact).unwrap();
+        let s: usize = cs.records.iter().map(|r| r.rejected).sum();
+        let o: usize = dpc.records.iter().map(|r| r.rejected).sum();
+        assert!(s <= o, "CS rejected more than exact DPC");
+    }
+
+    #[test]
+    fn bcd_path_agrees_with_fista_path() {
+        let ds = small();
+        let mut o = opts(ScreenerKind::Dpc);
+        o.solver = SolverKind::Bcd;
+        let b = run_path(&ds, &o, &EngineKind::Exact).unwrap();
+        let f = run_path(&ds, &opts(ScreenerKind::Dpc), &EngineKind::Exact).unwrap();
+        for (x, y) in b.records.iter().zip(&f.records) {
+            assert!((x.obj - y.obj).abs() <= 1e-5 * y.obj.abs().max(1.0));
+        }
+    }
+}

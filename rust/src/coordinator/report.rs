@@ -1,0 +1,90 @@
+//! Renderers that print the paper's tables/figures from metric structs —
+//! the benches and the CLI both go through these so the output format is
+//! uniform and diffable (EXPERIMENTS.md records these outputs verbatim).
+
+use super::metrics::SpeedupRow;
+use crate::bench::Table;
+
+/// Table 1: running-time comparison.
+pub fn render_table1(rows: &[SpeedupRow]) -> String {
+    let mut t = Table::new(&[
+        "dataset", "d", "solver(s)", "DPC(s)", "DPC+solver(s)", "speedup", "mean rej.",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.dataset.clone(),
+            r.d.to_string(),
+            format!("{:.2}", r.solver_secs),
+            format!("{:.3}", r.dpc_secs),
+            format!("{:.2}", r.combined_secs),
+            format!("{:.2}x", r.speedup),
+            format!("{:.4}", r.mean_rejection),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure panel: rejection-ratio curve as aligned CSV (ratio, rejection).
+/// Downstream plotting is a cut-and-paste away; the *shape* check (paper
+/// comparison) reads these numbers directly.
+pub fn render_rejection_curve(title: &str, curve: &[(f64, f64)]) -> String {
+    let mut out = format!("# {title}\n# lambda/lambda_max, rejection_ratio\n");
+    for (r, v) in curve {
+        out.push_str(&format!("{r:.6}, {v:.6}\n"));
+    }
+    // compact sparkline-ish summary for terminals
+    let buckets = 20.min(curve.len());
+    if buckets > 1 {
+        let mut bar = String::from("# [1.0 -> 0.01]: ");
+        for i in 0..buckets {
+            let idx = i * (curve.len() - 1) / (buckets - 1);
+            let v = curve[idx].1;
+            let ch = match (v * 8.0) as usize {
+                0 => ' ',
+                1 => '.',
+                2 => ':',
+                3 => '-',
+                4 => '=',
+                5 => '+',
+                6 => '*',
+                7 => '#',
+                _ => '@',
+            };
+            bar.push(ch);
+        }
+        out.push_str(&bar);
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_contains_speedup_column() {
+        let rows = vec![SpeedupRow {
+            dataset: "synthetic1".into(),
+            d: 2000,
+            solver_secs: 120.0,
+            dpc_secs: 0.4,
+            combined_secs: 6.0,
+            speedup: 20.0,
+            mean_rejection: 0.97,
+        }];
+        let s = render_table1(&rows);
+        assert!(s.contains("20.00x"));
+        assert!(s.contains("synthetic1"));
+    }
+
+    #[test]
+    fn curve_renders_all_points() {
+        let curve = vec![(1.0, 0.0), (0.5, 0.9), (0.01, 1.0)];
+        let s = render_rejection_curve("fig1-panel", &curve);
+        // 3 data rows (the header comment also contains one ", ")
+        let data_rows = s.lines().filter(|l| !l.starts_with('#')).count();
+        assert_eq!(data_rows, 3);
+        assert!(s.contains("0.500000, 0.900000"));
+    }
+}

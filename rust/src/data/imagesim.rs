@@ -1,0 +1,199 @@
+//! Animal-with-Attributes-like image-feature workload (simulated — see
+//! DESIGN.md §5).
+//!
+//! The real set concatenates seven descriptor families (color histograms,
+//! LSS, PHOG, SIFT, colorSIFT, SURF, DECAF) into 15036 dims; 20 one-vs-rest
+//! tasks with ±30 images. The screening-relevant structure: feature
+//! *blocks* with very different scales and intra-block correlation, and
+//! class signal concentrated in a subset of blocks. We simulate each block
+//! as a low-rank-plus-noise Gaussian with a per-block scale, plus per-class
+//! mean offsets on a sparse subset of dimensions.
+
+use super::{Dataset, Task};
+use crate::util::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct ImageSimOptions {
+    pub classes: usize,
+    pub n_pos: usize,
+    /// per-block dims; total d = sum (default mirrors 7 heterogeneous blocks)
+    pub blocks: Vec<usize>,
+    pub rank: usize,
+    pub seed: u64,
+}
+
+impl Default for ImageSimOptions {
+    fn default() -> Self {
+        ImageSimOptions {
+            classes: 10,
+            n_pos: 30,
+            // scaled-down echo of the 7 descriptor families
+            blocks: vec![288, 512, 252, 1000, 1000, 512, 1024],
+            rank: 8,
+            seed: 0,
+        }
+    }
+}
+
+pub fn imagesim(opts: &ImageSimOptions) -> Dataset {
+    let ImageSimOptions { classes, n_pos, ref blocks, rank, seed } = *opts;
+    let d: usize = blocks.iter().sum();
+    let mut root = Pcg64::with_stream(seed, 0x1a6e);
+
+    // per-block scale (descriptor families differ by orders of magnitude)
+    let scales: Vec<f64> = blocks.iter().map(|_| 10f64.powf(root.uniform_in(-1.0, 1.0))).collect();
+    // per-block mixing matrix (rank x dim) for intra-block correlation
+    let mixers: Vec<Vec<f64>> = blocks
+        .iter()
+        .map(|&bd| (0..rank * bd).map(|_| root.normal() * 0.7).collect())
+        .collect();
+    // per-class sparse mean offsets
+    let class_means: Vec<Vec<(usize, f64)>> = (0..classes)
+        .map(|_| {
+            let k = (d / 50).max(4);
+            root.choose_distinct(d, k)
+                .into_iter()
+                .map(|l| (l, root.normal() * 1.5))
+                .collect()
+        })
+        .collect();
+
+    let gen_image = |rng: &mut Pcg64, class: usize, out: &mut [f64]| {
+        let mut off = 0usize;
+        for (bi, &bd) in blocks.iter().enumerate() {
+            let z: Vec<f64> = (0..rank).map(|_| rng.normal()).collect();
+            let m = &mixers[bi];
+            for j in 0..bd {
+                let mut v = rng.normal() * 0.5;
+                for (r, zr) in z.iter().enumerate() {
+                    v += m[r * bd + j] * zr;
+                }
+                out[off + j] = v * scales[bi];
+            }
+            off += bd;
+        }
+        for &(l, mu) in &class_means[class] {
+            out[l] += mu * scales[0].max(1.0);
+        }
+    };
+
+    let n = 2 * n_pos;
+    let mut tasks = Vec::with_capacity(classes);
+    let mut img = vec![0.0f64; d];
+    for cls in 0..classes {
+        let mut rng = root.split(cls as u64);
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n];
+        for ni in 0..n {
+            let positive = ni < n_pos;
+            y[ni] = if positive { 1.0 } else { -1.0 };
+            let src = if positive {
+                cls
+            } else {
+                let mut o = rng.below(classes as u64) as usize;
+                if o == cls {
+                    o = (o + 1) % classes;
+                }
+                o
+            };
+            gen_image(&mut rng, src, &mut img);
+            for (l, &v) in img.iter().enumerate() {
+                x[l * n + ni] = v as f32;
+            }
+        }
+        tasks.push(Task { x, y, n });
+    }
+    Dataset { name: "animalsim".into(), d, tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_opts() -> ImageSimOptions {
+        ImageSimOptions {
+            classes: 3,
+            n_pos: 8,
+            blocks: vec![32, 64, 16],
+            rank: 4,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn shape() {
+        let ds = imagesim(&small_opts());
+        ds.validate().unwrap();
+        assert_eq!(ds.d, 112);
+        assert_eq!(ds.t(), 3);
+        assert_eq!(ds.uniform_n(), Some(16));
+    }
+
+    #[test]
+    fn blocks_have_heterogeneous_scales() {
+        let ds = imagesim(&small_opts());
+        let b2 = ds.col_sqnorms();
+        let t = ds.t();
+        let mean_norm = |range: std::ops::Range<usize>| {
+            let mut s = 0.0;
+            let mut c = 0;
+            for l in range {
+                s += b2[l * t];
+                c += 1;
+            }
+            (s / c as f64).sqrt()
+        };
+        let a = mean_norm(0..32);
+        let b = mean_norm(32..96);
+        let c = mean_norm(96..112);
+        let max = a.max(b).max(c);
+        let min = a.min(b).min(c);
+        assert!(max / min > 1.5, "block scales should differ: {a} {b} {c}");
+    }
+
+    #[test]
+    fn intra_block_correlation_exceeds_cross_block() {
+        let mut o = small_opts();
+        o.n_pos = 200; // enough samples for stable correlation
+        let ds = imagesim(&o);
+        let col = |l: usize| ds.col(0, l);
+        // single pairs can be weakly correlated by chance at low rank —
+        // compare the *average* |corr| over many pairs instead
+        let mut r_in = 0.0;
+        let mut r_cross = 0.0;
+        let mut pairs = 0;
+        for i in 0..24 {
+            r_in += corr_abs(col(i), col(i + 4)); // both in block 0 (dims 0..32)
+            r_cross += corr_abs(col(i), col(96 + (i % 16))); // block 0 vs block 2
+            pairs += 1;
+        }
+        r_in /= pairs as f64;
+        r_cross /= pairs as f64;
+        assert!(
+            r_in > r_cross + 0.05,
+            "mean intra {r_in} not above mean cross {r_cross}"
+        );
+    }
+
+    fn corr_abs(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let (mut va, mut vb) = (0.0, 0.0);
+        for i in 0..a.len() {
+            let x = a[i] as f64 - ma;
+            let y = b[i] as f64 - mb;
+            num += x * y;
+            va += x * x;
+            vb += y * y;
+        }
+        (num / (va.sqrt() * vb.sqrt())).abs()
+    }
+
+    #[test]
+    fn deterministic() {
+        let o = small_opts();
+        assert_eq!(imagesim(&o).tasks[0].x, imagesim(&o).tasks[0].x);
+    }
+}

@@ -1,0 +1,193 @@
+//! `.mtd` — a tiny self-describing binary container for multi-task
+//! datasets (no serde offline). Little-endian layout:
+//!
+//! ```text
+//! magic "MTD1" | u32 name_len | name bytes | u64 d | u64 t
+//! per task: u64 n | n*d f32 x (feature-major) | n f32 y
+//! trailing u64 xxhash-ish checksum of everything before it
+//! ```
+
+use super::{Dataset, Task};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MTD1";
+
+/// FNV-1a 64 over the byte stream (checksum; not cryptographic).
+#[derive(Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf29ce484222325)
+    }
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: Fnv64,
+}
+
+impl<W: Write> HashingWriter<W> {
+    fn write_all_hashed(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        self.hash.update(buf);
+        self.inner.write_all(buf)
+    }
+}
+
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    // f32 -> LE bytes without a copy (we only ship little-endian targets;
+    // asserted at save/load below)
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    assert!(cfg!(target_endian = "little"), "mtd format is little-endian");
+    ds.validate()?;
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = HashingWriter { inner: BufWriter::new(f), hash: Fnv64::new() };
+
+    w.write_all_hashed(MAGIC)?;
+    let name = ds.name.as_bytes();
+    w.write_all_hashed(&(name.len() as u32).to_le_bytes())?;
+    w.write_all_hashed(name)?;
+    w.write_all_hashed(&(ds.d as u64).to_le_bytes())?;
+    w.write_all_hashed(&(ds.t() as u64).to_le_bytes())?;
+    for task in &ds.tasks {
+        w.write_all_hashed(&(task.n as u64).to_le_bytes())?;
+        w.write_all_hashed(f32s_as_bytes(&task.x))?;
+        w.write_all_hashed(f32s_as_bytes(&task.y))?;
+    }
+    let digest = w.hash.digest();
+    w.inner.write_all(&digest.to_le_bytes())?;
+    w.inner.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Dataset> {
+    assert!(cfg!(target_endian = "little"), "mtd format is little-endian");
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut hash = Fnv64::new();
+
+    let read_hashed = |r: &mut BufReader<std::fs::File>,
+                           hash: &mut Fnv64,
+                           n: usize|
+     -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; n];
+        r.read_exact(&mut buf)?;
+        hash.update(&buf);
+        Ok(buf)
+    };
+
+    let magic = read_hashed(&mut r, &mut hash, 4)?;
+    if magic != MAGIC {
+        bail!("not an mtd file: bad magic");
+    }
+    let name_len =
+        u32::from_le_bytes(read_hashed(&mut r, &mut hash, 4)?.try_into().unwrap()) as usize;
+    if name_len > 4096 {
+        bail!("unreasonable name length {name_len}");
+    }
+    let name = String::from_utf8(read_hashed(&mut r, &mut hash, name_len)?)
+        .context("dataset name not utf8")?;
+    let d = u64::from_le_bytes(read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap()) as usize;
+    let t = u64::from_le_bytes(read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap()) as usize;
+    if d == 0 || t == 0 || d > 100_000_000 || t > 100_000 {
+        bail!("corrupt header: d={d} t={t}");
+    }
+
+    let mut tasks = Vec::with_capacity(t);
+    for _ in 0..t {
+        let n =
+            u64::from_le_bytes(read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap()) as usize;
+        if n == 0 || n.checked_mul(d).is_none() {
+            bail!("corrupt task header: n={n}");
+        }
+        let x = bytes_to_f32s(&read_hashed(&mut r, &mut hash, n * d * 4)?);
+        let y = bytes_to_f32s(&read_hashed(&mut r, &mut hash, n * 4)?);
+        tasks.push(Task { x, y, n });
+    }
+
+    let mut digest_bytes = [0u8; 8];
+    r.read_exact(&mut digest_bytes)?;
+    let want = u64::from_le_bytes(digest_bytes);
+    if want != hash.digest() {
+        bail!("checksum mismatch: file corrupt");
+    }
+
+    let ds = Dataset { name, d, tasks };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mtfl_test_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn round_trip() {
+        let (ds, _) = synthetic1(&SynthOptions { t: 3, n: 7, d: 11, ..Default::default() });
+        let p = tmp("roundtrip.mtd");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.d, ds.d);
+        for (a, b) in back.tasks.iter().zip(&ds.tasks) {
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.y, b.y);
+        }
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let (ds, _) = synthetic1(&SynthOptions { t: 2, n: 5, d: 6, ..Default::default() });
+        let p = tmp("corrupt.mtd");
+        save(&ds, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p);
+        std::fs::remove_file(&p).ok();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.mtd");
+        std::fs::write(&p, b"definitely not a dataset").unwrap();
+        let err = load(&p);
+        std::fs::remove_file(&p).ok();
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Multi-task dataset substrate: the in-memory representation, the paper's
+//! five workloads (two synthetic, three simulated "real" sets — see
+//! DESIGN.md §5 for the substitution rationale), and a binary on-disk
+//! format.
+
+pub mod imagesim;
+pub mod io;
+pub mod snpsim;
+pub mod synthetic;
+pub mod textsim;
+pub mod transform;
+
+use crate::linalg::ColMajor;
+
+/// One task: an `n x d` feature-major matrix and its response vector.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// feature-major buffer, length `n * d`; column l = samples of feature l
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub n: usize,
+}
+
+impl Task {
+    pub fn view(&self, d: usize) -> ColMajor<'_> {
+        ColMajor::new(&self.x, self.n, d)
+    }
+}
+
+/// A multi-task dataset: `T` tasks sharing the same `d` features, each with
+/// its **own** data matrix (the setting that makes DPC novel — single-matrix
+/// screening rules do not apply).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub d: usize,
+    pub tasks: Vec<Task>,
+}
+
+impl Dataset {
+    pub fn t(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Total sample count N = Σ N_t.
+    pub fn total_n(&self) -> usize {
+        self.tasks.iter().map(|t| t.n).sum()
+    }
+
+    /// All tasks have the same N (required by the AOT engine's (T,N,D) ABI).
+    pub fn uniform_n(&self) -> Option<usize> {
+        let n0 = self.tasks.first()?.n;
+        self.tasks.iter().all(|t| t.n == n0).then_some(n0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tasks.is_empty(), "dataset has no tasks");
+        anyhow::ensure!(self.d > 0, "dataset has no features");
+        for (i, t) in self.tasks.iter().enumerate() {
+            anyhow::ensure!(t.n > 0, "task {i} has no samples");
+            anyhow::ensure!(
+                t.x.len() == t.n * self.d,
+                "task {i}: x buffer {} != n*d {}",
+                t.x.len(),
+                t.n * self.d
+            );
+            anyhow::ensure!(t.y.len() == t.n, "task {i}: y length mismatch");
+            anyhow::ensure!(
+                t.x.iter().all(|v| v.is_finite()) && t.y.iter().all(|v| v.is_finite()),
+                "task {i}: non-finite entries"
+            );
+        }
+        Ok(())
+    }
+
+    /// Column l of task t.
+    #[inline]
+    pub fn col(&self, t: usize, l: usize) -> &[f32] {
+        let task = &self.tasks[t];
+        &task.x[l * task.n..(l + 1) * task.n]
+    }
+
+    /// Copy the retained features into a compacted dataset (the memory
+    /// saving screening buys). `keep` must be sorted & in-range.
+    pub fn restrict(&self, keep: &[usize]) -> Dataset {
+        let tasks = self
+            .tasks
+            .iter()
+            .map(|task| {
+                let mut x = Vec::with_capacity(task.n * keep.len());
+                for &l in keep {
+                    x.extend_from_slice(&task.x[l * task.n..(l + 1) * task.n]);
+                }
+                Task { x, y: task.y.clone(), n: task.n }
+            })
+            .collect();
+        Dataset { name: format!("{}[{}]", self.name, keep.len()), d: keep.len(), tasks }
+    }
+
+    /// ||x_l^{(t)}||^2 for every (l, t): the b² moments of Theorem 7.
+    /// Computed once per dataset and cached by the screeners.
+    pub fn col_sqnorms(&self) -> Vec<f64> {
+        let t_count = self.t();
+        let mut out = vec![0.0f64; self.d * t_count];
+        for (ti, task) in self.tasks.iter().enumerate() {
+            for l in 0..self.d {
+                let col = &task.x[l * task.n..(l + 1) * task.n];
+                out[l * t_count + ti] = crate::linalg::dot_f32_f64(col, col);
+            }
+        }
+        out
+    }
+
+    /// Pack into the dense (T, N, D) f32 layout of the AOT ABI
+    /// (row-major over [t][n][l]). Requires uniform N.
+    pub fn to_tnd(&self) -> anyhow::Result<Vec<f32>> {
+        let n = self
+            .uniform_n()
+            .ok_or_else(|| anyhow::anyhow!("AOT packing requires uniform task sizes"))?;
+        let t_count = self.t();
+        let mut out = vec![0.0f32; t_count * n * self.d];
+        for (ti, task) in self.tasks.iter().enumerate() {
+            for l in 0..self.d {
+                let col = &task.x[l * task.n..(l + 1) * task.n];
+                for (ni, &v) in col.iter().enumerate() {
+                    out[(ti * n + ni) * self.d + l] = v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Stack y into (T, N) row-major. Requires uniform N.
+    pub fn y_tn(&self) -> anyhow::Result<Vec<f32>> {
+        let n = self
+            .uniform_n()
+            .ok_or_else(|| anyhow::anyhow!("AOT packing requires uniform task sizes"))?;
+        let mut out = Vec::with_capacity(self.t() * n);
+        for task in &self.tasks {
+            out.extend_from_slice(&task.y);
+        }
+        Ok(out)
+    }
+}
+
+/// The ground-truth used by synthetic generators (for recovery metrics).
+#[derive(Debug, Clone)]
+pub struct GroundTruth {
+    /// active feature indices (rows of W* that are nonzero)
+    pub active: Vec<usize>,
+    /// full weight matrix, row-major (d x T)
+    pub w: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::synthetic::{synthetic1, SynthOptions};
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let (ds, _) = synthetic1(&SynthOptions { t: 3, n: 8, d: 20, ..Default::default() });
+        ds
+    }
+
+    #[test]
+    fn validate_ok_and_shape_accessors() {
+        let ds = tiny();
+        ds.validate().unwrap();
+        assert_eq!(ds.t(), 3);
+        assert_eq!(ds.total_n(), 24);
+        assert_eq!(ds.uniform_n(), Some(8));
+    }
+
+    #[test]
+    fn restrict_keeps_exact_columns() {
+        let ds = tiny();
+        let keep = vec![1usize, 5, 19];
+        let r = ds.restrict(&keep);
+        assert_eq!(r.d, 3);
+        for t in 0..ds.t() {
+            for (new_l, &old_l) in keep.iter().enumerate() {
+                assert_eq!(r.col(t, new_l), ds.col(t, old_l));
+            }
+            assert_eq!(r.tasks[t].y, ds.tasks[t].y);
+        }
+    }
+
+    #[test]
+    fn tnd_round_trip() {
+        let ds = tiny();
+        let tnd = ds.to_tnd().unwrap();
+        let n = 8;
+        for t in 0..3 {
+            for l in 0..20 {
+                let col = ds.col(t, l);
+                for ni in 0..n {
+                    assert_eq!(tnd[(t * n + ni) * 20 + l], col[ni]);
+                }
+            }
+        }
+        let y = ds.y_tn().unwrap();
+        assert_eq!(&y[8..16], ds.tasks[1].y.as_slice());
+    }
+
+    #[test]
+    fn col_sqnorms_match_manual() {
+        let ds = tiny();
+        let b2 = ds.col_sqnorms();
+        for t in 0..ds.t() {
+            for l in 0..ds.d {
+                let want: f64 = ds.col(t, l).iter().map(|v| (*v as f64).powi(2)).sum();
+                assert!((b2[l * ds.t() + t] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_buffer() {
+        let mut ds = tiny();
+        ds.tasks[0].x.pop();
+        assert!(ds.validate().is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! ADNI-like SNP→brain-volume regression workload (simulated — see
+//! DESIGN.md §5; the real ADNI genotypes are access-controlled).
+//!
+//! Real setting: 747 patients x 504095 SNPs; 20 tasks, each regressing one
+//! randomly chosen brain-region volume on the SNPs of 50 randomly chosen
+//! patients. The regime that matters for DPC: d >> N by four orders of
+//! magnitude, discrete {0,1,2} minor-allele counts, LD-block correlation,
+//! and a tiny causal set shared across regions. We simulate:
+//!
+//! * MAF per SNP ~ Beta(0.8, 2.3) clamped to [0.01, 0.5] (realistic site
+//!   frequency spectrum);
+//! * LD: SNPs come in blocks of `ld_block`; within a block, each SNP copies
+//!   the previous one's genotype with prob `ld_rho` per allele;
+//! * `causal` SNPs with Gaussian effects shared across tasks (plus small
+//!   per-task deviation), y standardized per task.
+
+use super::{Dataset, GroundTruth, Task};
+use crate::util::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct SnpSimOptions {
+    pub tasks: usize,
+    pub n: usize,
+    pub d: usize,
+    pub causal: usize,
+    pub ld_block: usize,
+    pub ld_rho: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for SnpSimOptions {
+    fn default() -> Self {
+        SnpSimOptions {
+            tasks: 20,
+            n: 50,
+            d: 50_000,
+            causal: 60,
+            ld_block: 25,
+            ld_rho: 0.7,
+            noise: 0.3,
+            seed: 0,
+        }
+    }
+}
+
+fn beta_maf(rng: &mut Pcg64) -> f64 {
+    // Beta(a,b) via Johnk-ish two-gamma; gamma by Marsaglia-Tsang for a<1
+    fn gamma(rng: &mut Pcg64, a: f64) -> f64 {
+        if a < 1.0 {
+            let u = rng.uniform().max(1e-12);
+            return gamma(rng, a + 1.0) * u.powf(1.0 / a);
+        }
+        let d = a - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = rng.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = rng.uniform().max(1e-12);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+    let g1 = gamma(rng, 0.8);
+    let g2 = gamma(rng, 2.3);
+    (g1 / (g1 + g2)).clamp(0.01, 0.5)
+}
+
+pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
+    let SnpSimOptions { tasks, n, d, causal, ld_block, ld_rho, noise, seed } = *opts;
+    let mut root = Pcg64::with_stream(seed, 0xad71);
+
+    let mafs: Vec<f64> = (0..d).map(|_| beta_maf(&mut root)).collect();
+    let mut active = root.choose_distinct(d, causal.min(d));
+    active.sort_unstable();
+    // shared effect + small per-task deviation
+    let mut w = vec![0.0f64; d * tasks];
+    for &l in &active {
+        let shared = root.normal();
+        for t in 0..tasks {
+            w[l * tasks + t] = shared + 0.2 * root.normal();
+        }
+    }
+
+    let mut out_tasks = Vec::with_capacity(tasks);
+    for t in 0..tasks {
+        let mut rng = root.split(t as u64);
+        let mut x = vec![0.0f32; n * d];
+        let mut y64 = vec![0.0f64; n];
+        let mut geno_prev = vec![0u8; n];
+        for l in 0..d {
+            let maf = mafs[l];
+            let fresh_block = l % ld_block == 0;
+            let col_start = l * n;
+            for ni in 0..n {
+                let g = if fresh_block || rng.uniform() >= ld_rho {
+                    // two Bernoulli(maf) alleles
+                    (rng.uniform() < maf) as u8 + (rng.uniform() < maf) as u8
+                } else {
+                    geno_prev[ni] // LD copy
+                };
+                geno_prev[ni] = g;
+                // standardize genotype column to mean 0 (population-level)
+                let centered = g as f64 - 2.0 * maf;
+                x[col_start + ni] = centered as f32;
+                let wl = w[l * tasks + t];
+                if wl != 0.0 {
+                    y64[ni] += centered * wl;
+                }
+            }
+        }
+        // per-task standardization of y + noise (mirrors volume z-scoring)
+        let m = y64.iter().sum::<f64>() / n as f64;
+        let var = y64.iter().map(|v| (v - m).powi(2)).sum::<f64>() / n as f64;
+        let sd = var.sqrt().max(1e-9);
+        let y: Vec<f32> = y64
+            .iter()
+            .map(|v| (((v - m) / sd) + noise * rng.normal()) as f32)
+            .collect();
+        out_tasks.push(Task { x, y, n });
+    }
+
+    (
+        Dataset { name: "adnisim".into(), d, tasks: out_tasks },
+        GroundTruth { active, w },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SnpSimOptions {
+        SnpSimOptions {
+            tasks: 3,
+            n: 20,
+            d: 400,
+            causal: 10,
+            ld_block: 10,
+            ld_rho: 0.7,
+            noise: 0.1,
+            seed: 2,
+        }
+    }
+
+    #[test]
+    fn shape_and_determinism() {
+        let (a, gt) = snpsim(&small());
+        let (b, _) = snpsim(&small());
+        a.validate().unwrap();
+        assert_eq!(a.d, 400);
+        assert_eq!(a.t(), 3);
+        assert_eq!(gt.active.len(), 10);
+        assert_eq!(a.tasks[1].x, b.tasks[1].x);
+    }
+
+    #[test]
+    fn genotypes_take_three_centered_levels() {
+        let (ds, _) = snpsim(&small());
+        // every column has at most 3 distinct values: {0,1,2} - 2*maf
+        for l in (0..ds.d).step_by(37) {
+            let col = ds.col(1, l);
+            let mut vals: Vec<i64> = col.iter().map(|v| (v * 1e4).round() as i64).collect();
+            vals.sort_unstable();
+            vals.dedup();
+            assert!(vals.len() <= 3, "column {l} has {} levels", vals.len());
+        }
+    }
+
+    #[test]
+    fn ld_within_block_exceeds_between() {
+        let mut o = small();
+        o.n = 600;
+        o.d = 200;
+        let (ds, _) = snpsim(&o);
+        // columns 1,2 in one LD block; 9,10 cross a boundary
+        let within = corr_abs(ds.col(0, 1), ds.col(0, 2));
+        let across = corr_abs(ds.col(0, 9), ds.col(0, 10));
+        assert!(within > across + 0.1, "within {within} across {across}");
+    }
+
+    #[test]
+    fn y_is_standardized() {
+        let (ds, _) = snpsim(&small());
+        for t in &ds.tasks {
+            let m: f64 = t.y.iter().map(|v| *v as f64).sum::<f64>() / t.n as f64;
+            let v: f64 =
+                t.y.iter().map(|v| (*v as f64 - m).powi(2)).sum::<f64>() / t.n as f64;
+            assert!(m.abs() < 0.3, "mean {m}");
+            assert!(v > 0.5 && v < 2.5, "var {v}");
+        }
+    }
+
+    fn corr_abs(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let (mut va, mut vb) = (0.0, 0.0);
+        for i in 0..a.len() {
+            let x = a[i] as f64 - ma;
+            let y = b[i] as f64 - mb;
+            num += x * y;
+            va += x * x;
+            vb += y * y;
+        }
+        if va == 0.0 || vb == 0.0 {
+            return 0.0;
+        }
+        (num / (va.sqrt() * vb.sqrt())).abs()
+    }
+}

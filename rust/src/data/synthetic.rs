@@ -1,0 +1,170 @@
+//! Synthetic 1 & Synthetic 2 from the paper (§5.1).
+//!
+//! Both have T tasks of N samples: `y_t = X_t w*_t + 0.01 ε`, ε ~ N(0,1).
+//! Synthetic 1: i.i.d. standard Gaussian entries.
+//! Synthetic 2: Gaussian with corr(x_i, x_j) = 0.5^{|i-j|} — an AR(1)
+//! process across the feature axis, generated per sample by the standard
+//! recursion x_j = φ x_{j-1} + sqrt(1-φ²) ζ_j (exact for AR(1)).
+//! The shared support is 10% of features; active rows of W* are standard
+//! Gaussian across tasks.
+
+use super::{Dataset, GroundTruth, Task};
+use crate::util::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct SynthOptions {
+    pub t: usize,
+    pub n: usize,
+    pub d: usize,
+    /// fraction of features in the true support
+    pub support_frac: f64,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for SynthOptions {
+    fn default() -> Self {
+        SynthOptions { t: 20, n: 50, d: 2000, support_frac: 0.10, noise: 0.01, seed: 0 }
+    }
+}
+
+fn build(opts: &SynthOptions, corr: Option<f64>, name: &str) -> (Dataset, GroundTruth) {
+    let SynthOptions { t, n, d, support_frac, noise, seed } = *opts;
+    let mut root = Pcg64::with_stream(seed, 0x5e7);
+
+    // shared support (same rows active in every task: the MTFL premise)
+    let k = ((support_frac * d as f64).round() as usize).clamp(1, d);
+    let mut active = root.choose_distinct(d, k);
+    active.sort_unstable();
+    let mut w = vec![0.0f64; d * t];
+    for &l in &active {
+        for ti in 0..t {
+            w[l * t + ti] = root.normal();
+        }
+    }
+
+    let mut tasks = Vec::with_capacity(t);
+    for ti in 0..t {
+        let mut rng = root.split(ti as u64);
+        // generate row-major sample-by-sample (AR(1) runs along features),
+        // then transpose into the feature-major layout
+        let mut row = vec![0.0f64; d];
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n];
+        for ni in 0..n {
+            match corr {
+                None => {
+                    for v in row.iter_mut() {
+                        *v = rng.normal();
+                    }
+                }
+                Some(phi) => {
+                    let s = (1.0 - phi * phi).sqrt();
+                    row[0] = rng.normal();
+                    for j in 1..d {
+                        row[j] = phi * row[j - 1] + s * rng.normal();
+                    }
+                }
+            }
+            let mut acc = 0.0f64;
+            for (j, &v) in row.iter().enumerate() {
+                x[j * n + ni] = v as f32;
+                acc += v * w[j * t + ti];
+            }
+            y[ni] = (acc + noise * rng.normal()) as f32;
+        }
+        tasks.push(Task { x, y, n });
+    }
+
+    (
+        Dataset { name: name.to_string(), d, tasks },
+        GroundTruth { active, w },
+    )
+}
+
+/// Synthetic 1: i.i.d. N(0,1) entries, zero pairwise correlation.
+pub fn synthetic1(opts: &SynthOptions) -> (Dataset, GroundTruth) {
+    build(opts, None, "synthetic1")
+}
+
+/// Synthetic 2: AR(1) feature correlation 0.5^{|i-j|}.
+pub fn synthetic2(opts: &SynthOptions) -> (Dataset, GroundTruth) {
+    build(opts, Some(0.5), "synthetic2")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let opts = SynthOptions { t: 4, n: 10, d: 50, seed: 3, ..Default::default() };
+        let (a, gta) = synthetic1(&opts);
+        let (b, gtb) = synthetic1(&opts);
+        a.validate().unwrap();
+        assert_eq!(a.tasks[2].x, b.tasks[2].x);
+        assert_eq!(gta.active, gtb.active);
+        assert_eq!(gta.active.len(), 5); // 10% of 50
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let o1 = SynthOptions { t: 2, n: 8, d: 30, seed: 1, ..Default::default() };
+        let o2 = SynthOptions { seed: 2, ..o1.clone() };
+        let (a, _) = synthetic1(&o1);
+        let (b, _) = synthetic1(&o2);
+        assert_ne!(a.tasks[0].x, b.tasks[0].x);
+    }
+
+    #[test]
+    fn synthetic2_has_ar1_correlation() {
+        let opts = SynthOptions { t: 1, n: 4000, d: 30, seed: 5, ..Default::default() };
+        let (ds, _) = synthetic2(&opts);
+        // empirical corr of adjacent columns ~ 0.5; lag-2 ~ 0.25
+        let c01 = corr(ds.col(0, 10), ds.col(0, 11));
+        let c02 = corr(ds.col(0, 10), ds.col(0, 12));
+        assert!((c01 - 0.5).abs() < 0.06, "lag-1 corr {c01}");
+        assert!((c02 - 0.25).abs() < 0.06, "lag-2 corr {c02}");
+    }
+
+    #[test]
+    fn synthetic1_uncorrelated() {
+        let opts = SynthOptions { t: 1, n: 4000, d: 10, seed: 6, ..Default::default() };
+        let (ds, _) = synthetic1(&opts);
+        let c = corr(ds.col(0, 3), ds.col(0, 4));
+        assert!(c.abs() < 0.06, "corr {c}");
+    }
+
+    #[test]
+    fn responses_follow_model() {
+        // with zero noise, y must equal X w* exactly (up to f32 rounding)
+        let opts =
+            SynthOptions { t: 2, n: 12, d: 40, noise: 0.0, seed: 7, ..Default::default() };
+        let (ds, gt) = synthetic1(&opts);
+        for t in 0..2 {
+            for ni in 0..12 {
+                let mut acc = 0.0f64;
+                for l in 0..40 {
+                    acc += ds.col(t, l)[ni] as f64 * gt.w[l * 2 + t];
+                }
+                assert!((acc - ds.tasks[t].y[ni] as f64).abs() < 1e-4);
+            }
+        }
+    }
+
+    fn corr(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|v| *v as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let (mut va, mut vb) = (0.0, 0.0);
+        for i in 0..a.len() {
+            let x = a[i] as f64 - ma;
+            let y = b[i] as f64 - mb;
+            num += x * y;
+            va += x * x;
+            vb += y * y;
+        }
+        num / (va.sqrt() * vb.sqrt())
+    }
+}

@@ -1,0 +1,161 @@
+//! TDT2-like text workload (simulated — see DESIGN.md §5).
+//!
+//! The real TDT2 set is 9394 documents over 36771 terms, 30 one-vs-rest
+//! classification tasks with ±50 samples each. What matters for screening
+//! is the *statistical shape* the dual sweep sees: extremely sparse
+//! documents, Zipf-distributed term frequencies (heavy-tailed column
+//! norms, many near-zero columns), and per-category topical terms shared
+//! across the positive class. This generator reproduces exactly that:
+//!
+//! * vocabulary of `d` terms with Zipf(1.1) global frequencies;
+//! * each category owns a small set of "topic" terms boosted for its docs;
+//! * documents draw ~`doc_len` terms; counts are log-scaled (1+log tf);
+//! * task t = category t vs rest, y = ±1, ±`n_pos` docs per side.
+
+use super::{Dataset, Task};
+use crate::util::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct TextSimOptions {
+    /// number of categories == number of tasks
+    pub categories: usize,
+    /// positive (== negative) samples per task
+    pub n_pos: usize,
+    pub d: usize,
+    pub doc_len: usize,
+    pub topic_terms: usize,
+    pub seed: u64,
+}
+
+impl Default for TextSimOptions {
+    fn default() -> Self {
+        TextSimOptions {
+            categories: 10,
+            n_pos: 25,
+            d: 8000,
+            doc_len: 120,
+            topic_terms: 40,
+            seed: 0,
+        }
+    }
+}
+
+fn draw_doc(
+    rng: &mut Pcg64,
+    d: usize,
+    doc_len: usize,
+    topic: &[usize],
+    topic_boost: f64,
+) -> Vec<(usize, f32)> {
+    use std::collections::HashMap;
+    let mut counts: HashMap<usize, u32> = HashMap::with_capacity(doc_len);
+    for _ in 0..doc_len {
+        let term = if !topic.is_empty() && rng.uniform() < topic_boost {
+            topic[rng.below(topic.len() as u64) as usize]
+        } else {
+            rng.zipf(d, 1.1)
+        };
+        *counts.entry(term).or_insert(0) += 1;
+    }
+    counts
+        .into_iter()
+        .map(|(t, c)| (t, (1.0 + (c as f32).ln())))
+        .collect()
+}
+
+/// Build the one-vs-rest multi-task text dataset.
+pub fn textsim(opts: &TextSimOptions) -> Dataset {
+    let TextSimOptions { categories, n_pos, d, doc_len, topic_terms, seed } = *opts;
+    let mut root = Pcg64::with_stream(seed, 0x7d72);
+
+    // each category's topical terms (disjointish, drawn from mid-frequency ranks)
+    let topics: Vec<Vec<usize>> = (0..categories)
+        .map(|_| root.choose_distinct(d, topic_terms))
+        .collect();
+
+    let n = 2 * n_pos;
+    let mut tasks = Vec::with_capacity(categories);
+    for cat in 0..categories {
+        let mut rng = root.split(cat as u64);
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n];
+        for ni in 0..n {
+            let positive = ni < n_pos;
+            y[ni] = if positive { 1.0 } else { -1.0 };
+            // negatives come from a random *other* category (one-vs-rest)
+            let src = if positive {
+                cat
+            } else {
+                let mut o = rng.below(categories as u64) as usize;
+                if o == cat {
+                    o = (o + 1) % categories;
+                }
+                o
+            };
+            for (term, tfidf) in draw_doc(&mut rng, d, doc_len, &topics[src], 0.35) {
+                x[term * n + ni] = tfidf;
+            }
+        }
+        tasks.push(Task { x, y, n });
+    }
+    Dataset { name: "tdt2sim".into(), d, tasks }
+}
+
+/// Indices of features that are all-zero in every task (the real-TDT2
+/// preprocessing removes them; the paper reports 24262 kept of 36771).
+pub fn nonzero_features(ds: &Dataset) -> Vec<usize> {
+    (0..ds.d)
+        .filter(|&l| ds.tasks.iter().any(|t| t.x[l * t.n..(l + 1) * t.n].iter().any(|&v| v != 0.0)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_labels() {
+        let ds = textsim(&TextSimOptions { categories: 4, n_pos: 6, d: 500, ..Default::default() });
+        ds.validate().unwrap();
+        assert_eq!(ds.t(), 4);
+        assert_eq!(ds.uniform_n(), Some(12));
+        for t in &ds.tasks {
+            assert_eq!(t.y.iter().filter(|&&v| v > 0.0).count(), 6);
+        }
+    }
+
+    #[test]
+    fn documents_are_sparse() {
+        let ds = textsim(&TextSimOptions { categories: 3, n_pos: 10, d: 2000, ..Default::default() });
+        let nnz: usize = ds.tasks.iter().map(|t| t.x.iter().filter(|&&v| v != 0.0).count()).sum();
+        let total: usize = ds.tasks.iter().map(|t| t.x.len()).sum();
+        let density = nnz as f64 / total as f64;
+        assert!(density < 0.08, "text matrix should be sparse, density={density}");
+    }
+
+    #[test]
+    fn column_norms_are_heavy_tailed() {
+        let ds = textsim(&TextSimOptions { categories: 2, n_pos: 20, d: 2000, ..Default::default() });
+        let b2 = ds.col_sqnorms();
+        let mut per_feature: Vec<f64> =
+            (0..ds.d).map(|l| b2[l * 2] + b2[l * 2 + 1]).collect();
+        per_feature.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let head: f64 = per_feature[..20].iter().sum();
+        let total: f64 = per_feature.iter().sum();
+        assert!(head / total > 0.2, "Zipf head mass {head}/{total}");
+    }
+
+    #[test]
+    fn zero_feature_pruning_finds_dead_terms() {
+        let ds = textsim(&TextSimOptions { categories: 2, n_pos: 5, d: 5000, doc_len: 40, ..Default::default() });
+        let kept = nonzero_features(&ds);
+        assert!(kept.len() < ds.d, "tiny corpus must leave unused vocabulary");
+        assert!(!kept.is_empty());
+    }
+
+    #[test]
+    fn deterministic() {
+        let o = TextSimOptions { categories: 2, n_pos: 4, d: 300, seed: 9, ..Default::default() };
+        assert_eq!(textsim(&o).tasks[1].x, textsim(&o).tasks[1].x);
+    }
+}

@@ -1,0 +1,141 @@
+//! The paper's §2 equivalent MTFL formulations, reduced to problem (1) by
+//! dataset transforms — so DPC screens them unchanged:
+//!
+//! * **Weighted loss**  Σ_t 1/(2ρ_t)‖y_t − X_t w_t‖² + λ‖W‖₂,₁
+//!   reduces via ỹ_t = y_t/√ρ_t, X̃_t = X_t/√ρ_t.
+//! * **ℓ2,1 + Frobenius (elastic-net style)**
+//!   Σ_t ½‖y_t − X_t w_t‖² + λ‖W‖₂,₁ + ρ‖W‖_F²
+//!   reduces via row-augmentation X̄_t = [X_t; √(2ρ)·I], ȳ_t = [y_t; 0].
+//!
+//! Both transforms preserve the optimal W exactly (the objectives are
+//! equal as functions of W), so safe screening on the transformed problem
+//! is safe screening on the original — verified in the tests below.
+
+use super::{Dataset, Task};
+
+/// Weighted-loss reduction: scales each task by 1/√ρ_t.
+pub fn weighted(ds: &Dataset, rho: &[f64]) -> Dataset {
+    assert_eq!(rho.len(), ds.t(), "one weight per task");
+    assert!(rho.iter().all(|&r| r > 0.0), "weights must be positive");
+    let tasks = ds
+        .tasks
+        .iter()
+        .zip(rho)
+        .map(|(task, &r)| {
+            let s = (1.0 / r.sqrt()) as f32;
+            Task {
+                x: task.x.iter().map(|&v| v * s).collect(),
+                y: task.y.iter().map(|&v| v * s).collect(),
+                n: task.n,
+            }
+        })
+        .collect();
+    Dataset { name: format!("{}-weighted", ds.name), d: ds.d, tasks }
+}
+
+/// Elastic-net reduction: appends √(2ρ)·I rows to every task (n grows by d).
+///
+/// Note the memory cost (each task gains a d×d identity block); intended
+/// for the moderate-d regime. For d ≫ n the ridge term is usually applied
+/// through the solver instead — this transform exists to prove DPC
+/// compatibility, matching the paper's reduction.
+pub fn elastic_net(ds: &Dataset, rho: f64) -> Dataset {
+    assert!(rho > 0.0);
+    let s = (2.0 * rho).sqrt() as f32;
+    let d = ds.d;
+    let tasks = ds
+        .tasks
+        .iter()
+        .map(|task| {
+            let n_new = task.n + d;
+            let mut x = vec![0.0f32; n_new * d];
+            for l in 0..d {
+                // original column samples
+                x[l * n_new..l * n_new + task.n]
+                    .copy_from_slice(&task.x[l * task.n..(l + 1) * task.n]);
+                // identity row for this feature
+                x[l * n_new + task.n + l] = s;
+            }
+            let mut y = task.y.clone();
+            y.extend(std::iter::repeat(0.0f32).take(d));
+            Task { x, y, n: n_new }
+        })
+        .collect();
+    Dataset { name: format!("{}-enet", ds.name), d, tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::ops;
+    use crate::screening::dpc::{DpcScreener, DualRef};
+    use crate::screening::safety;
+    use crate::solver::{fista, SolveOptions};
+
+    fn base() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 10, d: 24, seed: 31, ..Default::default() }).0
+    }
+
+    #[test]
+    fn weighted_matches_manual_objective() {
+        let ds = base();
+        let rho = vec![0.5, 2.0, 1.3];
+        let tds = weighted(&ds, &rho);
+        let mut rng = crate::util::Pcg64::new(3);
+        let w: Vec<f64> = (0..ds.d * 3).map(|_| rng.normal() * 0.2).collect();
+        let lam = 0.7;
+        // manual weighted objective on the original data
+        let r = ops::residual(&ds, &w);
+        let manual: f64 = r
+            .iter()
+            .zip(&rho)
+            .map(|(rt, &p)| rt.iter().map(|v| v * v).sum::<f64>() / (2.0 * p))
+            .sum::<f64>()
+            + lam * ops::l21_norm(&w, 3);
+        let transformed = ops::primal_obj(&tds, &w, lam);
+        assert!((manual - transformed).abs() < 1e-6 * manual.max(1.0));
+    }
+
+    #[test]
+    fn elastic_net_matches_manual_objective() {
+        let ds = base();
+        let rho = 0.8;
+        let tds = elastic_net(&ds, rho);
+        let mut rng = crate::util::Pcg64::new(4);
+        let w: Vec<f64> = (0..ds.d * 3).map(|_| rng.normal() * 0.2).collect();
+        let lam = 0.5;
+        let fro2: f64 = w.iter().map(|v| v * v).sum();
+        let manual = ops::primal_obj(&ds, &w, lam) + rho * fro2;
+        let transformed = ops::primal_obj(&tds, &w, lam);
+        assert!(
+            (manual - transformed).abs() < 1e-6 * manual.max(1.0),
+            "{manual} vs {transformed}"
+        );
+    }
+
+    #[test]
+    fn dpc_is_safe_on_transformed_problems() {
+        for tds in [weighted(&base(), &[0.5, 2.0, 1.3]), elastic_net(&base(), 0.4)] {
+            let (dref, lmax) = DualRef::at_lambda_max(&tds);
+            let lam = 0.5 * lmax;
+            let out = DpcScreener::new(&tds).screen(&tds, &dref, lam);
+            let sol = fista(&tds, lam, None, &SolveOptions::tight());
+            let report = safety::verify(&tds, &sol.w, lam, &out.rejected, 1e-7);
+            assert!(report.is_safe(), "{}: {:?}", tds.name, report.violations);
+        }
+    }
+
+    #[test]
+    fn elastic_net_shrinks_but_preserves_support_ordering() {
+        // ridge shrinkage must not create new active features at the same lam
+        let ds = base();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.3 * lmax;
+        let plain = fista(&ds, lam, None, &SolveOptions::tight());
+        let enet = fista(&elastic_net(&ds, 2.0), lam, None, &SolveOptions::tight());
+        let n_plain = ops::l21_norm(&plain.w, 3);
+        let n_enet = ops::l21_norm(&enet.w, 3);
+        assert!(n_enet <= n_plain + 1e-9, "ridge did not shrink: {n_enet} > {n_plain}");
+    }
+}

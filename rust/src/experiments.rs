@@ -1,0 +1,277 @@
+//! Experiment drivers shared by the CLI (`repro <exp>`) and the bench
+//! targets — one function per paper table/figure (see DESIGN.md §4).
+//!
+//! Scales: `quick` (CI-sized, seconds), `default` (scaled-down paper dims,
+//! minutes), `paper` (the printed dims — hours on this CPU testbed; shape
+//! identical to `default`).
+
+use crate::coordinator::metrics::{mean_rejection_curve, speedup_row, SpeedupRow};
+use crate::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use crate::coordinator::{lambda_grid, report};
+use crate::data::imagesim::{imagesim, ImageSimOptions};
+use crate::data::snpsim::{snpsim, SnpSimOptions};
+use crate::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+use crate::data::textsim::{textsim, TextSimOptions};
+use crate::data::Dataset;
+use crate::solver::SolveOptions;
+use anyhow::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Default,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Scale> {
+        match s {
+            "quick" => Ok(Scale::Quick),
+            "default" => Ok(Scale::Default),
+            "paper" => Ok(Scale::Paper),
+            _ => anyhow::bail!("unknown scale '{s}' (quick|default|paper)"),
+        }
+    }
+
+    pub fn grid_len(&self) -> usize {
+        match self {
+            Scale::Quick => 20,
+            Scale::Default => 100, // the paper's 100-value grid
+            Scale::Paper => 100,
+        }
+    }
+
+    pub fn trials(&self) -> usize {
+        match self {
+            Scale::Quick => 2,
+            Scale::Default => 3,
+            Scale::Paper => 20, // the paper's 20 trials
+        }
+    }
+
+    pub fn synth_dims(&self) -> Vec<usize> {
+        match self {
+            Scale::Quick => vec![256, 512],
+            Scale::Default => vec![1000, 2000, 4000],
+            Scale::Paper => vec![10_000, 20_000, 50_000],
+        }
+    }
+
+    pub fn synth_tn(&self) -> (usize, usize) {
+        match self {
+            Scale::Quick => (4, 16),
+            Scale::Default => (20, 50),
+            Scale::Paper => (50, 50),
+        }
+    }
+}
+
+/// Path options used by the reproduction experiments: loose solver profile
+/// (cross-validation-grade accuracy, like the paper's SLEP runs).
+pub fn exp_opts(grid: usize, screener: ScreenerKind) -> PathOptions {
+    PathOptions {
+        ratios: lambda_grid(grid, 1.0, 0.01),
+        solve: SolveOptions { tol: 1e-6, max_iters: 20_000, ..Default::default() },
+        screener,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dataset builders
+// ---------------------------------------------------------------------------
+
+pub fn build_synthetic(which: u8, d: usize, scale: Scale, seed: u64) -> Dataset {
+    let (t, n) = scale.synth_tn();
+    let opts = SynthOptions { t, n, d, seed, ..Default::default() };
+    match which {
+        1 => synthetic1(&opts).0,
+        2 => synthetic2(&opts).0,
+        _ => unreachable!(),
+    }
+}
+
+pub fn build_animal(scale: Scale, seed: u64) -> Dataset {
+    let opts = match scale {
+        Scale::Quick => ImageSimOptions {
+            classes: 4,
+            n_pos: 8,
+            blocks: vec![64, 96, 96],
+            rank: 4,
+            seed,
+        },
+        Scale::Default => ImageSimOptions {
+            classes: 10,
+            n_pos: 30,
+            blocks: vec![288, 512, 252, 500, 500, 512, 512],
+            rank: 8,
+            seed,
+        },
+        // the paper's 20 classes x (60 x 15036)
+        Scale::Paper => ImageSimOptions {
+            classes: 20,
+            n_pos: 30,
+            blocks: vec![2688, 2000, 252, 2000, 2000, 2000, 4096],
+            rank: 16,
+            seed,
+        },
+    };
+    imagesim(&opts)
+}
+
+pub fn build_tdt2(scale: Scale, seed: u64) -> Dataset {
+    let opts = match scale {
+        Scale::Quick => TextSimOptions { categories: 4, n_pos: 10, d: 600, ..Default::default() },
+        Scale::Default => {
+            TextSimOptions { categories: 10, n_pos: 25, d: 6000, seed, ..Default::default() }
+        }
+        // the paper's 30 categories x (100 x 24262)
+        Scale::Paper => TextSimOptions {
+            categories: 30,
+            n_pos: 50,
+            d: 24_262,
+            doc_len: 200,
+            topic_terms: 60,
+            seed,
+        },
+    };
+    textsim(&opts)
+}
+
+pub fn build_adni(scale: Scale, seed: u64) -> Dataset {
+    let opts = match scale {
+        Scale::Quick => SnpSimOptions { tasks: 3, n: 12, d: 1500, causal: 12, seed, ..Default::default() },
+        Scale::Default => SnpSimOptions { tasks: 10, n: 25, d: 20_000, causal: 40, seed, ..Default::default() },
+        // the paper's 20 x (50 x 504095)
+        Scale::Paper => SnpSimOptions { tasks: 20, n: 50, d: 504_095, causal: 100, seed, ..Default::default() },
+    };
+    snpsim(&opts).0
+}
+
+pub fn build_by_name(name: &str, d: usize, scale: Scale, seed: u64) -> Result<Dataset> {
+    Ok(match name {
+        "synth1" | "synthetic1" => build_synthetic(1, d, scale, seed),
+        "synth2" | "synthetic2" => build_synthetic(2, d, scale, seed),
+        "animal" | "animalsim" => build_animal(scale, seed),
+        "tdt2" | "tdt2sim" | "text" => build_tdt2(scale, seed),
+        "adni" | "adnisim" | "snp" => build_adni(scale, seed),
+        _ => anyhow::bail!("unknown dataset '{name}'"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// FIG1: rejection ratios, Synthetic 1 & 2, three dimensions
+// ---------------------------------------------------------------------------
+
+pub fn run_fig1(scale: Scale, engine: &EngineKind) -> Result<String> {
+    let mut out = String::new();
+    let opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
+    for which in [1u8, 2u8] {
+        for &d in &scale.synth_dims() {
+            let runs: Vec<_> = (0..scale.trials())
+                .map(|trial| {
+                    let ds = build_synthetic(which, d, scale, 1000 * trial as u64 + d as u64);
+                    run_path(&ds, &opts, engine)
+                })
+                .collect::<Result<_>>()?;
+            let curve = mean_rejection_curve(&runs);
+            out.push_str(&report::render_rejection_curve(
+                &format!("Fig1 synthetic{which} d={d} ({} trials)", scale.trials()),
+                &curve,
+            ));
+            out.push('\n');
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// FIG2: rejection ratios on the three simulated real datasets
+// ---------------------------------------------------------------------------
+
+pub fn run_fig2(scale: Scale, engine: &EngineKind) -> Result<String> {
+    let mut out = String::new();
+    let opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
+    let builders: Vec<(&str, Box<dyn Fn(u64) -> Dataset>)> = vec![
+        ("animal-sim", Box::new(move |s| build_animal(scale, s))),
+        ("tdt2-sim", Box::new(move |s| build_tdt2(scale, s))),
+        ("adni-sim", Box::new(move |s| build_adni(scale, s))),
+    ];
+    for (name, build) in builders {
+        let ds = build(7);
+        let run = run_path(&ds, &opts, engine)?;
+        let curve = mean_rejection_curve(&[run]);
+        out.push_str(&report::render_rejection_curve(
+            &format!("Fig2 {name} d={}", ds.d),
+            &curve,
+        ));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// TABLE1: solver vs DPC+solver wallclock + speedup on all five datasets
+// ---------------------------------------------------------------------------
+
+pub fn table1_rows(scale: Scale, engine: &EngineKind) -> Result<Vec<SpeedupRow>> {
+    let base_opts = exp_opts(scale.grid_len(), ScreenerKind::None);
+    let dpc_opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
+
+    let mut datasets: Vec<Dataset> = Vec::new();
+    for &d in &scale.synth_dims() {
+        datasets.push(build_synthetic(1, d, scale, d as u64));
+    }
+    for &d in &scale.synth_dims() {
+        datasets.push(build_synthetic(2, d, scale, d as u64));
+    }
+    datasets.push(build_animal(scale, 7));
+    datasets.push(build_tdt2(scale, 7));
+    datasets.push(build_adni(scale, 7));
+
+    let mut rows = Vec::new();
+    for ds in datasets {
+        let baseline = run_path(&ds, &base_opts, engine)?;
+        let screened = run_path(&ds, &dpc_opts, engine)?;
+        rows.push(speedup_row(&baseline, &screened));
+    }
+    Ok(rows)
+}
+
+pub fn run_table1(scale: Scale, engine: &EngineKind) -> Result<String> {
+    Ok(report::render_table1(&table1_rows(scale, engine)?))
+}
+
+// ---------------------------------------------------------------------------
+// ABL1/ABL2: exact QP1QC vs CS bound; sequential vs one-shot
+// ---------------------------------------------------------------------------
+
+pub fn run_ablation(scale: Scale) -> Result<String> {
+    let d = *scale.synth_dims().first().unwrap();
+    let ds = build_synthetic(2, d, scale, 42);
+    let engine = EngineKind::Exact;
+
+    let mut out = String::new();
+    let mut table = crate::bench::Table::new(&[
+        "screener", "total rejected", "mean rejection", "screen(s)", "total(s)",
+    ]);
+    for (name, kind) in [
+        ("DPC (exact QP1QC, sequential)", ScreenerKind::Dpc),
+        ("DPC-CS (Cauchy-Schwarz bound)", ScreenerKind::DpcCs),
+        ("DPC one-shot (from lambda_max)", ScreenerKind::DpcOneShot),
+        ("no screening", ScreenerKind::None),
+    ] {
+        let res = run_path(&ds, &exp_opts(scale.grid_len(), kind), &engine)?;
+        let rejected: usize = res.records.iter().map(|r| r.rejected).sum();
+        table.row(&[
+            name.to_string(),
+            rejected.to_string(),
+            format!("{:.4}", res.mean_rejection_ratio()),
+            format!("{:.3}", res.screen_secs),
+            format!("{:.2}", res.total_secs),
+        ]);
+    }
+    out.push_str(&format!("ABL1/ABL2 on {} (d={})\n", ds.name, ds.d));
+    out.push_str(&table.render());
+    Ok(out)
+}

@@ -1,0 +1,37 @@
+//! # mtfl-dpc
+//!
+//! Reproduction of *"Safe Screening for Multi-Task Feature Learning with
+//! Multiple Data Matrices"* (Wang & Ye, ICML 2015): the **DPC** safe
+//! screening rule for the multi-task group-Lasso
+//!
+//! ```text
+//! min_W  Σ_t ½‖y_t − X_t w_t‖² + λ‖W‖₂,₁
+//! ```
+//!
+//! plus everything needed to run it as a system: dataset substrates, exact
+//! f64 solvers (FISTA / BCD), the DPC rule (Theorems 1, 5, 7, 8), a λ-path
+//! coordinator with sequential screening (Corollary 9), and an AOT engine
+//! that executes JAX/Pallas-lowered HLO artifacts through PJRT.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): coordination, data, exact math, metrics, benches.
+//! * L2/L1 (python/compile, build-time only): JAX graphs + Pallas kernels,
+//!   lowered once to `artifacts/*.hlo.txt`.
+//! * runtime: [`runtime`] loads those artifacts via the `xla` crate.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod ops;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod testing;
+pub mod util;
+
+pub use data::Dataset;
+pub use screening::dpc::DpcScreener;
+pub use solver::{SolveOptions, SolveResult};

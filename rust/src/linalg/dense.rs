@@ -1,0 +1,148 @@
+//! Feature-major matrix view + the hot vector kernels.
+
+/// A column-major (feature-major) matrix view over an `n x d` task matrix:
+/// column `l` (one feature's samples) is `data[l*n .. (l+1)*n]`, contiguous.
+#[derive(Debug, Clone, Copy)]
+pub struct ColMajor<'a> {
+    pub data: &'a [f32],
+    pub n: usize,
+    pub d: usize,
+}
+
+impl<'a> ColMajor<'a> {
+    pub fn new(data: &'a [f32], n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "matrix buffer size mismatch");
+        ColMajor { data, n, d }
+    }
+
+    #[inline]
+    pub fn col(&self, l: usize) -> &'a [f32] {
+        debug_assert!(l < self.d);
+        &self.data[l * self.n..(l + 1) * self.n]
+    }
+}
+
+/// `<a, b>` with f64 accumulation, 4-way unrolled. The single hottest
+/// kernel in the exact engine (every screening/gradient sweep is a column
+/// dot).
+#[inline]
+pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] as f64 * b[j] as f64;
+        s1 += a[j + 1] as f64 * b[j + 1] as f64;
+        s2 += a[j + 2] as f64 * b[j + 2] as f64;
+        s3 += a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// Mixed dot: f32 column against an f64 vector.
+#[inline]
+pub fn dot_mixed(a: &[f32], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] as f64 * b[j];
+        s1 += a[j + 1] as f64 * b[j + 1];
+        s2 += a[j + 2] as f64 * b[j + 2];
+        s3 += a[j + 3] as f64 * b[j + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        s += a[i] as f64 * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[inline]
+pub fn nrm2_f64(a: &[f64]) -> f64 {
+    dot_f64(a, a).sqrt()
+}
+
+/// `y += alpha * x` where x is an f32 column, y an f64 accumulator.
+#[inline]
+pub fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi as f64;
+    }
+}
+
+/// `out = a + s * b` elementwise (f64).
+#[inline]
+pub fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + s * b[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colmajor_columns() {
+        // n=2 samples, d=3 features
+        let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let m = ColMajor::new(&data, 2, 3);
+        assert_eq!(m.col(0), &[1.0, 2.0]);
+        assert_eq!(m.col(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn colmajor_size_check() {
+        let data = [0.0f32; 5];
+        ColMajor::new(&data, 2, 3);
+    }
+
+    #[test]
+    fn dot_unroll_tail() {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 17] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32) - 2.0).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert_eq!(dot_f32_f64(&a, &b), want);
+        }
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f64, 20.0, 30.0];
+        axpy_f64(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn scale_add_basic() {
+        let a = [1.0, 2.0];
+        let b = [10.0, 20.0];
+        let mut out = [0.0; 2];
+        scale_add(&a, 0.5, &b, &mut out);
+        assert_eq!(out, [6.0, 12.0]);
+    }
+}

@@ -1,0 +1,30 @@
+//! Dense linear-algebra substrate (no BLAS/ndarray offline).
+//!
+//! Data matrices are stored **feature-major** (column-major, each feature's
+//! sample vector contiguous): the screening sweep `<x_l, v>` and the
+//! active-set forward product `Σ_l w_l x_l` are both unit-stride scans,
+//! which is exactly the access pattern DPC spends its time in.
+//!
+//! Precision policy: matrices are f32 (memory: the ADNI-scale X is 2 GB at
+//! paper dims), all accumulations are f64 — screening thresholds compare
+//! against 1.0 at ~1e-12, which f32 accumulation cannot certify.
+
+pub mod dense;
+
+pub use dense::{
+    axpy_f64, dot_f32_f64, dot_f64, nrm2_f64, scale_add, ColMajor,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_f32_accumulates_in_f64() {
+        // 1e8-magnitude cancellation would lose everything in f32
+        let a = vec![1.0e4_f32; 1000];
+        let b = vec![1.0e4_f32; 1000];
+        let got = dot_f32_f64(&a, &b);
+        assert_eq!(got, 1.0e8 * 1000.0);
+    }
+}

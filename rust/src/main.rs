@@ -1,0 +1,207 @@
+//! `repro` — the mtfl-dpc command-line launcher.
+//!
+//! Subcommands (all experiment output formats match EXPERIMENTS.md):
+//!   table1    reproduce Table 1 (solver vs DPC+solver timing + speedup)
+//!   fig1      reproduce Figure 1 (rejection ratios, synthetic)
+//!   fig2      reproduce Figure 2 (rejection ratios, simulated real sets)
+//!   ablation  ABL1/ABL2 screener ablations
+//!   path      run one λ-path on a chosen dataset
+//!   cv        k-fold cross-validation over the λ grid (screened)
+//!   stability stability selection over half-subsamples (screened)
+//!   gen       generate a dataset and save it as .mtd
+//!   info      print the AOT artifact manifest
+
+use anyhow::{Context, Result};
+use mtfl_dpc::cli::Args;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, ScreenerKind, SolverKind};
+use mtfl_dpc::coordinator::report;
+use mtfl_dpc::experiments::{self, Scale};
+use mtfl_dpc::runtime::AotEngine;
+use std::path::PathBuf;
+
+const USAGE: &str = "usage: repro <table1|fig1|fig2|ablation|path|cv|stability|gen|info> [options]
+
+common options:
+  --scale quick|default|paper   experiment scale (default: default)
+  --engine exact|aot            compute engine (default: exact)
+  --artifacts DIR               AOT artifact dir (default: artifacts)
+
+path options:
+  --dataset synth1|synth2|animal|tdt2|adni   (default synth1)
+  --d N            feature dimension for synthetic sets
+  --grid K         lambda-grid length (default from scale)
+  --screener dpc|cs|oneshot|none
+  --solver fista|bcd
+  --seed S
+
+gen options:
+  --dataset ... --d N --seed S --out FILE.mtd
+";
+
+fn engine_kind<'a>(
+    args: &Args,
+    holder: &'a mut Option<AotEngine>,
+) -> Result<EngineKind<'a>> {
+    match args.get_or("engine", "exact") {
+        "exact" => Ok(EngineKind::Exact),
+        "aot" => {
+            let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            *holder = Some(AotEngine::new(&dir)?);
+            Ok(EngineKind::Aot(holder.as_ref().unwrap()))
+        }
+        other => anyhow::bail!("unknown engine '{other}'"),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let Some(cmd) = args.subcommand.clone() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let scale = Scale::parse(args.get_or("scale", "default"))?;
+    let mut engine_holder = None;
+
+    match cmd.as_str() {
+        "table1" => {
+            let engine = engine_kind(&args, &mut engine_holder)?;
+            args.finish()?;
+            println!("{}", experiments::run_table1(scale, &engine)?);
+        }
+        "fig1" => {
+            let engine = engine_kind(&args, &mut engine_holder)?;
+            args.finish()?;
+            println!("{}", experiments::run_fig1(scale, &engine)?);
+        }
+        "fig2" => {
+            let engine = engine_kind(&args, &mut engine_holder)?;
+            args.finish()?;
+            println!("{}", experiments::run_fig2(scale, &engine)?);
+        }
+        "ablation" => {
+            args.finish()?;
+            println!("{}", experiments::run_ablation(scale)?);
+        }
+        "path" => {
+            let name = args.get_or("dataset", "synth1").to_string();
+            let d = args.get_usize("d", 1000)?;
+            let seed = args.get_u64("seed", 0)?;
+            let grid = args.get_usize("grid", scale.grid_len())?;
+            let screener = match args.get_or("screener", "dpc") {
+                "dpc" => ScreenerKind::Dpc,
+                "cs" => ScreenerKind::DpcCs,
+                "oneshot" => ScreenerKind::DpcOneShot,
+                "none" => ScreenerKind::None,
+                s => anyhow::bail!("unknown screener '{s}'"),
+            };
+            let solver = match args.get_or("solver", "fista") {
+                "fista" => SolverKind::Fista,
+                "bcd" => SolverKind::Bcd,
+                s => anyhow::bail!("unknown solver '{s}'"),
+            };
+            let engine = engine_kind(&args, &mut engine_holder)?;
+            args.finish()?;
+
+            let ds = experiments::build_by_name(&name, d, scale, seed)?;
+            let mut opts = experiments::exp_opts(grid, screener);
+            opts.solver = solver;
+            if matches!(engine, EngineKind::Aot(_)) {
+                opts.margin = 1e-3; // f32 engine needs a float-safety margin
+            }
+            let res = run_path(&ds, &opts, &engine)?;
+            println!(
+                "dataset={} d={} lam_max={:.4}",
+                res.dataset, res.d, res.lam_max
+            );
+            println!(
+                "total {:.2}s (screen {:.3}s, solve {:.2}s), mean rejection {:.4}",
+                res.total_secs,
+                res.screen_secs,
+                res.solve_secs,
+                res.mean_rejection_ratio()
+            );
+            let curve: Vec<(f64, f64)> =
+                res.records.iter().map(|r| (r.ratio, r.rejection_ratio)).collect();
+            println!("{}", report::render_rejection_curve(&format!("path {name}"), &curve));
+        }
+        "cv" => {
+            let name = args.get_or("dataset", "synth1").to_string();
+            let d = args.get_usize("d", 500)?;
+            let seed = args.get_u64("seed", 0)?;
+            let grid = args.get_usize("grid", 20)?;
+            let k = args.get_usize("folds", 5)?;
+            args.finish()?;
+            let ds = experiments::build_by_name(&name, d, scale, seed)?;
+            let opts = experiments::exp_opts(grid, ScreenerKind::Dpc);
+            let cv = mtfl_dpc::coordinator::cv::cross_validate(&ds, &opts, k, seed)?;
+            println!(
+                "{}-fold CV on {} (d={}): best lambda/lambda_max = {:.4} (index {}) in {:.1}s",
+                k, ds.name, ds.d, cv.best_ratio, cv.best_index, cv.total_secs
+            );
+            println!("# ratio, mean validation MSE");
+            for (r, m) in cv.ratios.iter().zip(&cv.mse) {
+                println!("{r:.4}, {m:.6}");
+            }
+        }
+        "stability" => {
+            let name = args.get_or("dataset", "synth1").to_string();
+            let d = args.get_usize("d", 500)?;
+            let seed = args.get_u64("seed", 0)?;
+            let grid = args.get_usize("grid", 12)?;
+            let b = args.get_usize("subsamples", 20)?;
+            let thr = args.get_f64("threshold", 0.8)?;
+            args.finish()?;
+            let ds = experiments::build_by_name(&name, d, scale, seed)?;
+            let opts = experiments::exp_opts(grid, ScreenerKind::Dpc);
+            let st = mtfl_dpc::coordinator::stability::stability_selection(
+                &ds, &opts, b, thr, seed,
+            )?;
+            println!(
+                "stability selection on {} (d={}, B={b}, thr={thr}): {} stable features in {:.1}s",
+                ds.name,
+                ds.d,
+                st.stable.len(),
+                st.total_secs
+            );
+            for &l in st.stable.iter().take(50) {
+                println!("  feature {l}: frequency {:.2}", st.frequency[l]);
+            }
+        }
+        "gen" => {
+            let name = args.get_or("dataset", "synth1").to_string();
+            let d = args.get_usize("d", 1000)?;
+            let seed = args.get_u64("seed", 0)?;
+            let out = PathBuf::from(
+                args.get("out").context("--out FILE.mtd is required for gen")?,
+            );
+            args.finish()?;
+            let ds = experiments::build_by_name(&name, d, scale, seed)?;
+            mtfl_dpc::data::io::save(&ds, &out)?;
+            println!(
+                "wrote {} (T={} N={:?} d={}) to {}",
+                ds.name,
+                ds.t(),
+                ds.uniform_n(),
+                ds.d,
+                out.display()
+            );
+        }
+        "info" => {
+            let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            args.finish()?;
+            let manifest = mtfl_dpc::runtime::Manifest::load(&dir)?;
+            println!("{} artifacts in {}", manifest.artifacts.len(), dir.display());
+            for a in &manifest.artifacts {
+                println!(
+                    "  {:<28} kind={:<10} cfg={:<10} T={} N={} D={} bucket={} steps={}",
+                    a.name, a.kind, a.cfg, a.t, a.n, a.d, a.bucket, a.steps
+                );
+            }
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

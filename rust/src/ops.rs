@@ -1,0 +1,267 @@
+//! Dataset-level linear operators shared by the solvers and the screeners.
+//!
+//! Vectors that live in the dual/sample space (y, θ, residuals, the ball
+//! center o) are "stacked": one f64 vector per task, `Stacked = Vec<Vec<f64>>`.
+//! Weight matrices are row-major `(d x T)` f64 slices (`w[l*T + t]`).
+//!
+//! The two sweeps that dominate runtime — `task_corr` (X_tᵀ v_t for all
+//! tasks/features) and `forward` (X_t w_t) — are parallelized over
+//! contiguous feature chunks / tasks via [`crate::util::parallel_chunks`].
+
+use crate::data::Dataset;
+use crate::linalg::dense::{dot_f32_f64, dot_mixed};
+use crate::util::{parallel_chunks, scoped_pool};
+
+/// One f64 vector per task (sample-space block vector).
+pub type Stacked = Vec<Vec<f64>>;
+
+// ---------------------------------------------------------------------------
+// stacked-vector helpers
+// ---------------------------------------------------------------------------
+
+pub fn stacked_zeros_like(ds: &Dataset) -> Stacked {
+    ds.tasks.iter().map(|t| vec![0.0f64; t.n]).collect()
+}
+
+pub fn y64(ds: &Dataset) -> Stacked {
+    ds.tasks.iter().map(|t| t.y.iter().map(|&v| v as f64).collect()).collect()
+}
+
+pub fn stacked_dot(a: &Stacked, b: &Stacked) -> f64 {
+    a.iter().zip(b).map(|(x, y)| crate::linalg::dot_f64(x, y)).sum()
+}
+
+pub fn stacked_sqnorm(a: &Stacked) -> f64 {
+    stacked_dot(a, a)
+}
+
+/// out = a + s*b (allocating).
+pub fn stacked_scale_add(a: &Stacked, s: f64, b: &Stacked) -> Stacked {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| x.iter().zip(y).map(|(xi, yi)| xi + s * yi).collect())
+        .collect()
+}
+
+pub fn stacked_scale(a: &Stacked, s: f64) -> Stacked {
+    a.iter().map(|x| x.iter().map(|v| v * s).collect()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// the two hot sweeps
+// ---------------------------------------------------------------------------
+
+/// c[l*T + t] = <x_l^{(t)}, v_t>  — the correlation sweep (Eq. 8's m^l rows,
+/// FISTA's gradient, the screening moments). Parallel over feature chunks.
+pub fn task_corr(ds: &Dataset, v: &Stacked) -> Vec<f64> {
+    let t_count = ds.t();
+    debug_assert_eq!(v.len(), t_count);
+    let d = ds.d;
+    let mut out = vec![0.0f64; d * t_count];
+    // spawning threads costs ~10us each; stay serial below ~1 MFLOP
+    let workers = if d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+    // parallel over feature chunks: each worker fills a disjoint slice
+    let chunks = parallel_chunks(d, workers, |_, start, end| {
+        let mut part = vec![0.0f64; (end - start) * t_count];
+        for (ti, task) in ds.tasks.iter().enumerate() {
+            let vt = &v[ti];
+            for l in start..end {
+                let col = &task.x[l * task.n..(l + 1) * task.n];
+                part[(l - start) * t_count + ti] = dot_mixed(col, vt);
+            }
+        }
+        (start, part)
+    });
+    for (start, part) in chunks {
+        out[start * t_count..start * t_count + part.len()].copy_from_slice(&part);
+    }
+    out
+}
+
+/// g_l(v) = sum_t c[l,t]^2 from a correlation buffer.
+pub fn gscore_from_corr(corr: &[f64], t_count: usize) -> Vec<f64> {
+    corr.chunks_exact(t_count).map(|row| row.iter().map(|c| c * c).sum()).collect()
+}
+
+/// g_l(v) for all features (Eq. 16).
+pub fn gscore(ds: &Dataset, v: &Stacked) -> Vec<f64> {
+    gscore_from_corr(&task_corr(ds, v), ds.t())
+}
+
+/// z_t = X_t w_t for all tasks. Skips zero rows of W, so the cost scales
+/// with the *active* set — the asymmetry screening exploits. Parallel over
+/// tasks.
+pub fn forward(ds: &Dataset, w: &[f64]) -> Stacked {
+    let t_count = ds.t();
+    debug_assert_eq!(w.len(), ds.d * t_count);
+    let tasks: Vec<usize> = (0..t_count).collect();
+    let workers = if ds.d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+    scoped_pool(tasks, workers, |ti| {
+        let task = &ds.tasks[ti];
+        let mut z = vec![0.0f64; task.n];
+        for l in 0..ds.d {
+            let wl = w[l * t_count + ti];
+            if wl != 0.0 {
+                crate::linalg::axpy_f64(wl, &task.x[l * task.n..(l + 1) * task.n], &mut z);
+            }
+        }
+        z
+    })
+}
+
+/// Residual R_t = X_t w_t - y_t.
+pub fn residual(ds: &Dataset, w: &[f64]) -> Stacked {
+    let mut z = forward(ds, w);
+    for (zt, task) in z.iter_mut().zip(&ds.tasks) {
+        for (zi, &yi) in zt.iter_mut().zip(&task.y) {
+            *zi -= yi as f64;
+        }
+    }
+    z
+}
+
+// ---------------------------------------------------------------------------
+// objective / duality machinery
+// ---------------------------------------------------------------------------
+
+pub fn l21_norm(w: &[f64], t_count: usize) -> f64 {
+    w.chunks_exact(t_count)
+        .map(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt())
+        .sum()
+}
+
+/// F(W) = ½ Σ_t ||X_t w_t − y_t||² + λ||W||₂,₁ (problem (1)).
+pub fn primal_obj(ds: &Dataset, w: &[f64], lam: f64) -> f64 {
+    let r = residual(ds, w);
+    0.5 * stacked_sqnorm(&r) + lam * l21_norm(w, ds.t())
+}
+
+/// Duality gap via the scaled-residual feasible point. Returns
+/// (obj, gap, theta_feasible).
+pub fn duality_gap(ds: &Dataset, w: &[f64], lam: f64) -> (f64, f64, Stacked) {
+    let y = y64(ds);
+    let r = residual(ds, w);
+    let obj = 0.5 * stacked_sqnorm(&r) + lam * l21_norm(w, ds.t());
+    // z = (y - Xw)/lam = -r/lam ; scale into the feasible set F
+    let z = stacked_scale(&r, -1.0 / lam);
+    let m = gscore(ds, &z).into_iter().fold(0.0f64, f64::max).sqrt();
+    let theta = if m > 1.0 { stacked_scale(&z, 1.0 / m) } else { z };
+    // D(theta) = ½||y||² − λ²/2 ||y/λ − θ||²
+    let mut diff_sq = 0.0;
+    for (ti, yt) in y.iter().enumerate() {
+        for (i, &yi) in yt.iter().enumerate() {
+            let d = yi / lam - theta[ti][i];
+            diff_sq += d * d;
+        }
+    }
+    let dual = 0.5 * stacked_sqnorm(&y) - 0.5 * lam * lam * diff_sq;
+    (obj, obj - dual, theta)
+}
+
+// ---------------------------------------------------------------------------
+// Theorem 1: lambda_max and the normal vector at y/lambda_max
+// ---------------------------------------------------------------------------
+
+/// (lambda_max, argmax feature l*, g_l(y) for all l).
+pub fn lambda_max(ds: &Dataset) -> (f64, usize, Vec<f64>) {
+    let g = gscore(ds, &y64(ds));
+    let (lstar, gmax) = g
+        .iter()
+        .enumerate()
+        .fold((0usize, f64::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+    (gmax.max(0.0).sqrt(), lstar, g)
+}
+
+/// n(lambda_max) = ∇g_{l*}(y/λmax): n_t = 2 <x_{l*}^{(t)}, y_t/λmax> x_{l*}^{(t)}.
+pub fn normal_at_lmax(ds: &Dataset, lstar: usize, lmax: f64) -> Stacked {
+    ds.tasks
+        .iter()
+        .map(|task| {
+            let col = &task.x[lstar * task.n..(lstar + 1) * task.n];
+            let c = 2.0 * dot_f32_f64(col, &task.y) / lmax;
+            col.iter().map(|&v| c * v as f64).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+
+    fn ds() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 10, d: 25, seed: 4, ..Default::default() }).0
+    }
+
+    #[test]
+    fn corr_matches_naive() {
+        let ds = ds();
+        let v = y64(&ds);
+        let c = task_corr(&ds, &v);
+        for t in 0..3 {
+            for l in 0..25 {
+                let want: f64 = ds
+                    .col(t, l)
+                    .iter()
+                    .zip(&v[t])
+                    .map(|(&x, &vv)| x as f64 * vv)
+                    .sum();
+                assert!((c[l * 3 + t] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_skips_zeros_correctly() {
+        let ds = ds();
+        let mut w = vec![0.0f64; 25 * 3];
+        w[5 * 3 + 1] = 2.0;
+        w[7 * 3 + 0] = -1.5;
+        let z = forward(&ds, &w);
+        for ni in 0..10 {
+            assert!((z[1][ni] - 2.0 * ds.col(1, 5)[ni] as f64).abs() < 1e-10);
+            assert!((z[0][ni] + 1.5 * ds.col(0, 7)[ni] as f64).abs() < 1e-10);
+            assert_eq!(z[2][ni], 0.0);
+        }
+    }
+
+    #[test]
+    fn lambda_max_makes_y_over_lam_feasible() {
+        let ds = ds();
+        let (lmax, lstar, g) = lambda_max(&ds);
+        assert!((g[lstar].sqrt() - lmax).abs() < 1e-12);
+        let yl = stacked_scale(&y64(&ds), 1.0 / lmax);
+        let gm = gscore(&ds, &yl).into_iter().fold(0.0f64, f64::max);
+        assert!((gm - 1.0).abs() < 1e-9, "max g at y/lmax = {gm}");
+    }
+
+    #[test]
+    fn gap_nonnegative_and_zero_solution_at_lmax() {
+        let ds = ds();
+        let (lmax, _, _) = lambda_max(&ds);
+        let w = vec![0.0f64; 25 * 3];
+        let (obj, gap, _) = duality_gap(&ds, &w, lmax * 1.001);
+        assert!(gap >= -1e-9);
+        // at lam >= lmax, W = 0 is optimal: gap must be ~0
+        assert!(gap <= 1e-9 * obj.max(1.0), "gap {gap} obj {obj}");
+    }
+
+    #[test]
+    fn l21_matches_manual() {
+        let w = vec![3.0, 4.0, 0.0, 0.0, 1.0, 0.0];
+        // rows: [3,4] -> 5 ; [0,0] -> 0 ; [1,0] -> 1   (t=2)
+        assert!((l21_norm(&w, 2) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normal_at_lmax_matches_gradient_definition() {
+        let ds = ds();
+        let (lmax, lstar, _) = lambda_max(&ds);
+        let n = normal_at_lmax(&ds, lstar, lmax);
+        // <y, n> = 2 * g_{l*}(y)/lmax = 2*lmax > 0 (Theorem 5 part 2)
+        let y = y64(&ds);
+        let ip = stacked_dot(&y, &n);
+        assert!((ip - 2.0 * lmax * lmax / lmax * lmax / lmax).abs() < 1e-6 || ip > 0.0);
+        assert!(ip > 0.0);
+    }
+}

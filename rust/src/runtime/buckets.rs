@@ -1,0 +1,114 @@
+//! Shape bucketing: screened problems have arbitrary reduced dimension d',
+//! but HLO executables are fixed-shape. The coordinator packs the retained
+//! columns into the smallest bucket ≥ d' and zero-pads the rest.
+//!
+//! Correctness: a zero column contributes nothing to X w (its weight row
+//! stays zero under the prox since its gradient is identically zero), so
+//! the solution on the retained coordinates is unchanged — verified by
+//! `padding_preserves_solution` in rust/tests/integration_runtime.rs.
+
+/// Smallest bucket ≥ d', or None if d' exceeds every bucket.
+pub fn pick_bucket(buckets: &[usize], d_reduced: usize) -> Option<usize> {
+    buckets.iter().copied().filter(|&b| b >= d_reduced).min()
+}
+
+/// Pack a reduced (T,N,d') problem into a (T,N,db) row-major f32 buffer.
+/// `cols[t]` is the task's feature-major buffer, `keep` the retained
+/// feature indices (into the *original* d).
+pub fn pack_tnd(
+    tasks: &[crate::data::Task],
+    keep: &[usize],
+    db: usize,
+) -> Vec<f32> {
+    let t_count = tasks.len();
+    let n = tasks.first().map(|t| t.n).unwrap_or(0);
+    assert!(keep.len() <= db, "bucket too small: {} > {db}", keep.len());
+    let mut out = vec![0.0f32; t_count * n * db];
+    for (ti, task) in tasks.iter().enumerate() {
+        debug_assert_eq!(task.n, n, "uniform N required for AOT packing");
+        for (j, &l) in keep.iter().enumerate() {
+            let col = &task.x[l * n..(l + 1) * n];
+            for (ni, &v) in col.iter().enumerate() {
+                out[(ti * n + ni) * db + j] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Pack a full-d (d x T) f64 weight matrix into a (db x T) f32 buffer over
+/// the kept features (for warm starts into the bucketed solver).
+pub fn pack_w(w: &[f64], t_count: usize, keep: &[usize], db: usize) -> Vec<f32> {
+    assert!(keep.len() <= db);
+    let mut out = vec![0.0f32; db * t_count];
+    for (j, &l) in keep.iter().enumerate() {
+        for t in 0..t_count {
+            out[j * t_count + t] = w[l * t_count + t] as f32;
+        }
+    }
+    out
+}
+
+/// Scatter a bucketed (db x T) f32 solution back to full-d f64 (zeros on
+/// screened features). Padding columns (j >= keep.len()) must be ~zero.
+pub fn unpack_w(
+    wb: &[f32],
+    t_count: usize,
+    keep: &[usize],
+    db: usize,
+    d_full: usize,
+) -> Vec<f64> {
+    assert_eq!(wb.len(), db * t_count);
+    let mut out = vec![0.0f64; d_full * t_count];
+    for (j, &l) in keep.iter().enumerate() {
+        for t in 0..t_count {
+            out[l * t_count + t] = wb[j * t_count + t] as f64;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Task;
+
+    #[test]
+    fn bucket_selection() {
+        let buckets = [64, 128, 256];
+        assert_eq!(pick_bucket(&buckets, 1), Some(64));
+        assert_eq!(pick_bucket(&buckets, 64), Some(64));
+        assert_eq!(pick_bucket(&buckets, 65), Some(128));
+        assert_eq!(pick_bucket(&buckets, 256), Some(256));
+        assert_eq!(pick_bucket(&buckets, 257), None);
+    }
+
+    #[test]
+    fn pack_places_columns_and_zero_pads() {
+        // 1 task, n=2, d=3; keep features [2, 0] into bucket 4
+        let task = Task { x: vec![1., 2., 3., 4., 5., 6.], y: vec![0., 0.], n: 2 };
+        let packed = pack_tnd(&[task], &[2, 0], 4);
+        // layout (t*n + ni)*db + j
+        assert_eq!(packed[0], 5.0); // n0, slot0 <- old col2
+        assert_eq!(packed[1], 1.0); // n0, slot1 <- old col0
+        assert_eq!(packed[2], 0.0); // padding
+        assert_eq!(packed[4], 6.0); // n1, slot0
+        assert_eq!(packed[5], 2.0);
+    }
+
+    #[test]
+    fn w_round_trip() {
+        let t_count = 2;
+        let d_full = 5;
+        let mut w = vec![0.0f64; d_full * t_count];
+        w[3 * 2] = 1.5;
+        w[3 * 2 + 1] = -2.5;
+        w[1 * 2] = 0.25;
+        let keep = [1usize, 3];
+        let wb = pack_w(&w, t_count, &keep, 4);
+        assert_eq!(wb[0], 0.25);
+        assert_eq!(wb[1 * 2], 1.5);
+        let back = unpack_w(&wb, t_count, &keep, 4, d_full);
+        assert_eq!(back, w);
+    }
+}

@@ -1,0 +1,251 @@
+//! The AOT execution engine: PJRT CPU client + compile-on-first-use
+//! executable cache + typed wrappers for each artifact kind.
+//!
+//! Interchange is HLO *text* (see aot.py for why), parsed and re-id'd by
+//! `HloModuleProto::from_text_file`, compiled once per process, and
+//! executed with f32 literals. All wrappers validate shapes against the
+//! manifest ABI before touching PJRT.
+
+use super::manifest::{ArtifactMeta, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+pub struct AotEngine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// compile wallclock per artifact (perf accounting)
+    pub compile_secs: Mutex<HashMap<String, f64>>,
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let elems: usize = shape.iter().product();
+    anyhow::ensure!(elems == data.len(), "literal shape {shape:?} != data len {}", data.len());
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&v| v as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+impl AotEngine {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(AotEngine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_secs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn executable(&self, meta: &ArtifactMeta) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .with_context(|| format!("parse HLO text {}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compile {}", meta.name))?,
+        );
+        self.compile_secs
+            .lock()
+            .unwrap()
+            .insert(meta.name.clone(), t0.elapsed().as_secs_f64());
+        self.cache.lock().unwrap().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact of a config (so timing runs don't pay
+    /// compile cost inside the measured region).
+    pub fn warmup_config(&self, cfg: &str) -> Result<()> {
+        let metas: Vec<ArtifactMeta> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.cfg == cfg)
+            .cloned()
+            .collect();
+        for meta in metas {
+            self.executable(&meta)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with raw f32 buffers; returns one f32 buffer
+    /// per output (the aot.py convention is a single tuple output).
+    pub fn call(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .find(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&meta.inputs)
+            .enumerate()
+            .map(|(i, (data, spec))| {
+                literal_f32(data, &spec.shape)
+                    .with_context(|| format!("{name}: input {i} ({:?})", spec.shape))
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = self.executable(&meta)?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow::anyhow!("{name}: empty execution result"))?;
+        let lit = first.to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: single tuple output
+        let mut lit = lit;
+        let parts = lit.decompose_tuple()?;
+        let outs: Vec<Vec<f32>> = if parts.is_empty() {
+            vec![literal_to_f32(&lit)?]
+        } else {
+            parts.iter().map(literal_to_f32).collect::<Result<_>>()?
+        };
+        anyhow::ensure!(
+            outs.len() == meta.outputs.len(),
+            "{name}: expected {} outputs, got {}",
+            meta.outputs.len(),
+            outs.len()
+        );
+        for (i, (out, spec)) in outs.iter().zip(&meta.outputs).enumerate() {
+            anyhow::ensure!(
+                out.len() == spec.elems(),
+                "{name}: output {i} has {} elems, ABI says {:?}",
+                out.len(),
+                spec.shape
+            );
+        }
+        Ok(outs)
+    }
+
+    // -- typed wrappers ----------------------------------------------------
+
+    /// lammax artifact: (X, y) -> (lam_max, n, g).
+    pub fn lammax(&self, cfg: &str, x_tnd: &[f32], y_tn: &[f32]) -> Result<LamMaxOut> {
+        let outs = self.call(&format!("lammax_{cfg}"), &[x_tnd, y_tn])?;
+        Ok(LamMaxOut { lam_max: outs[0][0], normal: outs[1].clone(), g: outs[2].clone() })
+    }
+
+    /// screen artifact: (X, y, theta0, n(lam0), lam) -> s.
+    pub fn screen(
+        &self,
+        cfg: &str,
+        x_tnd: &[f32],
+        y_tn: &[f32],
+        theta0: &[f32],
+        normal: &[f32],
+        lam: f32,
+    ) -> Result<Vec<f32>> {
+        let mut outs = self.call(
+            &format!("screen_{cfg}"),
+            &[x_tnd, y_tn, theta0, normal, &[lam]],
+        )?;
+        Ok(outs.remove(0))
+    }
+
+    /// lipschitz artifact for a bucket: (X,) -> L.
+    pub fn lipschitz(&self, cfg: &str, bucket: usize, x_tnd: &[f32]) -> Result<f32> {
+        let outs = self.call(&format!("lipschitz_{cfg}_b{bucket}"), &[x_tnd])?;
+        Ok(outs[0][0])
+    }
+
+    /// One fista chunk: returns (W, V, t, R, obj, gap).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fista_chunk(
+        &self,
+        cfg: &str,
+        bucket: usize,
+        x_tnd: &[f32],
+        y_tn: &[f32],
+        w: &[f32],
+        v: &[f32],
+        t: f32,
+        lam: f32,
+        lcap: f32,
+    ) -> Result<FistaChunkOut> {
+        let outs = self.call(
+            &format!("fista_{cfg}_b{bucket}"),
+            &[x_tnd, y_tn, w, v, &[t], &[lam], &[lcap]],
+        )?;
+        let mut it = outs.into_iter();
+        Ok(FistaChunkOut {
+            w: it.next().unwrap(),
+            v: it.next().unwrap(),
+            t: it.next().unwrap()[0],
+            r: it.next().unwrap(),
+            obj: it.next().unwrap()[0],
+            gap: it.next().unwrap()[0],
+        })
+    }
+
+    /// Iterate fista chunks until the relative duality gap reaches `tol`.
+    /// Returns the final chunk output plus the chunk count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fista_solve(
+        &self,
+        cfg: &str,
+        bucket: usize,
+        x_tnd: &[f32],
+        y_tn: &[f32],
+        w0: &[f32],
+        lam: f32,
+        tol: f32,
+        max_chunks: usize,
+    ) -> Result<(FistaChunkOut, usize)> {
+        let lcap = self.lipschitz(cfg, bucket, x_tnd)?;
+        let mut w = w0.to_vec();
+        let mut v = w0.to_vec();
+        let mut t = 1.0f32;
+        let mut chunks = 0usize;
+        let mut last: Option<FistaChunkOut> = None;
+        while chunks < max_chunks {
+            let out = self.fista_chunk(cfg, bucket, x_tnd, y_tn, &w, &v, t, lam, lcap)?;
+            chunks += 1;
+            let done = out.gap <= tol * out.obj.abs().max(1.0);
+            w = out.w.clone();
+            v = out.v.clone();
+            t = out.t;
+            last = Some(out);
+            if done {
+                break;
+            }
+        }
+        Ok((last.expect("max_chunks >= 1"), chunks))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LamMaxOut {
+    pub lam_max: f32,
+    /// n(lambda_max), row-major (T, N)
+    pub normal: Vec<f32>,
+    pub g: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FistaChunkOut {
+    pub w: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    /// residual X W − y, row-major (T, N)
+    pub r: Vec<f32>,
+    pub obj: f32,
+    pub gap: f32,
+}

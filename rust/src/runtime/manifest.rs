@@ -1,0 +1,172 @@
+//! `artifacts/manifest.tsv` — the ABI registry emitted by aot.py.
+//!
+//! Columns: name, kind, cfg, T, N, D, bucket, steps, inputs, outputs.
+//! Shape syntax: `4x16x256:f32;4x16:f32` (semicolon-separated tensors).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn parse_specs(s: &str) -> Result<Vec<TensorSpec>> {
+    s.split(';')
+        .filter(|p| !p.is_empty())
+        .map(|part| {
+            let (dims, dtype) =
+                part.split_once(':').with_context(|| format!("bad tensor spec '{part}'"))?;
+            let shape = dims
+                .split('x')
+                .map(|d| d.parse::<usize>().map_err(|_| anyhow::anyhow!("bad dim '{d}'")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { shape, dtype: dtype.to_string() })
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub cfg: String,
+    pub t: usize,
+    pub n: usize,
+    pub d: usize,
+    pub bucket: usize,
+    pub steps: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub path: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if !header.starts_with("name\tkind") {
+            bail!("unexpected manifest header: {header}");
+        }
+        let mut artifacts = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 10 {
+                bail!("manifest line {}: expected 10 columns, got {}", lineno + 2, cols.len());
+            }
+            let meta = ArtifactMeta {
+                name: cols[0].to_string(),
+                kind: cols[1].to_string(),
+                cfg: cols[2].to_string(),
+                t: cols[3].parse().context("T")?,
+                n: cols[4].parse().context("N")?,
+                d: cols[5].parse().context("D")?,
+                bucket: cols[6].parse().context("bucket")?,
+                steps: cols[7].parse().context("steps")?,
+                inputs: parse_specs(cols[8])?,
+                outputs: parse_specs(cols[9])?,
+                path: dir.join(format!("{}.hlo.txt", cols[0])),
+            };
+            if !meta.path.exists() {
+                bail!("manifest references missing artifact {}", meta.path.display());
+            }
+            artifacts.push(meta);
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The config whose full shape matches this dataset, if any.
+    pub fn config_for(&self, t: usize, n: usize, d: usize) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "lammax" && a.t == t && a.n == n && a.d == d)
+            .map(|a| a.cfg.as_str())
+    }
+
+    /// Solver buckets available for a config, ascending.
+    pub fn buckets_for(&self, cfg: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.cfg == cfg && a.kind == "fista")
+            .map(|a| a.bucket)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tensor_specs() {
+        let specs = parse_specs("4x16x256:f32;1:f32").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].shape, vec![4, 16, 256]);
+        assert_eq!(specs[0].elems(), 16384);
+        assert_eq!(specs[1].shape, vec![1]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_specs("4x16").is_err());
+        assert!(parse_specs("axb:f32").is_err());
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let dir = std::env::temp_dir().join(format!("mtfl_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo_quick.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "name\tkind\tcfg\tT\tN\tD\tbucket\tsteps\tinputs\toutputs\n\
+             foo_quick\tlammax\tquick\t4\t16\t256\t0\t0\t4x16x256:f32;4x16:f32\t1:f32\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.config_for(4, 16, 256), Some("quick"));
+        assert_eq!(m.config_for(4, 16, 999), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_file_detected() {
+        let dir = std::env::temp_dir().join(format!("mtfl_manifest2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "name\tkind\tcfg\tT\tN\tD\tbucket\tsteps\tinputs\toutputs\n\
+             ghost\tlammax\tq\t1\t1\t1\t0\t0\t1:f32\t1:f32\n",
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

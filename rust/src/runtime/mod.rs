@@ -1,0 +1,17 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the coordinator's hot
+//! path. Python never runs here — the artifacts are self-contained.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.tsv` (the ABI registry);
+//! * [`engine`]   — compile-on-first-use executable cache + typed call
+//!   helpers for each artifact kind (lammax / screen / lipschitz / fista);
+//! * [`buckets`]  — shape-bucketing policy mapping screened (reduced-d)
+//!   problems onto the fixed-shape solver executables.
+
+pub mod buckets;
+pub mod engine;
+pub mod manifest;
+
+pub use buckets::pick_bucket;
+pub use engine::AotEngine;
+pub use manifest::{ArtifactMeta, Manifest};

@@ -1,0 +1,122 @@
+//! Ablation screeners (DESIGN.md §8, experiment ABL1).
+//!
+//! * [`cs_scores`] — replaces the exact QP1QC max with the Cauchy–Schwarz
+//!   upper bound s^CS_l = Σ_t (|a_t| + Δ·b_t)². Still *safe* (it upper
+//!   bounds g_l over the ball) but strictly looser for T > 1 — the max of
+//!   the sum is bounded by the sum of per-task maxima, which ignores the
+//!   shared ‖u‖ ≤ Δ budget. Quantifies what Theorem 7 buys.
+//! * [`center_scores`] — g_l at the ball center only. NOT safe (a
+//!   heuristic, like the Strong-Rule family without the check); included
+//!   to measure how often unsafe screening actually mis-rejects.
+
+use super::{dpc::DualRef, ScreenOutcome};
+use crate::data::Dataset;
+use crate::ops::Stacked;
+use crate::util::parallel_chunks;
+
+fn moments(ds: &Dataset, b2: &[f64], o: &Stacked, f: impl Fn(&[f64], &[f64]) -> f64 + Sync) -> Vec<f64> {
+    let t_count = ds.t();
+    let workers = if ds.d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+    let out = parallel_chunks(ds.d, workers, |_, start, end| {
+        let mut part = vec![0.0f64; end - start];
+        let mut a = vec![0.0f64; t_count];
+        for l in start..end {
+            for (ti, task) in ds.tasks.iter().enumerate() {
+                let col = &task.x[l * task.n..(l + 1) * task.n];
+                a[ti] = crate::linalg::dense::dot_mixed(col, &o[ti]);
+            }
+            part[l - start] = f(&a, &b2[l * t_count..(l + 1) * t_count]);
+        }
+        part
+    });
+    out.concat()
+}
+
+/// Safe Cauchy–Schwarz bound: Σ_t (|a_t| + Δ b_t)².
+pub fn cs_scores(ds: &Dataset, b2: &[f64], o: &Stacked, delta: f64) -> Vec<f64> {
+    moments(ds, b2, o, |a, b2| {
+        a.iter()
+            .zip(b2)
+            .map(|(&at, &bt)| {
+                let v = at.abs() + delta * bt.sqrt();
+                v * v
+            })
+            .sum()
+    })
+}
+
+/// Unsafe center heuristic: Σ_t a_t².
+pub fn center_scores(ds: &Dataset, b2: &[f64], o: &Stacked) -> Vec<f64> {
+    moments(ds, b2, o, |a, _| a.iter().map(|v| v * v).sum())
+}
+
+/// A screener with the same interface as DPC but CS scores (ablation).
+pub struct CsScreener {
+    b2: Vec<f64>,
+}
+
+impl CsScreener {
+    pub fn new(ds: &Dataset) -> Self {
+        CsScreener { b2: ds.col_sqnorms() }
+    }
+
+    pub fn screen(&self, ds: &Dataset, dref: &DualRef, lam: f64) -> ScreenOutcome {
+        let (o, delta) = super::dpc::ball(ds, dref, lam);
+        let scores = cs_scores(ds, &self.b2, &o, delta);
+        let rejected = scores.iter().map(|&s| s < 1.0).collect();
+        ScreenOutcome { rejected, scores, delta }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::screening::dpc::{ball, DpcScreener, DualRef};
+
+    #[test]
+    fn cs_upper_bounds_exact_scores() {
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 4, n: 10, d: 50, seed: 7, ..Default::default() });
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let (o, delta) = ball(&ds, &dref, 0.4 * lmax);
+        let b2 = ds.col_sqnorms();
+        let exact = DpcScreener::new(&ds).scores(&ds, &o, delta);
+        let cs = cs_scores(&ds, &b2, &o, delta);
+        let center = center_scores(&ds, &b2, &o);
+        for l in 0..ds.d {
+            assert!(cs[l] >= exact[l] - 1e-9, "CS not an upper bound at {l}");
+            assert!(center[l] <= exact[l] + 1e-9, "center not a lower bound at {l}");
+        }
+    }
+
+    #[test]
+    fn cs_equals_exact_for_single_task() {
+        // T = 1: Cauchy–Schwarz is tight, the two scores coincide
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 1, n: 12, d: 30, seed: 8, ..Default::default() });
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let (o, delta) = ball(&ds, &dref, 0.5 * lmax);
+        let exact = DpcScreener::new(&ds).scores(&ds, &o, delta);
+        let cs = cs_scores(&ds, &ds.col_sqnorms(), &o, delta);
+        for l in 0..ds.d {
+            assert!((exact[l] - cs[l]).abs() < 1e-9 * cs[l].max(1.0), "l={l}");
+        }
+    }
+
+    #[test]
+    fn cs_screener_rejects_no_more_than_dpc_is_wrong_way() {
+        // looser bound => CS rejects a subset of DPC's rejections
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 4, n: 10, d: 80, seed: 9, ..Default::default() });
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let dpc = DpcScreener::new(&ds).screen(&ds, &dref, 0.5 * lmax);
+        let cs = CsScreener::new(&ds).screen(&ds, &dref, 0.5 * lmax);
+        for l in 0..ds.d {
+            if cs.rejected[l] {
+                assert!(dpc.rejected[l], "CS rejected {l} that exact DPC kept");
+            }
+        }
+        assert!(cs.num_rejected() <= dpc.num_rejected());
+    }
+}

@@ -1,0 +1,225 @@
+//! The DPC rule: Theorem 5 (ball estimation of θ*(λ)) + Theorem 7 (score
+//! maximization) + Theorem 8 / Corollary 9 (the rejection test, sequential
+//! along the λ grid).
+
+use super::{secular::qp1qc_max, ScreenOutcome};
+use crate::data::Dataset;
+use crate::ops::{self, Stacked};
+use crate::util::parallel_chunks;
+
+/// Reference point for the ball: everything Theorem 5 needs about λ0.
+#[derive(Debug, Clone)]
+pub struct DualRef {
+    pub lam0: f64,
+    /// θ*(λ0)
+    pub theta0: Stacked,
+    /// n(λ0) ∈ N_F(θ*(λ0)) (Eq. 20)
+    pub normal: Stacked,
+}
+
+impl DualRef {
+    /// The closed-form reference at λ0 = λ_max (Theorem 1 + Eq. 20 case 2).
+    pub fn at_lambda_max(ds: &Dataset) -> (Self, f64) {
+        let (lmax, lstar, _) = ops::lambda_max(ds);
+        let y = ops::y64(ds);
+        let theta0 = ops::stacked_scale(&y, 1.0 / lmax);
+        let normal = ops::normal_at_lmax(ds, lstar, lmax);
+        (DualRef { lam0: lmax, theta0, normal }, lmax)
+    }
+
+    /// Reference from a solved primal at λ0 < λ_max: θ*(λ0) = (y − Xw)/λ0
+    /// (Eq. 14), n(λ0) = y/λ0 − θ*(λ0) (Eq. 20 case 1).
+    pub fn from_solution(ds: &Dataset, lam0: f64, w: &[f64]) -> Self {
+        let y = ops::y64(ds);
+        let r = ops::residual(ds, w); // Xw − y
+        let theta0 = ops::stacked_scale(&r, -1.0 / lam0);
+        let normal = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam0), -1.0, &theta0);
+        DualRef { lam0, theta0, normal }
+    }
+}
+
+/// Ball Θ(λ, λ0) from Theorem 5: center o = θ0 + ½r⊥, radius Δ = ½‖r⊥‖.
+pub fn ball(ds: &Dataset, dref: &DualRef, lam: f64) -> (Stacked, f64) {
+    let y = ops::y64(ds);
+    // r = y/λ − θ0
+    let r = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam), -1.0, &dref.theta0);
+    let nn = ops::stacked_sqnorm(&dref.normal);
+    let rp = if nn > 1e-290 {
+        let coef = ops::stacked_dot(&dref.normal, &r) / nn;
+        ops::stacked_scale_add(&r, -coef, &dref.normal)
+    } else {
+        r
+    };
+    let delta = 0.5 * ops::stacked_sqnorm(&rp).sqrt();
+    let o = ops::stacked_scale_add(&dref.theta0, 0.5, &rp);
+    (o, delta)
+}
+
+/// The DPC screener. Caches the per-(feature, task) squared column norms —
+/// the b² moments of Theorem 7 — which are λ-independent.
+pub struct DpcScreener {
+    /// (d x T) row-major ‖x_l^{(t)}‖²
+    b2: Vec<f64>,
+    t_count: usize,
+    /// keep features whose score falls within `margin` below 1 (guards
+    /// against solver inexactness in θ*(λ0); 0 = the paper's exact rule)
+    pub margin: f64,
+}
+
+impl DpcScreener {
+    pub fn new(ds: &Dataset) -> Self {
+        DpcScreener { b2: ds.col_sqnorms(), t_count: ds.t(), margin: 0.0 }
+    }
+
+    pub fn with_margin(ds: &Dataset, margin: f64) -> Self {
+        DpcScreener { margin, ..Self::new(ds) }
+    }
+
+    /// Scores s_l for all features given a ball (o, Δ). Parallel over
+    /// feature chunks; the a-moments (corr sweep) dominate the cost.
+    pub fn scores(&self, ds: &Dataset, o: &Stacked, delta: f64) -> Vec<f64> {
+        let t_count = self.t_count;
+        let d = ds.d;
+        let workers = if d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+        let out = parallel_chunks(d, workers, |_, start, end| {
+            let mut part = vec![0.0f64; end - start];
+            let mut a = vec![0.0f64; t_count];
+            for l in start..end {
+                for (ti, task) in ds.tasks.iter().enumerate() {
+                    let col = &task.x[l * task.n..(l + 1) * task.n];
+                    a[ti] = crate::linalg::dense::dot_mixed(col, &o[ti]);
+                }
+                let b2 = &self.b2[l * t_count..(l + 1) * t_count];
+                part[l - start] = qp1qc_max(&a, b2, delta).s;
+            }
+            part
+        });
+        out.concat()
+    }
+
+    /// Full DPC step (Theorem 8 / Corollary 9): screen at λ given a
+    /// reference at λ0 > λ.
+    pub fn screen(&self, ds: &Dataset, dref: &DualRef, lam: f64) -> ScreenOutcome {
+        assert!(
+            lam <= dref.lam0 * (1.0 + 1e-12),
+            "DPC requires lam <= lam0 (got {lam} > {})",
+            dref.lam0
+        );
+        let (o, delta) = ball(ds, dref, lam);
+        let scores = self.scores(ds, &o, delta);
+        let thr = 1.0 - self.margin;
+        let rejected = scores.iter().map(|&s| s < thr).collect();
+        ScreenOutcome { rejected, scores, delta }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+    use crate::solver::{fista, SolveOptions};
+
+    fn problem(seed: u64) -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 12, d: 60, seed, ..Default::default() }).0
+    }
+
+    #[test]
+    fn ball_contains_dual_optimum_from_lmax() {
+        let ds = problem(1);
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        for ratio in [0.9, 0.6, 0.3, 0.1] {
+            let lam = ratio * lmax;
+            let (o, delta) = ball(&ds, &dref, lam);
+            let sol = fista(&ds, lam, None, &SolveOptions::tight());
+            let theta = ops::stacked_scale(&ops::residual(&ds, &sol.w), -1.0 / lam);
+            let diff = ops::stacked_scale_add(&theta, -1.0, &o);
+            let dist = ops::stacked_sqnorm(&diff).sqrt();
+            assert!(dist <= delta + 1e-6, "ratio {ratio}: dist {dist} > delta {delta}");
+        }
+    }
+
+    #[test]
+    fn ball_contains_dual_optimum_sequential() {
+        let ds = problem(2);
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let lam0 = 0.5 * lmax;
+        let sol0 = fista(&ds, lam0, None, &SolveOptions::tight());
+        let dref = DualRef::from_solution(&ds, lam0, &sol0.w);
+        for ratio in [0.45, 0.3, 0.2] {
+            let lam = ratio * lmax;
+            let (o, delta) = ball(&ds, &dref, lam);
+            let sol = fista(&ds, lam, None, &SolveOptions::tight());
+            let theta = ops::stacked_scale(&ops::residual(&ds, &sol.w), -1.0 / lam);
+            let diff = ops::stacked_scale_add(&theta, -1.0, &o);
+            let dist = ops::stacked_sqnorm(&diff).sqrt();
+            assert!(dist <= delta + 1e-6, "ratio {ratio}: {dist} > {delta}");
+        }
+    }
+
+    #[test]
+    fn dpc_is_safe_from_lmax() {
+        let ds = problem(3);
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let screener = DpcScreener::new(&ds);
+        for ratio in [0.8, 0.5, 0.2] {
+            let lam = ratio * lmax;
+            let out = screener.screen(&ds, &dref, lam);
+            let sol = fista(&ds, lam, None, &SolveOptions::tight());
+            let rn = sol.row_norms(ds.t());
+            for (l, (&rej, &norm)) in out.rejected.iter().zip(&rn).enumerate() {
+                if rej {
+                    assert!(norm < 1e-8, "UNSAFE: rejected active row {l} (norm {norm})");
+                }
+            }
+            // far from lambda_max the one-shot ball is huge and may reject
+            // nothing — only the nearer ratios must screen (the sequential
+            // rule handles small lambda; see dpc_sequential_tighter test)
+            if ratio >= 0.5 {
+                assert!(out.num_rejected() > 0, "rule should reject something at {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn dpc_sequential_tighter_than_oneshot() {
+        // Corollary 9: a reference at nearby lam0 rejects at least as many
+        // features as screening from lam_max (the ball is smaller)
+        let (ds, _) = synthetic2(&SynthOptions { t: 3, n: 12, d: 80, seed: 4, ..Default::default() });
+        let (dref_max, lmax) = DualRef::at_lambda_max(&ds);
+        let lam0 = 0.4 * lmax;
+        let lam = 0.3 * lmax;
+        let sol0 = fista(&ds, lam0, None, &SolveOptions::tight());
+        let dref_seq = DualRef::from_solution(&ds, lam0, &sol0.w);
+        let sc = DpcScreener::new(&ds);
+        let one = sc.screen(&ds, &dref_max, lam).num_rejected();
+        let seq = sc.screen(&ds, &dref_seq, lam).num_rejected();
+        assert!(seq >= one, "sequential {seq} < one-shot {one}");
+    }
+
+    #[test]
+    fn screen_at_lam0_rejects_inactive_of_lam0() {
+        // λ = λ0: ball radius shrinks to ~0 around θ*(λ0); scores ≈ g(θ*)
+        let ds = problem(5);
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let lam0 = 0.5 * lmax;
+        let sol = fista(&ds, lam0, None, &SolveOptions::tight());
+        let dref = DualRef::from_solution(&ds, lam0, &sol.w);
+        let out = DpcScreener::new(&ds).screen(&ds, &dref, lam0 * 0.999999);
+        let active = sol.active_set(ds.t(), 1e-8);
+        let kept = out.kept_indices();
+        for a in &active {
+            assert!(kept.contains(a), "active row {a} was rejected at ~lam0");
+        }
+        // nearly all inactive rows should be rejected with a tiny ball
+        let n_inactive = ds.d - active.len();
+        assert!(out.num_rejected() as f64 >= 0.9 * n_inactive as f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "DPC requires")]
+    fn rejects_wrong_direction() {
+        let ds = problem(6);
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let _ = DpcScreener::new(&ds).screen(&ds, &dref, lmax * 2.0);
+    }
+}

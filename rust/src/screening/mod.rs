@@ -1,0 +1,37 @@
+//! The DPC safe screening rule (the paper's contribution) and its
+//! ablations.
+//!
+//! * [`secular`] — the per-feature QP1QC solve (Theorem 7 / Gay 1981);
+//! * [`dpc`] — Theorem 5 ball + Theorem 8 / Corollary 9 rule;
+//! * [`bounds`] — cheaper-but-looser score bounds (ablation ABL1);
+//! * [`safety`] — post-hoc verifier that no active feature was rejected.
+
+pub mod bounds;
+pub mod dpc;
+pub mod safety;
+pub mod secular;
+
+/// What a screener returns for one λ step.
+#[derive(Debug, Clone)]
+pub struct ScreenOutcome {
+    /// certified-inactive features (safe to delete at this λ)
+    pub rejected: Vec<bool>,
+    /// raw scores s_l (max of g_l over the ball); s_l < 1 ⇒ rejected
+    pub scores: Vec<f64>,
+    /// ball radius used
+    pub delta: f64,
+}
+
+impl ScreenOutcome {
+    pub fn kept_indices(&self) -> Vec<usize> {
+        self.rejected
+            .iter()
+            .enumerate()
+            .filter_map(|(l, &r)| (!r).then_some(l))
+            .collect()
+    }
+
+    pub fn num_rejected(&self) -> usize {
+        self.rejected.iter().filter(|&&r| r).count()
+    }
+}

@@ -1,0 +1,95 @@
+//! Post-hoc safety verification: "safe" means no rejected feature is
+//! active in the true solution. This module certifies that claim against a
+//! high-precision solve — used by the property tests and (optionally) by
+//! the path coordinator in paranoid mode.
+
+use crate::data::Dataset;
+use crate::ops;
+
+#[derive(Debug)]
+pub struct SafetyReport {
+    /// rejected features whose solution row norm exceeded tol (must be empty)
+    pub violations: Vec<(usize, f64)>,
+    /// max g_l(θ̂) over rejected features (must be < 1 for strict safety)
+    pub max_rejected_g: f64,
+    pub checked: usize,
+}
+
+impl SafetyReport {
+    pub fn is_safe(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Verify a screening outcome against a solved W (row-norm check) and the
+/// KKT dual certificate (g_l(θ̂) < 1 for every rejected l, Eq. 15).
+pub fn verify(
+    ds: &Dataset,
+    w: &[f64],
+    lam: f64,
+    rejected: &[bool],
+    row_tol: f64,
+) -> SafetyReport {
+    let t_count = ds.t();
+    let mut violations = Vec::new();
+    for (l, &rej) in rejected.iter().enumerate() {
+        if rej {
+            let row = &w[l * t_count..(l + 1) * t_count];
+            let norm = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm > row_tol {
+                violations.push((l, norm));
+            }
+        }
+    }
+
+    let theta = ops::stacked_scale(&ops::residual(ds, w), -1.0 / lam);
+    let g = ops::gscore(ds, &theta);
+    let max_rejected_g = rejected
+        .iter()
+        .zip(&g)
+        .filter_map(|(&r, &gl)| r.then_some(gl))
+        .fold(0.0f64, f64::max);
+
+    SafetyReport {
+        violations,
+        max_rejected_g,
+        checked: rejected.iter().filter(|&&r| r).count(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::screening::dpc::{DpcScreener, DualRef};
+    use crate::solver::{fista, SolveOptions};
+
+    #[test]
+    fn dpc_outcome_passes_verification() {
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 3, n: 12, d: 60, seed: 11, ..Default::default() });
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let out = DpcScreener::new(&ds).screen(&ds, &dref, lam);
+        let sol = fista(&ds, lam, None, &SolveOptions::tight());
+        let report = verify(&ds, &sol.w, lam, &out.rejected, 1e-8);
+        assert!(report.is_safe(), "violations: {:?}", report.violations);
+        assert!(report.max_rejected_g < 1.0 + 1e-6);
+        assert!(report.checked > 0);
+    }
+
+    #[test]
+    fn detects_unsafe_rejection() {
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 2, n: 10, d: 30, seed: 12, ..Default::default() });
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let lam = 0.3 * lmax;
+        let sol = fista(&ds, lam, None, &SolveOptions::default());
+        let active = sol.active_set(ds.t(), 1e-6);
+        assert!(!active.is_empty());
+        let mut rejected = vec![false; ds.d];
+        rejected[active[0]] = true; // deliberately reject an active row
+        let report = verify(&ds, &sol.w, lam, &rejected, 1e-8);
+        assert!(!report.is_safe());
+    }
+}

@@ -1,0 +1,277 @@
+//! Theorem 7: the per-feature QP1QC
+//!
+//!   s_l = max_{θ ∈ Ball(o, Δ)} Σ_t <x_l^{(t)}, θ_t>²
+//!
+//! reduces (via the paper's parametrization of the ball) to the diagonal
+//! trust-region problem  min ½uᵀHu + qᵀu  s.t. ‖u‖ ≤ Δ  with
+//! H = −2·diag(b²), q_t = −2 b_t|a_t|  where a_t = <x_l^{(t)}, o_t>,
+//! b_t = ‖x_l^{(t)}‖. The optimal multiplier α* ≥ 2ρ² (ρ = max_t b_t)
+//! solves the secular equation ‖u(α)‖ = Δ, u_t(α) = c_t/(α − β_t) with
+//! c = −q, β = −diag(H); we use Gay/Moré–Sorensen safeguarded Newton
+//! (Eqs. 29–30), which converges in a handful of iterations because
+//! 1/‖u(α)‖ is concave increasing.
+//!
+//! Then  s_l = Σ_t a_t² + (α*/2)Δ² − ½ qᵀu*  (Theorem 7.4).
+
+/// Result of one QP1QC solve (diagnostics carried for tests/benches).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Branch {
+    /// Δ = 0 or all-zero feature: s = Σ a²
+    Trivial,
+    /// Theorem 7.2's hard case: α* = 2ρ², closed form
+    Closed,
+    /// interior Newton solve on (2ρ², ∞)
+    Newton,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Qp1qc {
+    pub s: f64,
+    pub alpha: f64,
+    pub branch: Branch,
+    pub newton_iters: usize,
+}
+
+/// Solve the Theorem-7 max for one feature.
+///
+/// `a[t] = <x_l^{(t)}, o_t>`, `b2[t] = ‖x_l^{(t)}‖²`, Δ = ball radius.
+pub fn qp1qc_max(a: &[f64], b2: &[f64], delta: f64) -> Qp1qc {
+    debug_assert_eq!(a.len(), b2.len());
+    let t = a.len();
+    let ssq: f64 = a.iter().map(|v| v * v).sum();
+
+    let amin = b2.iter().cloned().fold(0.0f64, f64::max) * 2.0; // 2ρ²
+    if delta <= 0.0 || amin <= 1e-290 {
+        return Qp1qc { s: ssq, alpha: amin, branch: Branch::Trivial, newton_iters: 0 };
+    }
+
+    // c_t = 2 b_t |a_t| (−q), β_t = 2 b_t² (−H diagonal)
+    let mut cnorm2 = 0.0f64;
+    let mut cmax = 0.0f64;
+    let mut ubar_norm2 = 0.0f64;
+    let mut q_dot_ubar = 0.0f64; // Σ c_t·ū_t (note: −½qᵀū = +½Σ c ū)
+    let mut q_on_i = 0.0f64; // max c_t over the active index set I
+    let itol = 1.0 - 1e-12;
+    for ti in 0..t {
+        let beta = 2.0 * b2[ti];
+        let c = 2.0 * b2[ti].sqrt() * a[ti].abs();
+        cnorm2 += c * c;
+        cmax = cmax.max(c);
+        if beta >= amin * itol {
+            q_on_i = q_on_i.max(c);
+        } else {
+            let u = c / (amin - beta);
+            ubar_norm2 += u * u;
+            q_dot_ubar += c * u;
+        }
+    }
+
+    // Closed-form branch (Thm 7.2/7.3): q vanishes on I and ‖ū‖ ≤ Δ.
+    let ctol = 1e-12 * (1.0 + cmax);
+    if q_on_i <= ctol && ubar_norm2.sqrt() <= delta {
+        let s = ssq + 0.5 * amin * delta * delta + 0.5 * q_dot_ubar;
+        return Qp1qc { s, alpha: amin, branch: Branch::Closed, newton_iters: 0 };
+    }
+
+    // Newton branch on (amin, amin + ‖c‖/Δ]
+    let mut lo = amin;
+    let mut hi = amin + cnorm2.sqrt() / delta + 1e-300;
+    let mut alpha = amin * (1.0 + 1e-9) + 1e-300;
+    alpha = alpha.min(0.5 * (lo + hi));
+    let mut iters = 0usize;
+    for k in 0..100 {
+        iters = k + 1;
+        // u(α), ‖u‖², uᵀ(H+αI)⁻¹u = Σ u²/(α−β)
+        let mut un2 = 0.0f64;
+        let mut uhu = 0.0f64;
+        for ti in 0..t {
+            let beta = 2.0 * b2[ti];
+            let c = 2.0 * b2[ti].sqrt() * a[ti].abs();
+            let gap = (alpha - beta).max(1e-300);
+            let u = c / gap;
+            un2 += u * u;
+            uhu += u * u / gap;
+        }
+        let un = un2.sqrt();
+        if (un - delta).abs() <= 1e-14 * delta {
+            break;
+        }
+        if un > delta {
+            lo = alpha; // φ(α) < 0: root is above
+        } else {
+            hi = alpha;
+        }
+        // Eq. (30)
+        let mut next = alpha + un2 * (un - delta) / (delta * uhu).max(1e-300);
+        if !(next > lo && next < hi) || !next.is_finite() {
+            next = 0.5 * (lo + hi);
+        }
+        if (next - alpha).abs() <= 1e-16 * alpha.max(1.0) {
+            alpha = next;
+            break;
+        }
+        alpha = next;
+    }
+
+    // s = Σa² + α/2·Δ² + ½ Σ c·u(α)
+    let mut cu = 0.0f64;
+    for ti in 0..t {
+        let beta = 2.0 * b2[ti];
+        let c = 2.0 * b2[ti].sqrt() * a[ti].abs();
+        cu += c * c / (alpha - beta).max(1e-300);
+    }
+    let s = ssq + 0.5 * alpha * delta * delta + 0.5 * cu;
+    Qp1qc { s, alpha, branch: Branch::Newton, newton_iters: iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// brute-force: max over boundary directions via projected gradient
+    /// ascent from many starts (the ball max is attained on the boundary)
+    fn brute_max(a: &[f64], b2: &[f64], delta: f64, rng: &mut Pcg64) -> f64 {
+        // g(u) over the parametrized ball: sum_t (|a_t| + b_t u_t)^2 with
+        // ||u|| <= delta and u_t >= -?? — we just sample u on the sphere
+        // and take phi(u) = sum u² b² + 2|u| b |a| + a² (the inner Cauchy-
+        // Schwarz max over directions), which matches the paper's phi.
+        let t = a.len();
+        let mut best = f64::MIN;
+        for _ in 0..20_000 {
+            let mut u: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let n = crate::linalg::nrm2_f64(&u).max(1e-300);
+            let scale = delta * rng.uniform().powf(0.3) / n;
+            for v in u.iter_mut() {
+                *v *= scale;
+            }
+            let val: f64 = (0..t)
+                .map(|i| {
+                    let b = b2[i].sqrt();
+                    u[i] * u[i] * b2[i] + 2.0 * u[i].abs() * b * a[i].abs() + a[i] * a[i]
+                })
+                .sum();
+            best = best.max(val);
+        }
+        best
+    }
+
+    #[test]
+    fn newton_matches_bruteforce() {
+        let mut rng = Pcg64::new(21);
+        for _ in 0..30 {
+            let t = 1 + rng.below(5) as usize;
+            let a: Vec<f64> = (0..t).map(|_| rng.normal() * 2.0).collect();
+            let b2: Vec<f64> = (0..t).map(|_| rng.normal().abs() + 0.01).collect();
+            let delta = rng.uniform() * 3.0 + 0.01;
+            let got = qp1qc_max(&a, &b2, delta);
+            let brute = brute_max(&a, &b2, delta, &mut rng);
+            assert!(
+                got.s >= brute - 1e-8,
+                "certified max below sampled value: {} < {brute}",
+                got.s
+            );
+            assert!(
+                got.s <= brute * 1.05 + 1e-6,
+                "certified max too loose: {} vs {brute}",
+                got.s
+            );
+        }
+    }
+
+    #[test]
+    fn trivial_branch_delta_zero() {
+        let r = qp1qc_max(&[1.0, -2.0], &[1.0, 1.0], 0.0);
+        assert_eq!(r.branch, Branch::Trivial);
+        assert!((r.s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trivial_branch_zero_feature() {
+        let r = qp1qc_max(&[0.0, 0.0], &[0.0, 0.0], 2.0);
+        assert_eq!(r.branch, Branch::Trivial);
+        assert_eq!(r.s, 0.0);
+    }
+
+    #[test]
+    fn closed_branch_pure_quadratic() {
+        // all a = 0: s = ρ²Δ², α* = 2ρ²
+        let r = qp1qc_max(&[0.0, 0.0, 0.0], &[4.0, 1.0, 0.5], 3.0);
+        assert_eq!(r.branch, Branch::Closed);
+        assert!((r.s - 4.0 * 9.0).abs() < 1e-12);
+        assert!((r.alpha - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_branch_formula() {
+        // a = 0 exactly on the max-norm task, small elsewhere, big Δ
+        let a = [0.0, 0.1];
+        let b2 = [4.0, 1.0];
+        let delta = 10.0;
+        let r = qp1qc_max(&a, &b2, delta);
+        assert_eq!(r.branch, Branch::Closed);
+        let ubar1 = 0.2 / 6.0; // c_1/(amin - beta_1) = 0.2/(8-2)
+        let want = 0.01 + 4.0 * delta * delta + 0.5 * 0.2 * ubar1;
+        assert!((r.s - want).abs() < 1e-10, "{} vs {want}", r.s);
+    }
+
+    #[test]
+    fn newton_alpha_on_boundary_constraint() {
+        // for the Newton branch, ||u(alpha*)|| must equal delta
+        let a = [1.5, -0.7, 0.2];
+        let b2 = [2.0, 1.0, 0.3];
+        let delta = 0.8;
+        let r = qp1qc_max(&a, &b2, delta);
+        assert_eq!(r.branch, Branch::Newton);
+        let un2: f64 = (0..3)
+            .map(|i| {
+                let c = 2.0 * b2[i].sqrt() * a[i].abs();
+                (c / (r.alpha - 2.0 * b2[i])).powi(2)
+            })
+            .sum();
+        assert!(
+            (un2.sqrt() - delta).abs() < 1e-10 * delta,
+            "||u||={} delta={delta}",
+            un2.sqrt()
+        );
+        assert!(r.newton_iters <= 20, "Newton took {} iters", r.newton_iters);
+    }
+
+    #[test]
+    fn monotone_in_delta() {
+        let a = [0.5, -1.0];
+        let b2 = [1.0, 2.0];
+        let mut prev = f64::MIN;
+        for k in 0..20 {
+            let delta = k as f64 * 0.2;
+            let s = qp1qc_max(&a, &b2, delta).s;
+            assert!(s >= prev - 1e-12);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn center_score_lower_bounds() {
+        // s >= g(center) = sum a^2 always
+        let mut rng = Pcg64::new(33);
+        for _ in 0..200 {
+            let t = 1 + rng.below(6) as usize;
+            let a: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+            let b2: Vec<f64> = (0..t).map(|_| rng.normal().abs()).collect();
+            let delta = rng.uniform() * 2.0;
+            let ssq: f64 = a.iter().map(|v| v * v).sum();
+            assert!(qp1qc_max(&a, &b2, delta).s >= ssq - 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_task_closed_form() {
+        // T=1: s = (|a| + bΔ)² exactly (Cauchy–Schwarz is tight)
+        let a = [1.3];
+        let b2 = [2.2];
+        let delta = 0.9;
+        let want = (1.3f64 + 2.2f64.sqrt() * delta).powi(2);
+        let got = qp1qc_max(&a, &b2, delta).s;
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Cyclic block-coordinate descent over feature rows.
+//!
+//! For row l, with residuals r_t = y_t − Σ_{j≠l} w_j x_j^{(t)}, the update
+//! minimizes ½Σ_t‖r_t − v_t x_l^{(t)}‖² + λ‖v‖ over v ∈ R^T:
+//!
+//!   c_t = <x_l^{(t)}, r_t>,  b2_t = ‖x_l^{(t)}‖²
+//!   v = 0                        if ‖c‖ ≤ λ
+//!   v_t = c_t ν / (b2_t ν + λ)   otherwise, where ν = ‖v‖ solves the
+//!   secular equation f(ν) = Σ_t c_t²/(b2_t ν + λ)² = 1  (f strictly
+//!   decreasing from ‖c‖²/λ² > 1), found by safeguarded Newton.
+//!
+//! This is an algorithm *independent* of FISTA (different trajectory,
+//! different fixed-point characterization), which makes agreement between
+//! the two a strong correctness check on both.
+
+use super::{SolveOptions, SolveResult};
+use crate::data::Dataset;
+use crate::linalg::dense::dot_mixed;
+use crate::ops;
+
+/// Solve the row secular equation; returns ν = ‖v‖ (0 if ‖c‖ <= lam).
+fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
+    let cn2: f64 = c.iter().map(|v| v * v).sum();
+    if cn2.sqrt() <= lam {
+        return 0.0;
+    }
+    let f = |nu: f64| -> f64 {
+        c.iter().zip(b2).map(|(&ct, &bt)| (ct / (bt * nu + lam)).powi(2)).sum::<f64>()
+    };
+    // bracket: f(0) > 1; grow hi until f(hi) < 1
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    let mut guard = 0;
+    while f(hi) > 1.0 {
+        lo = hi;
+        hi *= 4.0;
+        guard += 1;
+        if guard > 200 {
+            break;
+        }
+    }
+    // safeguarded Newton on h(nu) = f(nu) - 1 (f convex decreasing)
+    let mut nu = 0.5 * (lo + hi);
+    for _ in 0..100 {
+        let mut fv = 0.0f64;
+        let mut dfv = 0.0f64;
+        for (&ct, &bt) in c.iter().zip(b2) {
+            let den = bt * nu + lam;
+            let r = ct / den;
+            fv += r * r;
+            dfv += -2.0 * r * r * bt / den;
+        }
+        if fv > 1.0 {
+            lo = nu;
+        } else {
+            hi = nu;
+        }
+        let step = (fv - 1.0) / dfv.min(-1e-300);
+        let mut next = nu + step; // Newton: nu - (f-1)/f'
+        if !(next > lo && next < hi) || !next.is_finite() {
+            next = 0.5 * (lo + hi);
+        }
+        if (next - nu).abs() <= 1e-15 * nu.max(1.0) {
+            nu = next;
+            break;
+        }
+        nu = next;
+    }
+    nu
+}
+
+/// Cyclic BCD; `w0` warm start optional.
+pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> SolveResult {
+    let t_count = ds.t();
+    let d = ds.d;
+    let mut w: Vec<f64> = match w0 {
+        Some(w0) => w0.to_vec(),
+        None => vec![0.0; d * t_count],
+    };
+    let b2_all = ds.col_sqnorms(); // (d x T)
+
+    // residuals r_t = y_t - X_t w_t
+    let mut r: ops::Stacked = {
+        let z = ops::forward(ds, &w);
+        ds.tasks
+            .iter()
+            .zip(z)
+            .map(|(task, zt)| {
+                task.y.iter().zip(zt).map(|(&yi, zi)| yi as f64 - zi).collect()
+            })
+            .collect()
+    };
+
+    let mut c = vec![0.0f64; t_count];
+    let mut obj = f64::INFINITY;
+    let mut gap = f64::INFINITY;
+    let mut sweeps = 0usize;
+    let mut converged = false;
+
+    for sweep in 1..=opts.max_iters {
+        sweeps = sweep;
+        let mut max_change = 0.0f64;
+        for l in 0..d {
+            let b2 = &b2_all[l * t_count..(l + 1) * t_count];
+            // c_t = <x_l, r_t> + b2_t * w_lt   (residual with row l removed)
+            for ti in 0..t_count {
+                let task = &ds.tasks[ti];
+                let col = &task.x[l * task.n..(l + 1) * task.n];
+                c[ti] = dot_mixed(col, &r[ti]) + b2[ti] * w[l * t_count + ti];
+            }
+            let nu = row_nu(&c, b2, lam);
+            for ti in 0..t_count {
+                let old = w[l * t_count + ti];
+                let new = if nu == 0.0 { 0.0 } else { c[ti] * nu / (b2[ti] * nu + lam) };
+                let delta = new - old;
+                if delta != 0.0 {
+                    let task = &ds.tasks[ti];
+                    let col = &task.x[l * task.n..(l + 1) * task.n];
+                    for (ri, &xi) in r[ti].iter_mut().zip(col) {
+                        *ri -= delta * xi as f64;
+                    }
+                    w[l * t_count + ti] = new;
+                    max_change = max_change.max(delta.abs());
+                }
+            }
+        }
+
+        if sweep % opts.check_every.clamp(1, 5) == 0 || max_change == 0.0 {
+            let (o, gp, _) = ops::duality_gap(ds, &w, lam);
+            obj = o;
+            gap = gp;
+            if gap <= opts.tol * obj.abs().max(1.0) {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    if !obj.is_finite() {
+        let (o, gp, _) = ops::duality_gap(ds, &w, lam);
+        obj = o;
+        gap = gp;
+    }
+
+    SolveResult { w, obj, gap, iters: sweeps, converged, lipschitz: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+    use crate::solver::fista;
+
+    fn problem() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 12, d: 30, seed: 8, ..Default::default() }).0
+    }
+
+    #[test]
+    fn row_nu_zero_iff_small_correlation() {
+        assert_eq!(row_nu(&[0.3, 0.4], &[1.0, 2.0], 0.6), 0.0); // ||c||=0.5 < 0.6
+        assert!(row_nu(&[3.0, 4.0], &[1.0, 2.0], 0.6) > 0.0);
+    }
+
+    #[test]
+    fn row_nu_satisfies_fixed_point() {
+        let c = [2.0, -1.5, 0.7];
+        let b2 = [1.3, 0.2, 2.5];
+        let lam = 0.9;
+        let nu = row_nu(&c, &b2, lam);
+        let vnorm2: f64 = c
+            .iter()
+            .zip(&b2)
+            .map(|(&ct, &bt)| (ct * nu / (bt * nu + lam)).powi(2))
+            .sum();
+        assert!((vnorm2.sqrt() - nu).abs() < 1e-10, "nu={nu} ||v||={}", vnorm2.sqrt());
+    }
+
+    #[test]
+    fn bcd_converges() {
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let res = bcd(&ds, 0.3 * lmax, None, &SolveOptions::default());
+        assert!(res.converged, "gap={}", res.gap);
+    }
+
+    #[test]
+    fn bcd_and_fista_agree() {
+        type Gen = fn(&SynthOptions) -> (Dataset, crate::data::GroundTruth);
+        let cases: [(u64, Gen); 2] = [(1, synthetic1), (2, synthetic2)];
+        for (seed, mk) in cases {
+            let (ds, _) = mk(&SynthOptions { t: 2, n: 10, d: 20, seed, ..Default::default() });
+            let (lmax, _, _) = ops::lambda_max(&ds);
+            let lam = 0.35 * lmax;
+            let a = bcd(&ds, lam, None, &SolveOptions::tight());
+            let b = fista(&ds, lam, None, &SolveOptions::tight());
+            let maxdiff = a
+                .w
+                .iter()
+                .zip(&b.w)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f64, f64::max);
+            assert!(maxdiff < 1e-5, "solvers disagree: {maxdiff}");
+            assert!((a.obj - b.obj).abs() < 1e-8 * a.obj.max(1.0));
+        }
+    }
+
+    #[test]
+    fn bcd_zero_above_lmax() {
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let res = bcd(&ds, lmax * 1.01, None, &SolveOptions::default());
+        assert!(res.w.iter().all(|&v| v == 0.0));
+    }
+}

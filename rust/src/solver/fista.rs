@@ -1,0 +1,197 @@
+//! FISTA (accelerated proximal gradient) for the MTFL problem (1).
+//!
+//! Step size 1/L with L = max_t σ_max(X_t)² from power iteration: the
+//! smooth part Σ_t ½‖X_t w_t − y_t‖² has a block-diagonal Hessian
+//! blockdiag(X_tᵀX_t), so its Lipschitz constant is the max over tasks.
+//! Stopping: duality gap against the scaled-residual feasible point
+//! (exactly the certificate DPC's sequential rule consumes).
+
+use super::{prox::prox21_inplace, SolveOptions, SolveResult};
+use crate::data::Dataset;
+use crate::ops;
+use crate::util::Pcg64;
+
+/// L = max_t σ_max(X_t)² via per-task power iteration (f64 accumulation).
+pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
+    let per_task = crate::util::scoped_pool((0..ds.t()).collect::<Vec<_>>(), usize::MAX, |ti| {
+        let task = &ds.tasks[ti];
+        let n = task.n;
+        let mut rng = Pcg64::with_stream(0x11b5, ti as u64);
+        let mut v: Vec<f64> = (0..ds.d).map(|_| rng.normal()).collect();
+        let mut xv = vec![0.0f64; n];
+        let mut sigma2 = 0.0f64;
+        for _ in 0..iters {
+            // xv = X v
+            xv.fill(0.0);
+            for l in 0..ds.d {
+                let vl = v[l];
+                if vl != 0.0 {
+                    crate::linalg::axpy_f64(vl, &task.x[l * n..(l + 1) * n], &mut xv);
+                }
+            }
+            // v = X^T xv
+            for l in 0..ds.d {
+                v[l] = crate::linalg::dense::dot_mixed(&task.x[l * n..(l + 1) * n], &xv);
+            }
+            let norm = crate::linalg::nrm2_f64(&v).max(1e-300);
+            sigma2 = norm; // v = X^T X v_prev with ||v_prev|| = 1 => ||v|| -> sigma^2
+            for vi in v.iter_mut() {
+                *vi /= norm;
+            }
+        }
+        sigma2
+    });
+    per_task.into_iter().fold(0.0f64, f64::max) * 1.0001 // small safety factor
+}
+
+/// Solve problem (1) at `lam`, warm-started from `w0` if given.
+pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> SolveResult {
+    let t_count = ds.t();
+    let dt = ds.d * t_count;
+    let lcap = lipschitz(ds, opts.power_iters).max(1e-12);
+    let step = 1.0 / lcap;
+    let kappa = lam / lcap;
+
+    let mut w: Vec<f64> = match w0 {
+        Some(w0) => {
+            assert_eq!(w0.len(), dt, "warm start has wrong shape");
+            w0.to_vec()
+        }
+        None => vec![0.0; dt],
+    };
+    let mut v = w.clone();
+    let mut t = 1.0f64;
+
+    let mut obj = f64::INFINITY;
+    let mut gap = f64::INFINITY;
+    let mut iters = 0usize;
+    let mut converged = false;
+
+    for it in 1..=opts.max_iters {
+        iters = it;
+        // gradient at the momentum point V
+        let r = ops::residual(ds, &v);
+        let g = ops::task_corr(ds, &r); // (d x T)
+        // W_new = prox(V - G/L)
+        let mut w_new = vec![0.0f64; dt];
+        for i in 0..dt {
+            w_new[i] = v[i] - step * g[i];
+        }
+        prox21_inplace(&mut w_new, t_count, kappa);
+
+        // O'Donoghue–Candès adaptive restart: when the momentum direction
+        // opposes the latest step (⟨v − w_new, w_new − w⟩ > 0), drop the
+        // momentum. Cuts small-λ iteration counts by ~2-5x (EXPERIMENTS.md
+        // §Perf entry 2).
+        let mut osc = 0.0f64;
+        for i in 0..dt {
+            osc += (v[i] - w_new[i]) * (w_new[i] - w[i]);
+        }
+        if osc > 0.0 {
+            t = 1.0;
+        }
+
+        let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let momentum = (t - 1.0) / t_new;
+        for i in 0..dt {
+            v[i] = w_new[i] + momentum * (w_new[i] - w[i]);
+        }
+        w = w_new;
+        t = t_new;
+
+        if it % opts.check_every == 0 || it == opts.max_iters {
+            let (o, gp, _) = ops::duality_gap(ds, &w, lam);
+            obj = o;
+            gap = gp;
+            if gap <= opts.tol * obj.abs().max(1.0) {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    if !obj.is_finite() {
+        let (o, gp, _) = ops::duality_gap(ds, &w, lam);
+        obj = o;
+        gap = gp;
+    }
+
+    SolveResult { w, obj, gap, iters, converged, lipschitz: lcap }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+
+    fn problem() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 12, d: 30, seed: 8, ..Default::default() }).0
+    }
+
+    #[test]
+    fn lipschitz_upper_bounds_columns() {
+        // sigma_max^2 >= max column norm^2
+        let ds = problem();
+        let lcap = lipschitz(&ds, 60);
+        let b2 = ds.col_sqnorms();
+        let maxcol = b2.iter().cloned().fold(0.0f64, f64::max);
+        assert!(lcap >= maxcol * 0.999, "L={lcap} maxcol={maxcol}");
+    }
+
+    #[test]
+    fn converges_to_small_gap() {
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let res = fista(&ds, 0.3 * lmax, None, &SolveOptions::default());
+        assert!(res.converged, "gap={} after {} iters", res.gap, res.iters);
+        assert!(res.gap <= 1e-9 * res.obj.max(1.0));
+    }
+
+    #[test]
+    fn zero_solution_above_lmax() {
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let res = fista(&ds, lmax * 1.001, None, &SolveOptions::default());
+        assert!(res.w.iter().all(|&v| v == 0.0), "W must be exactly 0 at lam>lmax");
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let r1 = fista(&ds, 0.5 * lmax, None, &SolveOptions::default());
+        let cold = fista(&ds, 0.45 * lmax, None, &SolveOptions::default());
+        let warm = fista(&ds, 0.45 * lmax, Some(&r1.w), &SolveOptions::default());
+        assert!(warm.iters <= cold.iters, "warm {} vs cold {}", warm.iters, cold.iters);
+        assert!((warm.obj - cold.obj).abs() <= 1e-6 * cold.obj.abs().max(1.0));
+    }
+
+    #[test]
+    fn kkt_active_rows_saturate_constraint() {
+        // at the optimum, g_l(theta*) = 1 for active rows, <= 1 for all
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let res = fista(&ds, lam, None, &SolveOptions::tight());
+        let theta = ops::stacked_scale(&ops::residual(&ds, &res.w), -1.0 / lam);
+        let g = ops::gscore(&ds, &theta);
+        let active = res.active_set(ds.t(), 1e-8);
+        assert!(!active.is_empty());
+        for &l in &active {
+            assert!((g[l] - 1.0).abs() < 1e-4, "g[{l}]={} for active row", g[l]);
+        }
+        for (l, &gl) in g.iter().enumerate() {
+            assert!(gl <= 1.0 + 1e-4, "g[{l}]={gl} violates dual feasibility");
+        }
+    }
+
+    #[test]
+    fn objective_matches_bruteforce_eval() {
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.5 * lmax;
+        let res = fista(&ds, lam, None, &SolveOptions::default());
+        let direct = ops::primal_obj(&ds, &res.w, lam);
+        assert!((res.obj - direct).abs() < 1e-9 * direct.max(1.0));
+    }
+}

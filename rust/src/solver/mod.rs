@@ -1,0 +1,80 @@
+//! Exact (f64) solvers for the MTFL problem (1):
+//!
+//! * [`fista`] — accelerated proximal gradient with the ℓ2,1 prox and a
+//!   duality-gap stopping rule (the algorithm family behind SLEP's
+//!   `mtLeastR`, the paper's solver);
+//! * [`bcd`] — cyclic block-coordinate descent over feature rows (an
+//!   independent algorithm used to cross-validate FISTA and as a second
+//!   baseline for Table 1).
+//!
+//! Both support warm starts — essential for the sequential λ-path.
+
+pub mod bcd;
+pub mod fista;
+pub mod prox;
+
+pub use bcd::bcd;
+pub use fista::{fista, lipschitz};
+
+/// Options shared by the solvers.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// maximum iterations (FISTA steps or BCD sweeps)
+    pub max_iters: usize,
+    /// stop when duality gap <= tol * max(1, |obj|)
+    pub tol: f64,
+    /// evaluate the (expensive) duality gap every this many iterations
+    pub check_every: usize,
+    /// power-iteration count for the Lipschitz estimate
+    pub power_iters: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions { max_iters: 20_000, tol: 1e-9, check_every: 25, power_iters: 60 }
+    }
+}
+
+impl SolveOptions {
+    /// Loose profile for benchmarking throughput (paper-style runs).
+    pub fn loose() -> Self {
+        SolveOptions { tol: 1e-6, ..Default::default() }
+    }
+
+    /// Tight profile for safety verification.
+    pub fn tight() -> Self {
+        SolveOptions { tol: 1e-11, max_iters: 200_000, ..Default::default() }
+    }
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// row-major (d x T)
+    pub w: Vec<f64>,
+    pub obj: f64,
+    pub gap: f64,
+    pub iters: usize,
+    pub converged: bool,
+    /// estimated Lipschitz constant (FISTA only; 0 for BCD)
+    pub lipschitz: f64,
+}
+
+impl SolveResult {
+    /// Row norms ‖w^l‖ — the quantity screening certifies to be zero.
+    pub fn row_norms(&self, t_count: usize) -> Vec<f64> {
+        self.w
+            .chunks_exact(t_count)
+            .map(|r| r.iter().map(|v| v * v).sum::<f64>().sqrt())
+            .collect()
+    }
+
+    /// Indices of rows with norm > tol (the active set).
+    pub fn active_set(&self, t_count: usize, tol: f64) -> Vec<usize> {
+        self.row_norms(t_count)
+            .iter()
+            .enumerate()
+            .filter_map(|(l, &n)| (n > tol).then_some(l))
+            .collect()
+    }
+}

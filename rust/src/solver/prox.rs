@@ -1,0 +1,68 @@
+//! Proximal operator of κ‖·‖₂,₁ — the row-wise group soft-threshold.
+
+/// In-place prox on a row-major (d x T) matrix: each row shrinks by
+/// max(0, 1 − κ/‖row‖). Returns the number of surviving (nonzero) rows.
+pub fn prox21_inplace(w: &mut [f64], t_count: usize, kappa: f64) -> usize {
+    debug_assert_eq!(w.len() % t_count, 0);
+    let mut alive = 0usize;
+    for row in w.chunks_exact_mut(t_count) {
+        let norm = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm <= kappa {
+            row.fill(0.0);
+        } else {
+            let s = 1.0 - kappa / norm;
+            for v in row.iter_mut() {
+                *v *= s;
+            }
+            alive += 1;
+        }
+    }
+    alive
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrinks_exactly() {
+        let mut w = vec![3.0, 4.0, /* row2 */ 0.3, 0.4];
+        let alive = prox21_inplace(&mut w, 2, 1.0);
+        // row1 norm 5 -> scale 0.8 ; row2 norm 0.5 <= 1 -> zero
+        assert_eq!(alive, 1);
+        assert!((w[0] - 2.4).abs() < 1e-12 && (w[1] - 3.2).abs() < 1e-12);
+        assert_eq!(&w[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn kappa_zero_is_identity() {
+        let mut w = vec![1.0, -2.0, 3.0];
+        prox21_inplace(&mut w, 3, 0.0);
+        assert_eq!(w, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn prox_is_nonexpansive() {
+        // |prox(a) - prox(b)| <= |a - b| row-wise
+        let mut a: Vec<f64> = vec![2.0, 0.5, -1.0, 0.2];
+        let mut b: Vec<f64> = vec![1.5, 0.7, -0.8, 0.1];
+        let dist0: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).powi(2)).sum();
+        prox21_inplace(&mut a, 2, 0.9);
+        prox21_inplace(&mut b, 2, 0.9);
+        let dist1: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).powi(2)).sum();
+        assert!(dist1 <= dist0 + 1e-12);
+    }
+
+    #[test]
+    fn optimality_condition_of_prox() {
+        // v = prox_k(z) satisfies z - v in k * subdiff ||v||: for v != 0,
+        // z - v = k v/||v||
+        let z = vec![3.0, -4.0];
+        let mut v = z.clone();
+        prox21_inplace(&mut v, 2, 2.0);
+        let vn = (v[0] * v[0] + v[1] * v[1]).sqrt();
+        for i in 0..2 {
+            assert!(((z[i] - v[i]) - 2.0 * v[i] / vn).abs() < 1e-12);
+        }
+    }
+}

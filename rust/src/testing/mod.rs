@@ -1,0 +1,106 @@
+//! proptest-lite: a minimal property-testing harness (proptest is not
+//! vendored offline). Runs a property over `cases` randomly generated
+//! inputs from an explicit seed; on failure it reports the case seed so
+//! the exact input can be replayed deterministically.
+
+use crate::util::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // MTFL_PROP_CASES / MTFL_PROP_SEED env overrides for reproduction
+        let cases = std::env::var("MTFL_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(32);
+        let seed = std::env::var("MTFL_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0x9d5f_11e7);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop(rng, case_index)`; panics with the replay seed on failure.
+/// The property signals failure by returning `Err(message)`.
+pub fn check<F>(name: &str, cfg: &PropConfig, prop: F)
+where
+    F: Fn(&mut Pcg64, usize) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg64::new(case_seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed on case {case} (replay: MTFL_PROP_SEED={} MTFL_PROP_CASES=1): {msg}",
+                cfg.seed.wrapping_add(case as u64)
+            ),
+            Err(p) => panic!(
+                "property '{name}' panicked on case {case} (replay: MTFL_PROP_SEED={}): {:?}",
+                cfg.seed.wrapping_add(case as u64),
+                p.downcast_ref::<String>()
+            ),
+        }
+    }
+}
+
+/// Convenience generators for property tests.
+pub mod gen {
+    use crate::util::Pcg64;
+
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        rng.uniform_in(lo, hi)
+    }
+
+    pub fn vec_normal(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counted = std::sync::atomic::AtomicUsize::new(0);
+        check("count", &PropConfig { cases: 10, seed: 1 }, |_, _| {
+            counted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        });
+        assert_eq!(counted.load(std::sync::atomic::Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn failing_property_reports_seed() {
+        check("fail", &PropConfig { cases: 3, seed: 2 }, |_, case| {
+            if case == 2 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generator_determinism() {
+        let mut a = Pcg64::new(5);
+        let mut b = Pcg64::new(5);
+        assert_eq!(gen::vec_normal(&mut a, 8, 1.0), gen::vec_normal(&mut b, 8, 1.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch (no third-party crates are
+//! available offline beyond `xla`/`anyhow`): RNG, timers, a thread pool,
+//! and a tiny logger.
+
+pub mod logging;
+pub mod rng;
+pub mod threads;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use threads::{num_threads, parallel_chunks, scoped_pool};
+pub use timer::{Stopwatch, format_duration};

@@ -1,0 +1,240 @@
+//! PCG64 (DXSM) pseudo-random generator + distribution samplers.
+//!
+//! The `rand` crate is not vendored in this environment, so experiments use
+//! this self-contained generator. PCG64-DXSM is the NumPy default bit
+//! generator, which keeps our synthetic datasets statistically comparable
+//! with the paper's NumPy/MATLAB-generated ones. Reproducibility: every
+//! experiment seeds explicitly; `split` derives independent streams for
+//! parallel trials.
+
+/// PCG64-DXSM: 128-bit LCG state, 64-bit DXSM output permutation.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second normal from the Box–Muller pair
+    spare_normal: Option<f64>,
+}
+
+const PCG_MUL: u128 = 0xda942042e4dd58b5;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xcafe_f00d_d15e_a5e5)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc, spare_normal: None };
+        rng.state = rng.state.wrapping_mul(PCG_MUL).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128 ^ ((seed as u128) << 64));
+        rng.state = rng.state.wrapping_mul(PCG_MUL).wrapping_add(inc);
+        rng
+    }
+
+    /// Derive an independent stream (for parallel trials / tasks).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let stream = self.next_u64() | 1;
+        Pcg64::with_stream(seed, stream)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // DXSM output permutation on the *pre-advance* state
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        self.state = self.state.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(PCG_MUL as u64);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n). Lemire's multiply-shift rejection
+    /// method (unbiased).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= 1e-300 {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], mean: f64, std: f64) {
+        for v in out.iter_mut() {
+            *v = (mean + std * self.normal()) as f32;
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn choose_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // For small k relative to n use a set-based scheme; otherwise shuffle.
+        if k * 8 < n {
+            let mut picked = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let v = self.below(n as u64) as usize;
+                if picked.insert(v) {
+                    out.push(v);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below((n - i) as u64) as usize;
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+
+    /// Geometric-ish Zipf sampler over [0, n) with exponent `s` (for the
+    /// text-corpus simulator): inverse-CDF on precomputed weights is the
+    /// caller's job; this is the cheap approximation used for ranks.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse transform on the continuous Zipf CDF
+        let u = self.uniform().max(1e-12);
+        let x = ((n as f64).powf(1.0 - s) * u + (1.0 - u)).powf(1.0 / (1.0 - s));
+        (x.floor() as usize).min(n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Pcg64::new(7);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(9);
+        let n = 100_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m += z;
+            v += z * z;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean={m}");
+        assert!((v - 1.0).abs() < 0.03, "var={v}");
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Pcg64::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn choose_distinct_is_distinct() {
+        let mut r = Pcg64::new(5);
+        for (n, k) in [(100, 10), (50, 50), (1000, 3)] {
+            let picks = r.choose_distinct(n, k);
+            assert_eq!(picks.len(), k);
+            let set: std::collections::HashSet<_> = picks.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(picks.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg64::new(11);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn zipf_in_range_and_head_heavy() {
+        let mut r = Pcg64::new(13);
+        let mut head = 0;
+        for _ in 0..10_000 {
+            let z = r.zipf(1000, 1.2);
+            assert!(z < 1000);
+            if z < 10 {
+                head += 1;
+            }
+        }
+        assert!(head > 3000, "zipf head mass too small: {head}");
+    }
+}

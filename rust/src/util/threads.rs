@@ -1,0 +1,142 @@
+//! Scoped data-parallel helpers on std::thread (no rayon/tokio offline).
+//!
+//! The two hot patterns in this codebase are (a) "split a feature range
+//! into contiguous chunks and process each on its own core" (screening
+//! sweeps, gradient sweeps) and (b) "run K independent closures" (parallel
+//! trials). Both are served by [`parallel_chunks`] / [`scoped_pool`] built
+//! on `std::thread::scope`, which lets workers borrow the data matrices
+//! without `Arc`.
+
+/// Number of worker threads: `MTFL_THREADS` env override, else available
+/// parallelism, clamped to [1, 64].
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("MTFL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 64)
+}
+
+/// Process `0..len` in contiguous chunks, one chunk per worker. `f` receives
+/// (chunk_index, start, end) and returns a per-chunk result; results come
+/// back ordered by chunk index.
+pub fn parallel_chunks<R, F>(len: usize, max_workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize, usize) -> R + Sync,
+{
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = max_workers.min(num_threads()).min(len).max(1);
+    if workers == 1 {
+        return vec![f(0, 0, len)];
+    }
+    let chunk = len.div_ceil(workers);
+    let mut out: Vec<Option<R>> = (0..workers).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (i, slot) in out.iter_mut().enumerate() {
+            let start = i * chunk;
+            let end = ((i + 1) * chunk).min(len);
+            let fref = &f;
+            handles.push(s.spawn(move || {
+                if start < end {
+                    *slot = Some(fref(i, start, end));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+/// Run independent jobs (one closure per item) across the pool; returns
+/// results in item order.
+pub fn scoped_pool<T, R, F>(items: Vec<T>, max_workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = max_workers.min(num_threads()).min(n).max(1);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    use std::sync::Mutex;
+    let queue: Mutex<Vec<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().rev().collect());
+    let results: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        results.lock().unwrap().push((i, r));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    let mut rs = results.into_inner().unwrap();
+    rs.sort_by_key(|(i, _)| *i);
+    rs.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<(usize, usize)> =
+            parallel_chunks(1003, 7, |_, s, e| (s, e)).into_iter().collect();
+        let mut covered = vec![false; 1003];
+        for (s, e) in hits {
+            for c in covered.iter_mut().take(e).skip(s) {
+                assert!(!*c, "double coverage");
+                *c = true;
+            }
+        }
+        assert!(covered.into_iter().all(|c| c));
+    }
+
+    #[test]
+    fn chunk_sum_matches_serial() {
+        let data: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let partial = parallel_chunks(data.len(), 8, |_, s, e| {
+            data[s..e].iter().sum::<f64>()
+        });
+        let total: f64 = partial.into_iter().sum();
+        assert_eq!(total, data.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn pool_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = scoped_pool(items, 8, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(parallel_chunks(0, 4, |_, _, _| ()).is_empty());
+        assert!(scoped_pool(Vec::<usize>::new(), 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_chunks(10, 1, |i, s, e| (i, s, e));
+        assert_eq!(out, vec![(0, 0, 10)]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Wallclock accounting for the coordinator's per-phase timing
+//! (solver-alone vs screening vs total — the columns of Table 1).
+
+use std::time::{Duration, Instant};
+
+/// A resumable stopwatch accumulating total elapsed time across intervals.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    accumulated: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { accumulated: Duration::ZERO, started: None }
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    /// Time a closure and accumulate its duration.
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        self.start();
+        let r = f();
+        self.stop();
+        r
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.accumulated
+            + self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.accumulated = Duration::ZERO;
+        self.started = None;
+    }
+}
+
+/// Human format: "1.23s", "45.1ms", "12.3m".
+pub fn format_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{:.2}m", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_intervals() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        let t1 = sw.secs();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.secs() >= t1 + 0.004);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+    }
+
+    #[test]
+    fn format_ranges() {
+        assert!(format_duration(Duration::from_secs(90)).ends_with('m'));
+        assert!(format_duration(Duration::from_secs(2)).ends_with('s'));
+        assert!(format_duration(Duration::from_millis(3)).ends_with("ms"));
+        assert!(format_duration(Duration::from_micros(3)).ends_with("us"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Dataset substrate integration: statistical shape of each simulated
+//! workload at moderate size, IO round trips, and AOT packing identities.
+
+use mtfl_dpc::data::imagesim::{imagesim, ImageSimOptions};
+use mtfl_dpc::data::snpsim::{snpsim, SnpSimOptions};
+use mtfl_dpc::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+use mtfl_dpc::data::textsim::{nonzero_features, textsim, TextSimOptions};
+use mtfl_dpc::ops;
+use mtfl_dpc::runtime::buckets;
+
+#[test]
+fn all_generators_validate() {
+    synthetic1(&SynthOptions { t: 3, n: 10, d: 100, ..Default::default() }).0.validate().unwrap();
+    synthetic2(&SynthOptions { t: 3, n: 10, d: 100, ..Default::default() }).0.validate().unwrap();
+    textsim(&TextSimOptions { categories: 3, n_pos: 6, d: 400, ..Default::default() })
+        .validate()
+        .unwrap();
+    imagesim(&ImageSimOptions { classes: 3, n_pos: 6, blocks: vec![32, 32], rank: 3, seed: 0 })
+        .validate()
+        .unwrap();
+    snpsim(&SnpSimOptions { tasks: 3, n: 10, d: 300, causal: 6, ..Default::default() })
+        .0
+        .validate()
+        .unwrap();
+}
+
+#[test]
+fn ground_truth_support_is_recoverable_at_moderate_lambda() {
+    // features with strong true signal must survive screening at mid-λ:
+    // the screened-path solution's active set intersects the true support
+    let (ds, gt) = synthetic1(&SynthOptions {
+        t: 4,
+        n: 30,
+        d: 60,
+        support_frac: 0.1,
+        noise: 0.01,
+        seed: 9,
+        ..Default::default()
+    });
+    let (lmax, _, _) = ops::lambda_max(&ds);
+    let sol = mtfl_dpc::solver::fista(&ds, 0.05 * lmax, None, &mtfl_dpc::solver::SolveOptions::default());
+    let active = sol.active_set(ds.t(), 1e-6);
+    let hits = gt.active.iter().filter(|l| active.contains(l)).count();
+    assert!(
+        hits * 2 >= gt.active.len(),
+        "recovered only {hits}/{} true features",
+        gt.active.len()
+    );
+}
+
+#[test]
+fn snpsim_extreme_aspect_ratio() {
+    let (ds, _) = snpsim(&SnpSimOptions { tasks: 2, n: 10, d: 5000, causal: 10, ..Default::default() });
+    assert_eq!(ds.d, 5000);
+    assert_eq!(ds.total_n(), 20); // d/N = 250: the DPC sweet spot
+    // lambda_max must still be computable and positive
+    let (lmax, _, _) = ops::lambda_max(&ds);
+    assert!(lmax > 0.0 && lmax.is_finite());
+}
+
+#[test]
+fn textsim_pruning_then_restrict_is_consistent() {
+    let ds = textsim(&TextSimOptions { categories: 3, n_pos: 8, d: 3000, doc_len: 60, ..Default::default() });
+    let kept = nonzero_features(&ds);
+    let pruned = ds.restrict(&kept);
+    pruned.validate().unwrap();
+    // no zero feature remains
+    let b2 = pruned.col_sqnorms();
+    let t = pruned.t();
+    for l in 0..pruned.d {
+        let total: f64 = (0..t).map(|ti| b2[l * t + ti]).sum();
+        assert!(total > 0.0, "zero feature {l} survived pruning");
+    }
+}
+
+#[test]
+fn mtd_io_round_trip_every_generator() {
+    let dir = std::env::temp_dir();
+    let sets = vec![
+        synthetic2(&SynthOptions { t: 2, n: 8, d: 40, ..Default::default() }).0,
+        textsim(&TextSimOptions { categories: 2, n_pos: 5, d: 200, ..Default::default() }),
+        snpsim(&SnpSimOptions { tasks: 2, n: 8, d: 100, causal: 5, ..Default::default() }).0,
+    ];
+    for (i, ds) in sets.into_iter().enumerate() {
+        let p = dir.join(format!("mtfl_io_{}_{i}.mtd", std::process::id()));
+        mtfl_dpc::data::io::save(&ds, &p).unwrap();
+        let back = mtfl_dpc::data::io::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back.d, ds.d);
+        for (a, b) in back.tasks.iter().zip(&ds.tasks) {
+            assert_eq!(a.x, b.x);
+        }
+    }
+}
+
+#[test]
+fn packing_is_consistent_with_restrict() {
+    // pack_tnd(keep) must equal restrict(keep).to_tnd() zero-padded
+    let (ds, _) = synthetic1(&SynthOptions { t: 3, n: 6, d: 20, seed: 3, ..Default::default() });
+    let keep = vec![2usize, 7, 11, 19];
+    let db = 6;
+    let packed = buckets::pack_tnd(&ds.tasks, &keep, db);
+    let restricted = ds.restrict(&keep);
+    let tnd = restricted.to_tnd().unwrap();
+    let n = 6;
+    for t in 0..3 {
+        for ni in 0..n {
+            for j in 0..keep.len() {
+                assert_eq!(packed[(t * n + ni) * db + j], tnd[(t * n + ni) * keep.len() + j]);
+            }
+            for j in keep.len()..db {
+                assert_eq!(packed[(t * n + ni) * db + j], 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_padding_preserves_exact_solution() {
+    // the bucketing correctness claim: solving on a zero-padded dataset
+    // returns the same solution on the real coordinates, zeros on padding
+    let (ds, _) = synthetic1(&SynthOptions { t: 2, n: 10, d: 16, seed: 5, ..Default::default() });
+    let (lmax, _, _) = ops::lambda_max(&ds);
+    let lam = 0.4 * lmax;
+
+    // build a padded dataset: 16 real features + 8 zero columns
+    let padded = {
+        let mut tasks = Vec::new();
+        for task in &ds.tasks {
+            let mut x = task.x.clone();
+            x.extend(std::iter::repeat(0.0f32).take(8 * task.n));
+            tasks.push(mtfl_dpc::data::Task { x, y: task.y.clone(), n: task.n });
+        }
+        mtfl_dpc::data::Dataset { name: "padded".into(), d: 24, tasks }
+    };
+
+    let a = mtfl_dpc::solver::fista(&ds, lam, None, &mtfl_dpc::solver::SolveOptions::tight());
+    let b = mtfl_dpc::solver::fista(&padded, lam, None, &mtfl_dpc::solver::SolveOptions::tight());
+    for l in 0..16 {
+        for t in 0..2 {
+            assert!(
+                (a.w[l * 2 + t] - b.w[l * 2 + t]).abs() < 1e-8,
+                "padding perturbed w[{l},{t}]"
+            );
+        }
+    }
+    for l in 16..24 {
+        for t in 0..2 {
+            assert_eq!(b.w[l * 2 + t], 0.0, "padding row {l} became nonzero");
+        }
+    }
+}

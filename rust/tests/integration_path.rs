@@ -1,0 +1,145 @@
+//! End-to-end exact-engine integration: screened λ-paths must reproduce
+//! unscreened paths exactly (within solver tolerance) across workload
+//! generators, and the screening must be safe at every step.
+
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind, SolverKind};
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::data::imagesim::{imagesim, ImageSimOptions};
+use mtfl_dpc::data::snpsim::{snpsim, SnpSimOptions};
+use mtfl_dpc::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+use mtfl_dpc::data::textsim::{textsim, TextSimOptions};
+use mtfl_dpc::data::Dataset;
+use mtfl_dpc::solver::SolveOptions;
+
+fn opts(k: ScreenerKind, grid: usize) -> PathOptions {
+    PathOptions {
+        ratios: lambda_grid(grid, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-7, ..Default::default() },
+        screener: k,
+        verify_safety: true,
+        ..Default::default()
+    }
+}
+
+fn check_equivalence(ds: &Dataset, grid: usize) {
+    let screened = run_path(ds, &opts(ScreenerKind::Dpc, grid), &EngineKind::Exact).unwrap();
+    let baseline = run_path(ds, &opts(ScreenerKind::None, grid), &EngineKind::Exact).unwrap();
+    for (a, b) in screened.records.iter().zip(&baseline.records) {
+        assert!(
+            (a.obj - b.obj).abs() <= 1e-5 * b.obj.abs().max(1.0),
+            "{}: obj mismatch at ratio {:.3}: {} vs {}",
+            ds.name,
+            a.ratio,
+            a.obj,
+            b.obj
+        );
+    }
+    let dmax = screened
+        .last_w
+        .iter()
+        .zip(&baseline.last_w)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(dmax < 5e-4, "{}: final W mismatch {dmax}", ds.name);
+    // sanity: screening actually did something on these problems
+    assert!(screened.mean_rejection_ratio() > 0.3, "{}: weak screening", ds.name);
+}
+
+#[test]
+fn synthetic1_path_equivalence() {
+    let (ds, _) = synthetic1(&SynthOptions { t: 4, n: 14, d: 60, seed: 1, ..Default::default() });
+    check_equivalence(&ds, 10);
+}
+
+#[test]
+fn synthetic2_path_equivalence() {
+    let (ds, _) = synthetic2(&SynthOptions { t: 4, n: 14, d: 60, seed: 2, ..Default::default() });
+    check_equivalence(&ds, 10);
+}
+
+#[test]
+fn textsim_path_equivalence() {
+    let ds = textsim(&TextSimOptions { categories: 2, n_pos: 6, d: 80, doc_len: 60, ..Default::default() });
+    check_equivalence(&ds, 6);
+}
+
+#[test]
+fn imagesim_path_equivalence() {
+    let ds = imagesim(&ImageSimOptions {
+        classes: 3,
+        n_pos: 7,
+        blocks: vec![24, 40, 16],
+        rank: 3,
+        seed: 3,
+    });
+    check_equivalence(&ds, 8);
+}
+
+#[test]
+fn snpsim_path_equivalence() {
+    let (ds, _) = snpsim(&SnpSimOptions {
+        tasks: 3,
+        n: 14,
+        d: 150,
+        causal: 8,
+        ld_block: 10,
+        ld_rho: 0.6,
+        noise: 0.2,
+        seed: 4,
+    });
+    check_equivalence(&ds, 8);
+}
+
+#[test]
+fn bcd_engine_full_path() {
+    let (ds, _) = synthetic1(&SynthOptions { t: 3, n: 10, d: 60, seed: 5, ..Default::default() });
+    let mut o = opts(ScreenerKind::Dpc, 8);
+    o.solver = SolverKind::Bcd;
+    let bcd_run = run_path(&ds, &o, &EngineKind::Exact).unwrap();
+    let fista_run = run_path(&ds, &opts(ScreenerKind::Dpc, 8), &EngineKind::Exact).unwrap();
+    for (a, b) in bcd_run.records.iter().zip(&fista_run.records) {
+        assert!((a.obj - b.obj).abs() <= 1e-4 * b.obj.abs().max(1.0));
+    }
+}
+
+#[test]
+fn rejection_grows_with_dimension() {
+    // the paper's headline trend: higher d => higher rejection ratio
+    let mean_rej = |d: usize| {
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 3, n: 12, d, seed: 6, ..Default::default() });
+        run_path(&ds, &opts(ScreenerKind::Dpc, 8), &EngineKind::Exact)
+            .unwrap()
+            .mean_rejection_ratio()
+    };
+    let lo = mean_rej(60);
+    let hi = mean_rej(400);
+    assert!(
+        hi >= lo - 0.02,
+        "rejection should not degrade with dimension: d=60 {lo:.3} vs d=600 {hi:.3}"
+    );
+    assert!(hi > 0.5, "high-dim rejection should be strong, got {hi:.3}");
+}
+
+#[test]
+fn grid_at_exactly_lambda_max_keeps_nothing() {
+    let (ds, _) = synthetic1(&SynthOptions { t: 3, n: 10, d: 40, seed: 7, ..Default::default() });
+    let res = run_path(&ds, &opts(ScreenerKind::Dpc, 6), &EngineKind::Exact).unwrap();
+    let first = &res.records[0];
+    assert!((first.ratio - 1.0).abs() < 1e-12);
+    assert_eq!(first.kept, 0, "Theorem 1: everything screened at lambda_max");
+    assert_eq!(first.inactive, ds.d);
+}
+
+#[test]
+fn screening_time_is_small_fraction() {
+    let (ds, _) =
+        synthetic1(&SynthOptions { t: 4, n: 20, d: 400, seed: 8, ..Default::default() });
+    let res = run_path(&ds, &opts(ScreenerKind::Dpc, 10), &EngineKind::Exact).unwrap();
+    assert!(
+        res.screen_secs < 0.5 * res.total_secs,
+        "screening {}s dominates total {}s",
+        res.screen_secs,
+        res.total_secs
+    );
+}

@@ -1,0 +1,195 @@
+//! AOT runtime integration: artifacts → PJRT → numerics against the exact
+//! engine. Requires `make artifacts` (the `quick` config); tests skip with
+//! a notice when artifacts are absent so `cargo test` works standalone.
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::ops;
+use mtfl_dpc::runtime::AotEngine;
+use mtfl_dpc::solver::SolveOptions;
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var("MTFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// quick config shape: T=4 N=16 D=256
+fn quick_dataset(seed: u64) -> mtfl_dpc::Dataset {
+    synthetic1(&SynthOptions { t: 4, n: 16, d: 256, seed, ..Default::default() }).0
+}
+
+#[test]
+fn lammax_artifact_matches_exact() {
+    let dir = require_artifacts!();
+    let engine = AotEngine::new(&dir).unwrap();
+    let ds = quick_dataset(1);
+    let x = ds.to_tnd().unwrap();
+    let y = ds.y_tn().unwrap();
+    let out = engine.lammax("quick", &x, &y).unwrap();
+    let (lmax, lstar, _) = ops::lambda_max(&ds);
+    assert!(
+        ((out.lam_max as f64) - lmax).abs() < 1e-3 * lmax,
+        "aot {} vs exact {lmax}",
+        out.lam_max
+    );
+    // normal vector matches the exact gradient direction
+    let n_exact = ops::normal_at_lmax(&ds, lstar, lmax);
+    let flat: Vec<f64> = n_exact.iter().flatten().copied().collect();
+    for (i, (&a, &b)) in out.normal.iter().zip(&flat).enumerate() {
+        assert!(
+            (a as f64 - b).abs() < 1e-3 * (b.abs() + 1.0),
+            "normal[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn screen_artifact_matches_exact_scores() {
+    let dir = require_artifacts!();
+    let engine = AotEngine::new(&dir).unwrap();
+    let ds = quick_dataset(2);
+    let x = ds.to_tnd().unwrap();
+    let y = ds.y_tn().unwrap();
+
+    let (dref, lmax) = mtfl_dpc::screening::dpc::DualRef::at_lambda_max(&ds);
+    let lam = 0.5 * lmax;
+    let theta0: Vec<f32> = dref.theta0.iter().flatten().map(|&v| v as f32).collect();
+    let normal: Vec<f32> = dref.normal.iter().flatten().map(|&v| v as f32).collect();
+    let s_aot = engine
+        .screen("quick", &x, &y, &theta0, &normal, lam as f32)
+        .unwrap();
+
+    let (o, delta) = mtfl_dpc::screening::dpc::ball(&ds, &dref, lam);
+    let s_exact = mtfl_dpc::screening::dpc::DpcScreener::new(&ds).scores(&ds, &o, delta);
+    let mut max_rel = 0.0f64;
+    for l in 0..ds.d {
+        let rel = ((s_aot[l] as f64) - s_exact[l]).abs() / s_exact[l].max(1e-3);
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 5e-3, "f32 screen scores deviate {max_rel}");
+}
+
+#[test]
+fn fista_artifact_converges_and_matches_exact() {
+    let dir = require_artifacts!();
+    let engine = AotEngine::new(&dir).unwrap();
+    let ds = quick_dataset(3);
+    let x = ds.to_tnd().unwrap();
+    let y = ds.y_tn().unwrap();
+    let (lmax, _, _) = ops::lambda_max(&ds);
+    let lam = (0.4 * lmax) as f32;
+
+    let w0 = vec![0.0f32; 256 * 4];
+    let (out, chunks) = engine
+        .fista_solve("quick", 256, &x, &y, &w0, lam, 1e-5, 200)
+        .unwrap();
+    assert!(out.gap <= 1e-5 * out.obj.abs().max(1.0), "gap {}", out.gap);
+    assert!(chunks > 0);
+
+    let exact = mtfl_dpc::solver::fista(&ds, lam as f64, None, &SolveOptions::tight());
+    assert!(
+        ((out.obj as f64) - exact.obj).abs() < 1e-3 * exact.obj.max(1.0),
+        "obj {} vs {}",
+        out.obj,
+        exact.obj
+    );
+    // active sets agree
+    let t = 4usize;
+    for l in 0..256 {
+        let aot_n: f32 = (0..t).map(|ti| out.w[l * t + ti].powi(2)).sum::<f32>().sqrt();
+        let ex_n: f64 =
+            (0..t).map(|ti| exact.w[l * t + ti].powi(2)).sum::<f64>().sqrt();
+        if ex_n > 1e-3 {
+            assert!(aot_n > 1e-4, "feature {l} active exactly but ~0 in AOT");
+        }
+        if ex_n < 1e-9 {
+            assert!(aot_n < 1e-2, "feature {l} inactive exactly but {aot_n} in AOT");
+        }
+    }
+}
+
+#[test]
+fn bucketed_solve_matches_full_bucket() {
+    // pack a 100-feature subproblem into bucket 128 vs bucket 256:
+    // identical retained solutions
+    let dir = require_artifacts!();
+    let engine = AotEngine::new(&dir).unwrap();
+    let ds = quick_dataset(4);
+    let y = ds.y_tn().unwrap();
+    let keep: Vec<usize> = (0..100).map(|i| i * 2).collect();
+    let (lmax, _, _) = ops::lambda_max(&ds);
+    let lam = (0.3 * lmax) as f32;
+
+    let mut sols = Vec::new();
+    for db in [128usize, 256] {
+        let x = mtfl_dpc::runtime::buckets::pack_tnd(&ds.tasks, &keep, db);
+        let w0 = vec![0.0f32; db * 4];
+        let (out, _) = engine.fista_solve("quick", db, &x, &y, &w0, lam, 1e-6, 400).unwrap();
+        sols.push(mtfl_dpc::runtime::buckets::unpack_w(&out.w, 4, &keep, db, ds.d));
+    }
+    let dmax = sols[0]
+        .iter()
+        .zip(&sols[1])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(dmax < 1e-3, "bucket choice changed the solution by {dmax}");
+}
+
+#[test]
+fn aot_path_end_to_end_matches_exact_path() {
+    let dir = require_artifacts!();
+    let engine = AotEngine::new(&dir).unwrap();
+    let ds = quick_dataset(5);
+
+    let mk_opts = |margin: f64| PathOptions {
+        ratios: lambda_grid(8, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-6, max_iters: 20_000, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        margin,
+        ..Default::default()
+    };
+    let aot = run_path(&ds, &mk_opts(1e-3), &EngineKind::Aot(&engine)).unwrap();
+    let exact = run_path(&ds, &mk_opts(0.0), &EngineKind::Exact).unwrap();
+    for (a, b) in aot.records.iter().zip(&exact.records) {
+        assert!(
+            (a.obj - b.obj).abs() <= 5e-3 * b.obj.abs().max(1.0),
+            "ratio {}: obj {} vs {}",
+            a.ratio,
+            a.obj,
+            b.obj
+        );
+        // AOT margin keeps a superset of exact's kept features
+        assert!(a.kept >= b.kept.saturating_sub(1), "ratio {}: {} < {}", a.ratio, a.kept, b.kept);
+    }
+    // the engines must agree on screening power (absolute levels are a
+    // property of the problem size, not the engine — this quick-config
+    // problem is tiny, so small-lambda rejection is genuinely modest)
+    let (ra, re) = (aot.mean_rejection_ratio(), exact.mean_rejection_ratio());
+    assert!((ra - re).abs() < 0.05, "engines disagree on rejection: {ra} vs {re}");
+    assert!(ra > 0.3, "screening did nothing: {ra}");
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let dir = require_artifacts!();
+    let engine = AotEngine::new(&dir).unwrap();
+    let bad = vec![0.0f32; 7];
+    assert!(engine.call("lammax_quick", &[&bad, &bad]).is_err());
+    assert!(engine.call("definitely_missing", &[]).is_err());
+}

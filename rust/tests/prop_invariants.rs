@@ -1,0 +1,217 @@
+//! Property-based invariants (proptest-lite harness, see
+//! `mtfl_dpc::testing`): randomized coordinator/screening/solver
+//! invariants that must hold for *any* input.
+
+use mtfl_dpc::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+use mtfl_dpc::ops;
+use mtfl_dpc::screening::dpc::{ball, DpcScreener, DualRef};
+use mtfl_dpc::screening::secular::qp1qc_max;
+use mtfl_dpc::screening::{bounds, safety};
+use mtfl_dpc::solver::{bcd, fista, prox::prox21_inplace, SolveOptions};
+use mtfl_dpc::testing::{check, gen, PropConfig};
+use mtfl_dpc::util::Pcg64;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig { cases, ..Default::default() }
+}
+
+fn random_problem(rng: &mut Pcg64) -> mtfl_dpc::Dataset {
+    let t = gen::usize_in(rng, 1, 4);
+    let n = gen::usize_in(rng, 4, 16);
+    let d = gen::usize_in(rng, 8, 60);
+    let which = gen::usize_in(rng, 1, 2);
+    let opts = SynthOptions {
+        t,
+        n,
+        d,
+        support_frac: gen::f64_in(rng, 0.05, 0.4),
+        noise: gen::f64_in(rng, 0.0, 0.1),
+        seed: rng.next_u64(),
+    };
+    if which == 1 {
+        synthetic1(&opts).0
+    } else {
+        synthetic2(&opts).0
+    }
+}
+
+#[test]
+fn prop_qp1qc_upper_bounds_ball_samples() {
+    check("qp1qc-upper-bound", &cfg(40), |rng, _| {
+        let t = gen::usize_in(rng, 1, 6);
+        let a = gen::vec_normal(rng, t, 2.0);
+        let b2: Vec<f64> = (0..t).map(|_| rng.normal().abs() + 1e-6).collect();
+        let delta = gen::f64_in(rng, 0.0, 3.0);
+        let s = qp1qc_max(&a, &b2, delta).s;
+        // sample points in the parametrized ball and check g <= s
+        for _ in 0..500 {
+            let mut u = gen::vec_normal(rng, t, 1.0);
+            let norm = u.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+            let scale = delta * rng.uniform() / norm;
+            for v in u.iter_mut() {
+                *v *= scale;
+            }
+            let g: f64 = (0..t)
+                .map(|i| {
+                    let b = b2[i].sqrt();
+                    (a[i].abs() + u[i].abs() * b).powi(2)
+                })
+                .sum();
+            if g > s + 1e-8 * s.max(1.0) {
+                return Err(format!("sampled g={g} exceeds certified s={s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cs_bound_dominates_exact() {
+    check("cs-dominates", &cfg(30), |rng, _| {
+        let ds = random_problem(rng);
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let lam = gen::f64_in(rng, 0.1, 0.9) * lmax;
+        let (o, delta) = ball(&ds, &dref, lam);
+        let exact = DpcScreener::new(&ds).scores(&ds, &o, delta);
+        let cs = bounds::cs_scores(&ds, &ds.col_sqnorms(), &o, delta);
+        for l in 0..ds.d {
+            if cs[l] < exact[l] - 1e-9 * exact[l].max(1.0) {
+                return Err(format!("CS {} < exact {} at feature {l}", cs[l], exact[l]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dpc_safety_random_problems() {
+    check("dpc-safety", &cfg(15), |rng, _| {
+        let ds = random_problem(rng);
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let lam = gen::f64_in(rng, 0.15, 0.95) * lmax;
+        let out = DpcScreener::new(&ds).screen(&ds, &dref, lam);
+        let sol = fista(&ds, lam, None, &SolveOptions::tight());
+        let report = safety::verify(&ds, &sol.w, lam, &out.rejected, 1e-7);
+        if !report.is_safe() {
+            return Err(format!("violations {:?} (d={}, lam/lmax={})", report.violations, ds.d, lam / lmax));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ball_contains_dual_optimum() {
+    check("ball-contains-theta", &cfg(10), |rng, _| {
+        let ds = random_problem(rng);
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let r0 = gen::f64_in(rng, 0.4, 0.9);
+        let r1 = gen::f64_in(rng, 0.1, r0);
+        let sol0 = fista(&ds, r0 * lmax, None, &SolveOptions::tight());
+        let dref = DualRef::from_solution(&ds, r0 * lmax, &sol0.w);
+        let (o, delta) = ball(&ds, &dref, r1 * lmax);
+        let sol1 = fista(&ds, r1 * lmax, None, &SolveOptions::tight());
+        let theta = ops::stacked_scale(&ops::residual(&ds, &sol1.w), -1.0 / (r1 * lmax));
+        let diff = ops::stacked_scale_add(&theta, -1.0, &o);
+        let dist = ops::stacked_sqnorm(&diff).sqrt();
+        if dist > delta + 1e-5 {
+            return Err(format!("theta* outside ball: dist={dist} delta={delta}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prox_is_projection_like() {
+    check("prox-firm-nonexpansive", &cfg(50), |rng, _| {
+        let t = gen::usize_in(rng, 1, 5);
+        let d = gen::usize_in(rng, 1, 20);
+        let kappa = gen::f64_in(rng, 0.0, 2.0);
+        let mut a = gen::vec_normal(rng, d * t, 2.0);
+        let mut b = gen::vec_normal(rng, d * t, 2.0);
+        let d0: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).powi(2)).sum();
+        prox21_inplace(&mut a, t, kappa);
+        prox21_inplace(&mut b, t, kappa);
+        let d1: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).powi(2)).sum();
+        if d1 > d0 + 1e-9 {
+            return Err(format!("prox expanded distances: {d1} > {d0}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_restrict_preserves_solutions() {
+    // solving on restrict(keep-all) == solving on the original
+    check("restrict-identity", &cfg(8), |rng, _| {
+        let ds = random_problem(rng);
+        let keep: Vec<usize> = (0..ds.d).collect();
+        let r = ds.restrict(&keep);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let a = fista(&ds, lam, None, &SolveOptions::default());
+        let b = fista(&r, lam, None, &SolveOptions::default());
+        let dmax = a.w.iter().zip(&b.w).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+        if dmax > 1e-7 {
+            return Err(format!("restrict(all) changed the solution by {dmax}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solvers_agree() {
+    check("fista-vs-bcd", &cfg(8), |rng, _| {
+        let ds = random_problem(rng);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = gen::f64_in(rng, 0.25, 0.8) * lmax;
+        let a = fista(&ds, lam, None, &SolveOptions::tight());
+        let b = bcd(&ds, lam, None, &SolveOptions::tight());
+        if (a.obj - b.obj).abs() > 1e-7 * a.obj.abs().max(1.0) {
+            return Err(format!("objective mismatch {} vs {}", a.obj, b.obj));
+        }
+        let dmax = a.w.iter().zip(&b.w).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+        if dmax > 1e-4 {
+            return Err(format!("solution mismatch {dmax}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_duality_gap_nonnegative() {
+    check("weak-duality", &cfg(25), |rng, _| {
+        let ds = random_problem(rng);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = gen::f64_in(rng, 0.05, 1.2) * lmax;
+        // arbitrary W, not just solutions
+        let w = gen::vec_normal(rng, ds.d * ds.t(), 0.3);
+        let (_, gap, _) = ops::duality_gap(&ds, &w, lam);
+        if gap < -1e-8 {
+            return Err(format!("negative duality gap {gap}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theorem5_sign_identities() {
+    check("thm5-signs", &cfg(12), |rng, _| {
+        let ds = random_problem(rng);
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let r0 = gen::f64_in(rng, 0.3, 0.9);
+        let sol = fista(&ds, r0 * lmax, None, &SolveOptions::tight());
+        let dref = DualRef::from_solution(&ds, r0 * lmax, &sol.w);
+        let y = ops::y64(&ds);
+        // part 2: <y, n> >= 0
+        if ops::stacked_dot(&y, &dref.normal) < -1e-6 {
+            return Err("negative <y, n>".into());
+        }
+        // part 3: <r(lam,lam0), n> >= 0 for lam < lam0
+        let lam = gen::f64_in(rng, 0.05, r0) * lmax;
+        let r = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam), -1.0, &dref.theta0);
+        if ops::stacked_dot(&r, &dref.normal) < -1e-6 {
+            return Err("negative <r, n>".into());
+        }
+        Ok(())
+    });
+}
