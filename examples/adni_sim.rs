@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         causal: 40,
         ..Default::default()
     });
-    let xbytes: usize = ds.tasks.iter().map(|t| t.x.len() * 4).sum();
+    let xbytes: usize = ds.mem_bytes();
     println!("X memory: {:.1} MB, d/N = {}", xbytes as f64 / 1e6, d / 25);
 
     let opts = PathOptions {

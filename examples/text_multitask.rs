@@ -17,6 +17,7 @@ fn main() -> anyhow::Result<()> {
         doc_len: 120,
         topic_terms: 40,
         seed: 11,
+        ..Default::default()
     });
     println!(
         "corpus: {} one-vs-rest tasks, {} docs/task, vocabulary {}",

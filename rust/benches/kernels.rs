@@ -4,6 +4,8 @@
 //!   * the correlation sweep `task_corr` (the dominant cost of DPC);
 //!   * the per-feature QP1QC secular solve;
 //!   * full DPC screen at one λ;
+//!   * the DPC score sweep on CSC vs dense storage at 1% / 5% density
+//!     (results recorded in `BENCH_sparse.json` at the repo root);
 //!   * one FISTA iteration (exact) / one FISTA chunk step (AOT);
 //!   * the AOT screen artifact (PJRT end-to-end including marshalling).
 //!
@@ -11,12 +13,65 @@
 
 use mtfl_dpc::bench::Bencher;
 use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::{Dataset, Task};
+use mtfl_dpc::linalg::CscMatrix;
 use mtfl_dpc::ops;
 use mtfl_dpc::runtime::AotEngine;
 use mtfl_dpc::screening::dpc::{ball, DpcScreener, DualRef};
 use mtfl_dpc::screening::secular::qp1qc_max;
 use mtfl_dpc::util::Pcg64;
 use std::path::PathBuf;
+
+/// Random CSC dataset at a target density (rows per column chosen
+/// uniformly, Gaussian values) — the text/genomics shape of DESIGN.md §6.
+fn sparse_dataset(t: usize, n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut root = Pcg64::new(seed);
+    let k = ((density * n as f64).round() as usize).clamp(1, n);
+    let tasks: Vec<Task> = (0..t)
+        .map(|ti| {
+            let mut rng = root.split(ti as u64);
+            let mut cols: Vec<Vec<(u32, f32)>> = Vec::with_capacity(d);
+            for _ in 0..d {
+                let mut rows = rng.choose_distinct(n, k);
+                rows.sort_unstable();
+                cols.push(
+                    rows.into_iter().map(|r| (r as u32, rng.normal() as f32)).collect(),
+                );
+            }
+            let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            Task::csc(CscMatrix::from_cols(n, cols), y)
+        })
+        .collect();
+    Dataset { name: format!("sparse{:.0}pct", density * 100.0), d, tasks }
+}
+
+/// Sparse-vs-dense DPC score sweep; returns one JSON results entry.
+fn bench_density(b: &Bencher, t: usize, n: usize, d: usize, density: f64) -> String {
+    let sp = sparse_dataset(t, n, d, density, 0xbead);
+    let dn = sp.to_dense_backend();
+    let (dref, lmax) = DualRef::at_lambda_max(&sp);
+    let (o, delta) = ball(&sp, &dref, 0.4 * lmax);
+
+    let sc_sparse = DpcScreener::new(&sp);
+    let sc_dense = DpcScreener::new(&dn);
+    let s_stats = b.run(
+        &format!("DPC scores CSC   ({:>4.1}% density)", density * 100.0),
+        || sc_sparse.scores(&sp, &o, delta),
+    );
+    let d_stats = b.run(
+        &format!("DPC scores dense ({:>4.1}% density)", density * 100.0),
+        || sc_dense.scores(&dn, &o, delta),
+    );
+    let speedup = d_stats.median() / s_stats.median();
+    println!("   -> CSC speedup at {:.0}% density: {speedup:.1}x\n", density * 100.0);
+    format!(
+        "    {{\"density\": {density}, \"dense_median_s\": {:.6e}, \
+         \"csc_median_s\": {:.6e}, \"speedup\": {:.2}}}",
+        d_stats.median(),
+        s_stats.median(),
+        speedup
+    )
+}
 
 fn main() -> anyhow::Result<()> {
     let b = Bencher::default();
@@ -59,6 +114,26 @@ fn main() -> anyhow::Result<()> {
 
     // exact lambda_max
     b.run("lambda_max (exact)", || ops::lambda_max(&ds));
+
+    // sparse-vs-dense DPC score sweep (the backend refactor's headline):
+    // same shape, 1% and 5% stored-entry density
+    println!("\n== sparse backend: DPC score sweep (T=10, N=400, d=4000) ==\n");
+    let mut entries = Vec::new();
+    for density in [0.01, 0.05] {
+        entries.push(bench_density(&b, 10, 400, 4000, density));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"dpc_score_sweep_sparse_vs_dense\",\n  \"generated_by\": \
+         \"cargo bench --bench kernels\",\n  \"shape\": {{\"t\": 10, \"n\": 400, \"d\": 4000}},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_sparse.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_sparse.json"));
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {}", out_path.display());
 
     // AOT engine micro-benches if artifacts exist
     let dir = PathBuf::from("artifacts");

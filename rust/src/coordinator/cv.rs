@@ -53,16 +53,12 @@ pub fn kfold_splits(ds: &Dataset, k: usize, seed: u64) -> Vec<(Dataset, Dataset)
 }
 
 fn subset_task(task: &Task, d: usize, idx: &[usize]) -> Task {
-    let n_new = idx.len();
-    let mut x = vec![0.0f32; n_new * d];
-    for l in 0..d {
-        let col = &task.x[l * task.n..(l + 1) * task.n];
-        for (j, &i) in idx.iter().enumerate() {
-            x[l * n_new + j] = col[i];
-        }
+    // backend-preserving row subset: a sparse training fold stays sparse
+    Task {
+        x: task.x.select_rows(idx, task.n, d),
+        y: idx.iter().map(|&i| task.y[i]).collect(),
+        n: idx.len(),
     }
-    let y = idx.iter().map(|&i| task.y[i]).collect();
-    Task { x, y, n: n_new }
 }
 
 /// Mean squared validation error of a (d x T) solution on a dataset.

@@ -5,6 +5,13 @@
 //! recovered from the *solved* primal at λ_k via Eq. (14); features whose
 //! Theorem-7 score stays below 1 are deleted before the solver runs, and
 //! the solver is warm-started from the previous solution.
+//!
+//! The exact path is storage-agnostic: screening, compaction
+//! ([`Dataset::restrict`]), and both solvers address columns through
+//! [`crate::linalg::ColRef`], so a CSC-backed dataset (text/genomics)
+//! stays sparse through every screen→restrict→solve step — compaction is
+//! pointer arithmetic on the stored entries, never a densify (DESIGN.md
+//! §6). The AOT engine densifies at the PJRT ABI boundary only.
 
 use crate::data::Dataset;
 use crate::ops;

@@ -16,16 +16,12 @@ fn half_sample(ds: &Dataset, rng: &mut Pcg64) -> Dataset {
         .iter()
         .map(|task| {
             let keep = rng.choose_distinct(task.n, (task.n / 2).max(1));
-            let n_new = keep.len();
-            let mut x = vec![0.0f32; n_new * ds.d];
-            for l in 0..ds.d {
-                let col = &task.x[l * task.n..(l + 1) * task.n];
-                for (j, &i) in keep.iter().enumerate() {
-                    x[l * n_new + j] = col[i];
-                }
+            // backend-preserving row subset (sparse subsamples stay sparse)
+            Task {
+                x: task.x.select_rows(&keep, task.n, ds.d),
+                y: keep.iter().map(|&i| task.y[i]).collect(),
+                n: keep.len(),
             }
-            let y = keep.iter().map(|&i| task.y[i]).collect();
-            Task { x, y, n: n_new }
         })
         .collect();
     Dataset { name: format!("{}-half", ds.name), d: ds.d, tasks }

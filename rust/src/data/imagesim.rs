@@ -101,7 +101,7 @@ pub fn imagesim(opts: &ImageSimOptions) -> Dataset {
                 x[l * n + ni] = v as f32;
             }
         }
-        tasks.push(Task { x, y, n });
+        tasks.push(Task::dense(x, y, n));
     }
     Dataset { name: "animalsim".into(), d, tasks }
 }
@@ -156,15 +156,15 @@ mod tests {
         let mut o = small_opts();
         o.n_pos = 200; // enough samples for stable correlation
         let ds = imagesim(&o);
-        let col = |l: usize| ds.col(0, l);
+        let col = |l: usize| ds.col(0, l).to_vec();
         // single pairs can be weakly correlated by chance at low rank —
         // compare the *average* |corr| over many pairs instead
         let mut r_in = 0.0;
         let mut r_cross = 0.0;
         let mut pairs = 0;
         for i in 0..24 {
-            r_in += corr_abs(col(i), col(i + 4)); // both in block 0 (dims 0..32)
-            r_cross += corr_abs(col(i), col(96 + (i % 16))); // block 0 vs block 2
+            r_in += corr_abs(&col(i), &col(i + 4)); // both in block 0 (dims 0..32)
+            r_cross += corr_abs(&col(i), &col(96 + (i % 16))); // block 0 vs block 2
             pairs += 1;
         }
         r_in /= pairs as f64;

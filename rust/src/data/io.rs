@@ -1,18 +1,31 @@
 //! `.mtd` — a tiny self-describing binary container for multi-task
-//! datasets (no serde offline). Little-endian layout:
+//! datasets (no serde offline). Little-endian layout, two revisions:
 //!
 //! ```text
-//! magic "MTD1" | u32 name_len | name bytes | u64 d | u64 t
-//! per task: u64 n | n*d f32 x (feature-major) | n f32 y
-//! trailing u64 xxhash-ish checksum of everything before it
+//! v1  magic "MTD1" | u32 name_len | name bytes | u64 d | u64 t
+//!     per task: u64 n | n*d f32 x (feature-major) | n f32 y
+//! v2  magic "MTD2" | u32 name_len | name bytes | u64 d | u64 t
+//!     per task: u64 n | u8 storage (0=dense, 1=csc)
+//!       dense: n*d f32 x (feature-major)
+//!       csc:   u64 nnz | (d+1) u64 col_ptr | nnz u32 indices | nnz f32 values
+//!     then: n f32 y
+//! both: trailing u64 FNV-1a checksum of everything before it
 //! ```
+//!
+//! `save` always writes v2 (it can carry either backend); `load` accepts
+//! both, so pre-refactor datasets remain readable.
 
-use super::{Dataset, Task};
+use super::{Dataset, MatrixStore, Task};
+use crate::linalg::CscMatrix;
 use anyhow::{bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"MTD1";
+const MAGIC_V1: &[u8; 4] = b"MTD1";
+const MAGIC_V2: &[u8; 4] = b"MTD2";
+
+const STORAGE_DENSE: u8 = 0;
+const STORAGE_CSC: u8 = 1;
 
 /// FNV-1a 64 over the byte stream (checksum; not cryptographic).
 #[derive(Clone)]
@@ -57,8 +70,22 @@ fn f32s_as_bytes(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
+fn u32s_as_bytes(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
 fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
     b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn bytes_to_u32s(b: &[u8]) -> Vec<u32> {
+    b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
+    b.chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect()
 }
 
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
@@ -68,7 +95,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = HashingWriter { inner: BufWriter::new(f), hash: Fnv64::new() };
 
-    w.write_all_hashed(MAGIC)?;
+    w.write_all_hashed(MAGIC_V2)?;
     let name = ds.name.as_bytes();
     w.write_all_hashed(&(name.len() as u32).to_le_bytes())?;
     w.write_all_hashed(name)?;
@@ -76,7 +103,23 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     w.write_all_hashed(&(ds.t() as u64).to_le_bytes())?;
     for task in &ds.tasks {
         w.write_all_hashed(&(task.n as u64).to_le_bytes())?;
-        w.write_all_hashed(f32s_as_bytes(&task.x))?;
+        match &task.x {
+            MatrixStore::Dense(x) => {
+                w.write_all_hashed(&[STORAGE_DENSE])?;
+                w.write_all_hashed(f32s_as_bytes(x))?;
+            }
+            MatrixStore::Csc(m) => {
+                w.write_all_hashed(&[STORAGE_CSC])?;
+                w.write_all_hashed(&(m.nnz() as u64).to_le_bytes())?;
+                let mut ptr_bytes = Vec::with_capacity(m.col_ptr.len() * 8);
+                for &p in &m.col_ptr {
+                    ptr_bytes.extend_from_slice(&(p as u64).to_le_bytes());
+                }
+                w.write_all_hashed(&ptr_bytes)?;
+                w.write_all_hashed(u32s_as_bytes(&m.indices))?;
+                w.write_all_hashed(f32s_as_bytes(&m.values))?;
+            }
+        }
         w.write_all_hashed(f32s_as_bytes(&task.y))?;
     }
     let digest = w.hash.digest();
@@ -103,9 +146,13 @@ pub fn load(path: &Path) -> Result<Dataset> {
     };
 
     let magic = read_hashed(&mut r, &mut hash, 4)?;
-    if magic != MAGIC {
+    let v2 = if magic == MAGIC_V2 {
+        true
+    } else if magic == MAGIC_V1 {
+        false
+    } else {
         bail!("not an mtd file: bad magic");
-    }
+    };
     let name_len =
         u32::from_le_bytes(read_hashed(&mut r, &mut hash, 4)?.try_into().unwrap()) as usize;
     if name_len > 4096 {
@@ -123,10 +170,34 @@ pub fn load(path: &Path) -> Result<Dataset> {
     for _ in 0..t {
         let n =
             u64::from_le_bytes(read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap()) as usize;
-        if n == 0 || n.checked_mul(d).is_none() {
+        if n == 0 || n > u32::MAX as usize || n.checked_mul(d).is_none() {
             bail!("corrupt task header: n={n}");
         }
-        let x = bytes_to_f32s(&read_hashed(&mut r, &mut hash, n * d * 4)?);
+        let storage = if v2 { read_hashed(&mut r, &mut hash, 1)?[0] } else { STORAGE_DENSE };
+        let x = match storage {
+            STORAGE_DENSE => {
+                MatrixStore::Dense(bytes_to_f32s(&read_hashed(&mut r, &mut hash, n * d * 4)?))
+            }
+            STORAGE_CSC => {
+                let nnz = u64::from_le_bytes(
+                    read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap(),
+                ) as usize;
+                if nnz > n * d {
+                    bail!("corrupt csc block: nnz={nnz} > n*d={}", n * d);
+                }
+                let col_ptr: Vec<usize> =
+                    bytes_to_u64s(&read_hashed(&mut r, &mut hash, (d + 1) * 8)?)
+                        .into_iter()
+                        .map(|p| p as usize)
+                        .collect();
+                let indices = bytes_to_u32s(&read_hashed(&mut r, &mut hash, nnz * 4)?);
+                let values = bytes_to_f32s(&read_hashed(&mut r, &mut hash, nnz * 4)?);
+                let m = CscMatrix { n, d, col_ptr, indices, values };
+                m.validate().context("corrupt csc block")?;
+                MatrixStore::Csc(m)
+            }
+            other => bail!("unknown storage tag {other}"),
+        };
         let y = bytes_to_f32s(&read_hashed(&mut r, &mut hash, n * 4)?);
         tasks.push(Task { x, y, n });
     }
@@ -147,6 +218,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
 mod tests {
     use super::*;
     use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::data::textsim::{textsim, TextSimOptions};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("mtfl_test_{}_{}", std::process::id(), name))
@@ -166,6 +238,57 @@ mod tests {
             assert_eq!(a.x, b.x);
             assert_eq!(a.y, b.y);
         }
+    }
+
+    #[test]
+    fn sparse_round_trip_preserves_csc_exactly() {
+        let ds = textsim(&TextSimOptions {
+            categories: 2,
+            n_pos: 5,
+            d: 300,
+            doc_len: 40,
+            ..Default::default()
+        });
+        assert!(ds.is_sparse());
+        let p = tmp("sparse_roundtrip.mtd");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert!(back.is_sparse(), "CSC storage must survive the round trip");
+        for (a, b) in back.tasks.iter().zip(&ds.tasks) {
+            assert_eq!(a.x, b.x);
+            assert_eq!(a.y, b.y);
+        }
+    }
+
+    #[test]
+    fn loads_legacy_v1_files() {
+        // hand-write a v1 file: 1 task, n=2, d=2, dense
+        let p = tmp("legacy_v1.mtd");
+        let mut hash = Fnv64::new();
+        let mut bytes: Vec<u8> = Vec::new();
+        let put = |b: &[u8], bytes: &mut Vec<u8>, hash: &mut Fnv64| {
+            bytes.extend_from_slice(b);
+            hash.update(b);
+        };
+        put(b"MTD1", &mut bytes, &mut hash);
+        put(&2u32.to_le_bytes(), &mut bytes, &mut hash); // name len
+        put(b"v1", &mut bytes, &mut hash);
+        put(&2u64.to_le_bytes(), &mut bytes, &mut hash); // d
+        put(&1u64.to_le_bytes(), &mut bytes, &mut hash); // t
+        put(&2u64.to_le_bytes(), &mut bytes, &mut hash); // n
+        for v in [1.0f32, 2.0, 3.0, 4.0, 0.5, -0.5] {
+            // x (4) then y (2)
+            put(&v.to_le_bytes(), &mut bytes, &mut hash);
+        }
+        bytes.extend_from_slice(&hash.digest().to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let ds = load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(ds.name, "v1");
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.col(0, 1).to_vec(), vec![3.0, 4.0]);
+        assert_eq!(ds.tasks[0].y, vec![0.5, -0.5]);
     }
 
     #[test]

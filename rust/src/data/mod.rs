@@ -1,7 +1,7 @@
-//! Multi-task dataset substrate: the in-memory representation, the paper's
-//! five workloads (two synthetic, three simulated "real" sets — see
-//! DESIGN.md §5 for the substitution rationale), and a binary on-disk
-//! format.
+//! Multi-task dataset substrate: the pluggable matrix backend
+//! ([`MatrixStore`], see DESIGN.md §6), the paper's five workloads (two
+//! synthetic, three simulated "real" sets — see DESIGN.md §5 for the
+//! substitution rationale), and a binary on-disk format.
 
 pub mod imagesim;
 pub mod io;
@@ -10,26 +10,137 @@ pub mod synthetic;
 pub mod textsim;
 pub mod transform;
 
-use crate::linalg::ColMajor;
+use crate::linalg::{ColRef, CscMatrix};
 
-/// One task: an `n x d` feature-major matrix and its response vector.
+/// Backend-tagged storage for one task's `n x d` feature-major matrix.
+/// Every consumer reaches columns through [`ColRef`] (via [`Task::col`] /
+/// [`Dataset::col`]); nothing above `linalg` sees the layout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MatrixStore {
+    /// feature-major buffer, length `n * d`; column l = samples of feature l
+    Dense(Vec<f32>),
+    /// CSC per-column storage (text/genomics regime)
+    Csc(CscMatrix),
+}
+
+impl MatrixStore {
+    /// Column `l` as a backend-tagged view. `n` is the task's sample count
+    /// (the dense buffer does not carry its own shape).
+    #[inline]
+    pub fn col(&self, l: usize, n: usize) -> ColRef<'_> {
+        match self {
+            MatrixStore::Dense(x) => ColRef::Dense(&x[l * n..(l + 1) * n]),
+            MatrixStore::Csc(m) => {
+                let (indices, values) = m.col(l);
+                ColRef::Sparse { n: m.n, indices, values }
+            }
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, MatrixStore::Csc(_))
+    }
+
+    /// Stored nonzero count (dense counts exact nonzeros).
+    pub fn nnz(&self, n: usize, d: usize) -> usize {
+        match self {
+            MatrixStore::Dense(x) => {
+                debug_assert_eq!(x.len(), n * d);
+                x.iter().filter(|&&v| v != 0.0).count()
+            }
+            MatrixStore::Csc(m) => m.nnz(),
+        }
+    }
+
+    /// Heap footprint in bytes (the memory win sparse storage buys).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            MatrixStore::Dense(x) => x.len() * 4,
+            MatrixStore::Csc(m) => m.mem_bytes(),
+        }
+    }
+
+    /// Densify (feature-major copy).
+    pub fn to_dense(&self, n: usize, d: usize) -> Vec<f32> {
+        match self {
+            MatrixStore::Dense(x) => {
+                debug_assert_eq!(x.len(), n * d);
+                x.clone()
+            }
+            MatrixStore::Csc(m) => m.to_dense(),
+        }
+    }
+
+    /// Convert to CSC (drops exact zeros; a CSC store is cloned).
+    pub fn to_csc(&self, n: usize, d: usize) -> CscMatrix {
+        match self {
+            MatrixStore::Dense(x) => CscMatrix::from_dense(x, n, d),
+            MatrixStore::Csc(m) => m.clone(),
+        }
+    }
+
+    /// Row subset preserving the backend: new row `j` is old row `idx[j]`
+    /// (distinct, in-range indices — the CV / stability subsamplers).
+    pub fn select_rows(&self, idx: &[usize], n: usize, d: usize) -> MatrixStore {
+        match self {
+            MatrixStore::Dense(x) => {
+                let n_new = idx.len();
+                let mut out = vec![0.0f32; n_new * d];
+                for l in 0..d {
+                    let col = &x[l * n..(l + 1) * n];
+                    for (j, &i) in idx.iter().enumerate() {
+                        out[l * n_new + j] = col[i];
+                    }
+                }
+                MatrixStore::Dense(out)
+            }
+            MatrixStore::Csc(m) => MatrixStore::Csc(m.select_rows(idx)),
+        }
+    }
+
+    /// Scale every entry by `s`, preserving the backend.
+    pub fn scaled(&self, s: f32) -> MatrixStore {
+        match self {
+            MatrixStore::Dense(x) => MatrixStore::Dense(x.iter().map(|&v| v * s).collect()),
+            MatrixStore::Csc(m) => MatrixStore::Csc(m.scaled(s)),
+        }
+    }
+}
+
+/// One task: an `n x d` feature-major matrix (dense or CSC) and its
+/// response vector.
 #[derive(Debug, Clone)]
 pub struct Task {
-    /// feature-major buffer, length `n * d`; column l = samples of feature l
-    pub x: Vec<f32>,
+    pub x: MatrixStore,
     pub y: Vec<f32>,
     pub n: usize,
 }
 
 impl Task {
-    pub fn view(&self, d: usize) -> ColMajor<'_> {
-        ColMajor::new(&self.x, self.n, d)
+    pub fn dense(x: Vec<f32>, y: Vec<f32>, n: usize) -> Task {
+        Task { x: MatrixStore::Dense(x), y, n }
+    }
+
+    pub fn csc(x: CscMatrix, y: Vec<f32>) -> Task {
+        let n = x.n;
+        Task { x: MatrixStore::Csc(x), y, n }
+    }
+
+    /// Column l of this task's matrix.
+    #[inline]
+    pub fn col(&self, l: usize) -> ColRef<'_> {
+        self.x.col(l, self.n)
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.x.is_sparse()
     }
 }
 
 /// A multi-task dataset: `T` tasks sharing the same `d` features, each with
 /// its **own** data matrix (the setting that makes DPC novel — single-matrix
-/// screening rules do not apply).
+/// screening rules do not apply). Tasks may mix backends, though the
+/// generators emit one backend per dataset.
 #[derive(Debug, Clone)]
 pub struct Dataset {
     pub name: String,
@@ -53,21 +164,61 @@ impl Dataset {
         self.tasks.iter().all(|t| t.n == n0).then_some(n0)
     }
 
+    /// True if every task uses CSC storage.
+    pub fn is_sparse(&self) -> bool {
+        !self.tasks.is_empty() && self.tasks.iter().all(|t| t.is_sparse())
+    }
+
+    /// Stored-nonzero fraction across all tasks.
+    pub fn density(&self) -> f64 {
+        let cells: usize = self.tasks.iter().map(|t| t.n * self.d).sum();
+        if cells == 0 {
+            return 0.0;
+        }
+        let nnz: usize = self.tasks.iter().map(|t| t.x.nnz(t.n, self.d)).sum();
+        nnz as f64 / cells as f64
+    }
+
+    /// Heap footprint of all task matrices, in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.tasks.iter().map(|t| t.x.mem_bytes()).sum()
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.tasks.is_empty(), "dataset has no tasks");
         anyhow::ensure!(self.d > 0, "dataset has no features");
         for (i, t) in self.tasks.iter().enumerate() {
             anyhow::ensure!(t.n > 0, "task {i} has no samples");
-            anyhow::ensure!(
-                t.x.len() == t.n * self.d,
-                "task {i}: x buffer {} != n*d {}",
-                t.x.len(),
-                t.n * self.d
-            );
+            match &t.x {
+                MatrixStore::Dense(x) => {
+                    anyhow::ensure!(
+                        x.len() == t.n * self.d,
+                        "task {i}: x buffer {} != n*d {}",
+                        x.len(),
+                        t.n * self.d
+                    );
+                    anyhow::ensure!(
+                        x.iter().all(|v| v.is_finite()),
+                        "task {i}: non-finite entries"
+                    );
+                }
+                MatrixStore::Csc(m) => {
+                    anyhow::ensure!(
+                        m.n == t.n && m.d == self.d,
+                        "task {i}: CSC shape {}x{} != {}x{}",
+                        m.n,
+                        m.d,
+                        t.n,
+                        self.d
+                    );
+                    m.validate()
+                        .map_err(|e| anyhow::anyhow!("task {i}: {e}"))?;
+                }
+            }
             anyhow::ensure!(t.y.len() == t.n, "task {i}: y length mismatch");
             anyhow::ensure!(
-                t.x.iter().all(|v| v.is_finite()) && t.y.iter().all(|v| v.is_finite()),
-                "task {i}: non-finite entries"
+                t.y.iter().all(|v| v.is_finite()),
+                "task {i}: non-finite responses"
             );
         }
         Ok(())
@@ -75,22 +226,28 @@ impl Dataset {
 
     /// Column l of task t.
     #[inline]
-    pub fn col(&self, t: usize, l: usize) -> &[f32] {
-        let task = &self.tasks[t];
-        &task.x[l * task.n..(l + 1) * task.n]
+    pub fn col(&self, t: usize, l: usize) -> ColRef<'_> {
+        self.tasks[t].col(l)
     }
 
     /// Copy the retained features into a compacted dataset (the memory
-    /// saving screening buys). `keep` must be sorted & in-range.
+    /// saving screening buys). `keep` must be sorted & in-range. A sparse
+    /// task stays sparse — compaction is pointer arithmetic, no densify.
     pub fn restrict(&self, keep: &[usize]) -> Dataset {
         let tasks = self
             .tasks
             .iter()
             .map(|task| {
-                let mut x = Vec::with_capacity(task.n * keep.len());
-                for &l in keep {
-                    x.extend_from_slice(&task.x[l * task.n..(l + 1) * task.n]);
-                }
+                let x = match &task.x {
+                    MatrixStore::Dense(x) => {
+                        let mut out = Vec::with_capacity(task.n * keep.len());
+                        for &l in keep {
+                            out.extend_from_slice(&x[l * task.n..(l + 1) * task.n]);
+                        }
+                        MatrixStore::Dense(out)
+                    }
+                    MatrixStore::Csc(m) => MatrixStore::Csc(m.select_cols(keep)),
+                };
                 Task { x, y: task.y.clone(), n: task.n }
             })
             .collect();
@@ -104,11 +261,38 @@ impl Dataset {
         let mut out = vec![0.0f64; self.d * t_count];
         for (ti, task) in self.tasks.iter().enumerate() {
             for l in 0..self.d {
-                let col = &task.x[l * task.n..(l + 1) * task.n];
-                out[l * t_count + ti] = crate::linalg::dot_f32_f64(col, col);
+                out[l * t_count + ti] = task.col(l).sqnorm();
             }
         }
         out
+    }
+
+    /// Convert every task to CSC storage (drops exact zeros).
+    pub fn to_csc(&self) -> Dataset {
+        let tasks = self
+            .tasks
+            .iter()
+            .map(|t| Task {
+                x: MatrixStore::Csc(t.x.to_csc(t.n, self.d)),
+                y: t.y.clone(),
+                n: t.n,
+            })
+            .collect();
+        Dataset { name: self.name.clone(), d: self.d, tasks }
+    }
+
+    /// Convert every task to dense storage.
+    pub fn to_dense_backend(&self) -> Dataset {
+        let tasks = self
+            .tasks
+            .iter()
+            .map(|t| Task {
+                x: MatrixStore::Dense(t.x.to_dense(t.n, self.d)),
+                y: t.y.clone(),
+                n: t.n,
+            })
+            .collect();
+        Dataset { name: self.name.clone(), d: self.d, tasks }
     }
 
     /// Pack into the dense (T, N, D) f32 layout of the AOT ABI
@@ -118,13 +302,13 @@ impl Dataset {
             .uniform_n()
             .ok_or_else(|| anyhow::anyhow!("AOT packing requires uniform task sizes"))?;
         let t_count = self.t();
-        let mut out = vec![0.0f32; t_count * n * self.d];
+        let d = self.d;
+        let mut out = vec![0.0f32; t_count * n * d];
         for (ti, task) in self.tasks.iter().enumerate() {
-            for l in 0..self.d {
-                let col = &task.x[l * task.n..(l + 1) * task.n];
-                for (ni, &v) in col.iter().enumerate() {
-                    out[(ti * n + ni) * self.d + l] = v;
-                }
+            for l in 0..d {
+                task.col(l).for_each_nonzero(|ni, v| {
+                    out[(ti * n + ni) * d + l] = v;
+                });
             }
         }
         Ok(out)
@@ -169,6 +353,7 @@ mod tests {
         assert_eq!(ds.t(), 3);
         assert_eq!(ds.total_n(), 24);
         assert_eq!(ds.uniform_n(), Some(8));
+        assert!(!ds.is_sparse());
     }
 
     #[test]
@@ -179,9 +364,23 @@ mod tests {
         assert_eq!(r.d, 3);
         for t in 0..ds.t() {
             for (new_l, &old_l) in keep.iter().enumerate() {
-                assert_eq!(r.col(t, new_l), ds.col(t, old_l));
+                assert_eq!(r.col(t, new_l).to_vec(), ds.col(t, old_l).to_vec());
             }
             assert_eq!(r.tasks[t].y, ds.tasks[t].y);
+        }
+    }
+
+    #[test]
+    fn restrict_preserves_sparse_backend() {
+        let ds = tiny().to_csc();
+        let keep = vec![0usize, 7, 13, 19];
+        let r = ds.restrict(&keep);
+        assert!(r.is_sparse());
+        r.validate().unwrap();
+        for t in 0..ds.t() {
+            for (new_l, &old_l) in keep.iter().enumerate() {
+                assert_eq!(r.col(t, new_l).to_vec(), ds.col(t, old_l).to_vec());
+            }
         }
     }
 
@@ -192,7 +391,7 @@ mod tests {
         let n = 8;
         for t in 0..3 {
             for l in 0..20 {
-                let col = ds.col(t, l);
+                let col = ds.col(t, l).to_vec();
                 for ni in 0..n {
                     assert_eq!(tnd[(t * n + ni) * 20 + l], col[ni]);
                 }
@@ -200,6 +399,8 @@ mod tests {
         }
         let y = ds.y_tn().unwrap();
         assert_eq!(&y[8..16], ds.tasks[1].y.as_slice());
+        // CSC packing produces the identical buffer
+        assert_eq!(ds.to_csc().to_tnd().unwrap(), tnd);
     }
 
     #[test]
@@ -208,16 +409,50 @@ mod tests {
         let b2 = ds.col_sqnorms();
         for t in 0..ds.t() {
             for l in 0..ds.d {
-                let want: f64 = ds.col(t, l).iter().map(|v| (*v as f64).powi(2)).sum();
+                let want: f64 =
+                    ds.col(t, l).to_vec().iter().map(|v| (*v as f64).powi(2)).sum();
                 assert!((b2[l * ds.t() + t] - want).abs() < 1e-12);
             }
         }
     }
 
     #[test]
+    fn csc_round_trip_preserves_columns() {
+        let ds = tiny();
+        let sp = ds.to_csc();
+        sp.validate().unwrap();
+        assert!(sp.is_sparse());
+        let back = sp.to_dense_backend();
+        for t in 0..ds.t() {
+            for l in 0..ds.d {
+                assert_eq!(back.col(t, l).to_vec(), ds.col(t, l).to_vec());
+            }
+        }
+        // Gaussian entries: no exact zeros, density 1
+        assert!((sp.density() - 1.0).abs() < 1e-12);
+        assert!(ds.mem_bytes() > 0);
+    }
+
+    #[test]
+    fn select_rows_agrees_across_backends() {
+        let ds = tiny();
+        let idx = vec![5usize, 0, 3];
+        let a = ds.tasks[1].x.select_rows(&idx, 8, ds.d);
+        let b = ds.to_csc().tasks[1].x.select_rows(&idx, 8, ds.d);
+        for l in 0..ds.d {
+            assert_eq!(a.col(l, 3).to_vec(), b.col(l, 3).to_vec());
+        }
+    }
+
+    #[test]
     fn validate_rejects_bad_buffer() {
         let mut ds = tiny();
-        ds.tasks[0].x.pop();
+        match &mut ds.tasks[0].x {
+            MatrixStore::Dense(x) => {
+                x.pop();
+            }
+            MatrixStore::Csc(_) => unreachable!("synthetic data is dense"),
+        }
         assert!(ds.validate().is_err());
     }
 }

@@ -7,14 +7,22 @@
 //! magnitude, discrete {0,1,2} minor-allele counts, LD-block correlation,
 //! and a tiny causal set shared across regions. We simulate:
 //!
-//! * MAF per SNP ~ Beta(0.8, 2.3) clamped to [0.01, 0.5] (realistic site
-//!   frequency spectrum);
+//! * MAF per SNP ~ Beta(0.8, 2.3) clamped to [0.01, `maf_max`] (realistic
+//!   site frequency spectrum; `maf_max` is the density knob in sparse mode);
 //! * LD: SNPs come in blocks of `ld_block`; within a block, each SNP copies
 //!   the previous one's genotype with prob `ld_rho` per allele;
 //! * `causal` SNPs with Gaussian effects shared across tasks (plus small
 //!   per-task deviation), y standardized per task.
+//!
+//! Storage (DESIGN.md §6): the default (dense) mode stores mean-centered
+//! genotypes `g − 2·maf`, which are never exactly zero — faithful to the
+//! usual GWAS preprocessing but incompressible. `sparse: true` skips the
+//! centering and emits raw allele counts in CSC: a homozygous-major sample
+//! (g = 0, the overwhelming majority at low MAF) is simply not stored, so
+//! the matrix density is ≈ E[1 − (1−maf)²] and `maf_max` tunes it.
 
 use super::{Dataset, GroundTruth, Task};
+use crate::linalg::CscMatrix;
 use crate::util::Pcg64;
 
 #[derive(Debug, Clone)]
@@ -27,6 +35,10 @@ pub struct SnpSimOptions {
     pub ld_rho: f64,
     pub noise: f64,
     pub seed: u64,
+    /// emit raw (uncentered) allele counts in CSC storage
+    pub sparse: bool,
+    /// MAF clamp ceiling — with `sparse`, the density knob
+    pub maf_max: f64,
 }
 
 impl Default for SnpSimOptions {
@@ -40,11 +52,13 @@ impl Default for SnpSimOptions {
             ld_rho: 0.7,
             noise: 0.3,
             seed: 0,
+            sparse: false,
+            maf_max: 0.5,
         }
     }
 }
 
-fn beta_maf(rng: &mut Pcg64) -> f64 {
+fn beta_maf(rng: &mut Pcg64, maf_max: f64) -> f64 {
     // Beta(a,b) via Johnk-ish two-gamma; gamma by Marsaglia-Tsang for a<1
     fn gamma(rng: &mut Pcg64, a: f64) -> f64 {
         if a < 1.0 {
@@ -67,14 +81,17 @@ fn beta_maf(rng: &mut Pcg64) -> f64 {
     }
     let g1 = gamma(rng, 0.8);
     let g2 = gamma(rng, 2.3);
-    (g1 / (g1 + g2)).clamp(0.01, 0.5)
+    // lower bound yields to maf_max so sub-1% density settings stay valid
+    let lo = 0.01f64.min(maf_max);
+    (g1 / (g1 + g2)).clamp(lo, maf_max)
 }
 
 pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
-    let SnpSimOptions { tasks, n, d, causal, ld_block, ld_rho, noise, seed } = *opts;
+    let SnpSimOptions { tasks, n, d, causal, ld_block, ld_rho, noise, seed, sparse, maf_max } =
+        *opts;
     let mut root = Pcg64::with_stream(seed, 0xad71);
 
-    let mafs: Vec<f64> = (0..d).map(|_| beta_maf(&mut root)).collect();
+    let mafs: Vec<f64> = (0..d).map(|_| beta_maf(&mut root, maf_max)).collect();
     let mut active = root.choose_distinct(d, causal.min(d));
     active.sort_unstable();
     // shared effect + small per-task deviation
@@ -89,7 +106,8 @@ pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
     let mut out_tasks = Vec::with_capacity(tasks);
     for t in 0..tasks {
         let mut rng = root.split(t as u64);
-        let mut x = vec![0.0f32; n * d];
+        let mut x = if sparse { Vec::new() } else { vec![0.0f32; n * d] };
+        let mut cols: Vec<Vec<(u32, f32)>> = if sparse { vec![Vec::new(); d] } else { Vec::new() };
         let mut y64 = vec![0.0f64; n];
         let mut geno_prev = vec![0u8; n];
         for l in 0..d {
@@ -104,12 +122,22 @@ pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
                     geno_prev[ni] // LD copy
                 };
                 geno_prev[ni] = g;
-                // standardize genotype column to mean 0 (population-level)
-                let centered = g as f64 - 2.0 * maf;
-                x[col_start + ni] = centered as f32;
                 let wl = w[l * tasks + t];
-                if wl != 0.0 {
-                    y64[ni] += centered * wl;
+                if sparse {
+                    // raw allele count: zeros (the common case) are not stored
+                    if g != 0 {
+                        cols[l].push((ni as u32, g as f32));
+                    }
+                    if wl != 0.0 {
+                        y64[ni] += g as f64 * wl;
+                    }
+                } else {
+                    // standardize genotype column to mean 0 (population-level)
+                    let centered = g as f64 - 2.0 * maf;
+                    x[col_start + ni] = centered as f32;
+                    if wl != 0.0 {
+                        y64[ni] += centered * wl;
+                    }
                 }
             }
         }
@@ -121,7 +149,11 @@ pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
             .iter()
             .map(|v| (((v - m) / sd) + noise * rng.normal()) as f32)
             .collect();
-        out_tasks.push(Task { x, y, n });
+        out_tasks.push(if sparse {
+            Task::csc(CscMatrix::from_cols(n, cols), y)
+        } else {
+            Task::dense(x, y, n)
+        });
     }
 
     (
@@ -144,6 +176,7 @@ mod tests {
             ld_rho: 0.7,
             noise: 0.1,
             seed: 2,
+            ..Default::default()
         }
     }
 
@@ -163,7 +196,7 @@ mod tests {
         let (ds, _) = snpsim(&small());
         // every column has at most 3 distinct values: {0,1,2} - 2*maf
         for l in (0..ds.d).step_by(37) {
-            let col = ds.col(1, l);
+            let col = ds.col(1, l).to_vec();
             let mut vals: Vec<i64> = col.iter().map(|v| (v * 1e4).round() as i64).collect();
             vals.sort_unstable();
             vals.dedup();
@@ -178,8 +211,8 @@ mod tests {
         o.d = 200;
         let (ds, _) = snpsim(&o);
         // columns 1,2 in one LD block; 9,10 cross a boundary
-        let within = corr_abs(ds.col(0, 1), ds.col(0, 2));
-        let across = corr_abs(ds.col(0, 9), ds.col(0, 10));
+        let within = corr_abs(&ds.col(0, 1).to_vec(), &ds.col(0, 2).to_vec());
+        let across = corr_abs(&ds.col(0, 9).to_vec(), &ds.col(0, 10).to_vec());
         assert!(within > across + 0.1, "within {within} across {across}");
     }
 
@@ -192,6 +225,22 @@ mod tests {
                 t.y.iter().map(|v| (*v as f64 - m).powi(2)).sum::<f64>() / t.n as f64;
             assert!(m.abs() < 0.3, "mean {m}");
             assert!(v > 0.5 && v < 2.5, "var {v}");
+        }
+    }
+
+    #[test]
+    fn sparse_mode_emits_csc_with_tunable_density() {
+        let opts = SnpSimOptions { sparse: true, maf_max: 0.05, ..small() };
+        let (ds, gt) = snpsim(&opts);
+        ds.validate().unwrap();
+        assert!(ds.is_sparse());
+        assert!(!gt.active.is_empty());
+        // density ≈ E[1 − (1−maf)²] ≤ 2·maf_max = 0.1
+        let density = ds.density();
+        assert!(density < 0.15, "maf_max=0.05 should keep density low, got {density}");
+        // columns hold raw allele counts 1 or 2
+        for l in (0..ds.d).step_by(29) {
+            ds.col(0, l).for_each_nonzero(|_, v| assert!(v == 1.0 || v == 2.0));
         }
     }
 

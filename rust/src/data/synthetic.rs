@@ -73,7 +73,7 @@ fn build(opts: &SynthOptions, corr: Option<f64>, name: &str) -> (Dataset, Ground
             }
             y[ni] = (acc + noise * rng.normal()) as f32;
         }
-        tasks.push(Task { x, y, n });
+        tasks.push(Task::dense(x, y, n));
     }
 
     (
@@ -121,8 +121,8 @@ mod tests {
         let opts = SynthOptions { t: 1, n: 4000, d: 30, seed: 5, ..Default::default() };
         let (ds, _) = synthetic2(&opts);
         // empirical corr of adjacent columns ~ 0.5; lag-2 ~ 0.25
-        let c01 = corr(ds.col(0, 10), ds.col(0, 11));
-        let c02 = corr(ds.col(0, 10), ds.col(0, 12));
+        let c01 = corr(&ds.col(0, 10).to_vec(), &ds.col(0, 11).to_vec());
+        let c02 = corr(&ds.col(0, 10).to_vec(), &ds.col(0, 12).to_vec());
         assert!((c01 - 0.5).abs() < 0.06, "lag-1 corr {c01}");
         assert!((c02 - 0.25).abs() < 0.06, "lag-2 corr {c02}");
     }
@@ -131,7 +131,7 @@ mod tests {
     fn synthetic1_uncorrelated() {
         let opts = SynthOptions { t: 1, n: 4000, d: 10, seed: 6, ..Default::default() };
         let (ds, _) = synthetic1(&opts);
-        let c = corr(ds.col(0, 3), ds.col(0, 4));
+        let c = corr(&ds.col(0, 3).to_vec(), &ds.col(0, 4).to_vec());
         assert!(c.abs() < 0.06, "corr {c}");
     }
 
@@ -145,7 +145,7 @@ mod tests {
             for ni in 0..12 {
                 let mut acc = 0.0f64;
                 for l in 0..40 {
-                    acc += ds.col(t, l)[ni] as f64 * gt.w[l * 2 + t];
+                    acc += ds.col(t, l).to_vec()[ni] as f64 * gt.w[l * 2 + t];
                 }
                 assert!((acc - ds.tasks[t].y[ni] as f64).abs() < 1e-4);
             }

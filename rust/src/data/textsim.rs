@@ -11,8 +11,15 @@
 //! * each category owns a small set of "topic" terms boosted for its docs;
 //! * documents draw ~`doc_len` terms; counts are log-scaled (1+log tf);
 //! * task t = category t vs rest, y = ±1, ±`n_pos` docs per side.
+//!
+//! Storage: the matrix is built **directly in CSC** (DESIGN.md §6) — at
+//! default dims ~99% of cells are empty, so densifying first would throw
+//! away exactly the structure DPC exploits. `doc_len / d` is the density
+//! knob; set `dense: true` to force the dense backend (parity tests,
+//! AOT packing experiments).
 
 use super::{Dataset, Task};
+use crate::linalg::CscMatrix;
 use crate::util::Pcg64;
 
 #[derive(Debug, Clone)]
@@ -22,9 +29,13 @@ pub struct TextSimOptions {
     /// positive (== negative) samples per task
     pub n_pos: usize,
     pub d: usize,
+    /// terms drawn per document — with `d`, the density knob
+    /// (density ≈ distinct(doc_len) / d)
     pub doc_len: usize,
     pub topic_terms: usize,
     pub seed: u64,
+    /// force dense storage (default: CSC)
+    pub dense: bool,
 }
 
 impl Default for TextSimOptions {
@@ -36,6 +47,7 @@ impl Default for TextSimOptions {
             doc_len: 120,
             topic_terms: 40,
             seed: 0,
+            dense: false,
         }
     }
 }
@@ -65,7 +77,7 @@ fn draw_doc(
 
 /// Build the one-vs-rest multi-task text dataset.
 pub fn textsim(opts: &TextSimOptions) -> Dataset {
-    let TextSimOptions { categories, n_pos, d, doc_len, topic_terms, seed } = *opts;
+    let TextSimOptions { categories, n_pos, d, doc_len, topic_terms, seed, dense } = *opts;
     let mut root = Pcg64::with_stream(seed, 0x7d72);
 
     // each category's topical terms (disjointish, drawn from mid-frequency ranks)
@@ -77,7 +89,9 @@ pub fn textsim(opts: &TextSimOptions) -> Dataset {
     let mut tasks = Vec::with_capacity(categories);
     for cat in 0..categories {
         let mut rng = root.split(cat as u64);
-        let mut x = vec![0.0f32; n * d];
+        // per-term (document, tf-idf) lists — documents are generated in
+        // ascending order, so each column arrives presorted
+        let mut cols: Vec<Vec<(u32, f32)>> = vec![Vec::new(); d];
         let mut y = vec![0.0f32; n];
         for ni in 0..n {
             let positive = ni < n_pos;
@@ -93,19 +107,24 @@ pub fn textsim(opts: &TextSimOptions) -> Dataset {
                 o
             };
             for (term, tfidf) in draw_doc(&mut rng, d, doc_len, &topics[src], 0.35) {
-                x[term * n + ni] = tfidf;
+                cols[term].push((ni as u32, tfidf));
             }
         }
-        tasks.push(Task { x, y, n });
+        let m = CscMatrix::from_cols(n, cols);
+        tasks.push(if dense {
+            Task::dense(m.to_dense(), y, n)
+        } else {
+            Task::csc(m, y)
+        });
     }
     Dataset { name: "tdt2sim".into(), d, tasks }
 }
 
-/// Indices of features that are all-zero in every task (the real-TDT2
-/// preprocessing removes them; the paper reports 24262 kept of 36771).
+/// Indices of features that are nonzero in at least one task (the real-TDT2
+/// preprocessing removes the rest; the paper reports 24262 kept of 36771).
 pub fn nonzero_features(ds: &Dataset) -> Vec<usize> {
     (0..ds.d)
-        .filter(|&l| ds.tasks.iter().any(|t| t.x[l * t.n..(l + 1) * t.n].iter().any(|&v| v != 0.0)))
+        .filter(|&l| ds.tasks.iter().any(|t| !t.col(l).is_zero()))
         .collect()
 }
 
@@ -119,6 +138,7 @@ mod tests {
         ds.validate().unwrap();
         assert_eq!(ds.t(), 4);
         assert_eq!(ds.uniform_n(), Some(12));
+        assert!(ds.is_sparse(), "textsim must emit CSC by default");
         for t in &ds.tasks {
             assert_eq!(t.y.iter().filter(|&&v| v > 0.0).count(), 6);
         }
@@ -127,10 +147,27 @@ mod tests {
     #[test]
     fn documents_are_sparse() {
         let ds = textsim(&TextSimOptions { categories: 3, n_pos: 10, d: 2000, ..Default::default() });
-        let nnz: usize = ds.tasks.iter().map(|t| t.x.iter().filter(|&&v| v != 0.0).count()).sum();
-        let total: usize = ds.tasks.iter().map(|t| t.x.len()).sum();
-        let density = nnz as f64 / total as f64;
+        let density = ds.density();
         assert!(density < 0.08, "text matrix should be sparse, density={density}");
+        // the CSC representation should be far smaller than the dense one
+        let dense_bytes: usize = ds.tasks.iter().map(|t| t.n * ds.d * 4).sum();
+        assert!(ds.mem_bytes() < dense_bytes / 4, "CSC did not save memory");
+    }
+
+    #[test]
+    fn dense_knob_produces_identical_matrix() {
+        let sparse_opts =
+            TextSimOptions { categories: 2, n_pos: 5, d: 400, seed: 3, ..Default::default() };
+        let dense_opts = TextSimOptions { dense: true, ..sparse_opts.clone() };
+        let a = textsim(&sparse_opts);
+        let b = textsim(&dense_opts);
+        assert!(a.is_sparse() && !b.is_sparse());
+        for t in 0..a.t() {
+            for l in 0..a.d {
+                assert_eq!(a.col(t, l).to_vec(), b.col(t, l).to_vec(), "t={t} l={l}");
+            }
+            assert_eq!(a.tasks[t].y, b.tasks[t].y);
+        }
     }
 
     #[test]
@@ -151,6 +188,8 @@ mod tests {
         let kept = nonzero_features(&ds);
         assert!(kept.len() < ds.d, "tiny corpus must leave unused vocabulary");
         assert!(!kept.is_empty());
+        // pruning a CSC dataset keeps it CSC
+        assert!(ds.restrict(&kept).is_sparse());
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //! equal as functions of W), so safe screening on the transformed problem
 //! is safe screening on the original — verified in the tests below.
 
-use super::{Dataset, Task};
+use super::{Dataset, MatrixStore, Task};
+use crate::linalg::CscMatrix;
 
-/// Weighted-loss reduction: scales each task by 1/√ρ_t.
+/// Weighted-loss reduction: scales each task by 1/√ρ_t. Preserves the
+/// storage backend (scaling touches only stored values).
 pub fn weighted(ds: &Dataset, rho: &[f64]) -> Dataset {
     assert_eq!(rho.len(), ds.t(), "one weight per task");
     assert!(rho.iter().all(|&r| r > 0.0), "weights must be positive");
@@ -24,7 +26,7 @@ pub fn weighted(ds: &Dataset, rho: &[f64]) -> Dataset {
         .map(|(task, &r)| {
             let s = (1.0 / r.sqrt()) as f32;
             Task {
-                x: task.x.iter().map(|&v| v * s).collect(),
+                x: task.x.scaled(s),
                 y: task.y.iter().map(|&v| v * s).collect(),
                 n: task.n,
             }
@@ -35,10 +37,11 @@ pub fn weighted(ds: &Dataset, rho: &[f64]) -> Dataset {
 
 /// Elastic-net reduction: appends √(2ρ)·I rows to every task (n grows by d).
 ///
-/// Note the memory cost (each task gains a d×d identity block); intended
-/// for the moderate-d regime. For d ≫ n the ridge term is usually applied
-/// through the solver instead — this transform exists to prove DPC
-/// compatibility, matching the paper's reduction.
+/// Note the memory cost on the dense backend (each task gains a d×d
+/// identity block); on CSC the identity adds just one stored entry per
+/// column. For d ≫ n the ridge term is usually applied through the solver
+/// instead — this transform exists to prove DPC compatibility, matching
+/// the paper's reduction.
 pub fn elastic_net(ds: &Dataset, rho: f64) -> Dataset {
     assert!(rho > 0.0);
     let s = (2.0 * rho).sqrt() as f32;
@@ -48,14 +51,33 @@ pub fn elastic_net(ds: &Dataset, rho: f64) -> Dataset {
         .iter()
         .map(|task| {
             let n_new = task.n + d;
-            let mut x = vec![0.0f32; n_new * d];
-            for l in 0..d {
-                // original column samples
-                x[l * n_new..l * n_new + task.n]
-                    .copy_from_slice(&task.x[l * task.n..(l + 1) * task.n]);
-                // identity row for this feature
-                x[l * n_new + task.n + l] = s;
-            }
+            let x = match &task.x {
+                MatrixStore::Dense(xd) => {
+                    let mut x = vec![0.0f32; n_new * d];
+                    for l in 0..d {
+                        // original column samples
+                        x[l * n_new..l * n_new + task.n]
+                            .copy_from_slice(&xd[l * task.n..(l + 1) * task.n]);
+                        // identity row for this feature
+                        x[l * n_new + task.n + l] = s;
+                    }
+                    MatrixStore::Dense(x)
+                }
+                MatrixStore::Csc(m) => {
+                    let mut cols: Vec<Vec<(u32, f32)>> = Vec::with_capacity(d);
+                    for l in 0..d {
+                        let (idx, vals) = m.col(l);
+                        let mut col: Vec<(u32, f32)> = idx
+                            .iter()
+                            .zip(vals)
+                            .map(|(&i, &v)| (i, v))
+                            .collect();
+                        col.push(((task.n + l) as u32, s));
+                        cols.push(col);
+                    }
+                    MatrixStore::Csc(CscMatrix::from_cols(n_new, cols))
+                }
+            };
             let mut y = task.y.clone();
             y.extend(std::iter::repeat(0.0f32).take(d));
             Task { x, y, n: n_new }
@@ -123,6 +145,31 @@ mod tests {
             let sol = fista(&tds, lam, None, &SolveOptions::tight());
             let report = safety::verify(&tds, &sol.w, lam, &out.rejected, 1e-7);
             assert!(report.is_safe(), "{}: {:?}", tds.name, report.violations);
+        }
+    }
+
+    #[test]
+    fn transforms_preserve_sparse_backend_and_agree_with_dense() {
+        let ds = base();
+        let sp = ds.to_csc();
+        let rho = vec![0.5, 2.0, 1.3];
+        let wd = weighted(&ds, &rho);
+        let ws = weighted(&sp, &rho);
+        assert!(ws.is_sparse());
+        let ed = elastic_net(&ds, 0.4);
+        let es = elastic_net(&sp, 0.4);
+        assert!(es.is_sparse());
+        for (dense_ds, sparse_ds) in [(&wd, &ws), (&ed, &es)] {
+            sparse_ds.validate().unwrap();
+            for t in 0..dense_ds.t() {
+                for l in 0..dense_ds.d {
+                    assert_eq!(
+                        dense_ds.col(t, l).to_vec(),
+                        sparse_ds.col(t, l).to_vec(),
+                        "t={t} l={l}"
+                    );
+                }
+            }
         }
     }
 

@@ -133,6 +133,7 @@ pub fn build_tdt2(scale: Scale, seed: u64) -> Dataset {
             doc_len: 200,
             topic_terms: 60,
             seed,
+            ..Default::default()
         },
     };
     textsim(&opts)

@@ -8,16 +8,18 @@
 //! min_W  Σ_t ½‖y_t − X_t w_t‖² + λ‖W‖₂,₁
 //! ```
 //!
-//! plus everything needed to run it as a system: dataset substrates, exact
+//! plus everything needed to run it as a system: dataset substrates with
+//! pluggable dense / CSC-sparse matrix backends (see DESIGN.md §6), exact
 //! f64 solvers (FISTA / BCD), the DPC rule (Theorems 1, 5, 7, 8), a λ-path
 //! coordinator with sequential screening (Corollary 9), and an AOT engine
 //! that executes JAX/Pallas-lowered HLO artifacts through PJRT.
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md §3):
 //! * L3 (this crate): coordination, data, exact math, metrics, benches.
 //! * L2/L1 (python/compile, build-time only): JAX graphs + Pallas kernels,
 //!   lowered once to `artifacts/*.hlo.txt`.
-//! * runtime: [`runtime`] loads those artifacts via the `xla` crate.
+//! * runtime: [`runtime`] loads those artifacts via the `xla` crate
+//!   (gated behind the `aot` cargo feature; unavailable offline).
 
 pub mod bench;
 pub mod cli;

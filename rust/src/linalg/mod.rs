@@ -1,19 +1,142 @@
-//! Dense linear-algebra substrate (no BLAS/ndarray offline).
+//! Linear-algebra substrate (no BLAS/ndarray offline) with two storage
+//! backends behind one column view (see DESIGN.md §6):
 //!
-//! Data matrices are stored **feature-major** (column-major, each feature's
-//! sample vector contiguous): the screening sweep `<x_l, v>` and the
-//! active-set forward product `Σ_l w_l x_l` are both unit-stride scans,
-//! which is exactly the access pattern DPC spends its time in.
+//! * [`dense`] — feature-major f32 buffers (column-major, each feature's
+//!   sample vector contiguous): the screening sweep `<x_l, v>` and the
+//!   active-set forward product `Σ_l w_l x_l` are unit-stride scans.
+//! * [`sparse`] — CSC per-column storage for the text/genomics regime
+//!   (TDT2 is ~99% sparse); the same sweeps touch only stored entries.
+//!
+//! [`ColRef`] is the seam: every consumer above this module (ops,
+//! screening, solvers, coordinator) addresses columns through it and never
+//! sees the storage layout, so new backends (mmap'd shards, quantized
+//! columns) slot in here without touching the math.
 //!
 //! Precision policy: matrices are f32 (memory: the ADNI-scale X is 2 GB at
 //! paper dims), all accumulations are f64 — screening thresholds compare
-//! against 1.0 at ~1e-12, which f32 accumulation cannot certify.
+//! against 1.0 at ~1e-12, which f32 accumulation cannot certify. The
+//! sparse kernels replicate the dense kernels' association order so a
+//! fully-stored CSC column is bit-identical to its dense twin.
 
 pub mod dense;
+pub mod sparse;
 
 pub use dense::{
     axpy_f64, dot_f32_f64, dot_f64, nrm2_f64, scale_add, ColMajor,
 };
+pub use sparse::{sp_axpy_f64, sp_dot_f32_f64, sp_dot_mixed, CscMatrix};
+
+/// A borrowed view of one feature column — the only column-access path in
+/// the crate. Dispatches each hot kernel to the backend's implementation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ColRef<'a> {
+    /// contiguous dense samples (length n)
+    Dense(&'a [f32]),
+    /// CSC column: `values[k]` lives at sample `indices[k]`; `n` is the
+    /// logical column length
+    Sparse { n: usize, indices: &'a [u32], values: &'a [f32] },
+}
+
+impl<'a> ColRef<'a> {
+    /// Logical column length (sample count), zeros included.
+    #[inline]
+    pub fn n(&self) -> usize {
+        match self {
+            ColRef::Dense(c) => c.len(),
+            ColRef::Sparse { n, .. } => *n,
+        }
+    }
+
+    /// Stored nonzero count (dense backend counts exact nonzeros).
+    pub fn nnz(&self) -> usize {
+        match self {
+            ColRef::Dense(c) => c.iter().filter(|&&v| v != 0.0).count(),
+            ColRef::Sparse { values, .. } => values.len(),
+        }
+    }
+
+    /// True if every entry of the column is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        match self {
+            ColRef::Dense(c) => c.iter().all(|&v| v == 0.0),
+            ColRef::Sparse { values, .. } => values.iter().all(|&v| v == 0.0),
+        }
+    }
+
+    /// `<col, v>` against a dense f64 vector (f64 accumulation).
+    #[inline]
+    pub fn dot_mixed(&self, v: &[f64]) -> f64 {
+        debug_assert_eq!(self.n(), v.len());
+        match self {
+            ColRef::Dense(c) => dense::dot_mixed(c, v),
+            ColRef::Sparse { indices, values, .. } => sparse::sp_dot_mixed(indices, values, v),
+        }
+    }
+
+    /// `<col, v>` against a dense f32 vector (f64 accumulation).
+    #[inline]
+    pub fn dot_f32(&self, v: &[f32]) -> f64 {
+        debug_assert_eq!(self.n(), v.len());
+        match self {
+            ColRef::Dense(c) => dense::dot_f32_f64(c, v),
+            ColRef::Sparse { indices, values, .. } => sparse::sp_dot_f32_f64(indices, values, v),
+        }
+    }
+
+    /// `‖col‖²` with f64 accumulation (the b² moments of Theorem 7).
+    #[inline]
+    pub fn sqnorm(&self) -> f64 {
+        match self {
+            ColRef::Dense(c) => dense::dot_f32_f64(c, c),
+            ColRef::Sparse { values, .. } => dense::dot_f32_f64(values, values),
+        }
+    }
+
+    /// `y += alpha * col` into an f64 accumulator.
+    #[inline]
+    pub fn axpy_into(&self, alpha: f64, y: &mut [f64]) {
+        debug_assert_eq!(self.n(), y.len());
+        match self {
+            ColRef::Dense(c) => dense::axpy_f64(alpha, c, y),
+            ColRef::Sparse { indices, values, .. } => {
+                sparse::sp_axpy_f64(alpha, indices, values, y)
+            }
+        }
+    }
+
+    /// Visit every stored nonzero as `(sample_index, value)` (the AOT
+    /// packers scatter into zero-initialized buffers).
+    pub fn for_each_nonzero(&self, mut f: impl FnMut(usize, f32)) {
+        match self {
+            ColRef::Dense(c) => {
+                for (i, &v) in c.iter().enumerate() {
+                    if v != 0.0 {
+                        f(i, v);
+                    }
+                }
+            }
+            ColRef::Sparse { indices, values, .. } => {
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    f(*i as usize, *v);
+                }
+            }
+        }
+    }
+
+    /// Densified copy of the column.
+    pub fn to_vec(&self) -> Vec<f32> {
+        match self {
+            ColRef::Dense(c) => c.to_vec(),
+            ColRef::Sparse { n, indices, values } => {
+                let mut out = vec![0.0f32; *n];
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    out[*i as usize] = *v;
+                }
+                out
+            }
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -26,5 +149,47 @@ mod tests {
         let b = vec![1.0e4_f32; 1000];
         let got = dot_f32_f64(&a, &b);
         assert_eq!(got, 1.0e8 * 1000.0);
+    }
+
+    #[test]
+    fn colref_backends_agree() {
+        let col = [0.0f32, 1.5, 0.0, -2.0, 3.25, 0.0, 0.5];
+        let m = CscMatrix::from_dense(&col, col.len(), 1);
+        let (idx, vals) = m.col(0);
+        let dense_ref = ColRef::Dense(&col);
+        let sparse_ref = ColRef::Sparse { n: col.len(), indices: idx, values: vals };
+
+        assert_eq!(dense_ref.n(), sparse_ref.n());
+        assert_eq!(dense_ref.nnz(), 4);
+        assert_eq!(sparse_ref.nnz(), 4);
+        assert!(!dense_ref.is_zero() && !sparse_ref.is_zero());
+
+        let v64: Vec<f64> = (0..col.len()).map(|i| (i as f64) - 3.0).collect();
+        let v32: Vec<f32> = v64.iter().map(|&v| v as f32).collect();
+        assert!((dense_ref.dot_mixed(&v64) - sparse_ref.dot_mixed(&v64)).abs() < 1e-14);
+        assert!((dense_ref.dot_f32(&v32) - sparse_ref.dot_f32(&v32)).abs() < 1e-14);
+        assert!((dense_ref.sqnorm() - sparse_ref.sqnorm()).abs() < 1e-14);
+
+        let mut ya = vec![0.5f64; col.len()];
+        let mut yb = ya.clone();
+        dense_ref.axpy_into(2.0, &mut ya);
+        sparse_ref.axpy_into(2.0, &mut yb);
+        assert_eq!(ya, yb);
+
+        assert_eq!(sparse_ref.to_vec(), col.to_vec());
+
+        let mut scatter = vec![0.0f32; col.len()];
+        sparse_ref.for_each_nonzero(|i, v| scatter[i] = v);
+        assert_eq!(scatter, col.to_vec());
+    }
+
+    #[test]
+    fn zero_column_is_zero_on_both_backends() {
+        let col = [0.0f32; 5];
+        let m = CscMatrix::from_dense(&col, 5, 1);
+        let (idx, vals) = m.col(0);
+        assert!(ColRef::Dense(&col).is_zero());
+        assert!(ColRef::Sparse { n: 5, indices: idx, values: vals }.is_zero());
+        assert_eq!(ColRef::Sparse { n: 5, indices: idx, values: vals }.nnz(), 0);
     }
 }

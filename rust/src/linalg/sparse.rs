@@ -1,0 +1,409 @@
+//! CSC (compressed sparse column) storage + the sparse twins of the dense
+//! hot kernels (see DESIGN.md §6).
+//!
+//! Layout: per-column contiguous `(indices, values)` runs delimited by
+//! `col_ptr`, exactly mirroring the dense feature-major layout's "column l
+//! is one contiguous scan" property — the screening sweep and the forward
+//! product stay unit-stride over the *stored* entries and skip zeros
+//! entirely.
+//!
+//! Precision/parity policy: every kernel accumulates in f64 with the same
+//! 4-way unrolled association order as its dense counterpart in
+//! [`super::dense`]. A CSC matrix that stores all `n` entries of a column
+//! (indices `0..n`) therefore produces **bit-identical** results to the
+//! dense kernel on that column — the property the dense/CSC parity suite
+//! in `rust/tests/prop_invariants.rs` leans on.
+
+use anyhow::{ensure, Result};
+
+/// A sparse `n x d` matrix in CSC form: column `l`'s nonzeros are
+/// `values[col_ptr[l]..col_ptr[l+1]]` at row positions
+/// `indices[col_ptr[l]..col_ptr[l+1]]` (strictly increasing).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    /// rows (samples)
+    pub n: usize,
+    /// columns (features)
+    pub d: usize,
+    /// length d+1, nondecreasing, `col_ptr[0] == 0`
+    pub col_ptr: Vec<usize>,
+    /// row index per stored entry (u32: n is capped at 2^32 samples)
+    pub indices: Vec<u32>,
+    /// stored entry values
+    pub values: Vec<f32>,
+}
+
+impl CscMatrix {
+    /// Build from a dense feature-major buffer, dropping exact zeros.
+    pub fn from_dense(data: &[f32], n: usize, d: usize) -> CscMatrix {
+        assert_eq!(data.len(), n * d, "dense buffer size mismatch");
+        assert!(n <= u32::MAX as usize, "row count exceeds u32 index space");
+        let mut col_ptr = Vec::with_capacity(d + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0);
+        for l in 0..d {
+            let col = &data[l * n..(l + 1) * n];
+            for (i, &v) in col.iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(i as u32);
+                    values.push(v);
+                }
+            }
+            col_ptr.push(indices.len());
+        }
+        CscMatrix { n, d, col_ptr, indices, values }
+    }
+
+    /// Build from per-column `(row, value)` lists. Rows within a column
+    /// need not be sorted; they are sorted here. Zero values are dropped.
+    pub fn from_cols(n: usize, mut cols: Vec<Vec<(u32, f32)>>) -> CscMatrix {
+        assert!(n <= u32::MAX as usize, "row count exceeds u32 index space");
+        let d = cols.len();
+        let nnz: usize = cols.iter().map(|c| c.len()).sum();
+        let mut col_ptr = Vec::with_capacity(d + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        col_ptr.push(0);
+        for col in cols.iter_mut() {
+            col.sort_unstable_by_key(|e| e.0);
+            for &(i, v) in col.iter() {
+                debug_assert!((i as usize) < n, "row index {i} out of range");
+                if v != 0.0 {
+                    indices.push(i);
+                    values.push(v);
+                }
+            }
+            col_ptr.push(indices.len());
+        }
+        CscMatrix { n, d, col_ptr, indices, values }
+    }
+
+    /// Densify into the feature-major layout.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n * self.d];
+        for l in 0..self.d {
+            let (idx, vals) = self.col(l);
+            for (i, v) in idx.iter().zip(vals) {
+                out[l * self.n + *i as usize] = *v;
+            }
+        }
+        out
+    }
+
+    /// Column `l` as `(row indices, values)`.
+    #[inline]
+    pub fn col(&self, l: usize) -> (&[u32], &[f32]) {
+        debug_assert!(l < self.d);
+        let (lo, hi) = (self.col_ptr[l], self.col_ptr[l + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored-entry fraction (1.0 for a full matrix; 0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        let cells = self.n * self.d;
+        if cells == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// Heap footprint of the three buffers, in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.col_ptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * 4
+            + self.values.len() * 4
+    }
+
+    /// Copy the kept columns into a compacted matrix (screening's memory
+    /// win on the sparse backend: pure pointer arithmetic, no densify).
+    pub fn select_cols(&self, keep: &[usize]) -> CscMatrix {
+        let nnz: usize = keep.iter().map(|&l| self.col_ptr[l + 1] - self.col_ptr[l]).sum();
+        let mut col_ptr = Vec::with_capacity(keep.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        col_ptr.push(0);
+        for &l in keep {
+            let (idx, vals) = self.col(l);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(vals);
+            col_ptr.push(indices.len());
+        }
+        CscMatrix { n: self.n, d: keep.len(), col_ptr, indices, values }
+    }
+
+    /// Row subset: new row `j` is old row `idx[j]` (indices must be
+    /// distinct and in range; the CV / stability-selection subsamplers).
+    pub fn select_rows(&self, idx: &[usize]) -> CscMatrix {
+        let mut map = vec![u32::MAX; self.n];
+        for (j, &i) in idx.iter().enumerate() {
+            debug_assert!(map[i] == u32::MAX, "duplicate row {i} in subset");
+            map[i] = j as u32;
+        }
+        let mut col_ptr = Vec::with_capacity(self.d + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut buf: Vec<(u32, f32)> = Vec::new();
+        col_ptr.push(0);
+        for l in 0..self.d {
+            buf.clear();
+            let (ix, vals) = self.col(l);
+            for (i, v) in ix.iter().zip(vals) {
+                let m = map[*i as usize];
+                if m != u32::MAX {
+                    buf.push((m, *v));
+                }
+            }
+            buf.sort_unstable_by_key(|e| e.0);
+            for &(i, v) in &buf {
+                indices.push(i);
+                values.push(v);
+            }
+            col_ptr.push(indices.len());
+        }
+        CscMatrix { n: idx.len(), d: self.d, col_ptr, indices, values }
+    }
+
+    /// Scale every stored value by `s`.
+    pub fn scaled(&self, s: f32) -> CscMatrix {
+        CscMatrix {
+            values: self.values.iter().map(|&v| v * s).collect(),
+            ..self.clone()
+        }
+    }
+
+    /// Structural invariants (the io layer calls this after load).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n <= u32::MAX as usize, "n {} exceeds u32 index space", self.n);
+        ensure!(
+            self.col_ptr.len() == self.d + 1,
+            "col_ptr length {} != d+1 ({})",
+            self.col_ptr.len(),
+            self.d + 1
+        );
+        ensure!(self.col_ptr[0] == 0, "col_ptr[0] != 0");
+        ensure!(
+            *self.col_ptr.last().unwrap() == self.values.len(),
+            "col_ptr tail {} != nnz {}",
+            self.col_ptr.last().unwrap(),
+            self.values.len()
+        );
+        ensure!(
+            self.indices.len() == self.values.len(),
+            "indices/values length mismatch"
+        );
+        // bounds/monotonicity over the whole pointer array first — col()
+        // slices with these values, so they must be proven in-range before
+        // any per-column walk (a corrupt file must Err, not panic)
+        for l in 0..self.d {
+            ensure!(
+                self.col_ptr[l] <= self.col_ptr[l + 1],
+                "col_ptr not monotone at column {l}"
+            );
+            ensure!(
+                self.col_ptr[l + 1] <= self.values.len(),
+                "col_ptr[{}] = {} exceeds nnz {}",
+                l + 1,
+                self.col_ptr[l + 1],
+                self.values.len()
+            );
+        }
+        for l in 0..self.d {
+            let (idx, vals) = self.col(l);
+            for w in idx.windows(2) {
+                ensure!(w[0] < w[1], "column {l}: row indices not strictly increasing");
+            }
+            for &i in idx {
+                ensure!((i as usize) < self.n, "column {l}: row {i} out of range");
+            }
+            for &v in vals {
+                ensure!(v.is_finite(), "column {l}: non-finite value");
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sparse kernels (association order matches linalg::dense exactly)
+// ---------------------------------------------------------------------------
+
+/// Sparse `<col, v>` against a dense f64 vector, f64 accumulation, 4-way
+/// unrolled in the same association order as [`super::dense::dot_mixed`].
+#[inline]
+pub fn sp_dot_mixed(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    let k = values.len();
+    let chunks = k / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let j = c * 4;
+        s0 += values[j] as f64 * v[indices[j] as usize];
+        s1 += values[j + 1] as f64 * v[indices[j + 1] as usize];
+        s2 += values[j + 2] as f64 * v[indices[j + 2] as usize];
+        s3 += values[j + 3] as f64 * v[indices[j + 3] as usize];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..k {
+        s += values[j] as f64 * v[indices[j] as usize];
+    }
+    s
+}
+
+/// Sparse `<col, v>` against a dense f32 vector (f64 accumulation), same
+/// association order as [`super::dense::dot_f32_f64`].
+#[inline]
+pub fn sp_dot_f32_f64(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    let k = values.len();
+    let chunks = k / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for c in 0..chunks {
+        let j = c * 4;
+        s0 += values[j] as f64 * v[indices[j] as usize] as f64;
+        s1 += values[j + 1] as f64 * v[indices[j + 1] as usize] as f64;
+        s2 += values[j + 2] as f64 * v[indices[j + 2] as usize] as f64;
+        s3 += values[j + 3] as f64 * v[indices[j + 3] as usize] as f64;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..k {
+        s += values[j] as f64 * v[indices[j] as usize] as f64;
+    }
+    s
+}
+
+/// Sparse `y += alpha * col` scatter into an f64 accumulator.
+#[inline]
+pub fn sp_axpy_f64(alpha: f64, indices: &[u32], values: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(indices.len(), values.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (i, v) in indices.iter().zip(values) {
+        y[*i as usize] += alpha * *v as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense;
+
+    fn sample() -> CscMatrix {
+        // n=4, d=3; col0 = [1,0,2,0], col1 = [0,0,0,0], col2 = [0,3,0,4]
+        CscMatrix::from_dense(
+            &[1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 3.0, 0.0, 4.0],
+            4,
+            3,
+        )
+    }
+
+    #[test]
+    fn from_dense_round_trip() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.col_ptr, vec![0, 2, 2, 4]);
+        assert_eq!(m.indices, vec![0, 2, 1, 3]);
+        assert_eq!(
+            m.to_dense(),
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 3.0, 0.0, 4.0]
+        );
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn from_cols_sorts_and_drops_zeros() {
+        let m = CscMatrix::from_cols(5, vec![vec![(3, 2.0), (1, 1.0), (4, 0.0)], vec![]]);
+        assert_eq!(m.d, 2);
+        assert_eq!(m.indices, vec![1, 3]);
+        assert_eq!(m.values, vec![1.0, 2.0]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn kernels_match_dense_on_densified_column() {
+        let m = sample();
+        let dense_buf = m.to_dense();
+        let v64: Vec<f64> = vec![0.5, -1.0, 2.0, 3.0];
+        let v32: Vec<f32> = v64.iter().map(|&v| v as f32).collect();
+        for l in 0..3 {
+            let (idx, vals) = m.col(l);
+            let col = &dense_buf[l * 4..(l + 1) * 4];
+            assert_eq!(sp_dot_mixed(idx, vals, &v64), dense::dot_mixed(col, &v64));
+            assert_eq!(sp_dot_f32_f64(idx, vals, &v32), dense::dot_f32_f64(col, &v32));
+            let mut ys = vec![1.0f64; 4];
+            let mut yd = vec![1.0f64; 4];
+            sp_axpy_f64(-1.5, idx, vals, &mut ys);
+            dense::axpy_f64(-1.5, col, &mut yd);
+            assert_eq!(ys, yd);
+        }
+    }
+
+    #[test]
+    fn full_density_is_bit_identical_to_dense() {
+        // all-nonzero columns: the parity guarantee the prop tests rely on
+        let n = 13; // exercises the unroll tail
+        let col: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37 - 2.1).collect();
+        let m = CscMatrix::from_dense(&col, n, 1);
+        assert_eq!(m.nnz(), n);
+        let v: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let (idx, vals) = m.col(0);
+        assert_eq!(sp_dot_mixed(idx, vals, &v).to_bits(), dense::dot_mixed(&col, &v).to_bits());
+        assert_eq!(
+            sp_dot_f32_f64(idx, vals, &col).to_bits(),
+            dense::dot_f32_f64(&col, &col).to_bits()
+        );
+    }
+
+    #[test]
+    fn select_cols_keeps_exact_columns() {
+        let m = sample();
+        let r = m.select_cols(&[2, 0]);
+        assert_eq!(r.d, 2);
+        assert_eq!(r.col(0), m.col(2));
+        assert_eq!(r.col(1), m.col(0));
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn select_rows_remaps_and_sorts() {
+        let m = sample();
+        // new rows: [old2, old0] — col0 picks up both entries, reordered
+        let r = m.select_rows(&[2, 0]);
+        assert_eq!(r.n, 2);
+        assert_eq!(r.to_dense(), vec![2.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn scaled_scales_values_only() {
+        let m = sample().scaled(2.0);
+        assert_eq!(m.values, vec![2.0, 4.0, 6.0, 8.0]);
+        assert_eq!(m.indices, sample().indices);
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let mut m = sample();
+        m.col_ptr[1] = 10;
+        assert!(m.validate().is_err());
+        let mut m2 = sample();
+        m2.indices[0] = 99;
+        assert!(m2.validate().is_err());
+        let mut m3 = sample();
+        m3.indices.swap(0, 1); // breaks strict ordering in column 0
+        assert!(m3.validate().is_err());
+    }
+
+    #[test]
+    fn density_and_mem() {
+        let m = sample();
+        assert!((m.density() - 4.0 / 12.0).abs() < 1e-12);
+        assert!(m.mem_bytes() > 0);
+    }
+}

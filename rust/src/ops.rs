@@ -7,9 +7,11 @@
 //! The two sweeps that dominate runtime — `task_corr` (X_tᵀ v_t for all
 //! tasks/features) and `forward` (X_t w_t) — are parallelized over
 //! contiguous feature chunks / tasks via [`crate::util::parallel_chunks`].
+//! Both address columns through [`crate::linalg::ColRef`], so they are
+//! backend-agnostic: on CSC storage the inner loops touch only stored
+//! nonzeros (DESIGN.md §6).
 
 use crate::data::Dataset;
-use crate::linalg::dense::{dot_f32_f64, dot_mixed};
 use crate::util::{parallel_chunks, scoped_pool};
 
 /// One f64 vector per task (sample-space block vector).
@@ -66,8 +68,7 @@ pub fn task_corr(ds: &Dataset, v: &Stacked) -> Vec<f64> {
         for (ti, task) in ds.tasks.iter().enumerate() {
             let vt = &v[ti];
             for l in start..end {
-                let col = &task.x[l * task.n..(l + 1) * task.n];
-                part[(l - start) * t_count + ti] = dot_mixed(col, vt);
+                part[(l - start) * t_count + ti] = task.col(l).dot_mixed(vt);
             }
         }
         (start, part)
@@ -102,7 +103,7 @@ pub fn forward(ds: &Dataset, w: &[f64]) -> Stacked {
         for l in 0..ds.d {
             let wl = w[l * t_count + ti];
             if wl != 0.0 {
-                crate::linalg::axpy_f64(wl, &task.x[l * task.n..(l + 1) * task.n], &mut z);
+                task.col(l).axpy_into(wl, &mut z);
             }
         }
         z
@@ -177,9 +178,11 @@ pub fn normal_at_lmax(ds: &Dataset, lstar: usize, lmax: f64) -> Stacked {
     ds.tasks
         .iter()
         .map(|task| {
-            let col = &task.x[lstar * task.n..(lstar + 1) * task.n];
-            let c = 2.0 * dot_f32_f64(col, &task.y) / lmax;
-            col.iter().map(|&v| c * v as f64).collect()
+            let col = task.col(lstar);
+            let c = 2.0 * col.dot_f32(&task.y) / lmax;
+            let mut out = vec![0.0f64; task.n];
+            col.axpy_into(c, &mut out);
+            out
         })
         .collect()
 }
@@ -202,6 +205,7 @@ mod tests {
             for l in 0..25 {
                 let want: f64 = ds
                     .col(t, l)
+                    .to_vec()
                     .iter()
                     .zip(&v[t])
                     .map(|(&x, &vv)| x as f64 * vv)
@@ -218,9 +222,11 @@ mod tests {
         w[5 * 3 + 1] = 2.0;
         w[7 * 3 + 0] = -1.5;
         let z = forward(&ds, &w);
+        let c15 = ds.col(1, 5).to_vec();
+        let c07 = ds.col(0, 7).to_vec();
         for ni in 0..10 {
-            assert!((z[1][ni] - 2.0 * ds.col(1, 5)[ni] as f64).abs() < 1e-10);
-            assert!((z[0][ni] + 1.5 * ds.col(0, 7)[ni] as f64).abs() < 1e-10);
+            assert!((z[1][ni] - 2.0 * c15[ni] as f64).abs() < 1e-10);
+            assert!((z[0][ni] + 1.5 * c07[ni] as f64).abs() < 1e-10);
             assert_eq!(z[2][ni], 0.0);
         }
     }

@@ -27,10 +27,10 @@ pub fn pack_tnd(
     for (ti, task) in tasks.iter().enumerate() {
         debug_assert_eq!(task.n, n, "uniform N required for AOT packing");
         for (j, &l) in keep.iter().enumerate() {
-            let col = &task.x[l * n..(l + 1) * n];
-            for (ni, &v) in col.iter().enumerate() {
+            // scatter stored entries into the zero-initialized bucket
+            task.col(l).for_each_nonzero(|ni, v| {
                 out[(ti * n + ni) * db + j] = v;
-            }
+            });
         }
     }
     out
@@ -86,7 +86,7 @@ mod tests {
     #[test]
     fn pack_places_columns_and_zero_pads() {
         // 1 task, n=2, d=3; keep features [2, 0] into bucket 4
-        let task = Task { x: vec![1., 2., 3., 4., 5., 6.], y: vec![0., 0.], n: 2 };
+        let task = Task::dense(vec![1., 2., 3., 4., 5., 6.], vec![0., 0.], 2);
         let packed = pack_tnd(&[task], &[2, 0], 4);
         // layout (t*n + ni)*db + j
         assert_eq!(packed[0], 5.0); // n0, slot0 <- old col2

@@ -5,21 +5,54 @@
 //! `HloModuleProto::from_text_file`, compiled once per process, and
 //! executed with f32 literals. All wrappers validate shapes against the
 //! manifest ABI before touching PJRT.
+//!
+//! The PJRT path needs the external `xla` crate, which is not available in
+//! the offline build environment, so everything touching it is gated
+//! behind the `aot` cargo feature. The default build keeps the full public
+//! API (so the coordinator, CLI, and benches compile unchanged) but
+//! `AotEngine::new` returns an error directing callers to the exact
+//! engine.
 
-use super::manifest::{ArtifactMeta, Manifest};
-use anyhow::{Context, Result};
+use super::manifest::Manifest;
+#[cfg(feature = "aot")]
+use super::manifest::ArtifactMeta;
+use anyhow::Result;
+#[cfg(feature = "aot")]
+use anyhow::Context;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
 pub struct AotEngine {
+    #[cfg(feature = "aot")]
     client: xla::PjRtClient,
     pub manifest: Manifest,
+    #[cfg(feature = "aot")]
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     /// compile wallclock per artifact (perf accounting)
     pub compile_secs: Mutex<HashMap<String, f64>>,
 }
 
+#[derive(Debug, Clone)]
+pub struct LamMaxOut {
+    pub lam_max: f32,
+    /// n(lambda_max), row-major (T, N)
+    pub normal: Vec<f32>,
+    pub g: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FistaChunkOut {
+    pub w: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    /// residual X W − y, row-major (T, N)
+    pub r: Vec<f32>,
+    pub obj: f32,
+    pub gap: f32,
+}
+
+#[cfg(feature = "aot")]
 fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let elems: usize = shape.iter().product();
     anyhow::ensure!(elems == data.len(), "literal shape {shape:?} != data len {}", data.len());
@@ -28,10 +61,12 @@ fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     Ok(lit.reshape(&dims)?)
 }
 
+#[cfg(feature = "aot")]
 fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+#[cfg(feature = "aot")]
 impl AotEngine {
     pub fn new(artifact_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
@@ -134,9 +169,31 @@ impl AotEngine {
         }
         Ok(outs)
     }
+}
 
-    // -- typed wrappers ----------------------------------------------------
+/// Stub build (no `aot` feature): the type exists and the coordinator/CLI
+/// compile, but construction fails with a pointer at the exact engine.
+#[cfg(not(feature = "aot"))]
+impl AotEngine {
+    pub fn new(_artifact_dir: &Path) -> Result<Self> {
+        anyhow::bail!(
+            "built without the `aot` feature: the PJRT engine needs the external \
+             `xla` crate (unavailable offline); use the exact engine instead"
+        )
+    }
 
+    pub fn warmup_config(&self, _cfg: &str) -> Result<()> {
+        anyhow::bail!("AOT engine unavailable: built without the `aot` feature")
+    }
+
+    pub fn call(&self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("AOT engine unavailable: built without the `aot` feature")
+    }
+}
+
+// -- typed wrappers (shared shape validation lives in `call`) --------------
+
+impl AotEngine {
     /// lammax artifact: (X, y) -> (lam_max, n, g).
     pub fn lammax(&self, cfg: &str, x_tnd: &[f32], y_tn: &[f32]) -> Result<LamMaxOut> {
         let outs = self.call(&format!("lammax_{cfg}"), &[x_tnd, y_tn])?;
@@ -229,23 +286,4 @@ impl AotEngine {
         }
         Ok((last.expect("max_chunks >= 1"), chunks))
     }
-}
-
-#[derive(Debug, Clone)]
-pub struct LamMaxOut {
-    pub lam_max: f32,
-    /// n(lambda_max), row-major (T, N)
-    pub normal: Vec<f32>,
-    pub g: Vec<f32>,
-}
-
-#[derive(Debug, Clone)]
-pub struct FistaChunkOut {
-    pub w: Vec<f32>,
-    pub v: Vec<f32>,
-    pub t: f32,
-    /// residual X W − y, row-major (T, N)
-    pub r: Vec<f32>,
-    pub obj: f32,
-    pub gap: f32,
 }

@@ -22,8 +22,7 @@ fn moments(ds: &Dataset, b2: &[f64], o: &Stacked, f: impl Fn(&[f64], &[f64]) -> 
         let mut a = vec![0.0f64; t_count];
         for l in start..end {
             for (ti, task) in ds.tasks.iter().enumerate() {
-                let col = &task.x[l * task.n..(l + 1) * task.n];
-                a[ti] = crate::linalg::dense::dot_mixed(col, &o[ti]);
+                a[ti] = task.col(l).dot_mixed(&o[ti]);
             }
             part[l - start] = f(&a, &b2[l * t_count..(l + 1) * t_count]);
         }

@@ -76,7 +76,11 @@ impl DpcScreener {
     }
 
     /// Scores s_l for all features given a ball (o, Δ). Parallel over
-    /// feature chunks; the a-moments (corr sweep) dominate the cost.
+    /// feature chunks; the a-moments (corr sweep) dominate the cost. The
+    /// sweep goes through [`crate::linalg::ColRef`], so on CSC-backed
+    /// datasets it touches only stored nonzeros — the paper's sparse
+    /// text/genomics regime where screening pays for itself many times
+    /// over.
     pub fn scores(&self, ds: &Dataset, o: &Stacked, delta: f64) -> Vec<f64> {
         let t_count = self.t_count;
         let d = ds.d;
@@ -86,8 +90,7 @@ impl DpcScreener {
             let mut a = vec![0.0f64; t_count];
             for l in start..end {
                 for (ti, task) in ds.tasks.iter().enumerate() {
-                    let col = &task.x[l * task.n..(l + 1) * task.n];
-                    a[ti] = crate::linalg::dense::dot_mixed(col, &o[ti]);
+                    a[ti] = task.col(l).dot_mixed(&o[ti]);
                 }
                 let b2 = &self.b2[l * t_count..(l + 1) * t_count];
                 part[l - start] = qp1qc_max(&a, b2, delta).s;

@@ -15,7 +15,6 @@
 
 use super::{SolveOptions, SolveResult};
 use crate::data::Dataset;
-use crate::linalg::dense::dot_mixed;
 use crate::ops;
 
 /// Solve the row secular equation; returns ν = ‖v‖ (0 if ‖c‖ <= lam).
@@ -104,9 +103,7 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
             let b2 = &b2_all[l * t_count..(l + 1) * t_count];
             // c_t = <x_l, r_t> + b2_t * w_lt   (residual with row l removed)
             for ti in 0..t_count {
-                let task = &ds.tasks[ti];
-                let col = &task.x[l * task.n..(l + 1) * task.n];
-                c[ti] = dot_mixed(col, &r[ti]) + b2[ti] * w[l * t_count + ti];
+                c[ti] = ds.tasks[ti].col(l).dot_mixed(&r[ti]) + b2[ti] * w[l * t_count + ti];
             }
             let nu = row_nu(&c, b2, lam);
             for ti in 0..t_count {
@@ -114,11 +111,7 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
                 let new = if nu == 0.0 { 0.0 } else { c[ti] * nu / (b2[ti] * nu + lam) };
                 let delta = new - old;
                 if delta != 0.0 {
-                    let task = &ds.tasks[ti];
-                    let col = &task.x[l * task.n..(l + 1) * task.n];
-                    for (ri, &xi) in r[ti].iter_mut().zip(col) {
-                        *ri -= delta * xi as f64;
-                    }
+                    ds.tasks[ti].col(l).axpy_into(-delta, &mut r[ti]);
                     w[l * t_count + ti] = new;
                     max_change = max_change.max(delta.abs());
                 }

@@ -11,7 +11,8 @@ use crate::data::Dataset;
 use crate::ops;
 use crate::util::Pcg64;
 
-/// L = max_t σ_max(X_t)² via per-task power iteration (f64 accumulation).
+/// L = max_t σ_max(X_t)² via per-task power iteration (f64 accumulation,
+/// backend-agnostic through [`crate::linalg::ColRef`]).
 pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
     let per_task = crate::util::scoped_pool((0..ds.t()).collect::<Vec<_>>(), usize::MAX, |ti| {
         let task = &ds.tasks[ti];
@@ -26,12 +27,12 @@ pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
             for l in 0..ds.d {
                 let vl = v[l];
                 if vl != 0.0 {
-                    crate::linalg::axpy_f64(vl, &task.x[l * n..(l + 1) * n], &mut xv);
+                    task.col(l).axpy_into(vl, &mut xv);
                 }
             }
             // v = X^T xv
             for l in 0..ds.d {
-                v[l] = crate::linalg::dense::dot_mixed(&task.x[l * n..(l + 1) * n], &xv);
+                v[l] = task.col(l).dot_mixed(&xv);
             }
             let norm = crate::linalg::nrm2_f64(&v).max(1e-300);
             sigma2 = norm; // v = X^T X v_prev with ||v_prev|| = 1 => ||v|| -> sigma^2

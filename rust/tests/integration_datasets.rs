@@ -127,9 +127,9 @@ fn zero_padding_preserves_exact_solution() {
     let padded = {
         let mut tasks = Vec::new();
         for task in &ds.tasks {
-            let mut x = task.x.clone();
+            let mut x = task.x.to_dense(task.n, ds.d);
             x.extend(std::iter::repeat(0.0f32).take(8 * task.n));
-            tasks.push(mtfl_dpc::data::Task { x, y: task.y.clone(), n: task.n });
+            tasks.push(mtfl_dpc::data::Task::dense(x, task.y.clone(), task.n));
         }
         mtfl_dpc::data::Dataset { name: "padded".into(), d: 24, tasks }
     };

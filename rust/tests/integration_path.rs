@@ -86,6 +86,7 @@ fn snpsim_path_equivalence() {
         ld_rho: 0.6,
         noise: 0.2,
         seed: 4,
+        ..Default::default()
     });
     check_equivalence(&ds, 8);
 }

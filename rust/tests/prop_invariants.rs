@@ -193,6 +193,156 @@ fn prop_duality_gap_nonnegative() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// dense / CSC backend parity (DESIGN.md §6): a CSC-converted dataset must be
+// indistinguishable from its dense twin through every consumer — the sparse
+// kernels replicate the dense accumulation order, so on fully-stored columns
+// the results are bit-identical and 1e-12 is a loose bound.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dense_csc_parity_moments_and_scores() {
+    check("dense-csc-parity", &cfg(12), |rng, _| {
+        let ds = random_problem(rng);
+        let sp = ds.to_csc();
+        sp.validate().map_err(|e| format!("csc validate: {e}"))?;
+
+        let b2_d = ds.col_sqnorms();
+        let b2_s = sp.col_sqnorms();
+        for l in 0..b2_d.len() {
+            if (b2_d[l] - b2_s[l]).abs() > 1e-12 * b2_d[l].max(1.0) {
+                return Err(format!("col_sqnorms diverge at {l}: {} vs {}", b2_d[l], b2_s[l]));
+            }
+        }
+
+        let (lmax_d, lstar_d, g_d) = ops::lambda_max(&ds);
+        let (lmax_s, lstar_s, g_s) = ops::lambda_max(&sp);
+        if (lmax_d - lmax_s).abs() > 1e-12 * lmax_d.max(1.0) || lstar_d != lstar_s {
+            return Err(format!("lambda_max diverges: {lmax_d}/{lstar_d} vs {lmax_s}/{lstar_s}"));
+        }
+        for l in 0..g_d.len() {
+            if (g_d[l] - g_s[l]).abs() > 1e-12 * g_d[l].abs().max(1.0) {
+                return Err(format!("g scores diverge at {l}"));
+            }
+        }
+
+        let (dref_d, _) = DualRef::at_lambda_max(&ds);
+        let (dref_s, _) = DualRef::at_lambda_max(&sp);
+        let lam = gen::f64_in(rng, 0.2, 0.9) * lmax_d;
+        let (o_d, delta_d) = ball(&ds, &dref_d, lam);
+        let (o_s, delta_s) = ball(&sp, &dref_s, lam);
+        if (delta_d - delta_s).abs() > 1e-12 * delta_d.max(1.0) {
+            return Err(format!("ball radius diverges: {delta_d} vs {delta_s}"));
+        }
+        let s_d = DpcScreener::new(&ds).scores(&ds, &o_d, delta_d);
+        let s_s = DpcScreener::new(&sp).scores(&sp, &o_s, delta_s);
+        for l in 0..s_d.len() {
+            if (s_d[l] - s_s[l]).abs() > 1e-12 * s_d[l].abs().max(1.0) {
+                return Err(format!("DPC scores diverge at {l}: {} vs {}", s_d[l], s_s[l]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_csc_parity_fista_solutions() {
+    check("dense-csc-fista", &cfg(6), |rng, _| {
+        let ds = random_problem(rng);
+        let sp = ds.to_csc();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = gen::f64_in(rng, 0.25, 0.8) * lmax;
+        let a = fista(&ds, lam, None, &SolveOptions::default());
+        let b = fista(&sp, lam, None, &SolveOptions::default());
+        // identical trajectories: same kernels, same accumulation order
+        let dmax = a.w.iter().zip(&b.w).map(|(x, y)| (x - y).abs()).fold(0.0f64, f64::max);
+        if dmax > 1e-12 {
+            return Err(format!("FISTA solutions diverge across backends by {dmax}"));
+        }
+        if a.iters != b.iters {
+            return Err(format!("iteration counts diverge: {} vs {}", a.iters, b.iters));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_restrict_round_trips_on_both_backends() {
+    check("restrict-backends", &cfg(12), |rng, _| {
+        let ds = random_problem(rng);
+        let sp = ds.to_csc();
+        let k = gen::usize_in(rng, 1, ds.d);
+        let mut keep: Vec<usize> = {
+            let mut r = rng.split(7);
+            r.choose_distinct(ds.d, k)
+        };
+        keep.sort_unstable();
+        let rd = ds.restrict(&keep);
+        let rs = sp.restrict(&keep);
+        if !rs.is_sparse() {
+            return Err("restrict densified a CSC dataset".into());
+        }
+        rs.validate().map_err(|e| format!("restricted csc invalid: {e}"))?;
+        for t in 0..ds.t() {
+            for (j, &l) in keep.iter().enumerate() {
+                let want = ds.col(t, l).to_vec();
+                if rd.col(t, j).to_vec() != want {
+                    return Err(format!("dense restrict broke column {l}"));
+                }
+                if rs.col(t, j).to_vec() != want {
+                    return Err(format!("csc restrict broke column {l}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_textsim_parity_with_true_zeros() {
+    // textsim has genuine zero cells: the CSC store drops them, so the
+    // accumulation orders differ — scores must still agree to 1e-12.
+    use mtfl_dpc::data::textsim::{textsim, TextSimOptions};
+    check("textsim-parity", &cfg(6), |rng, _| {
+        let opts = TextSimOptions {
+            categories: gen::usize_in(rng, 2, 3),
+            n_pos: gen::usize_in(rng, 4, 8),
+            d: gen::usize_in(rng, 60, 150),
+            doc_len: 30,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let sp = textsim(&opts);
+        if !sp.is_sparse() {
+            return Err("textsim did not emit CSC".into());
+        }
+        let ds = sp.to_dense_backend();
+        let b2_d = ds.col_sqnorms();
+        let b2_s = sp.col_sqnorms();
+        for l in 0..b2_d.len() {
+            if (b2_d[l] - b2_s[l]).abs() > 1e-12 * b2_d[l].max(1.0) {
+                return Err(format!("textsim col_sqnorms diverge at {l}"));
+            }
+        }
+        let (lmax_d, _, _) = ops::lambda_max(&ds);
+        let (lmax_s, _, _) = ops::lambda_max(&sp);
+        if (lmax_d - lmax_s).abs() > 1e-12 * lmax_d.max(1.0) {
+            return Err(format!("textsim lambda_max diverges: {lmax_d} vs {lmax_s}"));
+        }
+        let (dref, _) = DualRef::at_lambda_max(&sp);
+        let lam = 0.5 * lmax_s;
+        let (o, delta) = ball(&sp, &dref, lam);
+        let s_s = DpcScreener::new(&sp).scores(&sp, &o, delta);
+        let s_d = DpcScreener::new(&ds).scores(&ds, &o, delta);
+        for l in 0..s_d.len() {
+            if (s_d[l] - s_s[l]).abs() > 1e-12 * s_d[l].abs().max(1.0) {
+                return Err(format!("textsim DPC scores diverge at {l}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_theorem5_sign_identities() {
     check("thm5-signs", &cfg(12), |rng, _| {

@@ -1,0 +1,144 @@
+//! CSC-backend integration: DPC safety on genuinely sparse workloads run
+//! end-to-end (mirrors `dpc_is_safe_from_lmax` and the screened-path
+//! equivalence suite, but on the sparse storage path — DESIGN.md §6).
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use mtfl_dpc::data::snpsim::{snpsim, SnpSimOptions};
+use mtfl_dpc::data::textsim::{textsim, TextSimOptions};
+use mtfl_dpc::screening::dpc::{DpcScreener, DualRef};
+use mtfl_dpc::solver::{fista, SolveOptions};
+
+fn sparse_text() -> mtfl_dpc::Dataset {
+    let ds = textsim(&TextSimOptions {
+        categories: 3,
+        n_pos: 8,
+        d: 400,
+        doc_len: 60,
+        seed: 21,
+        ..Default::default()
+    });
+    assert!(ds.is_sparse(), "textsim must emit CSC");
+    assert!(ds.density() < 0.25, "workload is not sparse: {}", ds.density());
+    ds
+}
+
+#[test]
+fn dpc_is_safe_from_lmax_on_csc() {
+    // rejected row ⇒ solver row-norm < 1e-8, at several one-shot ratios
+    let ds = sparse_text();
+    let (dref, lmax) = DualRef::at_lambda_max(&ds);
+    let screener = DpcScreener::new(&ds);
+    for ratio in [0.8, 0.5, 0.3] {
+        let lam = ratio * lmax;
+        let out = screener.screen(&ds, &dref, lam);
+        let sol = fista(&ds, lam, None, &SolveOptions::tight());
+        let rn = sol.row_norms(ds.t());
+        for (l, (&rej, &norm)) in out.rejected.iter().zip(&rn).enumerate() {
+            if rej {
+                assert!(
+                    norm < 1e-8,
+                    "UNSAFE on CSC: rejected active row {l} (norm {norm}) at ratio {ratio}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_path_on_sparse_textsim_has_zero_unsafe_rejections() {
+    // the satellite regression: a sparse dataset through the sequential
+    // λ-path with the post-hoc verifier armed at every λ — run_path errors
+    // on any unsafe rejection, and we re-assert against tight solves below
+    let ds = sparse_text();
+    let opts = PathOptions {
+        ratios: lambda_grid(10, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-7, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        verify_safety: true,
+        ..Default::default()
+    };
+    let run = run_path(&ds, &opts, &EngineKind::Exact).unwrap();
+    assert!(run.records.iter().skip(1).any(|r| r.rejected > 0), "screening never fired");
+
+    // independent re-check at a few grid points with a tight solver
+    let (_, lmax) = DualRef::at_lambda_max(&ds);
+    let screener = DpcScreener::new(&ds);
+    for r in run.records.iter().step_by(3).skip(1) {
+        let sol0 = fista(&ds, r.lam, None, &SolveOptions::tight());
+        let dref = DualRef::from_solution(&ds, r.lam, &sol0.w);
+        let lam_next = (r.lam * 0.9).min(r.lam);
+        let out = screener.screen(&ds, &dref, lam_next);
+        let sol = fista(&ds, lam_next, None, &SolveOptions::tight());
+        let rn = sol.row_norms(ds.t());
+        for (l, (&rej, &norm)) in out.rejected.iter().zip(&rn).enumerate() {
+            assert!(
+                !rej || norm < 1e-8,
+                "UNSAFE sequential rejection of row {l} (norm {norm}) at lam {lam_next} \
+                 (lmax {lmax})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sparse_and_dense_paths_agree_end_to_end() {
+    let sp = sparse_text();
+    let ds = sp.to_dense_backend();
+    let mk = || PathOptions {
+        ratios: lambda_grid(8, 1.0, 0.1),
+        solve: SolveOptions { tol: 1e-7, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    let a = run_path(&sp, &mk(), &EngineKind::Exact).unwrap();
+    let b = run_path(&ds, &mk(), &EngineKind::Exact).unwrap();
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.kept, rb.kept, "kept-set size diverges at ratio {}", ra.ratio);
+        // textsim has true zero cells, so the two backends accumulate in
+        // different orders: trajectories agree to rounding, not bitwise
+        // (the ≤1e-12 parity claim is carried by prop_invariants on
+        // fully-stored columns)
+        assert!(
+            (ra.obj - rb.obj).abs() <= 1e-7 * rb.obj.abs().max(1.0),
+            "objective diverges at ratio {}: {} vs {}",
+            ra.ratio,
+            ra.obj,
+            rb.obj
+        );
+    }
+    let dmax = a
+        .last_w
+        .iter()
+        .zip(&b.last_w)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(dmax < 1e-6, "final W diverges across backends by {dmax}");
+}
+
+#[test]
+fn sparse_snpsim_screens_safely() {
+    let (ds, _) = snpsim(&SnpSimOptions {
+        tasks: 3,
+        n: 16,
+        d: 250,
+        causal: 8,
+        ld_block: 10,
+        ld_rho: 0.6,
+        noise: 0.2,
+        seed: 5,
+        sparse: true,
+        maf_max: 0.15,
+    });
+    assert!(ds.is_sparse());
+    ds.validate().unwrap();
+    let (dref, lmax) = DualRef::at_lambda_max(&ds);
+    let screener = DpcScreener::new(&ds);
+    let lam = 0.5 * lmax;
+    let out = screener.screen(&ds, &dref, lam);
+    let sol = fista(&ds, lam, None, &SolveOptions::tight());
+    let rn = sol.row_norms(ds.t());
+    for (l, (&rej, &norm)) in out.rejected.iter().zip(&rn).enumerate() {
+        assert!(!rej || norm < 1e-8, "UNSAFE on sparse snpsim: row {l} norm {norm}");
+    }
+}
