@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         match AotEngine::new(&dir) {
             Ok(engine) => {
                 let mut opts = exp_opts(grid, ScreenerKind::Dpc);
-                opts.margin = 1e-3; // f32 engine float-safety margin
+                opts.aot_margin = 1e-3; // f32 engine float-safety margin
                 match run_path(&ds, &opts, &EngineKind::Aot(&engine)) {
                     Ok(aot) => {
                         println!(

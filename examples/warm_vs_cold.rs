@@ -12,7 +12,8 @@ use mtfl_dpc::data::synthetic::{synthetic2, SynthOptions};
 use mtfl_dpc::solver::SolveOptions;
 
 fn main() -> anyhow::Result<()> {
-    let (ds, _) = synthetic2(&SynthOptions { t: 10, n: 40, d: 1500, seed: 23, ..Default::default() });
+    let (ds, _) =
+        synthetic2(&SynthOptions { t: 10, n: 40, d: 1500, seed: 23, ..Default::default() });
     println!("dataset: {} (T={}, N=40, d={})\n", ds.name, ds.t(), ds.d);
 
     let mk = |k| PathOptions {

@@ -6,6 +6,9 @@
 //!   * full DPC screen at one λ;
 //!   * the DPC score sweep on CSC vs dense storage at 1% / 5% density
 //!     (results recorded in `BENCH_sparse.json` at the repo root);
+//!   * static-DPC vs gap-dynamic screening on the synthetic2 path:
+//!     epochs-to-converge and total column-sweep work (recorded in
+//!     `BENCH_gap.json` at the repo root);
 //!   * one FISTA iteration (exact) / one FISTA chunk step (AOT);
 //!   * the AOT screen artifact (PJRT end-to-end including marshalling).
 //!
@@ -134,6 +137,48 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| PathBuf::from("BENCH_sparse.json"));
     std::fs::write(&out_path, &json)?;
     println!("wrote {}", out_path.display());
+
+    // static vs gap-dynamic screening on the synthetic2 path: the dynamic
+    // run pays for its own gap/score sweeps in col_ops, so a win here is a
+    // genuine reduction in column-sweep work, not an accounting artifact
+    println!("\n== gap-dynamic screening: static vs dynamic (synthetic2 path) ==\n");
+    let rows = mtfl_dpc::experiments::gap_dynamic_rows(mtfl_dpc::experiments::Scale::Quick)?;
+    for r in &rows {
+        println!(
+            "   {:<16} epochs {:>8}  col-ops {:>12}  {:>7.2}s  mean rejection {:.3}",
+            r.name, r.epochs, r.col_ops, r.secs, r.mean_rejection
+        );
+    }
+    let pick = |name: &str| rows.iter().find(|r| r.name == name);
+    if let (Some(s), Some(dny)) = (pick("static-dpc"), pick("dynamic-dpc")) {
+        println!(
+            "   -> dynamic-dpc col-op saving: {:.1}%\n",
+            100.0 * (1.0 - dny.col_ops as f64 / s.col_ops.max(1) as f64)
+        );
+    }
+    let gap_entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"name\": \"{}\", \"epochs\": {}, \"col_ops\": {}, \
+                 \"secs\": {:.3}, \"mean_rejection\": {:.4}}}",
+                r.name, r.epochs, r.col_ops, r.secs, r.mean_rejection
+            )
+        })
+        .collect();
+    let gap_json = format!(
+        "{{\n  \"bench\": \"static_vs_dynamic_gap_screening\",\n  \"generated_by\": \
+         \"cargo bench --bench kernels\",\n  \"dataset\": \"synthetic2 (quick scale)\",\n  \
+         \"dynamic_every\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        mtfl_dpc::experiments::DYNAMIC_EVERY,
+        gap_entries.join(",\n")
+    );
+    let gap_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_gap.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_gap.json"));
+    std::fs::write(&gap_path, &gap_json)?;
+    println!("wrote {}", gap_path.display());
 
     // AOT engine micro-benches if artifacts exist
     let dir = PathBuf::from("artifacts");

@@ -72,6 +72,7 @@ mod tests {
                     screen_secs: screen / rr.len() as f64,
                     solve_secs: 0.0,
                     solver_iters: 0,
+                    col_ops: 0,
                     obj: 0.0,
                     gap: 0.0,
                 })

@@ -4,7 +4,14 @@
 //! Sequential DPC (Corollary 9): at step k+1, the dual reference is
 //! recovered from the *solved* primal at λ_k via Eq. (14); features whose
 //! Theorem-7 score stays below 1 are deleted before the solver runs, and
-//! the solver is warm-started from the previous solution.
+//! the solver is warm-started from the previous solution. The reference
+//! carries its duality-gap certificate, so the ball is safe at any solver
+//! tolerance (DESIGN.md §9) — the exact engine has no `margin` knob.
+//!
+//! GAP-safe screening ([`ScreenerKind::GapSafe`]) instead certifies the
+//! ball from the warm-start iterate's own duality gap at the *target* λ;
+//! combined with `SolveOptions::dynamic_every` the solvers keep
+//! re-screening mid-solve as the gap shrinks.
 //!
 //! The exact path is storage-agnostic: screening, compaction
 //! ([`Dataset::restrict`]), and both solvers address columns through
@@ -18,6 +25,7 @@ use crate::ops;
 use crate::runtime::{buckets, AotEngine};
 use crate::screening::bounds::CsScreener;
 use crate::screening::dpc::{DpcScreener, DualRef};
+use crate::screening::gap::GapScreener;
 use crate::screening::safety;
 use crate::solver::{bcd, fista, SolveOptions};
 use crate::util::Stopwatch;
@@ -27,12 +35,15 @@ use anyhow::{Context, Result};
 pub enum ScreenerKind {
     /// no screening: the solver sees all d features at every λ (baseline)
     None,
-    /// sequential DPC (the paper's rule, Corollary 9)
+    /// sequential DPC (the paper's rule, Corollary 9, gap-inflated)
     Dpc,
     /// DPC ball but Cauchy–Schwarz scores (ablation ABL1)
     DpcCs,
     /// DPC screened only from the λ_max reference (ablation ABL2)
     DpcOneShot,
+    /// GAP-safe ball from the warm-start iterate's duality gap at the
+    /// target λ (Ndiaye et al.; exact engine only)
+    GapSafe,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,9 +66,11 @@ pub struct PathOptions {
     pub solve: SolveOptions,
     pub screener: ScreenerKind,
     pub solver: SolverKind,
-    /// keep features scoring within this margin below 1 (float safety for
-    /// the f32 AOT engine; 0.0 = the exact rule)
-    pub margin: f64,
+    /// f32-precision guard for the **AOT engine only**: keep features
+    /// scoring within this margin below 1 to absorb f32 sweep error. The
+    /// exact engine ignores it — its safety under inexact references is
+    /// carried by gap certificates, not a guessed slack (DESIGN.md §9).
+    pub aot_margin: f64,
     /// row norm below which a solved feature counts as inactive (ground
     /// truth for rejection ratios)
     pub active_tol: f64,
@@ -72,7 +85,7 @@ impl Default for PathOptions {
             solve: SolveOptions::default(),
             screener: ScreenerKind::Dpc,
             solver: SolverKind::Fista,
-            margin: 0.0,
+            aot_margin: 0.0,
             active_tol: 1e-8,
             verify_safety: false,
         }
@@ -95,6 +108,9 @@ pub struct LambdaRecord {
     pub screen_secs: f64,
     pub solve_secs: f64,
     pub solver_iters: usize,
+    /// column-sweep operations the solver spent (see
+    /// [`crate::solver::SolveResult::col_ops`])
+    pub col_ops: usize,
     pub obj: f64,
     pub gap: f64,
 }
@@ -116,6 +132,16 @@ impl PathRunResult {
     pub fn mean_rejection_ratio(&self) -> f64 {
         let rs: Vec<f64> = self.records.iter().map(|r| r.rejection_ratio).collect();
         rs.iter().sum::<f64>() / rs.len().max(1) as f64
+    }
+
+    /// Total solver column-sweep work along the path (the BENCH_gap metric).
+    pub fn total_col_ops(&self) -> usize {
+        self.records.iter().map(|r| r.col_ops).sum()
+    }
+
+    /// Total solver epochs along the path.
+    pub fn total_iters(&self) -> usize {
+        self.records.iter().map(|r| r.solver_iters).sum()
     }
 }
 
@@ -149,8 +175,11 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
     let mut total = Stopwatch::new();
     total.start();
 
-    let screener = DpcScreener::with_margin(ds, opts.margin);
+    // each screener caches an O(nnz) b² sweep — build only the one in use
+    let screener = matches!(opts.screener, ScreenerKind::Dpc | ScreenerKind::DpcOneShot)
+        .then(|| DpcScreener::new(ds));
     let cs = matches!(opts.screener, ScreenerKind::DpcCs).then(|| CsScreener::new(ds));
+    let gs = matches!(opts.screener, ScreenerKind::GapSafe).then(|| GapScreener::new(ds));
     let (dref0, lam_max) = DualRef::at_lambda_max(ds);
     let mut dref = dref0.clone();
 
@@ -166,14 +195,17 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
         } else {
             match opts.screener {
                 ScreenerKind::None => (0..ds.d).collect(),
-                ScreenerKind::Dpc => {
-                    step_screen.time(|| screener.screen(ds, &dref, lam)).kept_indices()
-                }
-                ScreenerKind::DpcOneShot => {
-                    step_screen.time(|| screener.screen(ds, &dref0, lam)).kept_indices()
-                }
+                ScreenerKind::Dpc => step_screen
+                    .time(|| screener.as_ref().unwrap().screen(ds, &dref, lam))
+                    .kept_indices(),
+                ScreenerKind::DpcOneShot => step_screen
+                    .time(|| screener.as_ref().unwrap().screen(ds, &dref0, lam))
+                    .kept_indices(),
                 ScreenerKind::DpcCs => step_screen
                     .time(|| cs.as_ref().unwrap().screen(ds, &dref, lam))
+                    .kept_indices(),
+                ScreenerKind::GapSafe => step_screen
+                    .time(|| gs.as_ref().unwrap().screen_primal(ds, lam, &prev_w))
                     .kept_indices(),
             }
         };
@@ -181,13 +213,13 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
         // -- solve phase (on the compacted problem) --
         let mut step_solve = Stopwatch::new();
         let mut w_full = vec![0.0f64; ds.d * t_count];
-        let (obj, gap, iters) = if keep.is_empty() {
+        let (obj, gap, iters, col_ops) = if keep.is_empty() {
             let (o, g, _) = ops::duality_gap(ds, &w_full, lam);
-            (o, g, 0)
+            (o, g, 0, 0)
         } else if keep.len() == ds.d {
             let res = step_solve.time(|| solve_exact(ds, lam, Some(&prev_w), opts));
             w_full = res.w.clone();
-            (res.obj, res.gap, res.iters)
+            (res.obj, res.gap, res.iters, res.col_ops)
         } else {
             let ds_r = ds.restrict(&keep);
             let mut w0 = vec![0.0f64; keep.len() * t_count];
@@ -200,7 +232,7 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
                 w_full[l * t_count..(l + 1) * t_count]
                     .copy_from_slice(&res.w[j * t_count..(j + 1) * t_count]);
             }
-            (res.obj, res.gap, res.iters)
+            (res.obj, res.gap, res.iters, res.col_ops)
         };
 
         // -- bookkeeping --
@@ -214,6 +246,13 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
             if inactive == 0 { 1.0 } else { rejected as f64 / inactive as f64 };
 
         if opts.verify_safety && rejected > 0 {
+            // A screened run can never incriminate itself: rejected rows
+            // are zero in w_full by construction. The paranoid check
+            // therefore solves the UNRESTRICTED problem independently and
+            // verifies the rejections against that solution, plus an
+            // objective-parity check (unsafe screening converges — to a
+            // strictly worse optimum). Far slower than the run itself;
+            // tests only.
             let mask: Vec<bool> = {
                 let mut m = vec![true; ds.d];
                 for &l in &keep {
@@ -221,11 +260,22 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
                 }
                 m
             };
-            let report = safety::verify(ds, &w_full, lam, &mask, 10.0 * opts.active_tol);
+            // a tight reference regardless of the screened run's tolerance:
+            // the verifier must stay discriminating in exactly the loose
+            // regime gap certification exists for
+            let mut vopts = opts.clone();
+            vopts.solve = crate::solver::SolveOptions::tight();
+            let full = solve_exact(ds, lam, Some(&prev_w), &vopts);
+            let report = safety::verify(ds, &full.w, lam, &mask, 10.0 * opts.active_tol);
             anyhow::ensure!(
                 report.is_safe(),
                 "screening violated safety at ratio {ratio}: {:?}",
                 report.violations
+            );
+            anyhow::ensure!(
+                obj <= full.obj + 2.0 * opts.solve.tol * full.obj.abs().max(1.0) + 1e-12,
+                "screened objective {obj} stuck above unrestricted {} at ratio {ratio}",
+                full.obj
             );
         }
 
@@ -239,15 +289,19 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
             screen_secs: step_screen.secs(),
             solve_secs: step_solve.secs(),
             solver_iters: iters,
+            col_ops,
             obj,
             gap,
         });
 
-        // sequential reference update (Cor. 9): from this λ's solution.
-        // At the grid head (λ ≥ λ_max, W = 0) keep the λ_max reference —
-        // its Eq. 20 gradient normal is strictly better than the zero
-        // normal a W=0 solution would produce.
-        if !matches!(opts.screener, ScreenerKind::DpcOneShot) && ratio < 1.0 - 1e-12 {
+        // sequential reference update (Cor. 9): from this λ's solution,
+        // with its gap certificate. At the grid head (λ ≥ λ_max, W = 0)
+        // keep the λ_max reference — its Eq. 20 gradient normal is
+        // strictly better than the zero normal a W=0 solution would
+        // produce. Only the kinds that consume the reference pay for the
+        // update (it costs a correlation sweep).
+        let seq = matches!(opts.screener, ScreenerKind::Dpc | ScreenerKind::DpcCs);
+        if seq && ratio < 1.0 - 1e-12 {
             dref = DualRef::from_solution(ds, lam, &w_full);
         }
         prev_w = w_full;
@@ -296,8 +350,17 @@ fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<
         "the AOT engine only ships FISTA executables"
     );
     anyhow::ensure!(
-        opts.margin > 0.0 || matches!(opts.screener, ScreenerKind::None),
-        "AOT screening runs in f32: a positive safety margin is required"
+        opts.aot_margin > 0.0 || matches!(opts.screener, ScreenerKind::None),
+        "AOT screening runs in f32: a positive aot_margin is required"
+    );
+    anyhow::ensure!(
+        !matches!(opts.screener, ScreenerKind::DpcCs | ScreenerKind::GapSafe),
+        "screener {:?} is exact-engine only",
+        opts.screener
+    );
+    anyhow::ensure!(
+        opts.solve.dynamic_every == 0,
+        "dynamic screening (dynamic_every > 0) is exact-engine only"
     );
     engine.warmup_config(&cfg)?;
 
@@ -343,12 +406,11 @@ fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<
                     let s = step_screen.time(|| {
                         engine.screen(&cfg, &x_full, &y, t0, n0, lam)
                     })?;
-                    let thr = (1.0 - opts.margin) as f32;
+                    let thr = (1.0 - opts.aot_margin) as f32;
                     s.iter().enumerate().filter_map(|(l, &v)| (v >= thr).then_some(l)).collect()
                 }
-                ScreenerKind::DpcCs => {
-                    anyhow::bail!("CS ablation is exact-engine only")
-                }
+                // rejected by the capability ensure! before the loop
+                ScreenerKind::DpcCs | ScreenerKind::GapSafe => unreachable!(),
             }
         };
 
@@ -398,6 +460,7 @@ fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<
             screen_secs: step_screen.secs(),
             solve_secs: step_solve.secs(),
             solver_iters: iters,
+            col_ops: iters * keep.len(),
             obj,
             gap,
         });
@@ -470,6 +533,59 @@ mod tests {
             .map(|(x, y)| (x - y).abs())
             .fold(0.0f64, f64::max);
         assert!(dmax < 1e-5, "final W mismatch {dmax}");
+    }
+
+    #[test]
+    fn gap_safe_path_matches_unscreened() {
+        let ds = small();
+        let with = run_path(&ds, &opts(ScreenerKind::GapSafe), &EngineKind::Exact).unwrap();
+        let without = run_path(&ds, &opts(ScreenerKind::None), &EngineKind::Exact).unwrap();
+        for (a, b) in with.records.iter().zip(&without.records) {
+            assert!((a.obj - b.obj).abs() <= 1e-6 * b.obj.abs().max(1.0),
+                "objective mismatch at ratio {}: {} vs {}", a.ratio, a.obj, b.obj);
+            assert_eq!(a.inactive, b.inactive, "active-set mismatch at {}", a.ratio);
+        }
+        // warm starts get good along the path: GAP-safe must reject
+        let rejected: usize = with.records.iter().map(|r| r.rejected).sum();
+        assert!(rejected > 0, "GAP-safe screening never fired");
+    }
+
+    #[test]
+    fn dynamic_screening_path_matches_and_saves_work() {
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 14, d: 150, seed: 18, ..Default::default() }).0;
+        // against the unscreened baseline the saving must be unambiguous:
+        // the solver sees all 150 features and dynamic screening prunes
+        // the inactive bulk mid-solve
+        let stat = opts(ScreenerKind::None);
+        let mut dynamic = opts(ScreenerKind::None);
+        dynamic.solve.dynamic_every = 10;
+        let a = run_path(&ds, &dynamic, &EngineKind::Exact).unwrap();
+        let b = run_path(&ds, &stat, &EngineKind::Exact).unwrap();
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert!(
+                (x.obj - y.obj).abs() <= 1e-6 * y.obj.abs().max(1.0),
+                "dynamic obj diverged at ratio {}",
+                x.ratio
+            );
+        }
+        assert!(
+            a.total_col_ops() < b.total_col_ops(),
+            "dynamic screening saved no column sweeps: {} vs {}",
+            a.total_col_ops(),
+            b.total_col_ops()
+        );
+        // and composed with static DPC it must stay exact
+        let mut dpc_dynamic = opts(ScreenerKind::Dpc);
+        dpc_dynamic.solve.dynamic_every = 10;
+        let c = run_path(&ds, &dpc_dynamic, &EngineKind::Exact).unwrap();
+        for (x, y) in c.records.iter().zip(&b.records) {
+            assert!(
+                (x.obj - y.obj).abs() <= 1e-6 * y.obj.abs().max(1.0),
+                "DPC+dynamic obj diverged at ratio {}",
+                x.ratio
+            );
+        }
     }
 
     #[test]

@@ -52,6 +52,16 @@ impl MatrixStore {
         }
     }
 
+    /// Stored entries one full column sweep touches: every cell for a
+    /// dense buffer, only the stored nonzeros for CSC. O(1) on both
+    /// backends — this is the work estimate, not a zero count.
+    pub fn stored_entries(&self) -> usize {
+        match self {
+            MatrixStore::Dense(x) => x.len(),
+            MatrixStore::Csc(m) => m.nnz(),
+        }
+    }
+
     /// Heap footprint in bytes (the memory win sparse storage buys).
     pub fn mem_bytes(&self) -> usize {
         match self {
@@ -182,6 +192,14 @@ impl Dataset {
     /// Heap footprint of all task matrices, in bytes.
     pub fn mem_bytes(&self) -> usize {
         self.tasks.iter().map(|t| t.x.mem_bytes()).sum()
+    }
+
+    /// Entries one full column sweep actually touches (Σ_t stored entries).
+    /// The "spawn worker threads?" heuristics gate on this, so a 1%-dense
+    /// CSC dataset is not threaded as if it were dense (its sweep is ~100×
+    /// cheaper than d·N suggests).
+    pub fn sweep_work(&self) -> usize {
+        self.tasks.iter().map(|t| t.x.stored_entries()).sum()
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -431,6 +449,18 @@ mod tests {
         // Gaussian entries: no exact zeros, density 1
         assert!((sp.density() - 1.0).abs() < 1e-12);
         assert!(ds.mem_bytes() > 0);
+    }
+
+    #[test]
+    fn sweep_work_counts_stored_entries_per_backend() {
+        let ds = tiny(); // dense 3 tasks × (8 × 20)
+        assert_eq!(ds.sweep_work(), 3 * 8 * 20);
+        // Gaussian entries: no exact zeros, CSC stores everything
+        assert_eq!(ds.to_csc().sweep_work(), 3 * 8 * 20);
+        // a CSC store with dropped zeros reports only stored nonzeros
+        let m = crate::linalg::CscMatrix::from_dense(&[1.0, 0.0, 0.0, 2.0, 0.0, 0.0], 3, 2);
+        let store = MatrixStore::Csc(m);
+        assert_eq!(store.stored_entries(), 2);
     }
 
     #[test]

@@ -146,7 +146,8 @@ mod tests {
 
     #[test]
     fn documents_are_sparse() {
-        let ds = textsim(&TextSimOptions { categories: 3, n_pos: 10, d: 2000, ..Default::default() });
+        let ds =
+            textsim(&TextSimOptions { categories: 3, n_pos: 10, d: 2000, ..Default::default() });
         let density = ds.density();
         assert!(density < 0.08, "text matrix should be sparse, density={density}");
         // the CSC representation should be far smaller than the dense one
@@ -172,7 +173,8 @@ mod tests {
 
     #[test]
     fn column_norms_are_heavy_tailed() {
-        let ds = textsim(&TextSimOptions { categories: 2, n_pos: 20, d: 2000, ..Default::default() });
+        let ds =
+            textsim(&TextSimOptions { categories: 2, n_pos: 20, d: 2000, ..Default::default() });
         let b2 = ds.col_sqnorms();
         let mut per_feature: Vec<f64> =
             (0..ds.d).map(|l| b2[l * 2] + b2[l * 2 + 1]).collect();
@@ -184,7 +186,13 @@ mod tests {
 
     #[test]
     fn zero_feature_pruning_finds_dead_terms() {
-        let ds = textsim(&TextSimOptions { categories: 2, n_pos: 5, d: 5000, doc_len: 40, ..Default::default() });
+        let ds = textsim(&TextSimOptions {
+            categories: 2,
+            n_pos: 5,
+            d: 5000,
+            doc_len: 40,
+            ..Default::default()
+        });
         let kept = nonzero_features(&ds);
         assert!(kept.len() < ds.d, "tiny corpus must leave unused vocabulary");
         assert!(!kept.is_empty());

@@ -141,10 +141,21 @@ pub fn build_tdt2(scale: Scale, seed: u64) -> Dataset {
 
 pub fn build_adni(scale: Scale, seed: u64) -> Dataset {
     let opts = match scale {
-        Scale::Quick => SnpSimOptions { tasks: 3, n: 12, d: 1500, causal: 12, seed, ..Default::default() },
-        Scale::Default => SnpSimOptions { tasks: 10, n: 25, d: 20_000, causal: 40, seed, ..Default::default() },
+        Scale::Quick => {
+            SnpSimOptions { tasks: 3, n: 12, d: 1500, causal: 12, seed, ..Default::default() }
+        }
+        Scale::Default => {
+            SnpSimOptions { tasks: 10, n: 25, d: 20_000, causal: 40, seed, ..Default::default() }
+        }
         // the paper's 20 x (50 x 504095)
-        Scale::Paper => SnpSimOptions { tasks: 20, n: 50, d: 504_095, causal: 100, seed, ..Default::default() },
+        Scale::Paper => SnpSimOptions {
+            tasks: 20,
+            n: 50,
+            d: 504_095,
+            causal: 100,
+            seed,
+            ..Default::default()
+        },
     };
     snpsim(&opts).0
 }
@@ -254,25 +265,79 @@ pub fn run_ablation(scale: Scale) -> Result<String> {
 
     let mut out = String::new();
     let mut table = crate::bench::Table::new(&[
-        "screener", "total rejected", "mean rejection", "screen(s)", "total(s)",
+        "screener", "total rejected", "mean rejection", "screen(s)", "col-ops", "total(s)",
     ]);
-    for (name, kind) in [
-        ("DPC (exact QP1QC, sequential)", ScreenerKind::Dpc),
-        ("DPC-CS (Cauchy-Schwarz bound)", ScreenerKind::DpcCs),
-        ("DPC one-shot (from lambda_max)", ScreenerKind::DpcOneShot),
-        ("no screening", ScreenerKind::None),
+    for (name, kind, dynamic_every) in [
+        ("DPC (exact QP1QC, sequential)", ScreenerKind::Dpc, 0usize),
+        ("DPC + dynamic gap screening", ScreenerKind::Dpc, DYNAMIC_EVERY),
+        ("GAP-safe (gap ball, static)", ScreenerKind::GapSafe, 0),
+        ("DPC-CS (Cauchy-Schwarz bound)", ScreenerKind::DpcCs, 0),
+        ("DPC one-shot (from lambda_max)", ScreenerKind::DpcOneShot, 0),
+        ("no screening", ScreenerKind::None, 0),
     ] {
-        let res = run_path(&ds, &exp_opts(scale.grid_len(), kind), &engine)?;
+        let mut opts = exp_opts(scale.grid_len(), kind);
+        opts.solve.dynamic_every = dynamic_every;
+        let res = run_path(&ds, &opts, &engine)?;
         let rejected: usize = res.records.iter().map(|r| r.rejected).sum();
         table.row(&[
             name.to_string(),
             rejected.to_string(),
             format!("{:.4}", res.mean_rejection_ratio()),
             format!("{:.3}", res.screen_secs),
+            res.total_col_ops().to_string(),
             format!("{:.2}", res.total_secs),
         ]);
     }
     out.push_str(&format!("ABL1/ABL2 on {} (d={})\n", ds.name, ds.d));
     out.push_str(&table.render());
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_gap: static DPC vs gap-dynamic screening, epochs & column sweeps
+// ---------------------------------------------------------------------------
+
+/// Dynamic re-screen cadence used by the gap experiments and the bench
+/// (every K solver epochs; chosen so a screen costs well under the sweep
+/// work it can save).
+pub const DYNAMIC_EVERY: usize = 10;
+
+/// One configuration's cost along the synthetic2 path (`benches/kernels.rs`
+/// records these into `BENCH_gap.json`).
+#[derive(Debug, Clone)]
+pub struct GapDynRow {
+    pub name: &'static str,
+    /// total solver epochs along the path (FISTA iterations)
+    pub epochs: usize,
+    /// total column-sweep operations (see `SolveResult::col_ops`)
+    pub col_ops: usize,
+    pub secs: f64,
+    pub mean_rejection: f64,
+}
+
+/// Static-DPC vs gap-dynamic comparison on the synthetic2 path.
+pub fn gap_dynamic_rows(scale: Scale) -> Result<Vec<GapDynRow>> {
+    let d = *scale.synth_dims().first().unwrap();
+    let ds = build_synthetic(2, d, scale, 42);
+    let engine = EngineKind::Exact;
+    let configs: [(&'static str, ScreenerKind, usize); 4] = [
+        ("static-dpc", ScreenerKind::Dpc, 0),
+        ("dynamic-dpc", ScreenerKind::Dpc, DYNAMIC_EVERY),
+        ("static-gapsafe", ScreenerKind::GapSafe, 0),
+        ("dynamic-gapsafe", ScreenerKind::GapSafe, DYNAMIC_EVERY),
+    ];
+    let mut rows = Vec::new();
+    for (name, kind, dynamic_every) in configs {
+        let mut opts = exp_opts(scale.grid_len(), kind);
+        opts.solve.dynamic_every = dynamic_every;
+        let res = run_path(&ds, &opts, &engine)?;
+        rows.push(GapDynRow {
+            name,
+            epochs: res.total_iters(),
+            col_ops: res.total_col_ops(),
+            secs: res.total_secs,
+            mean_rejection: res.mean_rejection_ratio(),
+        });
+    }
+    Ok(rows)
 }

@@ -56,7 +56,11 @@ impl CscMatrix {
     }
 
     /// Build from per-column `(row, value)` lists. Rows within a column
-    /// need not be sorted; they are sorted here. Zero values are dropped.
+    /// need not be sorted; they are sorted here. Duplicate row entries
+    /// within a column are coalesced by summing (the COO convention), so
+    /// the strictly-increasing index invariant `validate()` checks holds
+    /// by construction. Exact zeros — input or post-coalescing — are
+    /// dropped.
     pub fn from_cols(n: usize, mut cols: Vec<Vec<(u32, f32)>>) -> CscMatrix {
         assert!(n <= u32::MAX as usize, "row count exceeds u32 index space");
         let d = cols.len();
@@ -67,11 +71,18 @@ impl CscMatrix {
         col_ptr.push(0);
         for col in cols.iter_mut() {
             col.sort_unstable_by_key(|e| e.0);
-            for &(i, v) in col.iter() {
-                debug_assert!((i as usize) < n, "row index {i} out of range");
-                if v != 0.0 {
-                    indices.push(i);
-                    values.push(v);
+            let mut k = 0usize;
+            while k < col.len() {
+                let row = col[k].0;
+                debug_assert!((row as usize) < n, "row index {row} out of range");
+                let mut sum = 0.0f32;
+                while k < col.len() && col[k].0 == row {
+                    sum += col[k].1;
+                    k += 1;
+                }
+                if sum != 0.0 {
+                    indices.push(row);
+                    values.push(sum);
                 }
             }
             col_ptr.push(indices.len());
@@ -323,6 +334,27 @@ mod tests {
         assert_eq!(m.indices, vec![1, 3]);
         assert_eq!(m.values, vec![1.0, 2.0]);
         m.validate().unwrap();
+    }
+
+    #[test]
+    fn from_cols_coalesces_duplicate_rows() {
+        // duplicates within a column sum; pairs canceling to zero vanish —
+        // the result must pass validate() (strictly increasing indices)
+        let m = CscMatrix::from_cols(
+            6,
+            vec![
+                vec![(2, 1.5), (0, 1.0), (2, 0.5), (5, -1.0)],
+                vec![(3, 2.0), (3, -2.0), (1, 4.0)],
+            ],
+        );
+        m.validate().unwrap();
+        assert_eq!(m.col_ptr, vec![0, 3, 4]);
+        assert_eq!(m.indices, vec![0, 2, 5, 1]);
+        assert_eq!(m.values, vec![1.0, 2.0, -1.0, 4.0]);
+        // dense parity: the coalesced matrix equals the summed dense one
+        let dense = m.to_dense();
+        assert_eq!(dense[2], 2.0); // col 0, row 2: 1.5 + 0.5
+        assert_eq!(dense[6 + 3], 0.0); // col 1, row 3: 2.0 − 2.0 cancelled
     }
 
     #[test]

@@ -30,7 +30,9 @@ path options:
   --dataset synth1|synth2|animal|tdt2|adni   (default synth1)
   --d N            feature dimension for synthetic sets
   --grid K         lambda-grid length (default from scale)
-  --screener dpc|cs|oneshot|none
+  --screener dpc|gap|cs|oneshot|none
+  --dynamic-every K   re-screen inside the solver every K epochs on the
+                      live duality-gap ball (0 = off, default)
   --solver fista|bcd
   --seed S
 
@@ -89,11 +91,13 @@ fn main() -> Result<()> {
             let grid = args.get_usize("grid", scale.grid_len())?;
             let screener = match args.get_or("screener", "dpc") {
                 "dpc" => ScreenerKind::Dpc,
+                "gap" | "gapsafe" => ScreenerKind::GapSafe,
                 "cs" => ScreenerKind::DpcCs,
                 "oneshot" => ScreenerKind::DpcOneShot,
                 "none" => ScreenerKind::None,
                 s => anyhow::bail!("unknown screener '{s}'"),
             };
+            let dynamic_every = args.get_usize("dynamic-every", 0)?;
             let solver = match args.get_or("solver", "fista") {
                 "fista" => SolverKind::Fista,
                 "bcd" => SolverKind::Bcd,
@@ -105,8 +109,9 @@ fn main() -> Result<()> {
             let ds = experiments::build_by_name(&name, d, scale, seed)?;
             let mut opts = experiments::exp_opts(grid, screener);
             opts.solver = solver;
+            opts.solve.dynamic_every = dynamic_every;
             if matches!(engine, EngineKind::Aot(_)) {
-                opts.margin = 1e-3; // f32 engine needs a float-safety margin
+                opts.aot_margin = 1e-3; // f32 engine needs a float-safety margin
             }
             let res = run_path(&ds, &opts, &engine)?;
             println!(
@@ -114,11 +119,13 @@ fn main() -> Result<()> {
                 res.dataset, res.d, res.lam_max
             );
             println!(
-                "total {:.2}s (screen {:.3}s, solve {:.2}s), mean rejection {:.4}",
+                "total {:.2}s (screen {:.3}s, solve {:.2}s), mean rejection {:.4}, \
+                 solver col-ops {}",
                 res.total_secs,
                 res.screen_secs,
                 res.solve_secs,
-                res.mean_rejection_ratio()
+                res.mean_rejection_ratio(),
+                res.total_col_ops()
             );
             let curve: Vec<(f64, f64)> =
                 res.records.iter().map(|r| (r.ratio, r.rejection_ratio)).collect();

@@ -60,8 +60,9 @@ pub fn task_corr(ds: &Dataset, v: &Stacked) -> Vec<f64> {
     debug_assert_eq!(v.len(), t_count);
     let d = ds.d;
     let mut out = vec![0.0f64; d * t_count];
-    // spawning threads costs ~10us each; stay serial below ~1 MFLOP
-    let workers = if d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+    // spawning threads costs ~10us each; stay serial below ~1 MFLOP of
+    // *stored* entries (a 1%-dense CSC sweep is ~100× cheaper than d·N)
+    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
     // parallel over feature chunks: each worker fills a disjoint slice
     let chunks = parallel_chunks(d, workers, |_, start, end| {
         let mut part = vec![0.0f64; (end - start) * t_count];
@@ -96,7 +97,7 @@ pub fn forward(ds: &Dataset, w: &[f64]) -> Stacked {
     let t_count = ds.t();
     debug_assert_eq!(w.len(), ds.d * t_count);
     let tasks: Vec<usize> = (0..t_count).collect();
-    let workers = if ds.d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
     scoped_pool(tasks, workers, |ti| {
         let task = &ds.tasks[ti];
         let mut z = vec![0.0f64; task.n];
@@ -137,6 +138,32 @@ pub fn primal_obj(ds: &Dataset, w: &[f64], lam: f64) -> f64 {
     0.5 * stacked_sqnorm(&r) + lam * l21_norm(w, ds.t())
 }
 
+/// Scale a sample-space point into the dual-feasible set
+/// F = {θ : g_l(θ) ≤ 1 ∀l} (Eq. 15): θ = z / max(1, max_l √g_l(z)).
+/// Returns (θ, scale). This is the certified dual point every gap-based
+/// bound is anchored to — screening and the GAP-safe ball both consume it.
+pub fn dual_feasible(ds: &Dataset, z: Stacked) -> (Stacked, f64) {
+    let m = gscore(ds, &z).into_iter().fold(0.0f64, f64::max).sqrt();
+    if m > 1.0 {
+        let theta = stacked_scale(&z, 1.0 / m);
+        (theta, m)
+    } else {
+        (z, 1.0)
+    }
+}
+
+/// Dual objective D(θ) = ½‖y‖² − λ²/2 ‖y/λ − θ‖² at a (feasible) θ.
+pub fn dual_obj(y: &Stacked, theta: &Stacked, lam: f64) -> f64 {
+    let mut diff_sq = 0.0;
+    for (yt, tt) in y.iter().zip(theta) {
+        for (&yi, &ti) in yt.iter().zip(tt) {
+            let d = yi / lam - ti;
+            diff_sq += d * d;
+        }
+    }
+    0.5 * stacked_sqnorm(y) - 0.5 * lam * lam * diff_sq
+}
+
 /// Duality gap via the scaled-residual feasible point. Returns
 /// (obj, gap, theta_feasible).
 pub fn duality_gap(ds: &Dataset, w: &[f64], lam: f64) -> (f64, f64, Stacked) {
@@ -145,17 +172,8 @@ pub fn duality_gap(ds: &Dataset, w: &[f64], lam: f64) -> (f64, f64, Stacked) {
     let obj = 0.5 * stacked_sqnorm(&r) + lam * l21_norm(w, ds.t());
     // z = (y - Xw)/lam = -r/lam ; scale into the feasible set F
     let z = stacked_scale(&r, -1.0 / lam);
-    let m = gscore(ds, &z).into_iter().fold(0.0f64, f64::max).sqrt();
-    let theta = if m > 1.0 { stacked_scale(&z, 1.0 / m) } else { z };
-    // D(theta) = ½||y||² − λ²/2 ||y/λ − θ||²
-    let mut diff_sq = 0.0;
-    for (ti, yt) in y.iter().enumerate() {
-        for (i, &yi) in yt.iter().enumerate() {
-            let d = yi / lam - theta[ti][i];
-            diff_sq += d * d;
-        }
-    }
-    let dual = 0.5 * stacked_sqnorm(&y) - 0.5 * lam * lam * diff_sq;
+    let (theta, _) = dual_feasible(ds, z);
+    let dual = dual_obj(&y, &theta, lam);
     (obj, obj - dual, theta)
 }
 

@@ -14,9 +14,15 @@ use crate::data::Dataset;
 use crate::ops::Stacked;
 use crate::util::parallel_chunks;
 
-fn moments(ds: &Dataset, b2: &[f64], o: &Stacked, f: impl Fn(&[f64], &[f64]) -> f64 + Sync) -> Vec<f64> {
+fn moments(
+    ds: &Dataset,
+    b2: &[f64],
+    o: &Stacked,
+    f: impl Fn(&[f64], &[f64]) -> f64 + Sync,
+) -> Vec<f64> {
     let t_count = ds.t();
-    let workers = if ds.d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
+    // gate on stored sweep work, not d·N (CSC sweeps touch only nonzeros)
+    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
     let out = parallel_chunks(ds.d, workers, |_, start, end| {
         let mut part = vec![0.0f64; end - start];
         let mut a = vec![0.0f64; t_count];

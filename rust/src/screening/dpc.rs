@@ -1,57 +1,101 @@
 //! The DPC rule: Theorem 5 (ball estimation of θ*(λ)) + Theorem 7 (score
 //! maximization) + Theorem 8 / Corollary 9 (the rejection test, sequential
 //! along the λ grid).
+//!
+//! Inexact references (DESIGN.md §9): Theorem 5 assumes the reference
+//! θ*(λ0) is the *exact* dual optimum, but along the path the reference
+//! comes from a finite-tolerance solve. [`DualRef::from_solution`]
+//! therefore stores the dual-feasible projection of the solved residual
+//! together with `eps`, a duality-gap certificate on its distance to the
+//! true θ*(λ0) ([`super::gap::certified_radius`]). [`ball`] consumes `eps`
+//! by shifting Theorem 5's supporting-halfspace cut outward by a provable
+//! slack; at `eps = 0` the construction reduces *exactly* to the paper's
+//! ball, and at any `eps > 0` it still contains θ*(λ) — no unsound
+//! `margin` knob anywhere.
 
-use super::{secular::qp1qc_max, ScreenOutcome};
+use super::{gap, ScreenOutcome};
 use crate::data::Dataset;
 use crate::ops::{self, Stacked};
-use crate::util::parallel_chunks;
 
-/// Reference point for the ball: everything Theorem 5 needs about λ0.
+/// Reference point for the ball: everything Theorem 5 needs about λ0,
+/// plus the gap certificate that makes an inexact reference safe.
 #[derive(Debug, Clone)]
 pub struct DualRef {
     pub lam0: f64,
-    /// θ*(λ0)
+    /// a dual-feasible approximation of θ*(λ0) (exact at λ_max)
     pub theta0: Stacked,
-    /// n(λ0) ∈ N_F(θ*(λ0)) (Eq. 20)
+    /// n(λ0): the Eq. 20 normal direction at `theta0`
     pub normal: Stacked,
+    /// certified bound on ‖theta0 − θ*(λ0)‖ (0 for closed-form references)
+    pub eps: f64,
 }
 
 impl DualRef {
     /// The closed-form reference at λ0 = λ_max (Theorem 1 + Eq. 20 case 2).
+    /// Exact, so `eps = 0`.
     pub fn at_lambda_max(ds: &Dataset) -> (Self, f64) {
         let (lmax, lstar, _) = ops::lambda_max(ds);
         let y = ops::y64(ds);
         let theta0 = ops::stacked_scale(&y, 1.0 / lmax);
         let normal = ops::normal_at_lmax(ds, lstar, lmax);
-        (DualRef { lam0: lmax, theta0, normal }, lmax)
+        (DualRef { lam0: lmax, theta0, normal, eps: 0.0 }, lmax)
     }
 
-    /// Reference from a solved primal at λ0 < λ_max: θ*(λ0) = (y − Xw)/λ0
-    /// (Eq. 14), n(λ0) = y/λ0 − θ*(λ0) (Eq. 20 case 1).
+    /// Reference from a solved primal at λ0 < λ_max: the dual-feasible
+    /// scaling of (y − Xw)/λ0 (Eq. 14 + Eq. 15), n(λ0) = y/λ0 − θ0
+    /// (Eq. 20 case 1), and `eps = √(2·gap)/λ0` — the strong-concavity
+    /// bound on how far the stored point can sit from the true θ*(λ0).
     pub fn from_solution(ds: &Dataset, lam0: f64, w: &[f64]) -> Self {
+        let (_, gap0, theta0) = ops::duality_gap(ds, w, lam0);
         let y = ops::y64(ds);
-        let r = ops::residual(ds, w); // Xw − y
-        let theta0 = ops::stacked_scale(&r, -1.0 / lam0);
         let normal = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam0), -1.0, &theta0);
-        DualRef { lam0, theta0, normal }
+        let eps = gap::certified_radius(gap0, lam0);
+        DualRef { lam0, theta0, normal, eps }
     }
 }
 
-/// Ball Θ(λ, λ0) from Theorem 5: center o = θ0 + ½r⊥, radius Δ = ½‖r⊥‖.
+/// Ball Θ(λ, λ0) from Theorem 5, generalized to inexact references.
+///
+/// Geometry: θ*(λ) = P_F(y/λ) and `theta0 ∈ F`, so the projection
+/// inequality ⟨y/λ − θ*, theta0 − θ*⟩ ≤ 0 puts θ*(λ) in the *plain* ball
+/// with diameter [theta0, y/λ] — valid for any feasible reference, no
+/// optimality needed. The Theorem-5 refinement cuts that ball with the
+/// supporting halfspace of the normal n; with an inexact reference the
+/// true halfspace is only known up to the slack
+///
+///   ⟨n, θ*(λ) − theta0⟩ ≤ eps·(‖n‖ + 2·eps + ‖y‖·|1/λ − 1/λ0|),
+///
+/// (expand n = (y/λ0 − θ*(λ0)) + (θ*(λ0) − theta0) and bound each term
+/// with ‖θ*(λ0) − theta0‖ ≤ eps plus projection nonexpansiveness). The
+/// returned ball is the smallest one enclosing plain-ball ∩ halfspace;
+/// at eps = 0 it equals the paper's (o = θ0 + ½r⊥, Δ = ½‖r⊥‖).
 pub fn ball(ds: &Dataset, dref: &DualRef, lam: f64) -> (Stacked, f64) {
     let y = ops::y64(ds);
-    // r = y/λ − θ0
+    // r = y/λ − θ0 ; plain safe ball: center θ0 + ½r, radius ½‖r‖
     let r = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam), -1.0, &dref.theta0);
+    let o_plain = ops::stacked_scale_add(&dref.theta0, 0.5, &r);
+    let delta_plain = 0.5 * ops::stacked_sqnorm(&r).sqrt();
     let nn = ops::stacked_sqnorm(&dref.normal);
-    let rp = if nn > 1e-290 {
-        let coef = ops::stacked_dot(&dref.normal, &r) / nn;
-        ops::stacked_scale_add(&r, -coef, &dref.normal)
+    if nn <= 1e-290 {
+        return (o_plain, delta_plain);
+    }
+    let nnorm = nn.sqrt();
+    // inexact-reference slack on the halfspace cut (0 for exact refs)
+    let slack = if dref.eps > 0.0 {
+        let grid_step = ops::stacked_sqnorm(&y).sqrt() * (1.0 / lam - 1.0 / dref.lam0).abs();
+        dref.eps * (nnorm + 2.0 * dref.eps + grid_step)
     } else {
-        r
+        0.0
     };
-    let delta = 0.5 * ops::stacked_sqnorm(&rp).sqrt();
-    let o = ops::stacked_scale_add(&dref.theta0, 0.5, &rp);
+    // signed distance from the plain center to the shifted cut plane
+    let t = (0.5 * ops::stacked_dot(&dref.normal, &r) - slack) / nnorm;
+    if t <= 0.0 {
+        // cut misses the plain ball's far half: no refinement available
+        return (o_plain, delta_plain);
+    }
+    let t = t.min(delta_plain);
+    let delta = (delta_plain * delta_plain - t * t).max(0.0).sqrt();
+    let o = ops::stacked_scale_add(&o_plain, -t / nnorm, &dref.normal);
     (o, delta)
 }
 
@@ -60,19 +104,11 @@ pub fn ball(ds: &Dataset, dref: &DualRef, lam: f64) -> (Stacked, f64) {
 pub struct DpcScreener {
     /// (d x T) row-major ‖x_l^{(t)}‖²
     b2: Vec<f64>,
-    t_count: usize,
-    /// keep features whose score falls within `margin` below 1 (guards
-    /// against solver inexactness in θ*(λ0); 0 = the paper's exact rule)
-    pub margin: f64,
 }
 
 impl DpcScreener {
     pub fn new(ds: &Dataset) -> Self {
-        DpcScreener { b2: ds.col_sqnorms(), t_count: ds.t(), margin: 0.0 }
-    }
-
-    pub fn with_margin(ds: &Dataset, margin: f64) -> Self {
-        DpcScreener { margin, ..Self::new(ds) }
+        DpcScreener { b2: ds.col_sqnorms() }
     }
 
     /// Scores s_l for all features given a ball (o, Δ). Parallel over
@@ -82,26 +118,12 @@ impl DpcScreener {
     /// text/genomics regime where screening pays for itself many times
     /// over.
     pub fn scores(&self, ds: &Dataset, o: &Stacked, delta: f64) -> Vec<f64> {
-        let t_count = self.t_count;
-        let d = ds.d;
-        let workers = if d * ds.total_n() < 500_000 { 1 } else { usize::MAX };
-        let out = parallel_chunks(d, workers, |_, start, end| {
-            let mut part = vec![0.0f64; end - start];
-            let mut a = vec![0.0f64; t_count];
-            for l in start..end {
-                for (ti, task) in ds.tasks.iter().enumerate() {
-                    a[ti] = task.col(l).dot_mixed(&o[ti]);
-                }
-                let b2 = &self.b2[l * t_count..(l + 1) * t_count];
-                part[l - start] = qp1qc_max(&a, b2, delta).s;
-            }
-            part
-        });
-        out.concat()
+        super::ball_scores(ds, &self.b2, o, delta)
     }
 
     /// Full DPC step (Theorem 8 / Corollary 9): screen at λ given a
-    /// reference at λ0 > λ.
+    /// reference at λ0 > λ. Safe at any reference accuracy — the ball
+    /// carries the reference's gap certificate.
     pub fn screen(&self, ds: &Dataset, dref: &DualRef, lam: f64) -> ScreenOutcome {
         assert!(
             lam <= dref.lam0 * (1.0 + 1e-12),
@@ -110,8 +132,7 @@ impl DpcScreener {
         );
         let (o, delta) = ball(ds, dref, lam);
         let scores = self.scores(ds, &o, delta);
-        let thr = 1.0 - self.margin;
-        let rejected = scores.iter().map(|&s| s < thr).collect();
+        let rejected = scores.iter().map(|&s| s < 1.0).collect();
         ScreenOutcome { rejected, scores, delta }
     }
 }
@@ -126,6 +147,13 @@ mod tests {
         synthetic1(&SynthOptions { t: 3, n: 12, d: 60, seed, ..Default::default() }).0
     }
 
+    /// θ*(λ) to solver precision, as the dual-feasible scaled residual.
+    fn theta_star(ds: &Dataset, lam: f64) -> Stacked {
+        let sol = fista(ds, lam, None, &SolveOptions::tight());
+        let z = ops::stacked_scale(&ops::residual(ds, &sol.w), -1.0 / lam);
+        ops::dual_feasible(ds, z).0
+    }
+
     #[test]
     fn ball_contains_dual_optimum_from_lmax() {
         let ds = problem(1);
@@ -133,8 +161,7 @@ mod tests {
         for ratio in [0.9, 0.6, 0.3, 0.1] {
             let lam = ratio * lmax;
             let (o, delta) = ball(&ds, &dref, lam);
-            let sol = fista(&ds, lam, None, &SolveOptions::tight());
-            let theta = ops::stacked_scale(&ops::residual(&ds, &sol.w), -1.0 / lam);
+            let theta = theta_star(&ds, lam);
             let diff = ops::stacked_scale_add(&theta, -1.0, &o);
             let dist = ops::stacked_sqnorm(&diff).sqrt();
             assert!(dist <= delta + 1e-6, "ratio {ratio}: dist {dist} > delta {delta}");
@@ -151,12 +178,69 @@ mod tests {
         for ratio in [0.45, 0.3, 0.2] {
             let lam = ratio * lmax;
             let (o, delta) = ball(&ds, &dref, lam);
-            let sol = fista(&ds, lam, None, &SolveOptions::tight());
-            let theta = ops::stacked_scale(&ops::residual(&ds, &sol.w), -1.0 / lam);
+            let theta = theta_star(&ds, lam);
             let diff = ops::stacked_scale_add(&theta, -1.0, &o);
             let dist = ops::stacked_sqnorm(&diff).sqrt();
             assert!(dist <= delta + 1e-6, "ratio {ratio}: {dist} > {delta}");
         }
+    }
+
+    #[test]
+    fn ball_contains_dual_optimum_with_loose_reference() {
+        // the bug this PR fixes: at solver tolerance 1e-3 the reference is
+        // visibly off θ*(λ0); the gap-inflated cut must keep the ball safe
+        let ds = problem(2);
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let lam0 = 0.5 * lmax;
+        let loose = SolveOptions { tol: 1e-3, check_every: 1, ..Default::default() };
+        let sol0 = fista(&ds, lam0, None, &loose);
+        let dref = DualRef::from_solution(&ds, lam0, &sol0.w);
+        assert!(dref.eps > 0.0, "loose solve must yield a nonzero certificate");
+        for ratio_of_lam0 in [0.9999, 0.99, 0.9, 0.6] {
+            let lam = ratio_of_lam0 * lam0;
+            let (o, delta) = ball(&ds, &dref, lam);
+            let theta = theta_star(&ds, lam);
+            let diff = ops::stacked_scale_add(&theta, -1.0, &o);
+            let dist = ops::stacked_sqnorm(&diff).sqrt();
+            assert!(
+                dist <= delta + 1e-6,
+                "inflated ball missed theta* at {ratio_of_lam0}·lam0: {dist} > {delta}"
+            );
+        }
+    }
+
+    #[test]
+    fn regression_uninflated_ball_misses_optimum_at_loose_tolerance() {
+        // the pre-fix construction: raw residual point, no feasibility
+        // scaling, no slack on the cut — Theorem 5 applied as if the
+        // reference were exact. At tol 1e-3 it must *fail* to contain
+        // θ*(λ) for some λ near λ0 (that failure is why `margin` existed).
+        let ds = problem(2);
+        let (_, lmax) = DualRef::at_lambda_max(&ds);
+        let lam0 = 0.5 * lmax;
+        let loose = SolveOptions { tol: 1e-3, check_every: 1, ..Default::default() };
+        let sol0 = fista(&ds, lam0, None, &loose);
+        let y = ops::y64(&ds);
+        let theta0 = ops::stacked_scale(&ops::residual(&ds, &sol0.w), -1.0 / lam0);
+        let normal =
+            ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam0), -1.0, &theta0);
+        let nn = ops::stacked_sqnorm(&normal);
+        let mut missed = false;
+        for ratio_of_lam0 in [0.9999, 0.999, 0.99] {
+            let lam = ratio_of_lam0 * lam0;
+            let r = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam), -1.0, &theta0);
+            let coef = ops::stacked_dot(&normal, &r) / nn;
+            let rp = ops::stacked_scale_add(&r, -coef, &normal);
+            let delta = 0.5 * ops::stacked_sqnorm(&rp).sqrt();
+            let o = ops::stacked_scale_add(&theta0, 0.5, &rp);
+            let theta = theta_star(&ds, lam);
+            let diff = ops::stacked_scale_add(&theta, -1.0, &o);
+            let dist = ops::stacked_sqnorm(&diff).sqrt();
+            if dist > delta {
+                missed = true;
+            }
+        }
+        assert!(missed, "old uninflated ball never missed — regression target vanished");
     }
 
     #[test]
@@ -187,7 +271,8 @@ mod tests {
     fn dpc_sequential_tighter_than_oneshot() {
         // Corollary 9: a reference at nearby lam0 rejects at least as many
         // features as screening from lam_max (the ball is smaller)
-        let (ds, _) = synthetic2(&SynthOptions { t: 3, n: 12, d: 80, seed: 4, ..Default::default() });
+        let (ds, _) =
+            synthetic2(&SynthOptions { t: 3, n: 12, d: 80, seed: 4, ..Default::default() });
         let (dref_max, lmax) = DualRef::at_lambda_max(&ds);
         let lam0 = 0.4 * lmax;
         let lam = 0.3 * lmax;

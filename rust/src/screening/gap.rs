@@ -1,0 +1,197 @@
+//! GAP-safe screening: balls for θ*(λ) certified by the duality gap of
+//! *any* primal/dual feasible pair (Ndiaye, Fercoq, Gramfort & Salmon,
+//! "GAP Safe screening rules for sparse multi-task and multi-class
+//! models" — see PAPERS.md), specialized to the multi-matrix MTFL dual.
+//! This is the principled repair for the inexact-reference hole in the
+//! sequential DPC rule, and the machinery behind dynamic screening inside
+//! the solver loop (DESIGN.md §9).
+//!
+//! Geometry: the dual objective D(θ) = ½‖y‖² − λ²/2·‖y/λ − θ‖² is
+//! λ²-strongly concave, so for the maximizer θ*(λ) over the convex
+//! feasible set F and any feasible θ,
+//!
+//!   D(θ) ≤ D(θ*) − λ²/2·‖θ − θ*‖²  and  D(θ*) = P(W*) ≤ P(W)
+//!   ⇒  ‖θ*(λ) − θ‖ ≤ √(2·(P(W) − D(θ)))/λ.
+//!
+//! No exactness assumption on anything: the ball is valid at every solver
+//! iterate, which is exactly what lets the solvers re-screen mid-solve as
+//! the gap shrinks.
+
+use super::{ball_scores, ScreenOutcome};
+use crate::data::Dataset;
+use crate::ops::{self, Stacked};
+
+/// ‖θ*(λ) − θ‖ ≤ √(2·max(gap, 0))/λ for any feasible pair with duality
+/// gap `gap` (strong concavity of the dual — module docs).
+pub fn certified_radius(gap: f64, lam: f64) -> f64 {
+    (2.0 * gap.max(0.0)).sqrt() / lam
+}
+
+/// A duality-gap-certified ball around θ*(λ).
+#[derive(Debug, Clone)]
+pub struct GapBall {
+    /// dual-feasible center (the scaled residual of the primal iterate)
+    pub center: Stacked,
+    pub radius: f64,
+    /// the certifying gap P(W) − D(center)
+    pub gap: f64,
+}
+
+impl GapBall {
+    /// Ball from a primal iterate: one residual + one correlation sweep.
+    pub fn from_primal(ds: &Dataset, lam: f64, w: &[f64]) -> GapBall {
+        let (_, gap, theta) = ops::duality_gap(ds, w, lam);
+        GapBall::from_feasible(theta, gap, lam)
+    }
+
+    /// Ball from an already-evaluated feasible pair — the solvers reuse
+    /// the (gap, θ) they compute for the stopping test, so a dynamic
+    /// screen costs only the score sweep.
+    pub fn from_feasible(center: Stacked, gap: f64, lam: f64) -> GapBall {
+        GapBall { radius: certified_radius(gap, lam), center, gap }
+    }
+}
+
+/// The GAP-safe screener: Theorem-7 score maximization over a gap ball.
+/// Caches the λ-independent b² column-norm moments like [`super::dpc::DpcScreener`].
+pub struct GapScreener {
+    b2: Vec<f64>,
+}
+
+impl GapScreener {
+    pub fn new(ds: &Dataset) -> Self {
+        GapScreener { b2: ds.col_sqnorms() }
+    }
+
+    /// Screen with an explicit ball.
+    pub fn screen(&self, ds: &Dataset, ball: &GapBall) -> ScreenOutcome {
+        let scores = ball_scores(ds, &self.b2, &ball.center, ball.radius);
+        let rejected = scores.iter().map(|&s| s < 1.0).collect();
+        ScreenOutcome { rejected, scores, delta: ball.radius }
+    }
+
+    /// Screen at λ from a primal iterate (the path coordinator's static
+    /// per-λ use: the warm-start vector certifies the ball).
+    pub fn screen_primal(&self, ds: &Dataset, lam: f64, w: &[f64]) -> ScreenOutcome {
+        self.screen(ds, &GapBall::from_primal(ds, lam, w))
+    }
+}
+
+/// One dynamic screen inside a solver: given the (obj, gap, θ_feasible)
+/// triple the solver just evaluated for its stopping test, return the
+/// locally-kept feature indices of the *current* (possibly already
+/// compacted) problem, or `None` when the ball rejects nothing. `b2` must
+/// be the current problem's column-norm table.
+pub fn dynamic_keep(
+    ds: &Dataset,
+    b2: &[f64],
+    theta: &Stacked,
+    gap: f64,
+    lam: f64,
+) -> Option<Vec<usize>> {
+    let radius = certified_radius(gap, lam);
+    let scores = ball_scores(ds, b2, theta, radius);
+    let keep: Vec<usize> = scores
+        .iter()
+        .enumerate()
+        .filter_map(|(l, &s)| (s >= 1.0).then_some(l))
+        .collect();
+    if keep.len() < ds.d {
+        Some(keep)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::solver::{fista, SolveOptions};
+
+    fn problem(seed: u64) -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 12, d: 60, seed, ..Default::default() }).0
+    }
+
+    #[test]
+    fn gap_ball_contains_dual_optimum_at_any_tolerance() {
+        let ds = problem(31);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.35 * lmax;
+        let tight = fista(&ds, lam, None, &SolveOptions::tight());
+        let theta_star = {
+            let z = ops::stacked_scale(&ops::residual(&ds, &tight.w), -1.0 / lam);
+            ops::dual_feasible(&ds, z).0
+        };
+        for tol in [1e-1, 1e-2, 1e-4] {
+            let rough = fista(&ds, lam, None, &SolveOptions { tol, ..Default::default() });
+            let ball = GapBall::from_primal(&ds, lam, &rough.w);
+            assert!(ball.gap >= -1e-12, "weak duality violated: {}", ball.gap);
+            assert_eq!(ball.radius, certified_radius(ball.gap, lam));
+            let diff = ops::stacked_scale_add(&theta_star, -1.0, &ball.center);
+            let dist = ops::stacked_sqnorm(&diff).sqrt();
+            assert!(
+                dist <= ball.radius + 1e-9,
+                "tol {tol}: dist {dist} > radius {}",
+                ball.radius
+            );
+        }
+    }
+
+    #[test]
+    fn gap_screen_is_safe_from_loose_iterates() {
+        let ds = problem(32);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let rough = fista(&ds, lam, None, &SolveOptions { tol: 1e-3, ..Default::default() });
+        let out = GapScreener::new(&ds).screen_primal(&ds, lam, &rough.w);
+        let tight = fista(&ds, lam, None, &SolveOptions::tight());
+        let rn = tight.row_norms(ds.t());
+        for (l, (&rej, &norm)) in out.rejected.iter().zip(&rn).enumerate() {
+            assert!(!rej || norm < 1e-8, "UNSAFE gap rejection of row {l} (norm {norm})");
+        }
+        assert!(out.num_rejected() > 0, "gap screen rejected nothing at tol 1e-3");
+    }
+
+    #[test]
+    fn radius_shrinks_with_gap_and_rejection_grows() {
+        let ds = problem(33);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let sc = GapScreener::new(&ds);
+        let mut radii = Vec::new();
+        let mut rejected = Vec::new();
+        for tol in [1e-1, 1e-3, 1e-6] {
+            let sol = fista(&ds, lam, None, &SolveOptions { tol, ..Default::default() });
+            let ball = GapBall::from_primal(&ds, lam, &sol.w);
+            rejected.push(sc.screen(&ds, &ball).num_rejected());
+            radii.push(ball.radius);
+        }
+        assert!(radii[2] <= radii[0] + 1e-12, "radius did not shrink: {radii:?}");
+        assert!(rejected[2] >= rejected[0], "tighter gap screened less: {rejected:?}");
+        assert!(rejected[2] > 0, "tight gap ball rejected nothing");
+    }
+
+    #[test]
+    fn dynamic_keep_preserves_active_set() {
+        let ds = problem(34);
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.3 * lmax;
+        let rough = fista(&ds, lam, None, &SolveOptions { tol: 1e-4, ..Default::default() });
+        let (obj, gap, theta) = ops::duality_gap(&ds, &rough.w, lam);
+        assert!(obj.is_finite() && gap >= -1e-12);
+        let b2 = ds.col_sqnorms();
+        let keep = dynamic_keep(&ds, &b2, &theta, gap, lam).expect("should reject something");
+        let tight = fista(&ds, lam, None, &SolveOptions::tight());
+        for &l in &tight.active_set(ds.t(), 1e-8) {
+            assert!(keep.contains(&l), "dynamic screen dropped active row {l}");
+        }
+    }
+
+    #[test]
+    fn certified_radius_handles_degenerate_gaps() {
+        assert_eq!(certified_radius(0.0, 2.0), 0.0);
+        assert_eq!(certified_radius(-1e-9, 2.0), 0.0); // fp noise clamps to 0
+        assert!((certified_radius(2.0, 2.0) - 1.0).abs() < 1e-15);
+    }
+}

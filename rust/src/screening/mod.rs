@@ -1,15 +1,31 @@
-//! The DPC safe screening rule (the paper's contribution) and its
-//! ablations.
+//! The DPC safe screening rule (the paper's contribution), its gap-safe
+//! extension, and its ablations.
 //!
 //! * [`secular`] — the per-feature QP1QC solve (Theorem 7 / Gay 1981);
-//! * [`dpc`] — Theorem 5 ball + Theorem 8 / Corollary 9 rule;
+//! * [`dpc`] — Theorem 5 ball + Theorem 8 / Corollary 9 rule, with the
+//!   gap-inflated cut that keeps the sequential rule safe when the λ0
+//!   reference comes from a finite-tolerance solve (DESIGN.md §9);
+//! * [`gap`] — GAP-safe balls certified by the duality gap of any
+//!   primal/dual feasible pair (Ndiaye et al.), usable per-λ and
+//!   *dynamically inside the solver loop* as the gap shrinks;
 //! * [`bounds`] — cheaper-but-looser score bounds (ablation ABL1);
 //! * [`safety`] — post-hoc verifier that no active feature was rejected.
+//!
+//! Inexact-reference policy (DESIGN.md §9): every ball the exact engine
+//! screens with is certified — either closed-form (λ_max) or inflated by a
+//! duality-gap bound on the reference error. There is deliberately **no**
+//! `margin` knob on the exact engine: a margin is a guess, a gap is a
+//! certificate.
 
 pub mod bounds;
 pub mod dpc;
+pub mod gap;
 pub mod safety;
 pub mod secular;
+
+use crate::data::Dataset;
+use crate::ops::Stacked;
+use crate::util::parallel_chunks;
 
 /// What a screener returns for one λ step.
 #[derive(Debug, Clone)]
@@ -34,4 +50,28 @@ impl ScreenOutcome {
     pub fn num_rejected(&self) -> usize {
         self.rejected.iter().filter(|&&r| r).count()
     }
+}
+
+/// Theorem-7 scores s_l = max g_l over the ball (o, Δ) for all features —
+/// the sweep shared by the DPC and GAP-safe screeners. Parallel over
+/// feature chunks, gated on the dataset's *stored* sweep work so sparse
+/// CSC problems are not threaded as if they were dense. `b2` is the cached
+/// (d × T) row-major column-squared-norm table.
+pub fn ball_scores(ds: &Dataset, b2: &[f64], o: &Stacked, delta: f64) -> Vec<f64> {
+    let t_count = ds.t();
+    debug_assert_eq!(b2.len(), ds.d * t_count);
+    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
+    let out = parallel_chunks(ds.d, workers, |_, start, end| {
+        let mut part = vec![0.0f64; end - start];
+        let mut a = vec![0.0f64; t_count];
+        for l in start..end {
+            for (ti, task) in ds.tasks.iter().enumerate() {
+                a[ti] = task.col(l).dot_mixed(&o[ti]);
+            }
+            let b2l = &b2[l * t_count..(l + 1) * t_count];
+            part[l - start] = secular::qp1qc_max(&a, b2l, delta).s;
+        }
+        part
+    });
+    out.concat()
 }

@@ -12,10 +12,16 @@
 //! This is an algorithm *independent* of FISTA (different trajectory,
 //! different fixed-point characterization), which makes agreement between
 //! the two a strong correctness check on both.
+//!
+//! Dynamic GAP-safe screening (`SolveOptions::dynamic_every`, DESIGN.md
+//! §9): every K sweeps the live duality-gap ball certifies rows inactive;
+//! their (possibly nonzero) iterate mass is returned to the residual and
+//! the working set is compacted, so later sweeps skip them entirely.
 
-use super::{SolveOptions, SolveResult};
+use super::{DynamicSet, SolveOptions, SolveResult};
 use crate::data::Dataset;
 use crate::ops;
+use crate::screening::gap;
 
 /// Solve the row secular equation; returns ν = ‖v‖ (0 if ‖c‖ <= lam).
 fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
@@ -71,12 +77,15 @@ fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
 /// Cyclic BCD; `w0` warm start optional.
 pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> SolveResult {
     let t_count = ds.t();
-    let d = ds.d;
+    let d_full = ds.d;
     let mut w: Vec<f64> = match w0 {
         Some(w0) => w0.to_vec(),
-        None => vec![0.0; d * t_count],
+        None => vec![0.0; d_full * t_count],
     };
-    let b2_all = ds.col_sqnorms(); // (d x T)
+    let mut b2_all = ds.col_sqnorms(); // (d x T)
+
+    // dynamic-screening working set (see module docs)
+    let mut ws = DynamicSet::new(d_full, t_count);
 
     // residuals r_t = y_t - X_t w_t
     let mut r: ops::Stacked = {
@@ -95,47 +104,91 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
     let mut gap = f64::INFINITY;
     let mut sweeps = 0usize;
     let mut converged = false;
+    let mut col_ops = 0usize;
 
     for sweep in 1..=opts.max_iters {
         sweeps = sweep;
-        let mut max_change = 0.0f64;
-        for l in 0..d {
-            let b2 = &b2_all[l * t_count..(l + 1) * t_count];
-            // c_t = <x_l, r_t> + b2_t * w_lt   (residual with row l removed)
-            for ti in 0..t_count {
-                c[ti] = ds.tasks[ti].col(l).dot_mixed(&r[ti]) + b2[ti] * w[l * t_count + ti];
+        let mut shrink: Option<(Dataset, Vec<usize>)> = None;
+        {
+            let dsc = ws.live(ds);
+            let d = dsc.d;
+            col_ops += 2 * d; // one sweep = a dot + an axpy per live column
+            let mut max_change = 0.0f64;
+            for l in 0..d {
+                let b2 = &b2_all[l * t_count..(l + 1) * t_count];
+                // c_t = <x_l, r_t> + b2_t * w_lt   (residual with row l removed)
+                for ti in 0..t_count {
+                    c[ti] =
+                        dsc.tasks[ti].col(l).dot_mixed(&r[ti]) + b2[ti] * w[l * t_count + ti];
+                }
+                let nu = row_nu(&c, b2, lam);
+                for ti in 0..t_count {
+                    let old = w[l * t_count + ti];
+                    let new = if nu == 0.0 { 0.0 } else { c[ti] * nu / (b2[ti] * nu + lam) };
+                    let delta = new - old;
+                    if delta != 0.0 {
+                        dsc.tasks[ti].col(l).axpy_into(-delta, &mut r[ti]);
+                        w[l * t_count + ti] = new;
+                        max_change = max_change.max(delta.abs());
+                    }
+                }
             }
-            let nu = row_nu(&c, b2, lam);
-            for ti in 0..t_count {
-                let old = w[l * t_count + ti];
-                let new = if nu == 0.0 { 0.0 } else { c[ti] * nu / (b2[ti] * nu + lam) };
-                let delta = new - old;
-                if delta != 0.0 {
-                    ds.tasks[ti].col(l).axpy_into(-delta, &mut r[ti]);
-                    w[l * t_count + ti] = new;
-                    max_change = max_change.max(delta.abs());
+
+            let due_check = sweep % opts.check_every.clamp(1, 5) == 0 || max_change == 0.0;
+            let due_screen = opts.dynamic_every > 0 && sweep % opts.dynamic_every == 0 && d > 1;
+            if due_check || due_screen {
+                // the gap evaluation costs a forward pass + a corr sweep
+                col_ops += 2 * d;
+                let (o, gp, theta) = ops::duality_gap(dsc, &w, lam);
+                obj = o;
+                gap = gp;
+                if gap <= opts.tol * obj.abs().max(1.0) {
+                    converged = true;
+                } else if due_screen {
+                    col_ops += d; // and so is the score sweep
+                    if let Some(kept) = gap::dynamic_keep(dsc, &b2_all, &theta, gap, lam) {
+                        if !kept.is_empty() {
+                            // return the dropped rows' iterate mass to the
+                            // residual before they leave the working set
+                            let mut is_kept = vec![false; d];
+                            for &j in &kept {
+                                is_kept[j] = true;
+                            }
+                            for (j, &kj) in is_kept.iter().enumerate() {
+                                if kj {
+                                    continue;
+                                }
+                                for ti in 0..t_count {
+                                    let wj = w[j * t_count + ti];
+                                    if wj != 0.0 {
+                                        dsc.tasks[ti].col(j).axpy_into(wj, &mut r[ti]);
+                                    }
+                                }
+                            }
+                            shrink = Some((dsc.restrict(&kept), kept));
+                        }
+                    }
                 }
             }
         }
-
-        if sweep % opts.check_every.clamp(1, 5) == 0 || max_change == 0.0 {
-            let (o, gp, _) = ops::duality_gap(ds, &w, lam);
-            obj = o;
-            gap = gp;
-            if gap <= opts.tol * obj.abs().max(1.0) {
-                converged = true;
-                break;
-            }
+        if converged {
+            break;
+        }
+        if let Some((ds_small, kept)) = shrink {
+            w = ws.compact_rows(&w, &kept);
+            b2_all = ws.compact_rows(&b2_all, &kept);
+            ws.shrink_to(ds_small, kept);
         }
     }
 
     if !obj.is_finite() {
-        let (o, gp, _) = ops::duality_gap(ds, &w, lam);
+        let (o, gp, _) = ops::duality_gap(ws.live(ds), &w, lam);
         obj = o;
         gap = gp;
     }
 
-    SolveResult { w, obj, gap, iters: sweeps, converged, lipschitz: 0.0 }
+    let w = ws.scatter(w);
+    SolveResult { w, obj, gap, iters: sweeps, converged, lipschitz: 0.0, col_ops }
 }
 
 #[cfg(test)]
@@ -203,5 +256,30 @@ mod tests {
         let (lmax, _, _) = ops::lambda_max(&ds);
         let res = bcd(&ds, lmax * 1.01, None, &SolveOptions::default());
         assert!(res.w.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bcd_dynamic_matches_static_with_fewer_col_ops() {
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 14, d: 200, seed: 9, ..Default::default() }).0;
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let stat = bcd(&ds, lam, None, &SolveOptions::default());
+        let dyn_res = bcd(&ds, lam, None, &SolveOptions { dynamic_every: 3, ..Default::default() });
+        assert!(dyn_res.converged, "dynamic BCD did not converge");
+        assert_eq!(dyn_res.w.len(), ds.d * ds.t());
+        let maxdiff = stat
+            .w
+            .iter()
+            .zip(&dyn_res.w)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(maxdiff < 1e-5, "dynamic BCD diverged by {maxdiff}");
+        assert!(
+            dyn_res.col_ops < stat.col_ops,
+            "dynamic BCD saved nothing: {} vs {}",
+            dyn_res.col_ops,
+            stat.col_ops
+        );
     }
 }

@@ -5,10 +5,20 @@
 //! blockdiag(X_tᵀX_t), so its Lipschitz constant is the max over tasks.
 //! Stopping: duality gap against the scaled-residual feasible point
 //! (exactly the certificate DPC's sequential rule consumes).
+//!
+//! Dynamic GAP-safe screening (`SolveOptions::dynamic_every`, DESIGN.md
+//! §9): every K iterations the solver re-screens the live problem against
+//! the gap ball of its own stopping certificate and *compacts the working
+//! set mid-solve* — rows certified inactive stop paying for sweeps
+//! immediately instead of at the next λ. Dropping rows only shrinks the
+//! spectrum, so the original step size stays valid; the momentum sequence
+//! restarts at each compaction and rejected rows are restored as zeros on
+//! exit.
 
-use super::{prox::prox21_inplace, SolveOptions, SolveResult};
+use super::{prox::prox21_inplace, DynamicSet, SolveOptions, SolveResult};
 use crate::data::Dataset;
 use crate::ops;
+use crate::screening::gap;
 use crate::util::Pcg64;
 
 /// L = max_t σ_max(X_t)² via per-task power iteration (f64 accumulation,
@@ -48,76 +58,110 @@ pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
 /// Solve problem (1) at `lam`, warm-started from `w0` if given.
 pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> SolveResult {
     let t_count = ds.t();
-    let dt = ds.d * t_count;
+    let d_full = ds.d;
     let lcap = lipschitz(ds, opts.power_iters).max(1e-12);
     let step = 1.0 / lcap;
     let kappa = lam / lcap;
 
     let mut w: Vec<f64> = match w0 {
         Some(w0) => {
-            assert_eq!(w0.len(), dt, "warm start has wrong shape");
+            assert_eq!(w0.len(), d_full * t_count, "warm start has wrong shape");
             w0.to_vec()
         }
-        None => vec![0.0; dt],
+        None => vec![0.0; d_full * t_count],
     };
     let mut v = w.clone();
     let mut t = 1.0f64;
+
+    let mut ws = DynamicSet::new(d_full, t_count);
+    let mut b2: Option<Vec<f64>> = None; // live col_sqnorms, built lazily
 
     let mut obj = f64::INFINITY;
     let mut gap = f64::INFINITY;
     let mut iters = 0usize;
     let mut converged = false;
+    let mut col_ops = 0usize;
 
     for it in 1..=opts.max_iters {
         iters = it;
-        // gradient at the momentum point V
-        let r = ops::residual(ds, &v);
-        let g = ops::task_corr(ds, &r); // (d x T)
-        // W_new = prox(V - G/L)
-        let mut w_new = vec![0.0f64; dt];
-        for i in 0..dt {
-            w_new[i] = v[i] - step * g[i];
-        }
-        prox21_inplace(&mut w_new, t_count, kappa);
-
-        // O'Donoghue–Candès adaptive restart: when the momentum direction
-        // opposes the latest step (⟨v − w_new, w_new − w⟩ > 0), drop the
-        // momentum. Cuts small-λ iteration counts by ~2-5x (EXPERIMENTS.md
-        // §Perf entry 2).
-        let mut osc = 0.0f64;
-        for i in 0..dt {
-            osc += (v[i] - w_new[i]) * (w_new[i] - w[i]);
-        }
-        if osc > 0.0 {
-            t = 1.0;
-        }
-
-        let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
-        let momentum = (t - 1.0) / t_new;
-        for i in 0..dt {
-            v[i] = w_new[i] + momentum * (w_new[i] - w[i]);
-        }
-        w = w_new;
-        t = t_new;
-
-        if it % opts.check_every == 0 || it == opts.max_iters {
-            let (o, gp, _) = ops::duality_gap(ds, &w, lam);
-            obj = o;
-            gap = gp;
-            if gap <= opts.tol * obj.abs().max(1.0) {
-                converged = true;
-                break;
+        let mut shrink: Option<(Dataset, Vec<usize>)> = None;
+        {
+            let dsc = ws.live(ds);
+            let dtc = dsc.d * t_count;
+            col_ops += 2 * dsc.d; // one iteration = forward pass + corr sweep
+            // gradient at the momentum point V
+            let r = ops::residual(dsc, &v);
+            let g = ops::task_corr(dsc, &r); // (d x T)
+            // W_new = prox(V - G/L)
+            let mut w_new = vec![0.0f64; dtc];
+            for i in 0..dtc {
+                w_new[i] = v[i] - step * g[i];
             }
+            prox21_inplace(&mut w_new, t_count, kappa);
+
+            // O'Donoghue–Candès adaptive restart: when the momentum
+            // direction opposes the latest step (⟨v − w_new, w_new − w⟩ >
+            // 0), drop the momentum. Cuts small-λ iteration counts by
+            // ~2-5x (EXPERIMENTS.md §Perf entry 2).
+            let mut osc = 0.0f64;
+            for i in 0..dtc {
+                osc += (v[i] - w_new[i]) * (w_new[i] - w[i]);
+            }
+            if osc > 0.0 {
+                t = 1.0;
+            }
+
+            let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+            let momentum = (t - 1.0) / t_new;
+            for i in 0..dtc {
+                v[i] = w_new[i] + momentum * (w_new[i] - w[i]);
+            }
+            w = w_new;
+            t = t_new;
+
+            let due_check = it % opts.check_every == 0 || it == opts.max_iters;
+            let due_screen = opts.dynamic_every > 0 && it % opts.dynamic_every == 0 && dsc.d > 1;
+            if due_check || due_screen {
+                // the gap evaluation costs a forward pass + a corr sweep
+                col_ops += 2 * dsc.d;
+                let (o, gp, theta) = ops::duality_gap(dsc, &w, lam);
+                obj = o;
+                gap = gp;
+                if gap <= opts.tol * obj.abs().max(1.0) {
+                    converged = true;
+                } else if due_screen {
+                    col_ops += dsc.d; // and so is the score sweep
+                    let b2c = b2.get_or_insert_with(|| dsc.col_sqnorms());
+                    if let Some(kept) = gap::dynamic_keep(dsc, b2c, &theta, gap, lam) {
+                        if !kept.is_empty() {
+                            shrink = Some((dsc.restrict(&kept), kept));
+                        }
+                    }
+                }
+            }
+        }
+        if converged {
+            break;
+        }
+        if let Some((ds_small, kept)) = shrink {
+            w = ws.compact_rows(&w, &kept);
+            v = w.clone(); // momentum restart on the compacted problem
+            t = 1.0;
+            if let Some(b2v) = b2.as_mut() {
+                *b2v = ws.compact_rows(b2v, &kept);
+            }
+            ws.shrink_to(ds_small, kept);
         }
     }
 
     if !obj.is_finite() {
-        let (o, gp, _) = ops::duality_gap(ds, &w, lam);
+        let (o, gp, _) = ops::duality_gap(ws.live(ds), &w, lam);
         obj = o;
         gap = gp;
     }
 
-    SolveResult { w, obj, gap, iters, converged, lipschitz: lcap }
+    let w = ws.scatter(w);
+    SolveResult { w, obj, gap, iters, converged, lipschitz: lcap, col_ops }
 }
 
 #[cfg(test)]
@@ -194,5 +238,60 @@ mod tests {
         let res = fista(&ds, lam, None, &SolveOptions::default());
         let direct = ops::primal_obj(&ds, &res.w, lam);
         assert!((res.obj - direct).abs() < 1e-9 * direct.max(1.0));
+    }
+
+    #[test]
+    fn dynamic_screening_matches_static_with_fewer_col_ops() {
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 14, d: 200, seed: 9, ..Default::default() }).0;
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let stat = fista(&ds, lam, None, &SolveOptions::default());
+        let dynamic_opts = SolveOptions { dynamic_every: 10, ..Default::default() };
+        let dyn_res = fista(&ds, lam, None, &dynamic_opts);
+        assert!(dyn_res.converged, "dynamic run did not converge");
+        assert_eq!(dyn_res.w.len(), ds.d * ds.t(), "w must come back full-size");
+        let maxdiff = stat
+            .w
+            .iter()
+            .zip(&dyn_res.w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(maxdiff < 1e-5, "dynamic solution diverged by {maxdiff}");
+        assert!(
+            dyn_res.col_ops < stat.col_ops,
+            "dynamic screening saved nothing: {} vs {}",
+            dyn_res.col_ops,
+            stat.col_ops
+        );
+    }
+
+    #[test]
+    fn dynamic_screening_safe_at_loose_tolerance() {
+        // the gap ball is valid at every iterate, so even a loose dynamic
+        // run must keep every truly active row
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 14, d: 120, seed: 10, ..Default::default() }).0;
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.35 * lmax;
+        let loose = SolveOptions { tol: 1e-3, dynamic_every: 5, ..Default::default() };
+        let dyn_res = fista(&ds, lam, None, &loose);
+        let stat = fista(&ds, lam, None, &SolveOptions { dynamic_every: 0, ..loose.clone() });
+        // unsafe screening would freeze the objective above the static run
+        assert!(
+            dyn_res.obj <= stat.obj * (1.0 + 5e-3),
+            "dynamic obj {} stuck above static {}",
+            dyn_res.obj,
+            stat.obj
+        );
+        // clearly-active rows (by a tight reference) must survive
+        let tight = fista(&ds, lam, None, &SolveOptions::tight());
+        let tight_norms = tight.row_norms(ds.t());
+        let dyn_norms = dyn_res.row_norms(ds.t());
+        for (l, (&tn, &dn)) in tight_norms.iter().zip(&dyn_norms).enumerate() {
+            if tn > 1e-1 {
+                assert!(dn > 0.0, "dynamic screening zeroed active row {l} (norm {tn})");
+            }
+        }
     }
 }

@@ -16,6 +16,63 @@ pub mod prox;
 pub use bcd::bcd;
 pub use fista::{fista, lipschitz};
 
+use crate::data::Dataset;
+
+/// Working-set bookkeeping for dynamic GAP-safe screening (DESIGN.md §9),
+/// shared by both solvers: the live problem is either the caller's full
+/// dataset or a compacted copy, and `keep` maps compacted rows back to the
+/// full feature space.
+pub(crate) struct DynamicSet {
+    d_full: usize,
+    t_count: usize,
+    owned: Option<Dataset>,
+    keep: Vec<usize>,
+}
+
+impl DynamicSet {
+    pub(crate) fn new(d_full: usize, t_count: usize) -> Self {
+        DynamicSet { d_full, t_count, owned: None, keep: Vec::new() }
+    }
+
+    /// The dataset iterations should run on.
+    pub(crate) fn live<'a>(&'a self, full: &'a Dataset) -> &'a Dataset {
+        self.owned.as_ref().unwrap_or(full)
+    }
+
+    /// Copy the kept rows of a (d_live × T) row-major buffer.
+    pub(crate) fn compact_rows(&self, buf: &[f64], kept: &[usize]) -> Vec<f64> {
+        let t = self.t_count;
+        let mut out = Vec::with_capacity(kept.len() * t);
+        for &j in kept {
+            out.extend_from_slice(&buf[j * t..(j + 1) * t]);
+        }
+        out
+    }
+
+    /// Adopt a compacted dataset, composing the row map.
+    pub(crate) fn shrink_to(&mut self, ds_small: Dataset, kept: Vec<usize>) {
+        self.keep = match self.owned.is_some() {
+            true => kept.iter().map(|&j| self.keep[j]).collect(),
+            false => kept,
+        };
+        self.owned = Some(ds_small);
+    }
+
+    /// Scatter the live solution back to full size (rows dropped along the
+    /// way are certified zero at the optimum).
+    pub(crate) fn scatter(&self, w: Vec<f64>) -> Vec<f64> {
+        if self.owned.is_none() {
+            return w;
+        }
+        let t = self.t_count;
+        let mut full = vec![0.0f64; self.d_full * t];
+        for (j, &l) in self.keep.iter().enumerate() {
+            full[l * t..(l + 1) * t].copy_from_slice(&w[j * t..(j + 1) * t]);
+        }
+        full
+    }
+}
+
 /// Options shared by the solvers.
 #[derive(Debug, Clone)]
 pub struct SolveOptions {
@@ -27,11 +84,23 @@ pub struct SolveOptions {
     pub check_every: usize,
     /// power-iteration count for the Lipschitz estimate
     pub power_iters: usize,
+    /// GAP-safe *dynamic* screening: every this many epochs (FISTA
+    /// iterations / BCD sweeps) re-screen the live problem against the
+    /// current duality-gap ball and compact the working set mid-solve;
+    /// rejected rows are certified zero at the optimum and restored as
+    /// zeros on exit. 0 disables (DESIGN.md §9).
+    pub dynamic_every: usize,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
-        SolveOptions { max_iters: 20_000, tol: 1e-9, check_every: 25, power_iters: 60 }
+        SolveOptions {
+            max_iters: 20_000,
+            tol: 1e-9,
+            check_every: 25,
+            power_iters: 60,
+            dynamic_every: 0,
+        }
     }
 }
 
@@ -50,7 +119,8 @@ impl SolveOptions {
 /// Solver output.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
-    /// row-major (d x T)
+    /// row-major (d x T) — always full problem size, with zeros on any
+    /// rows dynamic screening removed mid-solve
     pub w: Vec<f64>,
     pub obj: f64,
     pub gap: f64,
@@ -58,6 +128,12 @@ pub struct SolveResult {
     pub converged: bool,
     /// estimated Lipschitz constant (FISTA only; 0 for BCD)
     pub lipschitz: f64,
+    /// total column-sweep operations, uniformly weighted: every epoch is
+    /// charged 2× the live feature count (FISTA: forward + corr sweep;
+    /// BCD: dot + axpy per column), and so is each duality-gap evaluation;
+    /// a dynamic score sweep adds 1×. The work metric dynamic screening
+    /// must shrink *net of its own overhead* (BENCH_gap)
+    pub col_ops: usize,
 }
 
 impl SolveResult {

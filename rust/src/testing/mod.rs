@@ -42,7 +42,8 @@ where
         match outcome {
             Ok(Ok(())) => {}
             Ok(Err(msg)) => panic!(
-                "property '{name}' failed on case {case} (replay: MTFL_PROP_SEED={} MTFL_PROP_CASES=1): {msg}",
+                "property '{name}' failed on case {case} \
+                 (replay: MTFL_PROP_SEED={} MTFL_PROP_CASES=1): {msg}",
                 cfg.seed.wrapping_add(case as u64)
             ),
             Err(p) => panic!(

@@ -56,15 +56,21 @@ fn tag(level: Level) -> &'static str {
 
 #[macro_export]
 macro_rules! info {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*))
+    };
 }
 #[macro_export]
 macro_rules! warn_ {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*))
+    };
 }
 #[macro_export]
 macro_rules! debug {
-    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) };
+    ($($t:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*))
+    };
 }
 
 #[cfg(test)]

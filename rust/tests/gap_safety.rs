@@ -1,0 +1,136 @@
+//! Safety under solver inexactness — the regression suite for the
+//! gap-certified screening subsystem (DESIGN.md §9).
+//!
+//! The pre-fix hole: `DualRef::from_solution` treated a finite-tolerance
+//! solve as the exact dual optimum, so at loose tolerance the Theorem-5
+//! ball could exclude the true θ*(λ) and "safe" screening could reject an
+//! active feature. These tests run the path at tol 1e-3 — far looser than
+//! anything the old rule could survive — with the post-hoc verifier armed
+//! for every screener kind, and re-certify the per-λ objectives against
+//! independent tight solves.
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use mtfl_dpc::data::synthetic::{synthetic1, synthetic2, SynthOptions};
+use mtfl_dpc::screening::dpc::{DpcScreener, DualRef};
+use mtfl_dpc::solver::{fista, SolveOptions};
+
+fn loose_opts(k: ScreenerKind, dynamic_every: usize) -> PathOptions {
+    PathOptions {
+        ratios: lambda_grid(10, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-3, dynamic_every, ..Default::default() },
+        screener: k,
+        verify_safety: true,
+        ..Default::default()
+    }
+}
+
+/// Run a loose-tolerance path with the verifier armed, then certify every
+/// third λ against an independent tight solve: a wrongly-screened path
+/// converges (its restricted gap still closes) but to a strictly worse
+/// objective, which this catches.
+fn assert_loose_path_safe(kind: ScreenerKind, dynamic_every: usize) {
+    let (ds, _) =
+        synthetic1(&SynthOptions { t: 3, n: 12, d: 80, seed: 77, ..Default::default() });
+    let run = run_path(&ds, &loose_opts(kind, dynamic_every), &EngineKind::Exact)
+        .unwrap_or_else(|e| panic!("{kind:?} loose path failed the safety verifier: {e}"));
+    for rec in run.records.iter().skip(1).step_by(3) {
+        let tight = fista(&ds, rec.lam, None, &SolveOptions::tight());
+        assert!(
+            rec.obj <= tight.obj * (1.0 + 5e-3) + 1e-9,
+            "{kind:?}: ratio {} objective {} stuck above the true optimum {}",
+            rec.ratio,
+            rec.obj,
+            tight.obj
+        );
+    }
+}
+
+#[test]
+fn loose_dpc_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::Dpc, 0);
+}
+
+#[test]
+fn loose_gapsafe_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::GapSafe, 0);
+}
+
+#[test]
+fn loose_cs_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::DpcCs, 0);
+}
+
+#[test]
+fn loose_oneshot_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::DpcOneShot, 0);
+}
+
+#[test]
+fn loose_unscreened_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::None, 0);
+}
+
+#[test]
+fn loose_dynamic_dpc_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::Dpc, 5);
+}
+
+#[test]
+fn loose_dynamic_gapsafe_path_is_safe() {
+    assert_loose_path_safe(ScreenerKind::GapSafe, 5);
+}
+
+#[test]
+fn loose_screened_paths_match_unscreened() {
+    // the acceptance shape: screened vs unscreened objective parity at
+    // tol 1e-3 for every screener kind (both sides carry ≤ tol·obj slack)
+    let (ds, _) =
+        synthetic2(&SynthOptions { t: 3, n: 12, d: 80, seed: 78, ..Default::default() });
+    let baseline = run_path(&ds, &loose_opts(ScreenerKind::None, 0), &EngineKind::Exact).unwrap();
+    for kind in [
+        ScreenerKind::Dpc,
+        ScreenerKind::GapSafe,
+        ScreenerKind::DpcCs,
+        ScreenerKind::DpcOneShot,
+    ] {
+        let run = run_path(&ds, &loose_opts(kind, 0), &EngineKind::Exact).unwrap();
+        for (a, b) in run.records.iter().zip(&baseline.records) {
+            assert!(
+                (a.obj - b.obj).abs() <= 3e-3 * b.obj.abs().max(1.0),
+                "{kind:?}: obj mismatch at ratio {}: {} vs {}",
+                a.ratio,
+                a.obj,
+                b.obj
+            );
+        }
+    }
+}
+
+#[test]
+fn sequential_screen_from_loose_reference_keeps_active_rows() {
+    // the exact pre-fix failure mode, certified row-by-row: build the
+    // sequential reference from a deliberately loose solve, screen nearby
+    // λ, and check every rejection against a tight solve's active set
+    let (ds, _) =
+        synthetic2(&SynthOptions { t: 3, n: 12, d: 100, seed: 79, ..Default::default() });
+    let (_, lmax) = DualRef::at_lambda_max(&ds);
+    let lam0 = 0.5 * lmax;
+    let loose = SolveOptions { tol: 1e-3, check_every: 1, ..Default::default() };
+    let sol0 = fista(&ds, lam0, None, &loose);
+    let dref = DualRef::from_solution(&ds, lam0, &sol0.w);
+    let screener = DpcScreener::new(&ds);
+    for ratio_of_lam0 in [0.9999, 0.99, 0.9, 0.7] {
+        let lam = ratio_of_lam0 * lam0;
+        let out = screener.screen(&ds, &dref, lam);
+        let tight = fista(&ds, lam, None, &SolveOptions::tight());
+        let rn = tight.row_norms(ds.t());
+        for (l, (&rej, &norm)) in out.rejected.iter().zip(&rn).enumerate() {
+            assert!(
+                !rej || norm < 1e-8,
+                "UNSAFE: loose-reference screen rejected active row {l} \
+                 (norm {norm}) at {ratio_of_lam0}·lam0"
+            );
+        }
+    }
+}

@@ -38,7 +38,8 @@ fn ground_truth_support_is_recoverable_at_moderate_lambda() {
         ..Default::default()
     });
     let (lmax, _, _) = ops::lambda_max(&ds);
-    let sol = mtfl_dpc::solver::fista(&ds, 0.05 * lmax, None, &mtfl_dpc::solver::SolveOptions::default());
+    let sol =
+        mtfl_dpc::solver::fista(&ds, 0.05 * lmax, None, &mtfl_dpc::solver::SolveOptions::default());
     let active = sol.active_set(ds.t(), 1e-6);
     let hits = gt.active.iter().filter(|l| active.contains(l)).count();
     assert!(
@@ -50,7 +51,8 @@ fn ground_truth_support_is_recoverable_at_moderate_lambda() {
 
 #[test]
 fn snpsim_extreme_aspect_ratio() {
-    let (ds, _) = snpsim(&SnpSimOptions { tasks: 2, n: 10, d: 5000, causal: 10, ..Default::default() });
+    let (ds, _) =
+        snpsim(&SnpSimOptions { tasks: 2, n: 10, d: 5000, causal: 10, ..Default::default() });
     assert_eq!(ds.d, 5000);
     assert_eq!(ds.total_n(), 20); // d/N = 250: the DPC sweet spot
     // lambda_max must still be computable and positive
@@ -60,7 +62,13 @@ fn snpsim_extreme_aspect_ratio() {
 
 #[test]
 fn textsim_pruning_then_restrict_is_consistent() {
-    let ds = textsim(&TextSimOptions { categories: 3, n_pos: 8, d: 3000, doc_len: 60, ..Default::default() });
+    let ds = textsim(&TextSimOptions {
+        categories: 3,
+        n_pos: 8,
+        d: 3000,
+        doc_len: 60,
+        ..Default::default()
+    });
     let kept = nonzero_features(&ds);
     let pruned = ds.restrict(&kept);
     pruned.validate().unwrap();

@@ -59,7 +59,13 @@ fn synthetic2_path_equivalence() {
 
 #[test]
 fn textsim_path_equivalence() {
-    let ds = textsim(&TextSimOptions { categories: 2, n_pos: 6, d: 80, doc_len: 60, ..Default::default() });
+    let ds = textsim(&TextSimOptions {
+        categories: 2,
+        n_pos: 6,
+        d: 80,
+        doc_len: 60,
+        ..Default::default()
+    });
     check_equivalence(&ds, 6);
 }
 

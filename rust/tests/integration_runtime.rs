@@ -157,11 +157,11 @@ fn aot_path_end_to_end_matches_exact_path() {
     let engine = AotEngine::new(&dir).unwrap();
     let ds = quick_dataset(5);
 
-    let mk_opts = |margin: f64| PathOptions {
+    let mk_opts = |aot_margin: f64| PathOptions {
         ratios: lambda_grid(8, 1.0, 0.05),
         solve: SolveOptions { tol: 1e-6, max_iters: 20_000, ..Default::default() },
         screener: ScreenerKind::Dpc,
-        margin,
+        aot_margin,
         ..Default::default()
     };
     let aot = run_path(&ds, &mk_opts(1e-3), &EngineKind::Aot(&engine)).unwrap();

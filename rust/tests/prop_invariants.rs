@@ -93,7 +93,12 @@ fn prop_dpc_safety_random_problems() {
         let sol = fista(&ds, lam, None, &SolveOptions::tight());
         let report = safety::verify(&ds, &sol.w, lam, &out.rejected, 1e-7);
         if !report.is_safe() {
-            return Err(format!("violations {:?} (d={}, lam/lmax={})", report.violations, ds.d, lam / lmax));
+            return Err(format!(
+                "violations {:?} (d={}, lam/lmax={})",
+                report.violations,
+                ds.d,
+                lam / lmax
+            ));
         }
         Ok(())
     });
