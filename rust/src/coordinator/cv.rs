@@ -1,19 +1,26 @@
 //! K-fold cross-validation over the λ grid — the workflow the paper
 //! motivates ("cross validation and stability selection need to solve the
 //! MTFL model over a grid of tuning parameter values"). Each fold runs a
-//! full *screened* path on its training split, then scores every λ on the
-//! held-out samples; the winner is the λ with the lowest mean validation
-//! MSE. Folds run in parallel.
+//! full *screened* path on its training split and scores every λ on the
+//! held-out samples **inside that single pass**: a [`PathObserver`] hook
+//! receives each per-λ solution as the path runner produces it, so the
+//! fold pays for the path exactly once (the pre-observer implementation
+//! re-solved the whole path a second time to recover per-λ solutions —
+//! and hardcoded FISTA + DPC while doing it, ignoring the configured
+//! screener/solver). The winner is the λ with the lowest mean validation
+//! MSE. Folds run in parallel; per-fold failures propagate as errors.
 
-use super::path::{run_path, EngineKind, PathOptions};
+use super::path::{run_path_with, EngineKind, LambdaRecord, PathObserver, PathOptions};
 use crate::data::{Dataset, Task};
 use crate::util::scoped_pool;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// Split every task's samples into `k` folds (by sample index, seeded
-/// shuffle per task). Returns (train, validation) datasets per fold.
-pub fn kfold_splits(ds: &Dataset, k: usize, seed: u64) -> Vec<(Dataset, Dataset)> {
-    assert!(k >= 2, "need at least 2 folds");
+/// shuffle per task). Returns (train, validation) datasets per fold, or an
+/// error if `k < 2` or any fold would leave a task without train or
+/// validation samples.
+pub fn kfold_splits(ds: &Dataset, k: usize, seed: u64) -> Result<Vec<(Dataset, Dataset)>> {
+    anyhow::ensure!(k >= 2, "cross-validation needs at least 2 folds, got k={k}");
     let mut rng = crate::util::Pcg64::with_stream(seed, 0xcf);
     // per-task shuffled sample order
     let orders: Vec<Vec<usize>> = ds
@@ -29,27 +36,33 @@ pub fn kfold_splits(ds: &Dataset, k: usize, seed: u64) -> Vec<(Dataset, Dataset)
         })
         .collect();
 
-    (0..k)
-        .map(|fold| {
-            let mut train_tasks = Vec::with_capacity(ds.t());
-            let mut val_tasks = Vec::with_capacity(ds.t());
-            for (ti, task) in ds.tasks.iter().enumerate() {
-                let order = &orders[ti];
-                let lo = fold * task.n / k;
-                let hi = (fold + 1) * task.n / k;
-                let val_idx: Vec<usize> = order[lo..hi].to_vec();
-                let train_idx: Vec<usize> =
-                    order[..lo].iter().chain(&order[hi..]).copied().collect();
-                assert!(!train_idx.is_empty() && !val_idx.is_empty(), "fold too thin");
-                train_tasks.push(subset_task(task, ds.d, &train_idx));
-                val_tasks.push(subset_task(task, ds.d, &val_idx));
-            }
-            (
-                Dataset { name: format!("{}-f{fold}-tr", ds.name), d: ds.d, tasks: train_tasks },
-                Dataset { name: format!("{}-f{fold}-va", ds.name), d: ds.d, tasks: val_tasks },
-            )
-        })
-        .collect()
+    let mut splits = Vec::with_capacity(k);
+    for fold in 0..k {
+        let mut train_tasks = Vec::with_capacity(ds.t());
+        let mut val_tasks = Vec::with_capacity(ds.t());
+        for (ti, task) in ds.tasks.iter().enumerate() {
+            let order = &orders[ti];
+            let lo = fold * task.n / k;
+            let hi = (fold + 1) * task.n / k;
+            let val_idx: Vec<usize> = order[lo..hi].to_vec();
+            let train_idx: Vec<usize> =
+                order[..lo].iter().chain(&order[hi..]).copied().collect();
+            anyhow::ensure!(
+                !train_idx.is_empty() && !val_idx.is_empty(),
+                "fold {fold} of {k} leaves task {ti} (n={}) with an empty {} split — \
+                 use fewer folds or more samples per task",
+                task.n,
+                if val_idx.is_empty() { "validation" } else { "training" }
+            );
+            train_tasks.push(subset_task(task, ds.d, &train_idx));
+            val_tasks.push(subset_task(task, ds.d, &val_idx));
+        }
+        splits.push((
+            Dataset { name: format!("{}-f{fold}-tr", ds.name), d: ds.d, tasks: train_tasks },
+            Dataset { name: format!("{}-f{fold}-va", ds.name), d: ds.d, tasks: val_tasks },
+        ));
+    }
+    Ok(splits)
 }
 
 fn subset_task(task: &Task, d: usize, idx: &[usize]) -> Task {
@@ -76,12 +89,32 @@ pub struct CvResult {
     pub ratios: Vec<f64>,
     pub best_index: usize,
     pub best_ratio: f64,
+    /// total solver column-sweep work across folds (one screened path per
+    /// fold — the one-pass guarantee BENCH/tests pin down)
+    pub col_ops: usize,
+    /// per-fold breakdown of `col_ops`
+    pub fold_col_ops: Vec<usize>,
     /// total wallclock across folds
     pub total_secs: f64,
 }
 
+/// Per-fold observer: scores every λ on the held-out split as the training
+/// path streams its solutions.
+struct HeldOutScorer<'a> {
+    val: &'a Dataset,
+    mse: Vec<f64>,
+}
+
+impl PathObserver for HeldOutScorer<'_> {
+    fn on_solution(&mut self, _ratio: f64, _lam: f64, w_full: &[f64], _rec: &LambdaRecord) {
+        self.mse.push(validation_mse(self.val, w_full));
+    }
+}
+
 /// Run k-fold CV with the screened path (exact engine; AOT folds would
-/// need per-split artifact shapes).
+/// need per-split artifact shapes). Uses the screener and solver configured
+/// in `opts` — every fold runs `run_path_with` exactly once, scoring each
+/// held-out λ from the streamed per-λ solutions.
 pub fn cross_validate(
     ds: &Dataset,
     opts: &PathOptions,
@@ -89,53 +122,23 @@ pub fn cross_validate(
     seed: u64,
 ) -> Result<CvResult> {
     let t0 = std::time::Instant::now();
-    let splits = kfold_splits(ds, k, seed);
-    let fold_mse: Vec<Vec<f64>> = scoped_pool(splits, usize::MAX, |(train, val)| {
-        let run = run_path(&train, opts, &EngineKind::Exact).expect("fold path failed");
-        // score every lambda on the held-out split; PathRunResult keeps only
-        // the last W, so re-walk the path recording MSE per record
-        // (run_path returns per-record W implicitly via last_w only — we
-        // re-run with a callback-free approach: use the records' obj as a
-        // sanity check and recompute W per lambda via warm-started solves)
-        let mut w_prev: Option<Vec<f64>> = None;
-        let mut mses = Vec::with_capacity(opts.ratios.len());
-        let (dref, lam_max) = crate::screening::dpc::DualRef::at_lambda_max(&train);
-        let screener = crate::screening::dpc::DpcScreener::new(&train);
-        let mut dref_cur = dref;
-        for &ratio in &opts.ratios {
-            let lam = ratio * lam_max;
-            let w = if ratio >= 1.0 - 1e-12 {
-                vec![0.0f64; train.d * train.t()]
-            } else {
-                let keep = screener.screen(&train, &dref_cur, lam).kept_indices();
-                let reduced = train.restrict(&keep);
-                let t_count = train.t();
-                let w0: Option<Vec<f64>> = w_prev.as_ref().map(|wp| {
-                    let mut v = vec![0.0f64; keep.len() * t_count];
-                    for (j, &l) in keep.iter().enumerate() {
-                        v[j * t_count..(j + 1) * t_count]
-                            .copy_from_slice(&wp[l * t_count..(l + 1) * t_count]);
-                    }
-                    v
-                });
-                let sol =
-                    crate::solver::fista(&reduced, lam, w0.as_deref(), &opts.solve);
-                let mut w_full = vec![0.0f64; train.d * t_count];
-                for (j, &l) in keep.iter().enumerate() {
-                    w_full[l * t_count..(l + 1) * t_count]
-                        .copy_from_slice(&sol.w[j * t_count..(j + 1) * t_count]);
-                }
-                w_full
-            };
-            mses.push(validation_mse(&val, &w));
-            if ratio < 1.0 - 1e-12 {
-                dref_cur = crate::screening::dpc::DualRef::from_solution(&train, lam, &w);
-            }
-            w_prev = Some(w);
-        }
-        let _ = run; // the run above validated the screened path end-to-end
-        mses
+    let splits = kfold_splits(ds, k, seed)?;
+    let folds: Vec<Result<(Vec<f64>, usize)>> = scoped_pool(splits, usize::MAX, |(train, val)| {
+        let mse = Vec::with_capacity(opts.ratios.len());
+        let mut scorer = HeldOutScorer { val: &val, mse };
+        let run = run_path_with(&train, opts, &EngineKind::Exact, &mut scorer)
+            .with_context(|| format!("λ-path failed on fold split '{}'", train.name))?;
+        Ok((scorer.mse, run.total_col_ops()))
     });
+
+    let mut fold_mse = Vec::with_capacity(k);
+    let mut fold_col_ops = Vec::with_capacity(k);
+    for fold in folds {
+        let (mse, ops) = fold?;
+        debug_assert_eq!(mse.len(), opts.ratios.len());
+        fold_mse.push(mse);
+        fold_col_ops.push(ops);
+    }
 
     let kf = fold_mse.len() as f64;
     let mse: Vec<f64> = (0..opts.ratios.len())
@@ -152,6 +155,8 @@ pub fn cross_validate(
         best_index,
         mse,
         ratios: opts.ratios.clone(),
+        col_ops: fold_col_ops.iter().sum(),
+        fold_col_ops,
         total_secs: t0.elapsed().as_secs_f64(),
     })
 }
@@ -177,7 +182,7 @@ mod tests {
     fn folds_partition_samples() {
         let (ds, _) =
             synthetic1(&SynthOptions { t: 3, n: 20, d: 30, seed: 13, ..Default::default() });
-        let splits = kfold_splits(&ds, 4, 0);
+        let splits = kfold_splits(&ds, 4, 0).unwrap();
         assert_eq!(splits.len(), 4);
         for (train, val) in &splits {
             for ti in 0..3 {
@@ -195,11 +200,25 @@ mod tests {
     fn folds_deterministic_by_seed() {
         let (ds, _) =
             synthetic1(&SynthOptions { t: 2, n: 12, d: 20, seed: 14, ..Default::default() });
-        let a = kfold_splits(&ds, 3, 7);
-        let b = kfold_splits(&ds, 3, 7);
+        let a = kfold_splits(&ds, 3, 7).unwrap();
+        let b = kfold_splits(&ds, 3, 7).unwrap();
         assert_eq!(a[1].0.tasks[0].x, b[1].0.tasks[0].x);
-        let c = kfold_splits(&ds, 3, 8);
+        let c = kfold_splits(&ds, 3, 8).unwrap();
         assert_ne!(a[1].0.tasks[0].x, c[1].0.tasks[0].x);
+    }
+
+    #[test]
+    fn degenerate_folds_are_errors_not_panics() {
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 2, n: 6, d: 10, seed: 19, ..Default::default() });
+        // k < 2 is a usage error
+        let err = kfold_splits(&ds, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("at least 2 folds"), "got: {err}");
+        assert!(cross_validate(&ds, &opts(), 1, 0).is_err());
+        // more folds than samples leaves an empty validation split
+        let err = kfold_splits(&ds, 10, 0).unwrap_err();
+        assert!(err.to_string().contains("empty"), "got: {err}");
+        assert!(cross_validate(&ds, &opts(), 10, 0).is_err());
     }
 
     #[test]
@@ -213,12 +232,13 @@ mod tests {
             support_frac: 0.1,
             noise: 0.5,
             seed: 15,
-            ..Default::default()
         });
         let cv = cross_validate(&ds, &opts(), 3, 0).unwrap();
         assert_eq!(cv.mse.len(), 8);
         assert!(cv.best_index > 0, "picked lambda_max (W=0) as best");
         assert!(cv.mse.iter().all(|m| m.is_finite() && *m >= 0.0));
+        assert_eq!(cv.fold_col_ops.len(), 3);
+        assert_eq!(cv.col_ops, cv.fold_col_ops.iter().sum::<usize>());
     }
 
     #[test]

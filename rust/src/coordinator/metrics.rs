@@ -1,10 +1,71 @@
 //! Experiment metrics: rejection-ratio aggregation across trials and the
 //! Table-1 speedup accounting.
+//!
+//! [`RejectionCurve`] is the streaming form: it registers as a
+//! [`PathObserver`] across repeated trials of the same grid and averages
+//! per-index rejection ratios as records arrive, so the figure drivers
+//! never have to retain whole [`PathRunResult`]s per trial.
 
-use super::path::PathRunResult;
+use super::path::{LambdaRecord, PathObserver, PathRunResult};
+
+/// Streaming accumulator for the Figs. 1–2 curves. Register it as the
+/// observer of one `run_path_with` call per trial (all trials must share
+/// the λ grid); read the averaged curve with [`RejectionCurve::curve`].
+pub struct RejectionCurve {
+    grid_len: usize,
+    ratios: Vec<f64>,
+    sums: Vec<f64>,
+    seen: usize,
+}
+
+impl RejectionCurve {
+    pub fn new(grid_len: usize) -> Self {
+        assert!(grid_len > 0, "empty λ grid");
+        RejectionCurve {
+            grid_len,
+            ratios: Vec::with_capacity(grid_len),
+            sums: vec![0.0; grid_len],
+            seen: 0,
+        }
+    }
+
+    /// Completed trials observed so far.
+    pub fn trials(&self) -> usize {
+        self.seen / self.grid_len
+    }
+
+    /// The (ratio, mean rejection ratio) curve across observed trials.
+    pub fn curve(&self) -> Vec<(f64, f64)> {
+        assert!(
+            self.seen > 0 && self.seen % self.grid_len == 0,
+            "curve read mid-trial: {} of {} records",
+            self.seen % self.grid_len,
+            self.grid_len
+        );
+        let t = self.trials() as f64;
+        self.ratios.iter().zip(&self.sums).map(|(&r, &s)| (r, s / t)).collect()
+    }
+}
+
+impl PathObserver for RejectionCurve {
+    fn on_solution(&mut self, ratio: f64, _lam: f64, _w_full: &[f64], rec: &LambdaRecord) {
+        let i = self.seen % self.grid_len;
+        if self.trials() == 0 && i == self.ratios.len() {
+            self.ratios.push(ratio);
+        } else {
+            assert!(
+                (self.ratios[i] - ratio).abs() < 1e-12,
+                "trials must share the grid: index {i} saw ratio {ratio} vs {}",
+                self.ratios[i]
+            );
+        }
+        self.sums[i] += rec.rejection_ratio;
+        self.seen += 1;
+    }
+}
 
 /// Mean rejection ratio per grid index across repeated trials
-/// (the curves of Figs. 1–2).
+/// (the curves of Figs. 1–2), from retained run results.
 pub fn mean_rejection_curve(runs: &[PathRunResult]) -> Vec<(f64, f64)> {
     assert!(!runs.is_empty());
     let k = runs[0].records.len();
@@ -91,6 +152,28 @@ mod tests {
         let c = mean_rejection_curve(&[a, b]);
         assert!((c[0].1 - 0.75).abs() < 1e-12);
         assert!((c[1].1 - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejection_curve_observer_matches_batch_mean() {
+        let runs = [fake_run(&[1.0, 0.8], 1.0, 0.1), fake_run(&[0.5, 1.0], 1.0, 0.1)];
+        let mut curve = RejectionCurve::new(2);
+        for run in &runs {
+            for rec in &run.records {
+                curve.on_solution(rec.ratio, rec.lam, &[], rec);
+            }
+        }
+        assert_eq!(curve.trials(), 2);
+        assert_eq!(curve.curve(), mean_rejection_curve(&runs));
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-trial")]
+    fn rejection_curve_rejects_partial_trials() {
+        let run = fake_run(&[1.0, 0.8], 1.0, 0.1);
+        let mut curve = RejectionCurve::new(2);
+        curve.on_solution(run.records[0].ratio, 0.0, &[], &run.records[0]);
+        let _ = curve.curve();
     }
 
     #[test]

@@ -10,4 +10,7 @@ pub mod path;
 pub mod report;
 
 pub use grid::lambda_grid;
-pub use path::{run_path, EngineKind, PathOptions, PathRunResult, ScreenerKind, SolverKind};
+pub use path::{
+    run_path, run_path_with, EngineKind, FnObserver, LambdaRecord, PathObserver, PathOptions,
+    PathRunResult, ScreenerKind, SolverKind,
+};

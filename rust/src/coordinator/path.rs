@@ -1,6 +1,11 @@
 //! The λ-path runner: solve the MTFL model along the tuning grid, with or
 //! without screening, on the exact engine or the AOT (PJRT) engine.
 //!
+//! Consumers that need every per-λ solution (CV held-out scoring,
+//! stability selection, the figure accumulators) register a
+//! [`PathObserver`] via [`run_path_with`] and receive each full-size W as
+//! it is solved — one pass over the grid, no post-hoc re-walk.
+//!
 //! Sequential DPC (Corollary 9): at step k+1, the dual reference is
 //! recovered from the *solved* primal at λ_k via Eq. (14); features whose
 //! Theorem-7 score stays below 1 are deleted before the solver runs, and
@@ -128,6 +133,32 @@ pub struct PathRunResult {
     pub last_w: Vec<f64>,
 }
 
+/// Per-λ streaming hook: the path runners call [`PathObserver::on_solution`]
+/// once per grid point, in grid order, with the *full-size* (d × T) solution
+/// and the step's [`LambdaRecord`]. This is the seam the grid workflows
+/// (CV held-out scoring, stability selection's union-over-λ active mask,
+/// the figure accumulators) hang off — they consume each solution as it is
+/// produced instead of re-walking the path afterwards (DESIGN.md §4).
+///
+/// Closures become observers through the [`FnObserver`] adapter.
+pub trait PathObserver {
+    fn on_solution(&mut self, ratio: f64, lam: f64, w_full: &[f64], rec: &LambdaRecord);
+}
+
+/// Adapter wrapping any `FnMut(ratio, lam, w_full, record)` closure as a
+/// [`PathObserver`] (a blanket impl would collide with named observer
+/// types under coherence, so the wrapper is explicit).
+pub struct FnObserver<F>(pub F);
+
+impl<F> PathObserver for FnObserver<F>
+where
+    F: FnMut(f64, f64, &[f64], &LambdaRecord),
+{
+    fn on_solution(&mut self, ratio: f64, lam: f64, w_full: &[f64], rec: &LambdaRecord) {
+        (self.0)(ratio, lam, w_full, rec)
+    }
+}
+
 impl PathRunResult {
     pub fn mean_rejection_ratio(&self) -> f64 {
         let rs: Vec<f64> = self.records.iter().map(|r| r.rejection_ratio).collect();
@@ -145,11 +176,24 @@ impl PathRunResult {
     }
 }
 
-/// Run the full path. Dispatches on engine.
+/// Run the full path. Dispatches on engine. Thin wrapper over
+/// [`run_path_with`] with a no-op observer.
 pub fn run_path(ds: &Dataset, opts: &PathOptions, engine: &EngineKind) -> Result<PathRunResult> {
+    let mut noop = FnObserver(|_: f64, _: f64, _: &[f64], _: &LambdaRecord| {});
+    run_path_with(ds, opts, engine, &mut noop)
+}
+
+/// Run the full path, streaming every per-λ solution to `obs` as it is
+/// solved (see [`PathObserver`]). Dispatches on engine.
+pub fn run_path_with(
+    ds: &Dataset,
+    opts: &PathOptions,
+    engine: &EngineKind,
+    obs: &mut dyn PathObserver,
+) -> Result<PathRunResult> {
     match engine {
-        EngineKind::Exact => run_path_exact(ds, opts),
-        EngineKind::Aot(e) => run_path_aot(ds, opts, e),
+        EngineKind::Exact => run_path_exact(ds, opts, obs),
+        EngineKind::Aot(e) => run_path_aot(ds, opts, e, obs),
     }
 }
 
@@ -169,7 +213,11 @@ fn solve_exact(
     }
 }
 
-fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
+fn run_path_exact(
+    ds: &Dataset,
+    opts: &PathOptions,
+    obs: &mut dyn PathObserver,
+) -> Result<PathRunResult> {
     ds.validate()?;
     let t_count = ds.t();
     let mut total = Stopwatch::new();
@@ -239,7 +287,7 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
         let rejected = ds.d - keep.len();
         let active = w_full
             .chunks_exact(t_count)
-            .filter(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt() > opts.active_tol)
+            .filter(|row| ops::row_is_active(row, opts.active_tol))
             .count();
         let inactive = ds.d - active;
         let rejection_ratio =
@@ -293,6 +341,7 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
             obj,
             gap,
         });
+        obs.on_solution(ratio, lam, &w_full, records.last().unwrap());
 
         // sequential reference update (Cor. 9): from this λ's solution,
         // with its gap certificate. At the grid head (λ ≥ λ_max, W = 0)
@@ -326,7 +375,12 @@ fn run_path_exact(ds: &Dataset, opts: &PathOptions) -> Result<PathRunResult> {
 // AOT engine
 // ---------------------------------------------------------------------------
 
-fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<PathRunResult> {
+fn run_path_aot(
+    ds: &Dataset,
+    opts: &PathOptions,
+    engine: &AotEngine,
+    obs: &mut dyn PathObserver,
+) -> Result<PathRunResult> {
     ds.validate()?;
     let t_count = ds.t();
     let n = ds
@@ -416,35 +470,41 @@ fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<
 
         let mut step_solve = Stopwatch::new();
         let mut w_full = vec![0.0f64; ds.d * t_count];
-        let (obj, gap, iters, residual): (f64, f64, usize, Option<Vec<f32>>) = if keep.is_empty()
-        {
-            let (o, g, _) = ops::duality_gap(ds, &w_full, lam as f64);
-            (o, g, 0, None)
-        } else {
-            let db = buckets::pick_bucket(&bucket_list, keep.len())
-                .with_context(|| format!("no bucket ≥ {} in {bucket_list:?}", keep.len()))?;
-            let x_r = buckets::pack_tnd(&ds.tasks, &keep, db);
-            let w0 = buckets::pack_w(&prev_w, t_count, &keep, db);
-            let (out, chunks) = step_solve.time(|| {
-                engine.fista_solve(
-                    &cfg,
-                    db,
-                    &x_r,
-                    &y,
-                    &w0,
-                    lam,
-                    opts.solve.tol as f32,
-                    max_chunks,
-                )
-            })?;
-            w_full = buckets::unpack_w(&out.w, t_count, &keep, db, ds.d);
-            (out.obj as f64, out.gap as f64, chunks * chunk_steps, Some(out.r))
-        };
+        let (obj, gap, iters, col_ops, residual): (f64, f64, usize, usize, Option<Vec<f32>>) =
+            if keep.is_empty() {
+                let (o, g, _) = ops::duality_gap(ds, &w_full, lam as f64);
+                (o, g, 0, 0, None)
+            } else {
+                let db = buckets::pick_bucket(&bucket_list, keep.len())
+                    .with_context(|| format!("no bucket ≥ {} in {bucket_list:?}", keep.len()))?;
+                let x_r = buckets::pack_tnd(&ds.tasks, &keep, db);
+                let w0 = buckets::pack_w(&prev_w, t_count, &keep, db);
+                let (out, chunks) = step_solve.time(|| {
+                    engine.fista_solve(
+                        &cfg,
+                        db,
+                        &x_r,
+                        &y,
+                        &w0,
+                        lam,
+                        opts.solve.tol as f32,
+                        max_chunks,
+                    )
+                })?;
+                w_full = buckets::unpack_w(&out.w, t_count, &keep, db, ds.d);
+                let iters = chunks * chunk_steps;
+                // exact-engine convention (solver/mod.rs `col_ops`): 2 sweeps
+                // per epoch (forward + corr) plus 2 per duality-gap check —
+                // the artifact evaluates the gap once per chunk. Keeps
+                // BENCH_gap comparisons across engines apples-to-apples.
+                let col_ops = (2 * iters + 2 * chunks) * keep.len();
+                (out.obj as f64, out.gap as f64, iters, col_ops, Some(out.r))
+            };
 
         let rejected = ds.d - keep.len();
         let active = w_full
             .chunks_exact(t_count)
-            .filter(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt() > opts.active_tol)
+            .filter(|row| ops::row_is_active(row, opts.active_tol))
             .count();
         let inactive = ds.d - active;
         let rejection_ratio =
@@ -460,10 +520,11 @@ fn run_path_aot(ds: &Dataset, opts: &PathOptions, engine: &AotEngine) -> Result<
             screen_secs: step_screen.secs(),
             solve_secs: step_solve.secs(),
             solver_iters: iters,
-            col_ops: iters * keep.len(),
+            col_ops,
             obj,
             gap,
         });
+        obs.on_solution(ratio, lam as f64, &w_full, records.last().unwrap());
 
         // sequential dual reference from the residual (Eq. 14): θ = −R/λ
         if let Some(r) = residual {
@@ -514,6 +575,27 @@ mod tests {
             verify_safety: true,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn observer_streams_every_solution_in_grid_order() {
+        let ds = small();
+        let o = opts(ScreenerKind::Dpc);
+        let mut seen: Vec<(f64, Vec<f64>)> = Vec::new();
+        let mut obs = FnObserver(|ratio: f64, lam: f64, w: &[f64], rec: &LambdaRecord| {
+            assert_eq!(w.len(), ds.d * ds.t());
+            assert_eq!(rec.ratio, ratio);
+            assert_eq!(rec.lam, lam);
+            seen.push((ratio, w.to_vec()));
+        });
+        let res = run_path_with(&ds, &o, &EngineKind::Exact, &mut obs).unwrap();
+        drop(obs);
+        assert_eq!(seen.len(), res.records.len());
+        for (s, r) in seen.iter().zip(&res.records) {
+            assert_eq!(s.0, r.ratio);
+        }
+        // the final streamed solution IS the run's last_w
+        assert_eq!(seen.last().unwrap().1, res.last_w);
     }
 
     #[test]

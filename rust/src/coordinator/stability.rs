@@ -2,13 +2,19 @@
 //! paper names ("cross validation and stability selection"). Subsample
 //! half of every task's samples B times, run the *screened* path on each
 //! subsample, and report per-feature selection frequencies; features
-//! crossing `threshold` at any λ form the stable set (Meinshausen &
-//! Bühlmann 2010, adapted to the shared-support MTFL setting).
+//! crossing `threshold` form the stable set (Meinshausen & Bühlmann 2010,
+//! adapted to the shared-support MTFL setting).
+//!
+//! A feature counts as selected in a subsample if its solution row is
+//! nonzero at *any* λ of the grid. The union-over-λ mask is accumulated by
+//! a [`PathObserver`] as the path streams each per-λ solution — the
+//! pre-observer implementation only tested the final (smallest-λ)
+//! solution, silently missing features active only at larger λ.
 
-use super::path::{run_path, EngineKind, PathOptions};
+use super::path::{run_path_with, EngineKind, LambdaRecord, PathObserver, PathOptions};
 use crate::data::{Dataset, Task};
 use crate::util::{scoped_pool, Pcg64};
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 fn half_sample(ds: &Dataset, rng: &mut Pcg64) -> Dataset {
     let tasks = ds
@@ -29,7 +35,8 @@ fn half_sample(ds: &Dataset, rng: &mut Pcg64) -> Dataset {
 
 #[derive(Debug, Clone)]
 pub struct StabilityResult {
-    /// max over λ of the selection frequency, per feature
+    /// per feature: fraction of subsamples where the feature's solution
+    /// row was nonzero at any λ of the grid
     pub frequency: Vec<f64>,
     /// features with frequency >= threshold
     pub stable: Vec<usize>,
@@ -37,9 +44,27 @@ pub struct StabilityResult {
     pub total_secs: f64,
 }
 
+/// Union-over-λ active mask for one subsample's path: marks a feature as
+/// soon as any streamed solution has a nonzero row for it.
+struct EverActiveMask {
+    mask: Vec<bool>,
+    t_count: usize,
+    tol: f64,
+}
+
+impl PathObserver for EverActiveMask {
+    fn on_solution(&mut self, _ratio: f64, _lam: f64, w_full: &[f64], _rec: &LambdaRecord) {
+        for (m, row) in self.mask.iter_mut().zip(w_full.chunks_exact(self.t_count)) {
+            if !*m && crate::ops::row_is_active(row, self.tol) {
+                *m = true;
+            }
+        }
+    }
+}
+
 /// Run stability selection with `b` half-subsamples (parallel across the
 /// pool); a feature counts as selected at a subsample if its solution row
-/// is nonzero at *any* λ of the grid.
+/// is nonzero (row norm > `opts.active_tol`) at *any* λ of the grid.
 pub fn stability_selection(
     ds: &Dataset,
     opts: &PathOptions,
@@ -47,7 +72,7 @@ pub fn stability_selection(
     threshold: f64,
     seed: u64,
 ) -> Result<StabilityResult> {
-    assert!(b >= 2);
+    anyhow::ensure!(b >= 2, "stability selection needs at least 2 subsamples, got b={b}");
     let t0 = std::time::Instant::now();
     let mut root = Pcg64::with_stream(seed, 0x57ab);
     let subs: Vec<Dataset> = (0..b)
@@ -58,24 +83,16 @@ pub fn stability_selection(
         .collect();
 
     let t_count = ds.t();
-    let selected: Vec<Vec<bool>> = scoped_pool(subs, usize::MAX, |sub| {
-        // selected-anywhere-on-the-path mask for this subsample
-        let run = run_path(&sub, opts, &EngineKind::Exact).expect("subsample path failed");
-        // run_path keeps only the last W; the per-λ "ever active" set is
-        // the last (smallest-λ) active set for monotone-ish paths — use
-        // kept-count records to sanity check and the final W for selection.
-        let mut mask = vec![false; sub.d];
-        for (l, row) in run.last_w.chunks_exact(t_count).enumerate() {
-            if row.iter().map(|v| v * v).sum::<f64>().sqrt() > 1e-8 {
-                mask[l] = true;
-            }
-        }
-        mask
+    let masks: Vec<Result<Vec<bool>>> = scoped_pool(subs, usize::MAX, |sub| {
+        let mut ever = EverActiveMask { mask: vec![false; sub.d], t_count, tol: opts.active_tol };
+        run_path_with(&sub, opts, &EngineKind::Exact, &mut ever)
+            .with_context(|| format!("λ-path failed on subsample '{}'", sub.name))?;
+        Ok(ever.mask)
     });
 
     let mut frequency = vec![0.0f64; ds.d];
-    for mask in &selected {
-        for (l, &m) in mask.iter().enumerate() {
+    for mask in masks {
+        for (l, m) in mask?.into_iter().enumerate() {
             if m {
                 frequency[l] += 1.0;
             }
@@ -109,7 +126,6 @@ mod tests {
             support_frac: 0.08,
             noise: 0.05,
             seed: 51,
-            ..Default::default()
         });
         let opts = PathOptions {
             ratios: lambda_grid(6, 1.0, 0.1),
@@ -129,6 +145,15 @@ mod tests {
         );
         // and the stable set should be a small fraction of all features
         assert!(res.stable.len() < 30, "stable set too large: {}", res.stable.len());
+    }
+
+    #[test]
+    fn too_few_subsamples_is_an_error() {
+        let (ds, _) =
+            synthetic1(&SynthOptions { t: 2, n: 10, d: 10, seed: 53, ..Default::default() });
+        let opts = PathOptions { ratios: lambda_grid(4, 1.0, 0.1), ..Default::default() };
+        let err = stability_selection(&ds, &opts, 1, 0.8, 0).unwrap_err();
+        assert!(err.to_string().contains("at least 2 subsamples"), "got: {err}");
     }
 
     #[test]

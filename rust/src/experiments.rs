@@ -5,8 +5,8 @@
 //! minutes), `paper` (the printed dims — hours on this CPU testbed; shape
 //! identical to `default`).
 
-use crate::coordinator::metrics::{mean_rejection_curve, speedup_row, SpeedupRow};
-use crate::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use crate::coordinator::metrics::{speedup_row, RejectionCurve, SpeedupRow};
+use crate::coordinator::path::{run_path, run_path_with, EngineKind, PathOptions, ScreenerKind};
 use crate::coordinator::{lambda_grid, report};
 use crate::data::imagesim::{imagesim, ImageSimOptions};
 use crate::data::snpsim::{snpsim, SnpSimOptions};
@@ -180,16 +180,16 @@ pub fn run_fig1(scale: Scale, engine: &EngineKind) -> Result<String> {
     let opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
     for which in [1u8, 2u8] {
         for &d in &scale.synth_dims() {
-            let runs: Vec<_> = (0..scale.trials())
-                .map(|trial| {
-                    let ds = build_synthetic(which, d, scale, 1000 * trial as u64 + d as u64);
-                    run_path(&ds, &opts, engine)
-                })
-                .collect::<Result<_>>()?;
-            let curve = mean_rejection_curve(&runs);
+            // the per-λ observer hook streams each trial's rejection ratios
+            // straight into the curve accumulator — no retained run results
+            let mut curve = RejectionCurve::new(opts.ratios.len());
+            for trial in 0..scale.trials() {
+                let ds = build_synthetic(which, d, scale, 1000 * trial as u64 + d as u64);
+                run_path_with(&ds, &opts, engine, &mut curve)?;
+            }
             out.push_str(&report::render_rejection_curve(
                 &format!("Fig1 synthetic{which} d={d} ({} trials)", scale.trials()),
-                &curve,
+                &curve.curve(),
             ));
             out.push('\n');
         }
@@ -211,11 +211,11 @@ pub fn run_fig2(scale: Scale, engine: &EngineKind) -> Result<String> {
     ];
     for (name, build) in builders {
         let ds = build(7);
-        let run = run_path(&ds, &opts, engine)?;
-        let curve = mean_rejection_curve(&[run]);
+        let mut curve = RejectionCurve::new(opts.ratios.len());
+        run_path_with(&ds, &opts, engine, &mut curve)?;
         out.push_str(&report::render_rejection_curve(
             &format!("Fig2 {name} d={}", ds.d),
-            &curve,
+            &curve.curve(),
         ));
         out.push('\n');
     }

@@ -13,7 +13,7 @@
 
 use anyhow::{Context, Result};
 use mtfl_dpc::cli::Args;
-use mtfl_dpc::coordinator::path::{run_path, EngineKind, ScreenerKind, SolverKind};
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind, SolverKind};
 use mtfl_dpc::coordinator::report;
 use mtfl_dpc::experiments::{self, Scale};
 use mtfl_dpc::runtime::AotEngine;
@@ -26,7 +26,7 @@ common options:
   --engine exact|aot            compute engine (default: exact)
   --artifacts DIR               AOT artifact dir (default: artifacts)
 
-path options:
+path / cv / stability options:
   --dataset synth1|synth2|animal|tdt2|adni   (default synth1)
   --d N            feature dimension for synthetic sets
   --grid K         lambda-grid length (default from scale)
@@ -36,9 +36,52 @@ path options:
   --solver fista|bcd
   --seed S
 
+cv options:       --folds K (default 5)
+stability options: --subsamples B (default 20) --threshold F (default 0.8)
+
 gen options:
   --dataset ... --d N --seed S --out FILE.mtd
 ";
+
+fn parse_screener(args: &Args) -> Result<ScreenerKind> {
+    Ok(match args.get_or("screener", "dpc") {
+        "dpc" => ScreenerKind::Dpc,
+        "gap" | "gapsafe" => ScreenerKind::GapSafe,
+        "cs" => ScreenerKind::DpcCs,
+        "oneshot" => ScreenerKind::DpcOneShot,
+        "none" => ScreenerKind::None,
+        s => anyhow::bail!("unknown screener '{s}'"),
+    })
+}
+
+fn parse_solver(args: &Args) -> Result<SolverKind> {
+    Ok(match args.get_or("solver", "fista") {
+        "fista" => SolverKind::Fista,
+        "bcd" => SolverKind::Bcd,
+        s => anyhow::bail!("unknown solver '{s}'"),
+    })
+}
+
+/// Shared --screener/--solver/--dynamic-every parsing + options assembly
+/// for the grid subcommands (path, cv, stability).
+fn grid_opts(args: &Args, grid: usize) -> Result<PathOptions> {
+    let mut opts = experiments::exp_opts(grid, parse_screener(args)?);
+    opts.solver = parse_solver(args)?;
+    opts.solve.dynamic_every = args.get_usize("dynamic-every", 0)?;
+    Ok(opts)
+}
+
+/// cv/stability fold the λ grid over data splits and run exact-engine
+/// paths only; accept an explicit `--engine exact` but reject `aot`.
+fn require_exact_engine(args: &Args, cmd: &str) -> Result<()> {
+    match args.get_or("engine", "exact") {
+        "exact" => Ok(()),
+        other => anyhow::bail!(
+            "`{cmd}` runs on the exact engine only (per-split AOT artifact shapes \
+             don't exist); got --engine {other}"
+        ),
+    }
+}
 
 fn engine_kind<'a>(
     args: &Args,
@@ -89,27 +132,11 @@ fn main() -> Result<()> {
             let d = args.get_usize("d", 1000)?;
             let seed = args.get_u64("seed", 0)?;
             let grid = args.get_usize("grid", scale.grid_len())?;
-            let screener = match args.get_or("screener", "dpc") {
-                "dpc" => ScreenerKind::Dpc,
-                "gap" | "gapsafe" => ScreenerKind::GapSafe,
-                "cs" => ScreenerKind::DpcCs,
-                "oneshot" => ScreenerKind::DpcOneShot,
-                "none" => ScreenerKind::None,
-                s => anyhow::bail!("unknown screener '{s}'"),
-            };
-            let dynamic_every = args.get_usize("dynamic-every", 0)?;
-            let solver = match args.get_or("solver", "fista") {
-                "fista" => SolverKind::Fista,
-                "bcd" => SolverKind::Bcd,
-                s => anyhow::bail!("unknown solver '{s}'"),
-            };
+            let mut opts = grid_opts(&args, grid)?;
             let engine = engine_kind(&args, &mut engine_holder)?;
             args.finish()?;
 
             let ds = experiments::build_by_name(&name, d, scale, seed)?;
-            let mut opts = experiments::exp_opts(grid, screener);
-            opts.solver = solver;
-            opts.solve.dynamic_every = dynamic_every;
             if matches!(engine, EngineKind::Aot(_)) {
                 opts.aot_margin = 1e-3; // f32 engine needs a float-safety margin
             }
@@ -137,13 +164,15 @@ fn main() -> Result<()> {
             let seed = args.get_u64("seed", 0)?;
             let grid = args.get_usize("grid", 20)?;
             let k = args.get_usize("folds", 5)?;
+            let opts = grid_opts(&args, grid)?;
+            require_exact_engine(&args, "cv")?;
             args.finish()?;
             let ds = experiments::build_by_name(&name, d, scale, seed)?;
-            let opts = experiments::exp_opts(grid, ScreenerKind::Dpc);
             let cv = mtfl_dpc::coordinator::cv::cross_validate(&ds, &opts, k, seed)?;
             println!(
-                "{}-fold CV on {} (d={}): best lambda/lambda_max = {:.4} (index {}) in {:.1}s",
-                k, ds.name, ds.d, cv.best_ratio, cv.best_index, cv.total_secs
+                "{}-fold CV on {} (d={}): best lambda/lambda_max = {:.4} (index {}) \
+                 in {:.1}s, solver col-ops {} (one screened path per fold)",
+                k, ds.name, ds.d, cv.best_ratio, cv.best_index, cv.total_secs, cv.col_ops
             );
             println!("# ratio, mean validation MSE");
             for (r, m) in cv.ratios.iter().zip(&cv.mse) {
@@ -157,9 +186,10 @@ fn main() -> Result<()> {
             let grid = args.get_usize("grid", 12)?;
             let b = args.get_usize("subsamples", 20)?;
             let thr = args.get_f64("threshold", 0.8)?;
+            let opts = grid_opts(&args, grid)?;
+            require_exact_engine(&args, "stability")?;
             args.finish()?;
             let ds = experiments::build_by_name(&name, d, scale, seed)?;
-            let opts = experiments::exp_opts(grid, ScreenerKind::Dpc);
             let st = mtfl_dpc::coordinator::stability::stability_selection(
                 &ds, &opts, b, thr, seed,
             )?;

@@ -132,6 +132,12 @@ pub fn l21_norm(w: &[f64], t_count: usize) -> f64 {
         .sum()
 }
 
+/// ‖w^l‖ > tol — the row-activity predicate shared by the path runners'
+/// ground-truth bookkeeping and stability selection's union-over-λ mask.
+pub fn row_is_active(row: &[f64], tol: f64) -> bool {
+    row.iter().map(|v| v * v).sum::<f64>().sqrt() > tol
+}
+
 /// F(W) = ½ Σ_t ||X_t w_t − y_t||² + λ||W||₂,₁ (problem (1)).
 pub fn primal_obj(ds: &Dataset, w: &[f64], lam: f64) -> f64 {
     let r = residual(ds, w);
@@ -280,12 +286,35 @@ mod tests {
     #[test]
     fn normal_at_lmax_matches_gradient_definition() {
         let ds = ds();
-        let (lmax, lstar, _) = lambda_max(&ds);
+        let (lmax, lstar, g) = lambda_max(&ds);
         let n = normal_at_lmax(&ds, lstar, lmax);
-        // <y, n> = 2 * g_{l*}(y)/lmax = 2*lmax > 0 (Theorem 5 part 2)
+        // <y, n> = Σ_t 2<x_{l*}, y_t>²/λmax = 2·g_{l*}(y)/λmax = 2·λmax
+        // (Theorem 5 part 2): assert the gradient identity against the
+        // computed value, both via g and via λmax itself
         let y = y64(&ds);
         let ip = stacked_dot(&y, &n);
-        assert!((ip - 2.0 * lmax * lmax / lmax * lmax / lmax).abs() < 1e-6 || ip > 0.0);
-        assert!(ip > 0.0);
+        let want = 2.0 * lmax;
+        assert!(
+            (ip - want).abs() <= 1e-9 * want.max(1.0),
+            "<y, n(λmax)> = {ip}, want 2λmax = {want}"
+        );
+        // independent check: recompute g_{l*}(y) = Σ_t <x_{l*}, y_t>² with
+        // naive dots, bypassing lambda_max/task_corr entirely
+        let g_naive: f64 = ds
+            .tasks
+            .iter()
+            .map(|task| {
+                let col = task.col(lstar).to_vec();
+                let dot: f64 =
+                    col.iter().zip(&task.y).map(|(&x, &yv)| x as f64 * yv as f64).sum();
+                dot * dot
+            })
+            .sum();
+        assert!((g_naive - g[lstar]).abs() <= 1e-9 * g[lstar].max(1.0));
+        assert!(
+            (ip - 2.0 * g_naive / lmax).abs() <= 1e-9 * want.max(1.0),
+            "<y, n(λmax)> = {ip} disagrees with 2 g_l*(y)/λmax = {}",
+            2.0 * g_naive / lmax
+        );
     }
 }

@@ -134,7 +134,13 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
                 }
             }
 
-            let due_check = sweep % opts.check_every.clamp(1, 5) == 0 || max_change == 0.0;
+            // cadence must mean the same thing as FISTA's: clamp only to
+            // ≥ 1 (a historical clamp to ≤ 5 silently quintupled the
+            // configured gap-check frequency), and force a final-iteration
+            // check so a coarse cadence can't exit with stale obj/gap
+            let due_check = sweep % opts.check_every.max(1) == 0
+                || sweep == opts.max_iters
+                || max_change == 0.0;
             let due_screen = opts.dynamic_every > 0 && sweep % opts.dynamic_every == 0 && d > 1;
             if due_check || due_screen {
                 // the gap evaluation costs a forward pass + a corr sweep
@@ -248,6 +254,37 @@ mod tests {
             assert!(maxdiff < 1e-5, "solvers disagree: {maxdiff}");
             assert!((a.obj - b.obj).abs() < 1e-8 * a.obj.max(1.0));
         }
+    }
+
+    #[test]
+    fn bcd_honors_configured_check_cadence() {
+        // regression: check_every used to be silently clamped to ≤ 5, so a
+        // configured cadence of 37 checked the gap every 5 sweeps. Count
+        // gap evaluations through the col_ops ledger (2d per sweep + 2d
+        // per check, no dynamic screening): an honored cadence of 37 pays
+        // for exactly one check on a problem converging within 37 sweeps,
+        // while the legacy clamp paid one per 5 sweeps.
+        let ds = problem();
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.3 * lmax;
+        let opts = |check_every| SolveOptions { check_every, tol: 1e-10, ..Default::default() };
+        let fast = bcd(&ds, lam, None, &opts(1));
+        assert!(
+            fast.converged && fast.iters > 5 && fast.iters <= 37,
+            "premise: needs 5 < sweeps <= 37 at this tolerance, got {}",
+            fast.iters
+        );
+        let coarse = bcd(&ds, lam, None, &opts(37));
+        assert!(coarse.converged);
+        assert!(coarse.iters >= fast.iters);
+        let checks = coarse.col_ops / (2 * ds.d) - coarse.iters;
+        assert_eq!(
+            checks, 1,
+            "cadence 37 must evaluate the gap exactly once in {} sweeps \
+             (the legacy ≤5 clamp would have paid for {} checks)",
+            coarse.iters,
+            coarse.iters.div_ceil(5)
+        );
     }
 
     #[test]

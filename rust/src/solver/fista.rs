@@ -119,7 +119,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             w = w_new;
             t = t_new;
 
-            let due_check = it % opts.check_every == 0 || it == opts.max_iters;
+            let due_check = it % opts.check_every.max(1) == 0 || it == opts.max_iters;
             let due_screen = opts.dynamic_every > 0 && it % opts.dynamic_every == 0 && dsc.d > 1;
             if due_check || due_screen {
                 // the gap evaluation costs a forward pass + a corr sweep

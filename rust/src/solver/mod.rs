@@ -81,6 +81,8 @@ pub struct SolveOptions {
     /// stop when duality gap <= tol * max(1, |obj|)
     pub tol: f64,
     /// evaluate the (expensive) duality gap every this many iterations
+    /// (FISTA steps / BCD sweeps — both solvers honor the configured
+    /// cadence identically, clamped only to ≥ 1)
     pub check_every: usize,
     /// power-iteration count for the Lipschitz estimate
     pub power_iters: usize,

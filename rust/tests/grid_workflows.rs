@@ -1,0 +1,138 @@
+//! Integration tests for the one-pass λ-path grid workflows (CV and
+//! stability selection) built on the [`PathObserver`] streaming API:
+//!
+//! * CV pays for each fold's screened path exactly once (col-ops parity
+//!   with a direct per-fold `run_path`), and honors the configured
+//!   screener/solver instead of hardcoding DPC + FISTA;
+//! * stability selection accumulates the true union-over-λ active mask,
+//!   catching features that are active only at large λ — the old
+//!   implementation tested only the final (smallest-λ) solution.
+
+use mtfl_dpc::coordinator::cv::{cross_validate, kfold_splits, validation_mse};
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind, SolverKind};
+use mtfl_dpc::coordinator::stability::stability_selection;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::Dataset;
+use mtfl_dpc::ops;
+use mtfl_dpc::solver::{bcd, SolveOptions};
+
+fn cv_dataset() -> Dataset {
+    synthetic1(&SynthOptions { t: 3, n: 30, d: 40, support_frac: 0.1, noise: 0.3, seed: 71 }).0
+}
+
+#[test]
+fn cv_runs_each_fold_path_exactly_once() {
+    // the one-pass acceptance gate: total solver column-sweep work of
+    // cross_validate must equal the cost of running each fold's screened
+    // path once — the pre-observer implementation re-walked the whole path
+    // a second time per fold to recover per-λ solutions (~2× the work)
+    let ds = cv_dataset();
+    let opts = PathOptions {
+        ratios: lambda_grid(8, 1.0, 0.02),
+        solve: SolveOptions { tol: 1e-7, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    let direct: usize = kfold_splits(&ds, 3, 0)
+        .unwrap()
+        .iter()
+        .map(|(train, _)| run_path(train, &opts, &EngineKind::Exact).unwrap().total_col_ops())
+        .sum();
+    let cv = cross_validate(&ds, &opts, 3, 0).unwrap();
+    assert!(direct > 0, "premise: the folds did solver work");
+    assert_eq!(
+        cv.col_ops, direct,
+        "CV fold cost must be one screened path per fold, not {} vs direct {}",
+        cv.col_ops, direct
+    );
+}
+
+#[test]
+fn cv_respects_configured_screener_and_solver() {
+    // regression: cross_validate used to hardcode DpcScreener + fista for
+    // the per-λ scoring walk, silently ignoring opts. A GapSafe + BCD CV
+    // must agree with an independent per-λ reference (warm-started BCD
+    // solves on each training split, no screening at all).
+    let ds = cv_dataset();
+    let ratios = lambda_grid(6, 1.0, 0.05);
+    let k = 3;
+
+    let splits = kfold_splits(&ds, k, 0).unwrap();
+    let mut ref_mse = vec![0.0f64; ratios.len()];
+    for (train, val) in &splits {
+        let (lam_max, _, _) = ops::lambda_max(train);
+        let mut w_prev: Option<Vec<f64>> = None;
+        for (i, &ratio) in ratios.iter().enumerate() {
+            let lam = ratio * lam_max;
+            let sol = bcd(train, lam, w_prev.as_deref(), &SolveOptions::tight());
+            ref_mse[i] += validation_mse(val, &sol.w) / k as f64;
+            w_prev = Some(sol.w);
+        }
+    }
+
+    let opts = PathOptions {
+        ratios: ratios.clone(),
+        solve: SolveOptions { tol: 1e-9, ..Default::default() },
+        screener: ScreenerKind::GapSafe,
+        solver: SolverKind::Bcd,
+        ..Default::default()
+    };
+    let cv = cross_validate(&ds, &opts, k, 0).unwrap();
+    assert_eq!(cv.mse.len(), ratios.len());
+    for (i, (got, want)) in cv.mse.iter().zip(&ref_mse).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-5 * want.max(1.0),
+            "GapSafe+BCD CV diverged from the reference at grid index {i}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn stability_selects_features_active_only_at_large_lambda() {
+    // the grid deliberately ends back up at a near-λ_max point: the final
+    // solution of each subsample path is (almost) empty, so the old
+    // last-λ mask selects (almost) nothing, while the documented
+    // "nonzero at *any* λ" semantics must still surface the true support
+    // that is active at the interior λ = 0.1·λ_max point
+    let (ds, gt) =
+        synthetic1(&SynthOptions { t: 3, n: 30, d: 40, support_frac: 0.1, noise: 0.1, seed: 21 });
+    let opts = PathOptions {
+        ratios: vec![1.0, 0.1, 0.98],
+        solve: SolveOptions { tol: 1e-8, ..Default::default() },
+        // no screening: the sequential DPC rule assumes a descending grid
+        screener: ScreenerKind::None,
+        ..Default::default()
+    };
+
+    // premise (old-semantics proxy): at the final grid point the full-data
+    // solution keeps at most the single strongest feature
+    let run = run_path(&ds, &opts, &EngineKind::Exact).unwrap();
+    let t = ds.t();
+    let last_active: Vec<usize> = run
+        .last_w
+        .chunks_exact(t)
+        .enumerate()
+        .filter_map(|(l, row)| ops::row_is_active(row, 1e-8).then_some(l))
+        .collect();
+    assert!(
+        last_active.len() <= 1,
+        "premise: the ratio-0.98 solution should be near-empty, got {last_active:?}"
+    );
+
+    let res = stability_selection(&ds, &opts, 4, 0.75, 0).unwrap();
+    let stable_true: Vec<usize> =
+        gt.active.iter().copied().filter(|l| res.stable.contains(l)).collect();
+    assert!(
+        stable_true.len() >= 2,
+        "union-over-λ mask must recover the support active at λ=0.1·λ_max: \
+         stable {:?} vs truth {:?}",
+        res.stable,
+        gt.active
+    );
+    let missed_by_last_mask = stable_true.iter().filter(|l| !last_active.contains(l)).count();
+    assert!(
+        missed_by_last_mask >= 1,
+        "test premise broken: the last-λ mask already contains every stable feature"
+    );
+}

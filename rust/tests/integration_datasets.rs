@@ -28,15 +28,8 @@ fn all_generators_validate() {
 fn ground_truth_support_is_recoverable_at_moderate_lambda() {
     // features with strong true signal must survive screening at mid-λ:
     // the screened-path solution's active set intersects the true support
-    let (ds, gt) = synthetic1(&SynthOptions {
-        t: 4,
-        n: 30,
-        d: 60,
-        support_frac: 0.1,
-        noise: 0.01,
-        seed: 9,
-        ..Default::default()
-    });
+    let (ds, gt) =
+        synthetic1(&SynthOptions { t: 4, n: 30, d: 60, support_frac: 0.1, noise: 0.01, seed: 9 });
     let (lmax, _, _) = ops::lambda_max(&ds);
     let sol =
         mtfl_dpc::solver::fista(&ds, 0.05 * lmax, None, &mtfl_dpc::solver::SolveOptions::default());
