@@ -1,7 +1,37 @@
-//! Quickstart: generate a small multi-task problem, compute λ_max, screen
-//! with DPC at one λ, and solve — the 60-second tour of the public API.
+//! Quickstart — the 60-second tour of the public API, narrated.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! The model is the multi-task group Lasso with one data matrix per task
+//! (problem (1) of the paper):
+//!
+//! ```text
+//! min_W  Σ_t ½‖y_t − X_t w_t‖² + λ‖W‖₂,₁
+//! ```
+//!
+//! The ℓ2,1 penalty zeroes entire *rows* of W — a feature is kept or
+//! discarded for all tasks at once. DPC ("dual polytope projection for
+//! multiple data matrices") is a *safe screening rule*: before solving at
+//! λ, it certifies a set of rows to be exactly zero in the optimum and
+//! deletes them. "Safe" is a theorem, not a heuristic — the reduced
+//! problem has the identical solution.
+//!
+//! The walkthrough below runs the whole pipeline in RAM:
+//!
+//! 1. generate a small multi-task problem;
+//! 2. compute λ_max, the smallest λ with W* = 0 (Theorem 1) — it anchors
+//!    both the tuning grid and the first screening reference;
+//! 3. walk a descending λ grid with *sequential* DPC (Corollary 9):
+//!    screen at λ_{k+1} from the solution at λ_k, solve the compacted
+//!    problem, move the reference, repeat;
+//! 4. cross-check the screened solve against an unscreened solve;
+//! 5. verify the screening certificate against the KKT conditions.
+//!
+//! This is exactly what `coordinator::run_path` automates (plus warm
+//! starts, gap certification and observers); the point here is to show
+//! the seams. **The same pipeline also runs without the dataset in RAM**:
+//! `examples/out_of_core.rs` shards a dataset to disk and screens it
+//! block-by-block before loading only the survivors (DESIGN.md §10).
 
 use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
 use mtfl_dpc::ops;
@@ -9,7 +39,9 @@ use mtfl_dpc::screening::dpc::{DpcScreener, DualRef};
 use mtfl_dpc::solver::{fista, SolveOptions};
 
 fn main() -> anyhow::Result<()> {
-    // 1. A multi-task dataset: 5 tasks, 40 samples each, 500 shared features.
+    // 1. A multi-task dataset: 5 tasks, 40 samples each, 500 shared
+    //    features, 5% of them truly active across all tasks (the shared-
+    //    support premise that makes multi-task screening worthwhile).
     let (ds, truth) = synthetic1(&SynthOptions {
         t: 5,
         n: 40,
@@ -21,14 +53,20 @@ fn main() -> anyhow::Result<()> {
     println!("dataset: T={} tasks, N=40 samples each, d={} features", ds.t(), ds.d);
     println!("true support: {} features", truth.active.len());
 
-    // 2. λ_max — above it the solution is exactly zero (Theorem 1).
+    // 2. λ_max — above it the solution is exactly zero (Theorem 1), and
+    //    the dual optimum is known in closed form: θ* = y/λ_max. That
+    //    free, *exact* reference is what one-shot DPC screens from.
     let (dref, lam_max) = DualRef::at_lambda_max(&ds);
     println!("lambda_max = {lam_max:.4}");
 
-    // 3. Screen at λ = 0.7 λ_max with DPC (safe: rejected features are
-    //    *guaranteed* zero rows of the solution), solve the reduced
-    //    problem, then screen *sequentially* (Corollary 9) at λ = 0.3 λ_max
-    //    from that solution — the reference tightens as λ decreases.
+    // 3. Walk down a λ grid with sequential DPC. At each step the
+    //    screener builds a ball that provably contains the dual optimum
+    //    θ*(λ) (Theorem 5), maximizes each feature's score over it
+    //    (Theorem 7), and rejects every feature whose max stays below 1
+    //    (Theorem 8) — those rows of W are zero, guaranteed. The solver
+    //    then runs on the compacted problem, and the *solved* primal
+    //    becomes the next, tighter reference (Corollary 9). This is why
+    //    DPC can afford a 100-point grid: the ball shrinks as it walks.
     let screener = DpcScreener::new(&ds);
     let t_count = ds.t();
     let mut dref_seq = dref;
@@ -42,7 +80,10 @@ fn main() -> anyhow::Result<()> {
             outcome.num_rejected(),
             ds.d
         );
-        // solve the reduced problem, embed, and move the dual reference
+        // solve the reduced problem, embed the solution at full size, and
+        // move the dual reference to it — `DualRef::from_solution` stores
+        // a duality-gap certificate alongside, so screening stays safe
+        // even though the solve stopped at finite tolerance (DESIGN.md §9)
         let keep = outcome.kept_indices();
         let sol = fista(&ds.restrict(&keep), lam, None, &SolveOptions::default());
         let mut w_full = vec![0.0f64; ds.d * t_count];
@@ -53,7 +94,9 @@ fn main() -> anyhow::Result<()> {
         dref_seq = DualRef::from_solution(&ds, lam, &w_full);
     }
 
-    // 4. Solve on the compacted problem; embed the solution back.
+    // 4. Solve once more on the final compacted problem and compare with
+    //    the unscreened solve: identical objective — screening deleted
+    //    only provably-zero rows, it never changed the optimum.
     let keep = outcome.kept_indices();
     let reduced = ds.restrict(&keep);
     let sol = fista(&reduced, lam, None, &SolveOptions::default());
@@ -65,8 +108,6 @@ fn main() -> anyhow::Result<()> {
         sol.gap,
         sol.iters
     );
-
-    // 5. Verify against the full solve: identical objective.
     let full = fista(&ds, lam, None, &SolveOptions::default());
     println!(
         "full problem objective: {:.5}  (difference {:.2e})",
@@ -78,7 +119,9 @@ fn main() -> anyhow::Result<()> {
     let recovered = truth.active.iter().filter(|l| active.contains(l)).count();
     println!("active set: {} features ({recovered} of the true support)", active.len());
 
-    // the screening certificate must agree with the solution
+    // 5. The KKT cross-check: at the optimum, every feature's dual score
+    //    g_l(θ*) saturates 1 exactly on active rows and stays below 1 on
+    //    inactive ones — so every *rejected* feature must score < 1.
     let g = ops::gscore(
         &ds,
         &ops::stacked_scale(&ops::residual(&ds, &full.w), -1.0 / lam),

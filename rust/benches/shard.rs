@@ -1,0 +1,120 @@
+//! Screen-before-load bench (DESIGN.md §10): the same λ-path run on the
+//! in-RAM dense backend and on an MTD3 shard, recording solver col-ops
+//! plus the memory-model numbers — bytes materialized per grid point (the
+//! peak-RSS proxy: the matrix memory the solver actually saw) against the
+//! bytes a dense in-RAM load would cost. Results land in
+//! `BENCH_shard.json` at the repo root.
+//!
+//!     cargo bench --bench shard
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{
+    run_path, run_path_sharded, EngineKind, PathOptions, ScreenerKind,
+};
+use mtfl_dpc::data::io::save_sharded;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::ShardedDataset;
+use mtfl_dpc::solver::SolveOptions;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let (t, n, d) = (4usize, 16usize, 2000usize);
+    let (ds, _) = synthetic1(&SynthOptions {
+        t,
+        n,
+        d,
+        support_frac: 0.05,
+        noise: 0.05,
+        seed: 42,
+    });
+    let opts = PathOptions {
+        ratios: lambda_grid(12, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-6, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+
+    println!("== screen-before-load: dense vs sharded (T={t}, N={n}, d={d}) ==\n");
+    let dense = run_path(&ds, &opts, &EngineKind::Exact)?;
+    println!(
+        "dense    total {:>7.2}s  col-ops {:>12}  resident matrix {:.2} MiB",
+        dense.total_secs,
+        dense.total_col_ops(),
+        ds.mem_bytes() as f64 / (1024.0 * 1024.0)
+    );
+
+    let shard_path = std::env::temp_dir()
+        .join(format!("mtfl_bench_shard_{}.mtd3", std::process::id()));
+    let summary = save_sharded(&ds, &shard_path, 64 << 10)?;
+    let sh = ShardedDataset::open(&shard_path)?;
+    let sharded = run_path_sharded(&sh, &opts);
+    std::fs::remove_file(&shard_path).ok();
+    let sharded = sharded?;
+    println!(
+        "sharded  total {:>7.2}s  col-ops {:>12}  peak materialized {:.2} MiB \
+         of {:.2} MiB dense ({:.1}%)",
+        sharded.path.total_secs,
+        sharded.path.total_col_ops(),
+        sharded.peak_materialized_bytes as f64 / (1024.0 * 1024.0),
+        sharded.dense_bytes as f64 / (1024.0 * 1024.0),
+        100.0 * sharded.peak_materialized_bytes as f64 / sharded.dense_bytes as f64
+    );
+    println!(
+        "         disk: {} blocks x {} cols, {:.2} MiB read over {} block loads\n",
+        summary.blocks,
+        summary.block_cols,
+        sharded.bytes_read as f64 / (1024.0 * 1024.0),
+        sharded.blocks_loaded
+    );
+    println!("   ratio     kept   materialized (% of dense)");
+    for (rec, &mb) in sharded.path.records.iter().zip(&sharded.materialized_bytes) {
+        println!(
+            "   {:.4}  {:>6}   {:>12} ({:>5.1}%)",
+            rec.ratio,
+            rec.kept,
+            mb,
+            100.0 * mb as f64 / sharded.dense_bytes as f64
+        );
+    }
+
+    let per_lambda: Vec<String> = sharded
+        .path
+        .records
+        .iter()
+        .zip(&sharded.materialized_bytes)
+        .map(|(rec, &mb)| {
+            format!(
+                "      {{\"ratio\": {:.6}, \"kept\": {}, \"materialized_bytes\": {mb}}}",
+                rec.ratio, rec.kept
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"screen_before_load_shard\",\n  \"generated_by\": \
+         \"cargo bench --bench shard\",\n  \"provisional\": false,\n  \
+         \"shape\": {{\"t\": {t}, \"n\": {n}, \"d\": {d}}},\n  \
+         \"shard\": {{\"block_cols\": {}, \"blocks\": {}}},\n  \
+         \"dense_bytes\": {},\n  \"dense\": {{\"total_secs\": {:.3}, \"col_ops\": {}}},\n  \
+         \"sharded\": {{\"total_secs\": {:.3}, \"col_ops\": {}, \
+         \"peak_materialized_bytes\": {}, \"bytes_read\": {}, \"blocks_loaded\": {}, \
+         \"per_lambda\": [\n{}\n  ]}}\n}}\n",
+        summary.block_cols,
+        summary.blocks,
+        sharded.dense_bytes,
+        dense.total_secs,
+        dense.total_col_ops(),
+        sharded.path.total_secs,
+        sharded.path.total_col_ops(),
+        sharded.peak_materialized_bytes,
+        sharded.bytes_read,
+        sharded.blocks_loaded,
+        per_lambda.join(",\n")
+    );
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_shard.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_shard.json"));
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {}", out_path.display());
+    Ok(())
+}

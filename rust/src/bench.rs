@@ -6,25 +6,33 @@
 use crate::util::timer::format_duration;
 use std::time::{Duration, Instant};
 
+/// Measured samples of one benchmark plus its robust summary stats.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// benchmark label (printed in summaries)
     pub name: String,
-    pub samples: Vec<f64>, // seconds
+    /// per-sample wallclock, in seconds
+    pub samples: Vec<f64>,
 }
 
 impl BenchStats {
+    /// Median sample (the headline number — robust to warmup stragglers).
     pub fn median(&self) -> f64 {
         percentile(&self.samples, 50.0)
     }
+    /// 25th-percentile sample (lower IQR bound).
     pub fn p25(&self) -> f64 {
         percentile(&self.samples, 25.0)
     }
+    /// 75th-percentile sample (upper IQR bound).
     pub fn p75(&self) -> f64 {
         percentile(&self.samples, 75.0)
     }
+    /// Arithmetic mean of the samples.
     pub fn mean(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
     }
+    /// One-line "median + IQR" summary (what [`Bencher::run`] prints).
     pub fn summary(&self) -> String {
         format!(
             "{:<44} median {:>10}  IQR [{:>10}, {:>10}]  n={}",
@@ -50,8 +58,11 @@ fn percentile(samples: &[f64], p: f64) -> f64 {
 /// Benchmark runner: warms up for `warmup` iterations, then measures until
 /// `min_samples` samples or `max_time` is exhausted (at least 1 sample).
 pub struct Bencher {
+    /// untimed iterations before measurement starts
     pub warmup: usize,
+    /// samples to collect (unless `max_time` runs out first)
     pub min_samples: usize,
+    /// wallclock budget for the whole measurement
     pub max_time: Duration,
 }
 
@@ -62,10 +73,12 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// A fast profile for CI-sized runs (3 samples, 10 s budget).
     pub fn quick() -> Self {
         Bencher { warmup: 1, min_samples: 3, max_time: Duration::from_secs(10) }
     }
 
+    /// Measure `f`, print the summary line, and return the samples.
     pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
@@ -92,15 +105,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Start a table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the aligned ASCII table.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();

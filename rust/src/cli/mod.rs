@@ -6,8 +6,12 @@
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+/// Parsed command line: one optional subcommand plus `--key value` /
+/// `--key=value` pairs and bare `--flag`s, with consumption tracking so
+/// [`Args::finish`] can reject typos.
 #[derive(Debug, Clone)]
 pub struct Args {
+    /// the leading non-flag token, if any
     pub subcommand: Option<String>,
     values: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -46,25 +50,30 @@ impl Args {
         Ok(Args { subcommand, values, flags, consumed: Default::default() })
     }
 
+    /// Parse from the process arguments (skipping argv\[0\]).
     pub fn parse() -> Result<Args> {
         let tokens: Vec<String> = std::env::args().skip(1).collect();
         Self::parse_from(&tokens)
     }
 
+    /// True if the bare flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.consumed.borrow_mut().insert(name.to_string());
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.consumed.borrow_mut().insert(name.to_string());
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as usize, or `default`; a typed error on garbage.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -74,6 +83,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as f64, or `default`; a typed error on garbage.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -83,6 +93,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as u64, or `default`; a typed error on garbage.
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),

@@ -81,13 +81,16 @@ pub fn validation_mse(ds: &Dataset, w: &[f64]) -> f64 {
     total / ds.total_n() as f64
 }
 
+/// Cross-validation output: the validation curve and its winner.
 #[derive(Debug, Clone)]
 pub struct CvResult {
     /// mean validation MSE per grid index
     pub mse: Vec<f64>,
     /// grid ratios (copied from options)
     pub ratios: Vec<f64>,
+    /// grid index of the lowest mean validation MSE
     pub best_index: usize,
+    /// λ/λ_max ratio at `best_index`
     pub best_ratio: f64,
     /// total solver column-sweep work across folds (one screened path per
     /// fold — the one-pass guarantee BENCH/tests pin down)

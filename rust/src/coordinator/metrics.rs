@@ -19,6 +19,7 @@ pub struct RejectionCurve {
 }
 
 impl RejectionCurve {
+    /// An empty accumulator for trials over a `grid_len`-point grid.
     pub fn new(grid_len: usize) -> Self {
         assert!(grid_len > 0, "empty λ grid");
         RejectionCurve {
@@ -84,7 +85,9 @@ pub fn mean_rejection_curve(runs: &[PathRunResult]) -> Vec<(f64, f64)> {
 /// against a screened run of the *same* problem.
 #[derive(Debug, Clone)]
 pub struct SpeedupRow {
+    /// workload name
     pub dataset: String,
+    /// feature dimension
     pub d: usize,
     /// solver without screening (total path seconds)
     pub solver_secs: f64,
@@ -92,10 +95,14 @@ pub struct SpeedupRow {
     pub dpc_secs: f64,
     /// screened path total (screen + reduced solve)
     pub combined_secs: f64,
+    /// `solver_secs / combined_secs`
     pub speedup: f64,
+    /// mean rejection ratio of the screened run
     pub mean_rejection: f64,
 }
 
+/// Assemble one Table-1 row from a baseline and a screened run of the
+/// same problem.
 pub fn speedup_row(baseline: &PathRunResult, screened: &PathRunResult) -> SpeedupRow {
     let solver_secs = baseline.total_secs;
     let combined = screened.total_secs;

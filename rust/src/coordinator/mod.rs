@@ -11,6 +11,7 @@ pub mod report;
 
 pub use grid::lambda_grid;
 pub use path::{
-    run_path, run_path_with, EngineKind, FnObserver, LambdaRecord, PathObserver, PathOptions,
-    PathRunResult, ScreenerKind, SolverKind,
+    run_path, run_path_sharded, run_path_sharded_with, run_path_with, EngineKind, FnObserver,
+    LambdaRecord, PathObserver, PathOptions, PathRunResult, ScreenerKind, ShardRunResult,
+    SolverKind,
 };

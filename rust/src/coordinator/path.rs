@@ -24,18 +24,30 @@
 //! stays sparse through every screen→restrict→solve step — compaction is
 //! pointer arithmetic on the stored entries, never a densify (DESIGN.md
 //! §6). The AOT engine densifies at the PJRT ABI boundary only.
+//!
+//! Out-of-core (DESIGN.md §10): [`run_path_sharded`] runs the same grid
+//! against an on-disk MTD3 shard with the screen-before-load pipeline —
+//! each grid point streams column blocks through the screener, then
+//! materializes only the certified survivors for the solver, so datasets
+//! with `d ≫ RAM` run without ever being loaded. Keep-sets and solutions
+//! match the in-RAM backends; [`ShardRunResult`] adds the bytes-
+//! materialized accounting benched in `BENCH_shard.json`.
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardedDataset};
 use crate::ops;
 use crate::runtime::{buckets, AotEngine};
 use crate::screening::bounds::CsScreener;
 use crate::screening::dpc::{DpcScreener, DualRef};
-use crate::screening::gap::GapScreener;
+use crate::screening::gap::{certified_radius, GapScreener};
 use crate::screening::safety;
+use crate::screening::shard::{
+    dual_ref_at_lambda_max, dual_ref_from_streamed, streamed_gap, ShardScreener,
+};
 use crate::solver::{bcd, fista, SolveOptions};
 use crate::util::Stopwatch;
 use anyhow::{Context, Result};
 
+/// Which screening rule runs ahead of each solve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScreenerKind {
     /// no screening: the solver sees all d features at every λ (baseline)
@@ -51,12 +63,16 @@ pub enum ScreenerKind {
     GapSafe,
 }
 
+/// Which exact solver runs on the compacted problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SolverKind {
+    /// accelerated proximal gradient ([`crate::solver::fista`])
     Fista,
+    /// cyclic block-coordinate descent ([`crate::solver::bcd`])
     Bcd,
 }
 
+/// Which compute engine executes the path.
 pub enum EngineKind<'a> {
     /// exact f64 path (self-contained, no artifacts)
     Exact,
@@ -64,12 +80,16 @@ pub enum EngineKind<'a> {
     Aot(&'a AotEngine),
 }
 
+/// Everything a path run needs besides the dataset.
 #[derive(Debug, Clone)]
 pub struct PathOptions {
     /// λ/λ_max ratios, descending (see [`crate::coordinator::lambda_grid`])
     pub ratios: Vec<f64>,
+    /// solver options (tolerance, iteration caps, dynamic screening)
     pub solve: SolveOptions,
+    /// screening rule to run ahead of each solve
     pub screener: ScreenerKind,
+    /// solver for the compacted per-λ problems
     pub solver: SolverKind,
     /// f32-precision guard for the **AOT engine only**: keep features
     /// scoring within this margin below 1 to absorb f32 sweep error. The
@@ -100,7 +120,9 @@ impl Default for PathOptions {
 /// Per-λ record (one row of the figures' series).
 #[derive(Debug, Clone)]
 pub struct LambdaRecord {
+    /// λ/λ_max grid ratio of this step
     pub ratio: f64,
+    /// absolute λ of this step
     pub lam: f64,
     /// features rejected by screening
     pub rejected: usize,
@@ -110,24 +132,37 @@ pub struct LambdaRecord {
     pub inactive: usize,
     /// rejected / inactive  (the paper's rejection ratio; 1.0 if inactive=0)
     pub rejection_ratio: f64,
+    /// wallclock spent screening at this λ
     pub screen_secs: f64,
+    /// wallclock spent solving at this λ
     pub solve_secs: f64,
+    /// solver iterations (FISTA steps / BCD sweeps)
     pub solver_iters: usize,
     /// column-sweep operations the solver spent (see
     /// [`crate::solver::SolveResult::col_ops`])
     pub col_ops: usize,
+    /// primal objective at the solution
     pub obj: f64,
+    /// duality gap at the solution
     pub gap: f64,
 }
 
+/// A whole path run: per-λ records plus totals and the final solution.
 #[derive(Debug, Clone)]
 pub struct PathRunResult {
+    /// workload name
     pub dataset: String,
+    /// feature dimension
     pub d: usize,
+    /// λ_max of the dataset (Theorem 1)
     pub lam_max: f64,
+    /// one record per grid point, in grid order
     pub records: Vec<LambdaRecord>,
+    /// total screening wallclock
     pub screen_secs: f64,
+    /// total solver wallclock
     pub solve_secs: f64,
+    /// end-to-end wallclock
     pub total_secs: f64,
     /// final-λ solution (row-major d x T) for downstream consumers
     pub last_w: Vec<f64>,
@@ -142,6 +177,8 @@ pub struct PathRunResult {
 ///
 /// Closures become observers through the [`FnObserver`] adapter.
 pub trait PathObserver {
+    /// Called once per grid point, in grid order, with the full-size
+    /// (d × T) solution and that step's record.
     fn on_solution(&mut self, ratio: f64, lam: f64, w_full: &[f64], rec: &LambdaRecord);
 }
 
@@ -160,6 +197,7 @@ where
 }
 
 impl PathRunResult {
+    /// Mean of the per-λ rejection ratios (the figures' y-axis).
     pub fn mean_rejection_ratio(&self) -> f64 {
         let rs: Vec<f64> = self.records.iter().map(|r| r.rejection_ratio).collect();
         rs.iter().sum::<f64>() / rs.len().max(1) as f64
@@ -368,6 +406,212 @@ fn run_path_exact(
         solve_secs,
         total_secs: total.secs(),
         last_w: prev_w,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// sharded (out-of-core) engine: screen-before-load
+// ---------------------------------------------------------------------------
+
+/// Result of an out-of-core path run: the standard per-λ records plus the
+/// memory-model accounting (`BENCH_shard.json` feeds from this).
+#[derive(Debug, Clone)]
+pub struct ShardRunResult {
+    /// per-λ records and totals, schema-identical to an in-RAM run
+    pub path: PathRunResult,
+    /// bytes materialized for the solver at each grid point — the
+    /// peak-RSS proxy (the matrix memory the solver actually saw)
+    pub materialized_bytes: Vec<usize>,
+    /// max over the grid of `materialized_bytes`
+    pub peak_materialized_bytes: usize,
+    /// what loading the full matrix dense in RAM would cost
+    pub dense_bytes: u64,
+    /// total shard payload on disk
+    pub payload_bytes: u64,
+    /// bytes read from disk across the run (cache misses only)
+    pub bytes_read: u64,
+    /// block loads from disk across the run (cache misses only)
+    pub blocks_loaded: u64,
+}
+
+/// Run the λ-path out-of-core with a no-op observer (see
+/// [`run_path_sharded_with`]).
+pub fn run_path_sharded(sh: &ShardedDataset, opts: &PathOptions) -> Result<ShardRunResult> {
+    let mut noop = FnObserver(|_: f64, _: f64, _: &[f64], _: &LambdaRecord| {});
+    run_path_sharded_with(sh, opts, &mut noop)
+}
+
+/// The screen-before-load λ-path (DESIGN.md §10): every grid point
+/// screens the *on-disk* shard block-by-block against a certified ball,
+/// materializes only the surviving columns ([`ShardedDataset::restrict`])
+/// and solves that in-RAM problem — peak matrix memory scales with the
+/// active set, not with `d`. Supports the screeners whose balls are O(N)
+/// objects (sequential DPC, one-shot DPC, GAP-safe); `None`/`DpcCs` and
+/// `verify_safety` need the matrix resident and are rejected with an
+/// error. Keep-sets and solutions match the in-RAM dense/CSC path
+/// bit-for-bit / to solver tolerance (`rust/tests/shard_backend.rs`).
+pub fn run_path_sharded_with(
+    sh: &ShardedDataset,
+    opts: &PathOptions,
+    obs: &mut dyn PathObserver,
+) -> Result<ShardRunResult> {
+    anyhow::ensure!(
+        matches!(
+            opts.screener,
+            ScreenerKind::Dpc | ScreenerKind::DpcOneShot | ScreenerKind::GapSafe
+        ),
+        "screener {:?} is not supported out-of-core — the shard path exists to \
+         avoid loading the matrix, so use dpc, oneshot or gap",
+        opts.screener
+    );
+    anyhow::ensure!(
+        !opts.verify_safety,
+        "verify_safety re-solves the unrestricted problem and needs the matrix \
+         in RAM — run it on the dense/CSC backends"
+    );
+    let t_count = sh.t();
+    let d = sh.d();
+    let bytes0 = sh.bytes_read();
+    let blocks0 = sh.blocks_loaded();
+    let mut total = Stopwatch::new();
+    total.start();
+
+    let screener = ShardScreener::new(sh)?;
+    let y = sh.y64();
+    let (dref0, lam_max) = dual_ref_at_lambda_max(sh)?;
+    let mut dref = dref0.clone();
+
+    // residual of W = 0, written as the in-RAM `ops::residual` computes it
+    // (0.0 − y_i), so the head-of-grid gap states agree bit-for-bit
+    let zero_residual = |y: &ops::Stacked| -> ops::Stacked {
+        y.iter().map(|yt| yt.iter().map(|&v| 0.0 - v).collect()).collect()
+    };
+
+    let mut prev_w = vec![0.0f64; d * t_count];
+    let mut prev_r = zero_residual(&y);
+    let mut prev_l21 = 0.0f64;
+    let mut records = Vec::with_capacity(opts.ratios.len());
+    let mut materialized_bytes = Vec::with_capacity(opts.ratios.len());
+
+    for (step, &ratio) in opts.ratios.iter().enumerate() {
+        let lam = ratio * lam_max;
+        // -- screening phase (streamed over the shard) --
+        let mut step_screen = Stopwatch::new();
+        let keep: Vec<usize> = if ratio >= 1.0 - 1e-12 {
+            Vec::new() // Theorem 1: W* = 0, keep nothing
+        } else {
+            match opts.screener {
+                ScreenerKind::Dpc => step_screen
+                    .time(|| screener.screen(sh, &y, &dref, lam))?
+                    .kept_indices(),
+                ScreenerKind::DpcOneShot => step_screen
+                    .time(|| screener.screen(sh, &y, &dref0, lam))?
+                    .kept_indices(),
+                ScreenerKind::GapSafe => step_screen
+                    .time(|| {
+                        let sg = streamed_gap(sh, &y, lam, &prev_r, prev_l21)?;
+                        screener.screen_ball(
+                            sh,
+                            &sg.theta,
+                            certified_radius(sg.gap, lam),
+                        )
+                    })?
+                    .kept_indices(),
+                _ => unreachable!("rejected by the capability check above"),
+            }
+        };
+
+        // -- materialize survivors + solve in RAM --
+        let mut step_solve = Stopwatch::new();
+        let mut w_full = vec![0.0f64; d * t_count];
+        let mut materialized = 0usize;
+        let (obj, gap, iters, col_ops, r_cur, l21_cur) = if keep.is_empty() {
+            let r0 = zero_residual(&y);
+            let sg = streamed_gap(sh, &y, lam, &r0, 0.0)?;
+            (sg.obj, sg.gap, 0, 0, r0, 0.0)
+        } else {
+            let ds_r = sh.restrict(&keep)?;
+            materialized = ds_r.mem_bytes();
+            let mut w0 = vec![0.0f64; keep.len() * t_count];
+            for (j, &l) in keep.iter().enumerate() {
+                w0[j * t_count..(j + 1) * t_count]
+                    .copy_from_slice(&prev_w[l * t_count..(l + 1) * t_count]);
+            }
+            let res = step_solve.time(|| match opts.solver {
+                SolverKind::Fista => fista(&ds_r, lam, Some(&w0), &opts.solve),
+                SolverKind::Bcd => bcd(&ds_r, lam, Some(&w0), &opts.solve),
+            });
+            for (j, &l) in keep.iter().enumerate() {
+                w_full[l * t_count..(l + 1) * t_count]
+                    .copy_from_slice(&res.w[j * t_count..(j + 1) * t_count]);
+            }
+            let r = ops::residual(&ds_r, &res.w);
+            let l21 = ops::l21_norm(&res.w, t_count);
+            (res.obj, res.gap, res.iters, res.col_ops, r, l21)
+        };
+
+        // -- bookkeeping (same ground-truth accounting as the exact path) --
+        let rejected = d - keep.len();
+        let active = w_full
+            .chunks_exact(t_count)
+            .filter(|row| ops::row_is_active(row, opts.active_tol))
+            .count();
+        let inactive = d - active;
+        let rejection_ratio =
+            if inactive == 0 { 1.0 } else { rejected as f64 / inactive as f64 };
+        records.push(LambdaRecord {
+            ratio,
+            lam,
+            rejected,
+            kept: keep.len(),
+            inactive,
+            rejection_ratio,
+            screen_secs: step_screen.secs(),
+            solve_secs: step_solve.secs(),
+            solver_iters: iters,
+            col_ops,
+            obj,
+            gap,
+        });
+        materialized_bytes.push(materialized);
+        obs.on_solution(ratio, lam, &w_full, records.last().unwrap());
+
+        // sequential reference update (Cor. 9): re-streams the shard once
+        // for the feasibility scaling of the new reference — the per-grid-
+        // point re-stream the screen-before-load design pays for safety.
+        // Skipped after the last grid point: nothing reads the reference
+        // again, and on a shard the wasted sweep is a full disk pass
+        let last = step + 1 == opts.ratios.len();
+        if matches!(opts.screener, ScreenerKind::Dpc) && ratio < 1.0 - 1e-12 && !last {
+            let sg = streamed_gap(sh, &y, lam, &r_cur, l21_cur)?;
+            dref = dual_ref_from_streamed(&y, lam, &sg);
+        }
+        prev_w = w_full;
+        prev_r = r_cur;
+        prev_l21 = l21_cur;
+    }
+
+    total.stop();
+    let screen_secs: f64 = records.iter().map(|r| r.screen_secs).sum();
+    let solve_secs: f64 = records.iter().map(|r| r.solve_secs).sum();
+    let peak = materialized_bytes.iter().copied().max().unwrap_or(0);
+    Ok(ShardRunResult {
+        path: PathRunResult {
+            dataset: sh.name().to_string(),
+            d,
+            lam_max,
+            records,
+            screen_secs,
+            solve_secs,
+            total_secs: total.secs(),
+            last_w: prev_w,
+        },
+        materialized_bytes,
+        peak_materialized_bytes: peak,
+        dense_bytes: sh.dense_bytes(),
+        payload_bytes: sh.payload_bytes(),
+        bytes_read: sh.bytes_read() - bytes0,
+        blocks_loaded: sh.blocks_loaded() - blocks0,
     })
 }
 

@@ -33,6 +33,7 @@ fn half_sample(ds: &Dataset, rng: &mut Pcg64) -> Dataset {
     Dataset { name: format!("{}-half", ds.name), d: ds.d, tasks }
 }
 
+/// Stability-selection output: selection frequencies and the stable set.
 #[derive(Debug, Clone)]
 pub struct StabilityResult {
     /// per feature: fraction of subsamples where the feature's solution
@@ -40,7 +41,9 @@ pub struct StabilityResult {
     pub frequency: Vec<f64>,
     /// features with frequency >= threshold
     pub stable: Vec<usize>,
+    /// number of half-subsamples run
     pub subsamples: usize,
+    /// total wallclock across subsamples
     pub total_secs: f64,
 }
 

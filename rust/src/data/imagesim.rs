@@ -12,13 +12,18 @@
 use super::{Dataset, Task};
 use crate::util::Pcg64;
 
+/// Knobs of the AwA-like generator.
 #[derive(Debug, Clone)]
 pub struct ImageSimOptions {
+    /// number of classes == number of one-vs-rest tasks
     pub classes: usize,
+    /// positive (== negative) samples per task
     pub n_pos: usize,
     /// per-block dims; total d = sum (default mirrors 7 heterogeneous blocks)
     pub blocks: Vec<usize>,
+    /// rank of the intra-block correlation structure
     pub rank: usize,
+    /// RNG seed (every experiment seeds explicitly)
     pub seed: u64,
 }
 
@@ -35,6 +40,8 @@ impl Default for ImageSimOptions {
     }
 }
 
+/// Generate the AwA-shaped workload (block-heterogeneous image features,
+/// DESIGN.md §5).
 pub fn imagesim(opts: &ImageSimOptions) -> Dataset {
     let ImageSimOptions { classes, n_pos, ref blocks, rank, seed } = *opts;
     let d: usize = blocks.iter().sum();

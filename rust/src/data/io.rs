@@ -1,5 +1,5 @@
 //! `.mtd` — a tiny self-describing binary container for multi-task
-//! datasets (no serde offline). Little-endian layout, two revisions:
+//! datasets (no serde offline). Little-endian layout, three revisions:
 //!
 //! ```text
 //! v1  magic "MTD1" | u32 name_len | name bytes | u64 d | u64 t
@@ -14,33 +14,64 @@
 //!
 //! `save` always writes v2 (it can carry either backend); `load` accepts
 //! both, so pre-refactor datasets remain readable.
+//!
+//! **MTD3 — the sharded layout** (DESIGN.md §10). v1/v2 interleave x and y
+//! per task, so reading *any* column means materializing the whole file.
+//! The third revision regroups the matrix into fixed-width column blocks
+//! so the screen-before-load pipeline can stream, score, and discard them
+//! without ever holding the dataset in RAM:
+//!
+//! ```text
+//! v3  magic "MTD3" | u32 name_len | name bytes | u64 d | u64 t
+//!     per task: u64 n
+//!     per task: n f32 y            (responses live in the header: O(N))
+//!     u64 block_cols | u64 n_blocks  (= ceil(d / block_cols))
+//!     per block: u64 offset | u64 byte_len | u64 fnv64 checksum
+//!     u64 header_checksum          (fnv64 of every header byte above)
+//!     -- blocks, back to back --
+//!     block b covers columns [b·block_cols, min((b+1)·block_cols, d)):
+//!       per task: u8 storage (0=dense, 1=csc)
+//!         dense: cols*n f32 (feature-major within the block)
+//!         csc:   u64 nnz | (cols+1) u64 col_ptr | nnz u32 idx | nnz f32 val
+//! ```
+//!
+//! Per-block offsets make any column range one seek away; per-block
+//! checksums localize corruption to the block that actually gets read
+//! (a streamed screen over a 100 GB shard must not checksum 100 GB
+//! first). [`save_sharded`] writes v3 from an in-RAM dataset (the
+//! `repro shard` CLI converter); the out-of-core reader lives in
+//! [`super::shard`].
 
 use super::{Dataset, MatrixStore, Task};
 use crate::linalg::CscMatrix;
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 const MAGIC_V1: &[u8; 4] = b"MTD1";
 const MAGIC_V2: &[u8; 4] = b"MTD2";
+pub(crate) const MAGIC_V3: &[u8; 4] = b"MTD3";
 
-const STORAGE_DENSE: u8 = 0;
-const STORAGE_CSC: u8 = 1;
+pub(crate) const STORAGE_DENSE: u8 = 0;
+pub(crate) const STORAGE_CSC: u8 = 1;
 
 /// FNV-1a 64 over the byte stream (checksum; not cryptographic).
 #[derive(Clone)]
 pub struct Fnv64(u64);
 
 impl Fnv64 {
+    /// Fresh hasher at the FNV offset basis.
     pub fn new() -> Self {
         Fnv64(0xcbf29ce484222325)
     }
+    /// Absorb bytes into the running hash.
     pub fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x100000001b3);
         }
     }
+    /// The current 64-bit digest.
     pub fn digest(&self) -> u64 {
         self.0
     }
@@ -74,20 +105,21 @@ fn u32s_as_bytes(v: &[u32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
-fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+pub(crate) fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
     b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
 }
 
-fn bytes_to_u32s(b: &[u8]) -> Vec<u32> {
+pub(crate) fn bytes_to_u32s(b: &[u8]) -> Vec<u32> {
     b.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
 }
 
-fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
+pub(crate) fn bytes_to_u64s(b: &[u8]) -> Vec<u64> {
     b.chunks_exact(8)
         .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
         .collect()
 }
 
+/// Write `ds` as an `.mtd` (v2) file — carries dense and CSC backends.
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     assert!(cfg!(target_endian = "little"), "mtd format is little-endian");
     ds.validate()?;
@@ -128,6 +160,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Load an `.mtd` file (v1 or v2), verifying its trailing checksum.
 pub fn load(path: &Path) -> Result<Dataset> {
     assert!(cfg!(target_endian = "little"), "mtd format is little-endian");
     let f = std::fs::File::open(path)
@@ -212,6 +245,128 @@ pub fn load(path: &Path) -> Result<Dataset> {
     let ds = Dataset { name, d, tasks };
     ds.validate()?;
     Ok(ds)
+}
+
+// ---------------------------------------------------------------------------
+// MTD3: the sharded column-block layout (writer; reader in data::shard)
+// ---------------------------------------------------------------------------
+
+/// What [`save_sharded`] wrote (also printed by the `repro shard` CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSummary {
+    /// columns per block (the last block may be narrower)
+    pub block_cols: usize,
+    /// number of column blocks written
+    pub blocks: usize,
+    /// total block payload bytes (excludes the header)
+    pub payload_bytes: u64,
+}
+
+/// Block width hitting a target of ~`shard_bytes` serialized bytes per
+/// block: divides the target by the mean per-column stored cost across
+/// tasks (dense: 4·n bytes per column; CSC: ~8 bytes per stored entry
+/// plus a column pointer). Clamped to `[1, d]`.
+pub fn block_cols_for(ds: &Dataset, shard_bytes: usize) -> usize {
+    let mut per_col = 0.0f64;
+    for task in &ds.tasks {
+        per_col += match &task.x {
+            MatrixStore::Dense(_) => 4.0 * task.n as f64,
+            MatrixStore::Csc(m) => 8.0 * m.nnz() as f64 / ds.d.max(1) as f64 + 8.0,
+        };
+    }
+    ((shard_bytes as f64 / per_col.max(1.0)) as usize).clamp(1, ds.d)
+}
+
+fn serialize_block(ds: &Dataset, first: usize, cols: usize) -> Vec<u8> {
+    let mut buf = Vec::new();
+    for task in &ds.tasks {
+        match &task.x {
+            MatrixStore::Dense(x) => {
+                buf.push(STORAGE_DENSE);
+                buf.extend_from_slice(f32s_as_bytes(
+                    &x[first * task.n..(first + cols) * task.n],
+                ));
+            }
+            MatrixStore::Csc(m) => {
+                buf.push(STORAGE_CSC);
+                let lo = m.col_ptr[first];
+                let hi = m.col_ptr[first + cols];
+                buf.extend_from_slice(&((hi - lo) as u64).to_le_bytes());
+                for l in first..=first + cols {
+                    buf.extend_from_slice(&((m.col_ptr[l] - lo) as u64).to_le_bytes());
+                }
+                buf.extend_from_slice(u32s_as_bytes(&m.indices[lo..hi]));
+                buf.extend_from_slice(f32s_as_bytes(&m.values[lo..hi]));
+            }
+        }
+    }
+    buf
+}
+
+/// Write `ds` in the sharded MTD3 layout (module docs), targeting
+/// ~`shard_bytes` serialized bytes per column block. The storage backend
+/// of every task is preserved block-by-block, so a CSC dataset shards
+/// into CSC blocks. This is the `repro shard` converter; the out-of-core
+/// reader is [`super::shard::ShardedDataset`].
+pub fn save_sharded(ds: &Dataset, path: &Path, shard_bytes: usize) -> Result<ShardSummary> {
+    assert!(cfg!(target_endian = "little"), "mtd format is little-endian");
+    ds.validate()?;
+    anyhow::ensure!(shard_bytes > 0, "shard size must be positive");
+    let block_cols = block_cols_for(ds, shard_bytes);
+    let n_blocks = ds.d.div_ceil(block_cols);
+
+    // header built fully in memory (it is O(N + n_blocks) small); the
+    // block table and header checksum are patched in after the blocks
+    // stream out, then the header is rewritten in place
+    let mut header: Vec<u8> = Vec::new();
+    header.extend_from_slice(MAGIC_V3);
+    let name = ds.name.as_bytes();
+    header.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    header.extend_from_slice(name);
+    header.extend_from_slice(&(ds.d as u64).to_le_bytes());
+    header.extend_from_slice(&(ds.t() as u64).to_le_bytes());
+    for task in &ds.tasks {
+        header.extend_from_slice(&(task.n as u64).to_le_bytes());
+    }
+    for task in &ds.tasks {
+        header.extend_from_slice(f32s_as_bytes(&task.y));
+    }
+    header.extend_from_slice(&(block_cols as u64).to_le_bytes());
+    header.extend_from_slice(&(n_blocks as u64).to_le_bytes());
+    let table_pos = header.len();
+    header.resize(table_pos + n_blocks * 24 + 8, 0u8);
+
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&header)?;
+
+    // stream the blocks, one serialized buffer in RAM at a time
+    let mut offset = header.len() as u64;
+    let mut payload_bytes = 0u64;
+    for b in 0..n_blocks {
+        let first = b * block_cols;
+        let cols = block_cols.min(ds.d - first);
+        let buf = serialize_block(ds, first, cols);
+        let mut h = Fnv64::new();
+        h.update(&buf);
+        let entry = table_pos + b * 24;
+        header[entry..entry + 8].copy_from_slice(&offset.to_le_bytes());
+        header[entry + 8..entry + 16]
+            .copy_from_slice(&(buf.len() as u64).to_le_bytes());
+        header[entry + 16..entry + 24].copy_from_slice(&h.digest().to_le_bytes());
+        f.write_all(&buf)?;
+        offset += buf.len() as u64;
+        payload_bytes += buf.len() as u64;
+    }
+
+    let csum_pos = header.len() - 8;
+    let mut h = Fnv64::new();
+    h.update(&header[..csum_pos]);
+    header[csum_pos..].copy_from_slice(&h.digest().to_le_bytes());
+    f.seek(SeekFrom::Start(0))?;
+    f.write_all(&header)?;
+    f.flush()?;
+    Ok(ShardSummary { block_cols, blocks: n_blocks, payload_bytes })
 }
 
 #[cfg(test)]

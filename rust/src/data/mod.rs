@@ -1,14 +1,18 @@
-//! Multi-task dataset substrate: the pluggable matrix backend
-//! ([`MatrixStore`], see DESIGN.md §6), the paper's five workloads (two
-//! synthetic, three simulated "real" sets — see DESIGN.md §5 for the
-//! substitution rationale), and a binary on-disk format.
+//! Multi-task dataset substrate: the pluggable in-RAM matrix backends
+//! ([`MatrixStore`], see DESIGN.md §6), the out-of-core sharded backend
+//! ([`shard::ShardedDataset`], DESIGN.md §10), the paper's five workloads
+//! (two synthetic, three simulated "real" sets — see DESIGN.md §5 for the
+//! substitution rationale), and the binary on-disk formats ([`io`]).
 
 pub mod imagesim;
 pub mod io;
+pub mod shard;
 pub mod snpsim;
 pub mod synthetic;
 pub mod textsim;
 pub mod transform;
+
+pub use shard::ShardedDataset;
 
 use crate::linalg::{ColRef, CscMatrix};
 
@@ -37,6 +41,7 @@ impl MatrixStore {
         }
     }
 
+    /// True for CSC storage.
     pub fn is_sparse(&self) -> bool {
         matches!(self, MatrixStore::Csc(_))
     }
@@ -121,16 +126,21 @@ impl MatrixStore {
 /// response vector.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// the task's feature matrix (dense or CSC)
     pub x: MatrixStore,
+    /// the task's response vector, length `n`
     pub y: Vec<f32>,
+    /// sample count
     pub n: usize,
 }
 
 impl Task {
+    /// A dense-backed task from a feature-major buffer.
     pub fn dense(x: Vec<f32>, y: Vec<f32>, n: usize) -> Task {
         Task { x: MatrixStore::Dense(x), y, n }
     }
 
+    /// A CSC-backed task (n is taken from the matrix).
     pub fn csc(x: CscMatrix, y: Vec<f32>) -> Task {
         let n = x.n;
         Task { x: MatrixStore::Csc(x), y, n }
@@ -142,6 +152,7 @@ impl Task {
         self.x.col(l, self.n)
     }
 
+    /// True if this task uses CSC storage.
     pub fn is_sparse(&self) -> bool {
         self.x.is_sparse()
     }
@@ -153,12 +164,16 @@ impl Task {
 /// generators emit one backend per dataset.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// workload name (carried through reports and the on-disk formats)
     pub name: String,
+    /// shared feature count
     pub d: usize,
+    /// the per-task matrices and responses
     pub tasks: Vec<Task>,
 }
 
 impl Dataset {
+    /// Number of tasks T.
     pub fn t(&self) -> usize {
         self.tasks.len()
     }
@@ -202,6 +217,7 @@ impl Dataset {
         self.tasks.iter().map(|t| t.x.stored_entries()).sum()
     }
 
+    /// Structural invariants: shapes, finite entries, CSC well-formedness.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.tasks.is_empty(), "dataset has no tasks");
         anyhow::ensure!(self.d > 0, "dataset has no features");
@@ -314,7 +330,7 @@ impl Dataset {
     }
 
     /// Pack into the dense (T, N, D) f32 layout of the AOT ABI
-    /// (row-major over [t][n][l]). Requires uniform N.
+    /// (row-major over `[t][n][l]`). Requires uniform N.
     pub fn to_tnd(&self) -> anyhow::Result<Vec<f32>> {
         let n = self
             .uniform_n()

@@ -1,0 +1,627 @@
+//! Out-of-core sharded datasets — the third storage backend
+//! (dense | CSC | **sharded**, DESIGN.md §10) and the reader half of the
+//! MTD3 container ([`super::io`] is the writer half).
+//!
+//! A [`ShardedDataset`] keeps the matrix on disk in fixed-width column
+//! blocks and faults blocks into RAM on demand through a pinned-block LRU
+//! ([`crate::linalg::BlockCache`]). Each loaded block is an ordinary
+//! in-RAM [`Dataset`] restricted to that block's column range (dense or
+//! CSC, preserving the task's on-disk backend), so every kernel, screener
+//! and solver below works on blocks unchanged.
+//!
+//! **Why this is not a [`MatrixStore`] variant.** The `ColRef` seam hands
+//! out *borrowed* per-column views; a borrow into an evictable block
+//! could outlive the block. The shard backend therefore sits one level
+//! up, at the dataset seam: consumers iterate whole blocks (holding an
+//! `Arc` pin for exactly the duration of the sweep) instead of single
+//! columns. The block-streaming sweeps in [`crate::ops`] and the
+//! screen-before-load pipeline in `screening::shard` are built on that
+//! contract, and [`ShardedDataset::restrict`] materializes only the
+//! surviving columns into a normal in-RAM dataset for the solver — peak
+//! RSS scales with the active set plus the cache budget, not with `d`.
+
+use super::io::{self, Fnv64};
+use super::{Dataset, MatrixStore, Task};
+use crate::linalg::{BlockCache, ColRef, CscMatrix};
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default block-cache budget (bytes) for [`ShardedDataset::open`].
+pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
+struct BlockEntry {
+    offset: u64,
+    len: u64,
+    checksum: u64,
+}
+
+/// An MTD3 shard file opened for on-demand column-block access. See the
+/// module docs for the memory model and `data::io` for the layout.
+pub struct ShardedDataset {
+    name: String,
+    d: usize,
+    ns: Vec<usize>,
+    y: Vec<Vec<f32>>,
+    block_cols: usize,
+    table: Vec<BlockEntry>,
+    path: PathBuf,
+    file: Mutex<File>,
+    cache: BlockCache<Dataset>,
+    bytes_read: AtomicU64,
+    blocks_loaded: AtomicU64,
+}
+
+/// Byte cursor over one block's payload with truncation checks.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    block: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.buf.len(),
+            "shard block {} truncated ({} bytes needed at offset {}, {} available)",
+            self.block,
+            n,
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl ShardedDataset {
+    /// Open a shard with the default cache budget
+    /// ([`DEFAULT_CACHE_BYTES`]).
+    pub fn open(path: &Path) -> Result<ShardedDataset> {
+        Self::open_with_cache(path, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Open a shard with an explicit block-cache budget in bytes. Parses
+    /// and checksums the header only — no block is read until asked for.
+    pub fn open_with_cache(path: &Path, cache_bytes: usize) -> Result<ShardedDataset> {
+        assert!(cfg!(target_endian = "little"), "mtd format is little-endian");
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut hash = Fnv64::new();
+
+        let read_hashed = |r: &mut BufReader<File>,
+                               hash: &mut Fnv64,
+                               n: usize|
+         -> Result<Vec<u8>> {
+            let mut buf = vec![0u8; n];
+            r.read_exact(&mut buf).context("mtd3 header truncated")?;
+            hash.update(&buf);
+            Ok(buf)
+        };
+
+        let magic = read_hashed(&mut r, &mut hash, 4)?;
+        if magic != io::MAGIC_V3 {
+            bail!(
+                "{} is not an mtd3 shard file (bad magic) — convert a .mtd \
+                 dataset with `repro shard`",
+                path.display()
+            );
+        }
+        let name_len =
+            u32::from_le_bytes(read_hashed(&mut r, &mut hash, 4)?.try_into().unwrap())
+                as usize;
+        if name_len > 4096 {
+            bail!("unreasonable name length {name_len}");
+        }
+        let name = String::from_utf8(read_hashed(&mut r, &mut hash, name_len)?)
+            .context("dataset name not utf8")?;
+        let d = u64::from_le_bytes(read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap())
+            as usize;
+        let t = u64::from_le_bytes(read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap())
+            as usize;
+        if d == 0 || t == 0 || d > 100_000_000 || t > 100_000 {
+            bail!("corrupt mtd3 header: d={d} t={t}");
+        }
+        let mut ns = Vec::with_capacity(t);
+        for _ in 0..t {
+            let n = u64::from_le_bytes(
+                read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap(),
+            ) as usize;
+            if n == 0 || n > u32::MAX as usize || n.checked_mul(d).is_none() {
+                bail!("corrupt mtd3 task header: n={n}");
+            }
+            ns.push(n);
+        }
+        let mut y = Vec::with_capacity(t);
+        for &n in &ns {
+            y.push(io::bytes_to_f32s(&read_hashed(&mut r, &mut hash, n * 4)?));
+        }
+        let block_cols = u64::from_le_bytes(
+            read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap(),
+        ) as usize;
+        let n_blocks = u64::from_le_bytes(
+            read_hashed(&mut r, &mut hash, 8)?.try_into().unwrap(),
+        ) as usize;
+        if block_cols == 0 || block_cols > d || n_blocks != d.div_ceil(block_cols) {
+            bail!("corrupt mtd3 header: block_cols={block_cols} n_blocks={n_blocks} d={d}");
+        }
+        let table_bytes = read_hashed(&mut r, &mut hash, n_blocks * 24)?;
+        let words = io::bytes_to_u64s(&table_bytes);
+        let table: Vec<BlockEntry> = words
+            .chunks_exact(3)
+            .map(|w| BlockEntry { offset: w[0], len: w[1], checksum: w[2] })
+            .collect();
+
+        let mut digest_bytes = [0u8; 8];
+        r.read_exact(&mut digest_bytes).context("mtd3 header truncated")?;
+        if u64::from_le_bytes(digest_bytes) != hash.digest() {
+            bail!(
+                "mtd3 header checksum mismatch in {} — the file is corrupt; \
+                 regenerate it with `repro shard`",
+                path.display()
+            );
+        }
+
+        Ok(ShardedDataset {
+            name,
+            d,
+            ns,
+            y,
+            block_cols,
+            table,
+            path: path.to_path_buf(),
+            file: Mutex::new(r.into_inner()),
+            cache: BlockCache::new(cache_bytes),
+            bytes_read: AtomicU64::new(0),
+            blocks_loaded: AtomicU64::new(0),
+        })
+    }
+
+    /// Dataset name carried in the shard header.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Feature count (shared across tasks).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of tasks.
+    pub fn t(&self) -> usize {
+        self.ns.len()
+    }
+
+    /// Per-task sample counts.
+    pub fn ns(&self) -> &[usize] {
+        &self.ns
+    }
+
+    /// Total sample count N = Σ N_t.
+    pub fn total_n(&self) -> usize {
+        self.ns.iter().sum()
+    }
+
+    /// The response vectors (resident in the header — O(N), never paged).
+    pub fn y(&self) -> &[Vec<f32>] {
+        &self.y
+    }
+
+    /// Responses widened to the stacked f64 form the dual machinery uses
+    /// (`ops::Stacked`).
+    pub fn y64(&self) -> Vec<Vec<f64>> {
+        self.y.iter().map(|yt| yt.iter().map(|&v| v as f64).collect()).collect()
+    }
+
+    /// Columns per block (the last block may be narrower).
+    pub fn block_cols(&self) -> usize {
+        self.block_cols
+    }
+
+    /// Number of column blocks in the shard.
+    pub fn n_blocks(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Column range `[first, last)` covered by block `b`.
+    pub fn block_range(&self, b: usize) -> Range<usize> {
+        let first = b * self.block_cols;
+        first..(first + self.block_cols).min(self.d)
+    }
+
+    /// The block containing column `l`.
+    pub fn block_of(&self, l: usize) -> usize {
+        debug_assert!(l < self.d);
+        l / self.block_cols
+    }
+
+    /// Bytes a dense in-RAM load of the full matrix would cost
+    /// (Σ_t N_t · d · 4) — the denominator of the memory-saving metric in
+    /// `BENCH_shard.json`.
+    pub fn dense_bytes(&self) -> u64 {
+        self.ns.iter().map(|&n| (n as u64) * (self.d as u64) * 4).sum()
+    }
+
+    /// Total on-disk block payload bytes (what a full sequential stream
+    /// reads once).
+    pub fn payload_bytes(&self) -> u64 {
+        self.table.iter().map(|e| e.len).sum()
+    }
+
+    /// Bytes read from disk so far (cache misses only).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Block loads from disk so far (cache misses only).
+    pub fn blocks_loaded(&self) -> u64 {
+        self.blocks_loaded.load(Ordering::Relaxed)
+    }
+
+    /// Reset the I/O counters (per-phase accounting in benches).
+    pub fn reset_io_stats(&self) {
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.blocks_loaded.store(0, Ordering::Relaxed);
+    }
+
+    /// Bytes currently resident in the block cache.
+    pub fn cache_resident_bytes(&self) -> usize {
+        self.cache.resident_bytes()
+    }
+
+    /// Fetch block `b` as an in-RAM [`Dataset`] over its column range
+    /// (cached; checksum-verified on every disk load). The returned `Arc`
+    /// pins the block against eviction while held. Block tasks carry
+    /// **empty `y` vectors** — the responses live once in the shard
+    /// header ([`ShardedDataset::y`]), not per cached block, so the cache
+    /// budget is spent on matrix bytes only; the block sweeps
+    /// (correlation, scores, norms) never read `y`.
+    pub fn block(&self, b: usize) -> Result<Arc<Dataset>> {
+        anyhow::ensure!(
+            b < self.table.len(),
+            "block {b} out of range ({} blocks)",
+            self.table.len()
+        );
+        self.cache.get_or_load(b, || {
+            let e = &self.table[b];
+            let mut buf = vec![0u8; e.len as usize];
+            {
+                let mut f = self.file.lock().unwrap();
+                f.seek(SeekFrom::Start(e.offset))
+                    .and_then(|_| f.read_exact(&mut buf))
+                    .with_context(|| {
+                        format!("read block {b} of {}", self.path.display())
+                    })?;
+            }
+            let mut h = Fnv64::new();
+            h.update(&buf);
+            if h.digest() != e.checksum {
+                bail!(
+                    "shard block {b} checksum mismatch in {} — the file is \
+                     corrupt; regenerate it with `repro shard`",
+                    self.path.display()
+                );
+            }
+            let ds = self.parse_block(b, &buf)?;
+            self.blocks_loaded.fetch_add(1, Ordering::Relaxed);
+            self.bytes_read.fetch_add(e.len, Ordering::Relaxed);
+            let resident = ds.mem_bytes();
+            Ok((ds, resident))
+        })
+    }
+
+    fn parse_block(&self, b: usize, buf: &[u8]) -> Result<Dataset> {
+        let range = self.block_range(b);
+        let cols = range.len();
+        let mut cur = Cursor { buf, pos: 0, block: b };
+        let mut tasks = Vec::with_capacity(self.t());
+        for (ti, &n) in self.ns.iter().enumerate() {
+            let x = match cur.take_u8()? {
+                io::STORAGE_DENSE => {
+                    MatrixStore::Dense(io::bytes_to_f32s(cur.take(cols * n * 4)?))
+                }
+                io::STORAGE_CSC => {
+                    let nnz = cur.take_u64()? as usize;
+                    anyhow::ensure!(
+                        nnz <= cols * n,
+                        "shard block {b}: nnz={nnz} > cols*n={}",
+                        cols * n
+                    );
+                    let col_ptr: Vec<usize> =
+                        io::bytes_to_u64s(cur.take((cols + 1) * 8)?)
+                            .into_iter()
+                            .map(|p| p as usize)
+                            .collect();
+                    let indices = io::bytes_to_u32s(cur.take(nnz * 4)?);
+                    let values = io::bytes_to_f32s(cur.take(nnz * 4)?);
+                    let m = CscMatrix { n, d: cols, col_ptr, indices, values };
+                    m.validate().with_context(|| {
+                        format!("shard block {b}: corrupt csc section (task {ti})")
+                    })?;
+                    MatrixStore::Csc(m)
+                }
+                other => bail!("shard block {b}: unknown storage tag {other}"),
+            };
+            // responses stay header-resident (see `block` docs): y is empty
+            tasks.push(Task { x, y: Vec::new(), n });
+        }
+        anyhow::ensure!(
+            cur.pos == buf.len(),
+            "shard block {b}: {} trailing bytes",
+            buf.len() - cur.pos
+        );
+        Ok(Dataset { name: format!("{}[block {b}]", self.name), d: cols, tasks })
+    }
+
+    /// Materialize the kept columns into an in-RAM dataset — the
+    /// screen-before-load step that turns a certified keep-set into a
+    /// solver-ready problem. `keep` must be sorted, distinct and
+    /// in-range (the contract of [`Dataset::restrict`], whose output this
+    /// matches column-for-column, backend included). Touches only the
+    /// blocks that contain surviving columns.
+    pub fn restrict(&self, keep: &[usize]) -> Result<Dataset> {
+        for w in keep.windows(2) {
+            anyhow::ensure!(w[0] < w[1], "keep indices must be sorted and distinct");
+        }
+        if let Some(&last) = keep.last() {
+            anyhow::ensure!(last < self.d, "keep index {last} out of range (d={})", self.d);
+        }
+        if keep.is_empty() {
+            // degenerate but contract-honoring: empty stores in each
+            // task's on-disk backend (read off block 0), like
+            // `Dataset::restrict(&[])` on the materialized dataset
+            let blk = self.block(0)?;
+            let tasks = blk
+                .tasks
+                .iter()
+                .enumerate()
+                .map(|(ti, task)| {
+                    let n = self.ns[ti];
+                    let x = match &task.x {
+                        MatrixStore::Dense(_) => MatrixStore::Dense(Vec::new()),
+                        MatrixStore::Csc(_) => MatrixStore::Csc(CscMatrix {
+                            n,
+                            d: 0,
+                            col_ptr: vec![0],
+                            indices: Vec::new(),
+                            values: Vec::new(),
+                        }),
+                    };
+                    Task { x, y: self.y[ti].clone(), n }
+                })
+                .collect();
+            return Ok(Dataset { name: format!("{}[0]", self.name), d: 0, tasks });
+        }
+        enum Acc {
+            Dense(Vec<f32>),
+            Csc { col_ptr: Vec<usize>, indices: Vec<u32>, values: Vec<f32> },
+        }
+        let t_count = self.t();
+        let mut accs: Vec<Option<Acc>> = (0..t_count).map(|_| None).collect();
+        let mut i = 0usize;
+        while i < keep.len() {
+            let b = self.block_of(keep[i]);
+            let range = self.block_range(b);
+            let mut j = i;
+            while j < keep.len() && keep[j] < range.end {
+                j += 1;
+            }
+            let blk = self.block(b)?; // Arc pin lives for this iteration only
+            for (ti, task) in blk.tasks.iter().enumerate() {
+                let acc = accs[ti].get_or_insert_with(|| match &task.x {
+                    MatrixStore::Dense(_) => Acc::Dense(Vec::new()),
+                    MatrixStore::Csc(_) => Acc::Csc {
+                        col_ptr: vec![0],
+                        indices: Vec::new(),
+                        values: Vec::new(),
+                    },
+                });
+                for &l in &keep[i..j] {
+                    let col = task.col(l - range.start);
+                    match acc {
+                        // the backend is per-task uniform across blocks, so
+                        // the dense arm always sees a dense ColRef; to_vec
+                        // is only the mixed-backend fallback
+                        Acc::Dense(buf) => match col {
+                            ColRef::Dense(c) => buf.extend_from_slice(c),
+                            sparse => buf.extend_from_slice(&sparse.to_vec()),
+                        },
+                        Acc::Csc { col_ptr, indices, values } => {
+                            match col {
+                                ColRef::Sparse { indices: ix, values: vs, .. } => {
+                                    indices.extend_from_slice(ix);
+                                    values.extend_from_slice(vs);
+                                }
+                                ColRef::Dense(c) => {
+                                    for (ri, &v) in c.iter().enumerate() {
+                                        if v != 0.0 {
+                                            indices.push(ri as u32);
+                                            values.push(v);
+                                        }
+                                    }
+                                }
+                            }
+                            col_ptr.push(indices.len());
+                        }
+                    }
+                }
+            }
+            i = j;
+        }
+        let tasks: Vec<Task> = accs
+            .into_iter()
+            .enumerate()
+            .map(|(ti, acc)| {
+                let n = self.ns[ti];
+                let x = match acc {
+                    // non-empty keep touched ≥ 1 block, initializing every task
+                    None => unreachable!("accumulator initialized by the first block"),
+                    Some(Acc::Dense(buf)) => MatrixStore::Dense(buf),
+                    Some(Acc::Csc { col_ptr, indices, values }) => {
+                        MatrixStore::Csc(CscMatrix {
+                            n,
+                            d: keep.len(),
+                            col_ptr,
+                            indices,
+                            values,
+                        })
+                    }
+                };
+                Task { x, y: self.y[ti].clone(), n }
+            })
+            .collect();
+        Ok(Dataset { name: format!("{}[{}]", self.name, keep.len()), d: keep.len(), tasks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::save_sharded;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("mtfl_shard_{}_{}", std::process::id(), name))
+    }
+
+    fn small() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 9, d: 37, seed: 21, ..Default::default() }).0
+    }
+
+    #[test]
+    fn header_round_trip_and_block_geometry() {
+        let ds = small();
+        let p = tmp("geom.mtd3");
+        // ~7 columns per block at n=9, t=3: 3·9·4 = 108 B/col
+        let summary = save_sharded(&ds, &p, 108 * 7).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        assert_eq!(sh.name(), ds.name);
+        assert_eq!(sh.d(), 37);
+        assert_eq!(sh.t(), 3);
+        assert_eq!(sh.ns(), &[9, 9, 9]);
+        assert_eq!(sh.block_cols(), summary.block_cols);
+        assert_eq!(sh.n_blocks(), summary.blocks);
+        assert_eq!(sh.n_blocks(), 37usize.div_ceil(summary.block_cols));
+        // ranges tile [0, d) exactly
+        let mut covered = 0usize;
+        for b in 0..sh.n_blocks() {
+            let r = sh.block_range(b);
+            assert_eq!(r.start, covered);
+            covered = r.end;
+            for l in r.clone() {
+                assert_eq!(sh.block_of(l), b);
+            }
+        }
+        assert_eq!(covered, 37);
+        for (ti, task) in ds.tasks.iter().enumerate() {
+            assert_eq!(sh.y()[ti], task.y);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn blocks_reproduce_columns_exactly() {
+        let ds = small();
+        let p = tmp("cols.mtd3");
+        save_sharded(&ds, &p, 200).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        for b in 0..sh.n_blocks() {
+            let blk = sh.block(b).unwrap();
+            let range = sh.block_range(b);
+            assert_eq!(blk.d, range.len());
+            for t in 0..ds.t() {
+                for (local, l) in range.clone().enumerate() {
+                    assert_eq!(blk.col(t, local).to_vec(), ds.col(t, l).to_vec());
+                }
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cache_hits_do_not_reread_disk() {
+        let ds = small();
+        let p = tmp("cachehit.mtd3");
+        save_sharded(&ds, &p, 1 << 20).unwrap(); // one block
+        let sh = ShardedDataset::open(&p).unwrap();
+        assert_eq!(sh.n_blocks(), 1);
+        sh.block(0).unwrap();
+        let after_first = sh.bytes_read();
+        assert!(after_first > 0);
+        sh.block(0).unwrap();
+        assert_eq!(sh.bytes_read(), after_first, "second access must hit the cache");
+        assert_eq!(sh.blocks_loaded(), 1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn tiny_cache_bounds_residency_but_stays_correct() {
+        let ds = small();
+        let p = tmp("tinycache.mtd3");
+        save_sharded(&ds, &p, 150).unwrap(); // several narrow blocks
+        // budget of one byte: every unpinned block is evicted immediately
+        let sh = ShardedDataset::open_with_cache(&p, 1).unwrap();
+        assert!(sh.n_blocks() > 2);
+        let keep: Vec<usize> = (0..ds.d).collect();
+        let back = sh.restrict(&keep).unwrap();
+        for t in 0..ds.t() {
+            for l in 0..ds.d {
+                assert_eq!(back.col(t, l).to_vec(), ds.col(t, l).to_vec());
+            }
+        }
+        // with no handles held, at most one block's bytes stay resident
+        let one_block = sh.block(0).unwrap().mem_bytes() + 3 * 9 * 4;
+        assert!(
+            sh.cache_resident_bytes() <= one_block,
+            "cache kept {} bytes with a 1-byte budget",
+            sh.cache_resident_bytes()
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn restrict_matches_in_ram_restrict() {
+        let ds = small();
+        let p = tmp("restrict.mtd3");
+        save_sharded(&ds, &p, 150).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        let keep = vec![0usize, 3, 11, 12, 20, 36];
+        let a = sh.restrict(&keep).unwrap();
+        let b = ds.restrict(&keep);
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.d, b.d);
+        for t in 0..ds.t() {
+            match (&a.tasks[t].x, &b.tasks[t].x) {
+                (MatrixStore::Dense(x), MatrixStore::Dense(y)) => assert_eq!(x, y),
+                other => panic!("backend mismatch: {other:?}"),
+            }
+            assert_eq!(a.tasks[t].y, b.tasks[t].y);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn restrict_rejects_unsorted_keep() {
+        let ds = small();
+        let p = tmp("unsorted.mtd3");
+        save_sharded(&ds, &p, 150).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        assert!(sh.restrict(&[3, 1]).is_err());
+        assert!(sh.restrict(&[0, 0]).is_err());
+        assert!(sh.restrict(&[999]).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -25,15 +25,24 @@ use super::{Dataset, GroundTruth, Task};
 use crate::linalg::CscMatrix;
 use crate::util::Pcg64;
 
+/// Knobs of the ADNI-like genotype generator.
 #[derive(Debug, Clone)]
 pub struct SnpSimOptions {
+    /// number of tasks (cognitive scores in the paper)
     pub tasks: usize,
+    /// samples (subjects) per task
     pub n: usize,
+    /// SNP count (feature dimension; d ≫ n in this regime)
     pub d: usize,
+    /// size of the shared causal SNP set
     pub causal: usize,
+    /// linkage-disequilibrium block width (sites copied together)
     pub ld_block: usize,
+    /// within-block copying probability (LD strength)
     pub ld_rho: f64,
+    /// response noise std
     pub noise: f64,
+    /// RNG seed (every experiment seeds explicitly)
     pub seed: u64,
     /// emit raw (uncentered) allele counts in CSC storage
     pub sparse: bool,
@@ -86,6 +95,7 @@ fn beta_maf(rng: &mut Pcg64, maf_max: f64) -> f64 {
     (g1 / (g1 + g2)).clamp(lo, maf_max)
 }
 
+/// Generate the ADNI-shaped workload (d ≫ N genotypes, DESIGN.md §5).
 pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
     let SnpSimOptions { tasks, n, d, causal, ld_block, ld_rho, noise, seed, sparse, maf_max } =
         *opts;

@@ -11,14 +11,20 @@
 use super::{Dataset, GroundTruth, Task};
 use crate::util::Pcg64;
 
+/// Knobs shared by the Synthetic 1/2 generators.
 #[derive(Debug, Clone)]
 pub struct SynthOptions {
+    /// number of tasks
     pub t: usize,
+    /// samples per task
     pub n: usize,
+    /// shared feature count
     pub d: usize,
     /// fraction of features in the true support
     pub support_frac: f64,
+    /// response noise std (the paper uses 0.01)
     pub noise: f64,
+    /// RNG seed (every experiment seeds explicitly)
     pub seed: u64,
 }
 

@@ -22,17 +22,21 @@ use super::{Dataset, Task};
 use crate::linalg::CscMatrix;
 use crate::util::Pcg64;
 
+/// Knobs of the TDT2-like generator.
 #[derive(Debug, Clone)]
 pub struct TextSimOptions {
     /// number of categories == number of tasks
     pub categories: usize,
     /// positive (== negative) samples per task
     pub n_pos: usize,
+    /// vocabulary size (feature count)
     pub d: usize,
     /// terms drawn per document — with `d`, the density knob
     /// (density ≈ distinct(doc_len) / d)
     pub doc_len: usize,
+    /// topical terms boosted per category
     pub topic_terms: usize,
+    /// RNG seed (every experiment seeds explicitly)
     pub seed: u64,
     /// force dense storage (default: CSC)
     pub dense: bool,

@@ -16,14 +16,19 @@ use crate::data::Dataset;
 use crate::solver::SolveOptions;
 use anyhow::Result;
 
+/// Experiment scale: same shapes, different dimensions (DESIGN.md §4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// CI-sized — seconds end to end
     Quick,
+    /// scaled-down paper dims — minutes
     Default,
+    /// the paper's printed dims — hours on a CPU testbed
     Paper,
 }
 
 impl Scale {
+    /// Parse a `--scale` CLI value (`quick|default|paper`).
     pub fn parse(s: &str) -> Result<Scale> {
         match s {
             "quick" => Ok(Scale::Quick),
@@ -33,6 +38,7 @@ impl Scale {
         }
     }
 
+    /// λ-grid length (the paper uses 100 values).
     pub fn grid_len(&self) -> usize {
         match self {
             Scale::Quick => 20,
@@ -41,6 +47,7 @@ impl Scale {
         }
     }
 
+    /// Repeated trials per figure point (the paper averages 20).
     pub fn trials(&self) -> usize {
         match self {
             Scale::Quick => 2,
@@ -49,6 +56,7 @@ impl Scale {
         }
     }
 
+    /// Feature dimensions swept by the synthetic figures.
     pub fn synth_dims(&self) -> Vec<usize> {
         match self {
             Scale::Quick => vec![256, 512],
@@ -57,6 +65,7 @@ impl Scale {
         }
     }
 
+    /// (T tasks, N samples per task) for the synthetic workloads.
     pub fn synth_tn(&self) -> (usize, usize) {
         match self {
             Scale::Quick => (4, 16),
@@ -81,6 +90,7 @@ pub fn exp_opts(grid: usize, screener: ScreenerKind) -> PathOptions {
 // dataset builders
 // ---------------------------------------------------------------------------
 
+/// Synthetic 1 or 2 (`which` ∈ {1, 2}) at dimension `d` and scale shape.
 pub fn build_synthetic(which: u8, d: usize, scale: Scale, seed: u64) -> Dataset {
     let (t, n) = scale.synth_tn();
     let opts = SynthOptions { t, n, d, seed, ..Default::default() };
@@ -91,6 +101,7 @@ pub fn build_synthetic(which: u8, d: usize, scale: Scale, seed: u64) -> Dataset 
     }
 }
 
+/// The AwA stand-in (block-heterogeneous image features, DESIGN.md §5).
 pub fn build_animal(scale: Scale, seed: u64) -> Dataset {
     let opts = match scale {
         Scale::Quick => ImageSimOptions {
@@ -119,6 +130,7 @@ pub fn build_animal(scale: Scale, seed: u64) -> Dataset {
     imagesim(&opts)
 }
 
+/// The TDT2 stand-in (~99% sparse text, CSC storage, DESIGN.md §5).
 pub fn build_tdt2(scale: Scale, seed: u64) -> Dataset {
     let opts = match scale {
         Scale::Quick => TextSimOptions { categories: 4, n_pos: 10, d: 600, ..Default::default() },
@@ -139,6 +151,7 @@ pub fn build_tdt2(scale: Scale, seed: u64) -> Dataset {
     textsim(&opts)
 }
 
+/// The ADNI stand-in (d ≫ N genomics, DESIGN.md §5).
 pub fn build_adni(scale: Scale, seed: u64) -> Dataset {
     let opts = match scale {
         Scale::Quick => {
@@ -160,6 +173,7 @@ pub fn build_adni(scale: Scale, seed: u64) -> Dataset {
     snpsim(&opts).0
 }
 
+/// Dataset lookup for the CLI's `--dataset` values (with aliases).
 pub fn build_by_name(name: &str, d: usize, scale: Scale, seed: u64) -> Result<Dataset> {
     Ok(match name {
         "synth1" | "synthetic1" => build_synthetic(1, d, scale, seed),
@@ -175,6 +189,8 @@ pub fn build_by_name(name: &str, d: usize, scale: Scale, seed: u64) -> Result<Da
 // FIG1: rejection ratios, Synthetic 1 & 2, three dimensions
 // ---------------------------------------------------------------------------
 
+/// Reproduce Figure 1: rejection-ratio curves on Synthetic 1/2 across
+/// three dimensions, averaged over trials.
 pub fn run_fig1(scale: Scale, engine: &EngineKind) -> Result<String> {
     let mut out = String::new();
     let opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
@@ -201,6 +217,8 @@ pub fn run_fig1(scale: Scale, engine: &EngineKind) -> Result<String> {
 // FIG2: rejection ratios on the three simulated real datasets
 // ---------------------------------------------------------------------------
 
+/// Reproduce Figure 2: rejection-ratio curves on the three simulated
+/// real datasets.
 pub fn run_fig2(scale: Scale, engine: &EngineKind) -> Result<String> {
     let mut out = String::new();
     let opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
@@ -226,6 +244,7 @@ pub fn run_fig2(scale: Scale, engine: &EngineKind) -> Result<String> {
 // TABLE1: solver vs DPC+solver wallclock + speedup on all five datasets
 // ---------------------------------------------------------------------------
 
+/// Table 1's raw rows: baseline vs screened path timings per dataset.
 pub fn table1_rows(scale: Scale, engine: &EngineKind) -> Result<Vec<SpeedupRow>> {
     let base_opts = exp_opts(scale.grid_len(), ScreenerKind::None);
     let dpc_opts = exp_opts(scale.grid_len(), ScreenerKind::Dpc);
@@ -250,6 +269,7 @@ pub fn table1_rows(scale: Scale, engine: &EngineKind) -> Result<Vec<SpeedupRow>>
     Ok(rows)
 }
 
+/// Reproduce Table 1 (solver vs DPC+solver wallclock and speedup).
 pub fn run_table1(scale: Scale, engine: &EngineKind) -> Result<String> {
     Ok(report::render_table1(&table1_rows(scale, engine)?))
 }
@@ -258,6 +278,7 @@ pub fn run_table1(scale: Scale, engine: &EngineKind) -> Result<String> {
 // ABL1/ABL2: exact QP1QC vs CS bound; sequential vs one-shot
 // ---------------------------------------------------------------------------
 
+/// The ABL1/ABL2 screener ablation table (DESIGN.md §8).
 pub fn run_ablation(scale: Scale) -> Result<String> {
     let d = *scale.synth_dims().first().unwrap();
     let ds = build_synthetic(2, d, scale, 42);
@@ -306,12 +327,15 @@ pub const DYNAMIC_EVERY: usize = 10;
 /// records these into `BENCH_gap.json`).
 #[derive(Debug, Clone)]
 pub struct GapDynRow {
+    /// configuration label (static/dynamic × screener)
     pub name: &'static str,
     /// total solver epochs along the path (FISTA iterations)
     pub epochs: usize,
     /// total column-sweep operations (see `SolveResult::col_ops`)
     pub col_ops: usize,
+    /// total path wallclock, seconds
     pub secs: f64,
+    /// mean rejection ratio along the path
     pub mean_rejection: f64,
 }
 

@@ -20,6 +20,13 @@
 //!   lowered once to `artifacts/*.hlo.txt`.
 //! * runtime: [`runtime`] loads those artifacts via the `xla` crate
 //!   (gated behind the `aot` cargo feature; unavailable offline).
+//!
+//! Large-d problems that do not fit in RAM run through the out-of-core
+//! sharded backend and its screen-before-load pipeline (DESIGN.md §10):
+//! [`data::ShardedDataset`], `screening::shard`,
+//! [`coordinator::path::run_path_sharded`].
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

@@ -1,0 +1,214 @@
+//! Pinned-block LRU cache — the resident-set policy of the out-of-core
+//! sharded backend (DESIGN.md §10).
+//!
+//! The sharded store keeps column blocks on disk and faults them into RAM
+//! on demand. This cache bounds the resident bytes: blocks are handed out
+//! as [`std::sync::Arc`] handles, and a block is **pinned** exactly while a
+//! handle other than the cache's own is alive (`Arc::strong_count > 1`).
+//! Eviction walks blocks in least-recently-used order and skips pinned
+//! ones, so a block can never be freed under a live reader — the safety
+//! property that lets screen-before-load sweeps borrow [`super::ColRef`]
+//! views into a block without copying it first.
+//!
+//! When every block over budget is pinned the cache runs over budget
+//! rather than failing: correctness first, the budget is a target. The
+//! block-serial streaming sweeps in `ops` keep at most one block pinned at
+//! a time, so in the intended access pattern the overshoot is one block.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+struct Entry<B> {
+    block: Arc<B>,
+    bytes: usize,
+    /// logical clock of the last access (monotone; larger = more recent)
+    stamp: u64,
+}
+
+struct Inner<B> {
+    entries: HashMap<usize, Entry<B>>,
+    clock: u64,
+    resident_bytes: usize,
+}
+
+/// A byte-budgeted LRU over numbered blocks, safe for shared (`&self`)
+/// use across threads. See the module docs for the pinning semantics.
+pub struct BlockCache<B> {
+    inner: Mutex<Inner<B>>,
+    budget_bytes: usize,
+}
+
+impl<B> BlockCache<B> {
+    /// Create a cache targeting at most `budget_bytes` resident bytes
+    /// (pinned blocks may push it over — module docs).
+    pub fn new(budget_bytes: usize) -> Self {
+        BlockCache {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                clock: 0,
+                resident_bytes: 0,
+            }),
+            budget_bytes,
+        }
+    }
+
+    /// Fetch block `id`, calling `load` on a miss. `load` returns the
+    /// block plus its resident size in bytes. The lock is not held during
+    /// `load`, so two threads racing on the same missing id may both load
+    /// it; the later insert wins and both handles stay valid — wasted
+    /// work, never wrong data.
+    pub fn get_or_load(
+        &self,
+        id: usize,
+        load: impl FnOnce() -> anyhow::Result<(B, usize)>,
+    ) -> anyhow::Result<Arc<B>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(e) = inner.entries.get_mut(&id) {
+                e.stamp = clock;
+                return Ok(Arc::clone(&e.block));
+            }
+        }
+        let (block, bytes) = load()?;
+        let block = Arc::new(block);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        if let Some(old) = inner
+            .entries
+            .insert(id, Entry { block: Arc::clone(&block), bytes, stamp })
+        {
+            inner.resident_bytes -= old.bytes;
+        }
+        inner.resident_bytes += bytes;
+        Self::evict_over_budget(&mut inner, self.budget_bytes);
+        Ok(block)
+    }
+
+    /// Evict least-recently-used *unpinned* blocks until the budget holds
+    /// (or nothing else is evictable).
+    fn evict_over_budget(inner: &mut Inner<B>, budget: usize) {
+        while inner.resident_bytes > budget {
+            let victim = inner
+                .entries
+                .iter()
+                .filter(|(_, e)| Arc::strong_count(&e.block) == 1)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&id, _)| id);
+            match victim {
+                Some(id) => {
+                    let e = inner.entries.remove(&id).expect("victim vanished");
+                    inner.resident_bytes -= e.bytes;
+                }
+                None => break, // everything left is pinned
+            }
+        }
+    }
+
+    /// Bytes currently resident (cached blocks, pinned or not).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// Number of blocks currently resident.
+    pub fn resident_blocks(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Drop every unpinned block (pinned ones stay until their handles
+    /// die and a later eviction collects them).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let unpinned: Vec<usize> = inner
+            .entries
+            .iter()
+            .filter(|(_, e)| Arc::strong_count(&e.block) == 1)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in unpinned {
+            let e = inner.entries.remove(&id).expect("entry vanished");
+            inner.resident_bytes -= e.bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load_ok(v: u64, bytes: usize) -> impl FnOnce() -> anyhow::Result<(u64, usize)> {
+        move || Ok((v, bytes))
+    }
+
+    #[test]
+    fn hit_returns_cached_block_without_reloading() {
+        let cache: BlockCache<u64> = BlockCache::new(1000);
+        let a = cache.get_or_load(0, load_ok(7, 100)).unwrap();
+        let b = cache
+            .get_or_load(0, || panic!("must not reload a cached block"))
+            .unwrap();
+        assert_eq!(*a, 7);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.resident_bytes(), 100);
+    }
+
+    #[test]
+    fn evicts_lru_first_when_over_budget() {
+        let cache: BlockCache<u64> = BlockCache::new(250);
+        for id in 0..3 {
+            cache.get_or_load(id, load_ok(id as u64, 100)).unwrap();
+        }
+        // budget 250 < 300: block 0 (least recent) must be gone, 1/2 stay
+        assert_eq!(cache.resident_blocks(), 2);
+        assert_eq!(cache.resident_bytes(), 200);
+        cache.get_or_load(2, || panic!("2 must still be resident")).unwrap();
+        // touch 1 (bumps its stamp), then insert 3: the LRU is now 2
+        cache.get_or_load(1, || panic!("1 must still be resident")).unwrap();
+        cache.get_or_load(3, load_ok(3, 100)).unwrap();
+        let mut two_reloaded = false;
+        cache
+            .get_or_load(2, || {
+                two_reloaded = true;
+                Ok((2, 100))
+            })
+            .unwrap();
+        assert!(two_reloaded, "2 should have been the LRU victim");
+    }
+
+    #[test]
+    fn pinned_blocks_survive_eviction() {
+        let cache: BlockCache<u64> = BlockCache::new(150);
+        let pinned = cache.get_or_load(0, load_ok(0, 100)).unwrap();
+        // inserting 1 pushes resident to 200 > 150, but 0 is pinned: the
+        // cache overshoots instead of freeing it
+        cache.get_or_load(1, load_ok(1, 100)).unwrap();
+        assert_eq!(*pinned, 0);
+        cache.get_or_load(0, || panic!("pinned block was evicted")).unwrap();
+        drop(pinned);
+        // once unpinned, the next insert can finally evict it
+        cache.get_or_load(2, load_ok(2, 100)).unwrap();
+        assert!(cache.resident_bytes() <= 150 + 100);
+    }
+
+    #[test]
+    fn clear_drops_unpinned_only() {
+        let cache: BlockCache<u64> = BlockCache::new(1000);
+        let hold = cache.get_or_load(0, load_ok(0, 10)).unwrap();
+        cache.get_or_load(1, load_ok(1, 10)).unwrap();
+        cache.clear();
+        assert_eq!(cache.resident_blocks(), 1);
+        assert_eq!(*hold, 0);
+    }
+
+    #[test]
+    fn load_errors_propagate_and_cache_stays_clean() {
+        let cache: BlockCache<u64> = BlockCache::new(1000);
+        let err = cache.get_or_load(5, || anyhow::bail!("disk on fire"));
+        assert!(err.is_err());
+        assert_eq!(cache.resident_blocks(), 0);
+        cache.get_or_load(5, load_ok(5, 10)).unwrap();
+        assert_eq!(cache.resident_blocks(), 1);
+    }
+}

@@ -4,17 +4,22 @@
 /// column `l` (one feature's samples) is `data[l*n .. (l+1)*n]`, contiguous.
 #[derive(Debug, Clone, Copy)]
 pub struct ColMajor<'a> {
+    /// the backing buffer, length `n * d`
     pub data: &'a [f32],
+    /// rows (samples)
     pub n: usize,
+    /// columns (features)
     pub d: usize,
 }
 
 impl<'a> ColMajor<'a> {
+    /// Wrap a buffer as an `n x d` feature-major view (length-checked).
     pub fn new(data: &'a [f32], n: usize, d: usize) -> Self {
         assert_eq!(data.len(), n * d, "matrix buffer size mismatch");
         ColMajor { data, n, d }
     }
 
+    /// Column `l` as a contiguous slice.
     #[inline]
     pub fn col(&self, l: usize) -> &'a [f32] {
         debug_assert!(l < self.d);
@@ -66,12 +71,14 @@ pub fn dot_mixed(a: &[f32], b: &[f64]) -> f64 {
     s
 }
 
+/// `<a, b>` for two f64 vectors.
 #[inline]
 pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean norm of an f64 vector.
 #[inline]
 pub fn nrm2_f64(a: &[f64]) -> f64 {
     dot_f64(a, a).sqrt()

@@ -6,11 +6,17 @@
 //!   active-set forward product `Σ_l w_l x_l` are unit-stride scans.
 //! * [`sparse`] — CSC per-column storage for the text/genomics regime
 //!   (TDT2 is ~99% sparse); the same sweeps touch only stored entries.
+//! * [`cache`] — the pinned-block LRU that bounds the resident set of the
+//!   out-of-core sharded backend (blocks live on disk and fault in on
+//!   demand; see DESIGN.md §10).
 //!
 //! [`ColRef`] is the seam: every consumer above this module (ops,
 //! screening, solvers, coordinator) addresses columns through it and never
-//! sees the storage layout, so new backends (mmap'd shards, quantized
-//! columns) slot in here without touching the math.
+//! sees the storage layout. The out-of-core shard store
+//! (`data::shard::ShardedDataset`, DESIGN.md §10) sits one level up — a
+//! borrowed per-column view cannot outlive block eviction, so shards hand
+//! out whole blocks (ordinary dense/CSC stores) and every in-RAM kernel
+//! below is reused unchanged.
 //!
 //! Precision policy: matrices are f32 (memory: the ADNI-scale X is 2 GB at
 //! paper dims), all accumulations are f64 — screening thresholds compare
@@ -18,9 +24,11 @@
 //! sparse kernels replicate the dense kernels' association order so a
 //! fully-stored CSC column is bit-identical to its dense twin.
 
+pub mod cache;
 pub mod dense;
 pub mod sparse;
 
+pub use cache::BlockCache;
 pub use dense::{
     axpy_f64, dot_f32_f64, dot_f64, nrm2_f64, scale_add, ColMajor,
 };

@@ -110,6 +110,7 @@ impl CscMatrix {
         (&self.indices[lo..hi], &self.values[lo..hi])
     }
 
+    /// Stored entry count.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }

@@ -5,10 +5,11 @@
 //!   fig1      reproduce Figure 1 (rejection ratios, synthetic)
 //!   fig2      reproduce Figure 2 (rejection ratios, simulated real sets)
 //!   ablation  ABL1/ABL2 screener ablations
-//!   path      run one λ-path on a chosen dataset
+//!   path      run one λ-path on a chosen dataset (in-RAM or out-of-core)
 //!   cv        k-fold cross-validation over the λ grid (screened)
 //!   stability stability selection over half-subsamples (screened)
 //!   gen       generate a dataset and save it as .mtd
+//!   shard     convert a dataset to the sharded .mtd3 layout (out-of-core)
 //!   info      print the AOT artifact manifest
 
 use anyhow::{Context, Result};
@@ -19,7 +20,8 @@ use mtfl_dpc::experiments::{self, Scale};
 use mtfl_dpc::runtime::AotEngine;
 use std::path::PathBuf;
 
-const USAGE: &str = "usage: repro <table1|fig1|fig2|ablation|path|cv|stability|gen|info> [options]
+const USAGE: &str = "usage: \
+repro <table1|fig1|fig2|ablation|path|cv|stability|gen|shard|info> [options]
 
 common options:
   --scale quick|default|paper   experiment scale (default: default)
@@ -36,12 +38,57 @@ path / cv / stability options:
   --solver fista|bcd
   --seed S
 
+path options (storage backend):
+  --in FILE           run on a saved dataset (.mtd loads in RAM; .mtd3
+                      runs out-of-core with screen-before-load)
+  --backend auto|dense|csc|sharded   storage backend (default auto);
+                      'sharded' shards the dataset to a temp file and
+                      runs it out-of-core — the zero-setup demo of the
+                      d >> RAM screen-before-load pipeline
+  --shard-bytes N     target bytes per column block (default 4 MiB)
+  --cache-mb M        block-cache budget for sharded runs (default 256)
+
 cv options:       --folds K (default 5)
 stability options: --subsamples B (default 20) --threshold F (default 0.8)
 
 gen options:
   --dataset ... --d N --seed S --out FILE.mtd
+shard options:
+  --in FILE.mtd | --dataset ... --d N --seed S
+  --out FILE.mtd3 --shard-bytes N
 ";
+
+/// First four bytes of a file (container magic sniffing).
+fn sniff_magic(path: &std::path::Path) -> Result<[u8; 4]> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut m = [0u8; 4];
+    f.read_exact(&mut m).with_context(|| format!("read {}", path.display()))?;
+    Ok(m)
+}
+
+/// Bytes → MiB for the memory-model summary lines.
+fn mib(b: u64) -> f64 {
+    b as f64 / (1024.0 * 1024.0)
+}
+
+/// The per-run summary both `path` branches print: totals line plus the
+/// rejection curve (kept in one place so the format cannot drift).
+fn print_path_summary(res: &mtfl_dpc::coordinator::PathRunResult, title: &str) {
+    println!(
+        "total {:.2}s (screen {:.3}s, solve {:.2}s), mean rejection {:.4}, \
+         solver col-ops {}",
+        res.total_secs,
+        res.screen_secs,
+        res.solve_secs,
+        res.mean_rejection_ratio(),
+        res.total_col_ops()
+    );
+    let curve: Vec<(f64, f64)> =
+        res.records.iter().map(|r| (r.ratio, r.rejection_ratio)).collect();
+    println!("{}", report::render_rejection_curve(title, &curve));
+}
 
 fn parse_screener(args: &Args) -> Result<ScreenerKind> {
     Ok(match args.get_or("screener", "dpc") {
@@ -132,31 +179,112 @@ fn main() -> Result<()> {
             let d = args.get_usize("d", 1000)?;
             let seed = args.get_u64("seed", 0)?;
             let grid = args.get_usize("grid", scale.grid_len())?;
+            let backend = args.get_or("backend", "auto").to_string();
+            let shard_bytes = args.get_usize("shard-bytes", 4 << 20)?;
+            let cache_bytes = args.get_usize("cache-mb", 256)? << 20;
+            let input = args.get("in").map(PathBuf::from);
             let mut opts = grid_opts(&args, grid)?;
             let engine = engine_kind(&args, &mut engine_holder)?;
             args.finish()?;
 
-            let ds = experiments::build_by_name(&name, d, scale, seed)?;
-            if matches!(engine, EngineKind::Aot(_)) {
-                opts.aot_margin = 1e-3; // f32 engine needs a float-safety margin
+            anyhow::ensure!(
+                matches!(backend.as_str(), "auto" | "dense" | "csc" | "sharded"),
+                "unknown backend '{backend}' (auto|dense|csc|sharded)"
+            );
+            let input_is_shard = match &input {
+                Some(p) => sniff_magic(p)? == *b"MTD3",
+                None => false,
+            };
+            if input_is_shard {
+                anyhow::ensure!(
+                    matches!(backend.as_str(), "auto" | "sharded"),
+                    "--in points at an .mtd3 shard, which runs out-of-core; \
+                     --backend {backend} cannot apply (load the .mtd instead)"
+                );
             }
-            let res = run_path(&ds, &opts, &engine)?;
-            println!(
-                "dataset={} d={} lam_max={:.4}",
-                res.dataset, res.d, res.lam_max
-            );
-            println!(
-                "total {:.2}s (screen {:.3}s, solve {:.2}s), mean rejection {:.4}, \
-                 solver col-ops {}",
-                res.total_secs,
-                res.screen_secs,
-                res.solve_secs,
-                res.mean_rejection_ratio(),
-                res.total_col_ops()
-            );
-            let curve: Vec<(f64, f64)> =
-                res.records.iter().map(|r| (r.ratio, r.rejection_ratio)).collect();
-            println!("{}", report::render_rejection_curve(&format!("path {name}"), &curve));
+            if input_is_shard || backend == "sharded" {
+                anyhow::ensure!(
+                    matches!(engine, EngineKind::Exact),
+                    "the sharded backend runs on the exact engine only"
+                );
+                // run an existing shard in place, or shard the requested
+                // dataset into a temp file first (the zero-setup demo)
+                let (shard_path, temp) = match (&input, input_is_shard) {
+                    (Some(p), true) => (p.clone(), false),
+                    _ => {
+                        let ds = match &input {
+                            Some(p) => mtfl_dpc::data::io::load(p)?,
+                            None => experiments::build_by_name(&name, d, scale, seed)?,
+                        };
+                        let p = std::env::temp_dir()
+                            .join(format!("mtfl_path_{}.mtd3", std::process::id()));
+                        let s = mtfl_dpc::data::io::save_sharded(&ds, &p, shard_bytes)?;
+                        println!(
+                            "sharded {} into {} blocks x {} cols at {}",
+                            ds.name,
+                            s.blocks,
+                            s.block_cols,
+                            p.display()
+                        );
+                        (p, true)
+                    }
+                };
+                // open + run inside one fallible block so the temp shard
+                // is removed on ANY failure, not just a failed run
+                let outcome = (|| {
+                    let sh = mtfl_dpc::data::ShardedDataset::open_with_cache(
+                        &shard_path,
+                        cache_bytes,
+                    )?;
+                    let res = mtfl_dpc::coordinator::run_path_sharded(&sh, &opts)?;
+                    Ok::<_, anyhow::Error>((sh, res))
+                })();
+                if temp {
+                    std::fs::remove_file(&shard_path).ok();
+                }
+                let (sh, res) = outcome?;
+                println!(
+                    "dataset={} d={} lam_max={:.4} [sharded: {} blocks x {} cols]",
+                    res.path.dataset,
+                    res.path.d,
+                    res.path.lam_max,
+                    sh.n_blocks(),
+                    sh.block_cols()
+                );
+                println!(
+                    "memory: peak materialized {:.2} MiB of {:.2} MiB dense ({:.1}%), \
+                     {:.2} MiB read from disk over {} block loads",
+                    mib(res.peak_materialized_bytes as u64),
+                    mib(res.dense_bytes),
+                    100.0 * res.peak_materialized_bytes as f64
+                        / res.dense_bytes.max(1) as f64,
+                    mib(res.bytes_read),
+                    res.blocks_loaded
+                );
+                print_path_summary(
+                    &res.path,
+                    &format!("path {} (sharded)", res.path.dataset),
+                );
+            } else {
+                let ds = match &input {
+                    Some(p) => mtfl_dpc::data::io::load(p)?,
+                    None => experiments::build_by_name(&name, d, scale, seed)?,
+                };
+                let ds = match backend.as_str() {
+                    "dense" => ds.to_dense_backend(),
+                    "csc" => ds.to_csc(),
+                    _ => ds, // "auto": the generator's natural backend
+                };
+                if matches!(engine, EngineKind::Aot(_)) {
+                    opts.aot_margin = 1e-3; // f32 engine needs a float-safety margin
+                }
+                let res = run_path(&ds, &opts, &engine)?;
+                println!(
+                    "dataset={} d={} lam_max={:.4}",
+                    res.dataset, res.d, res.lam_max
+                );
+                print_path_summary(&res, &format!("path {name}"));
+            }
         }
         "cv" => {
             let name = args.get_or("dataset", "synth1").to_string();
@@ -220,6 +348,37 @@ fn main() -> Result<()> {
                 ds.t(),
                 ds.uniform_n(),
                 ds.d,
+                out.display()
+            );
+        }
+        "shard" => {
+            let out = PathBuf::from(
+                args.get("out").context("--out FILE.mtd3 is required for shard")?,
+            );
+            let shard_bytes = args.get_usize("shard-bytes", 4 << 20)?;
+            let ds = match args.get("in") {
+                Some(p) => mtfl_dpc::data::io::load(std::path::Path::new(p))?,
+                None => {
+                    let name = args.get_or("dataset", "synth1").to_string();
+                    let d = args.get_usize("d", 1000)?;
+                    let seed = args.get_u64("seed", 0)?;
+                    experiments::build_by_name(&name, d, scale, seed)?
+                }
+            };
+            args.finish()?;
+            let s = mtfl_dpc::data::io::save_sharded(&ds, &out, shard_bytes)?;
+            println!(
+                "sharded {} (T={} d={}) into {}: {} blocks x {} cols, payload {:.2} MiB",
+                ds.name,
+                ds.t(),
+                ds.d,
+                out.display(),
+                s.blocks,
+                s.block_cols,
+                mib(s.payload_bytes)
+            );
+            println!(
+                "run it out-of-core with: repro path --in {}",
                 out.display()
             );
         }

@@ -11,7 +11,7 @@
 //! backend-agnostic: on CSC storage the inner loops touch only stored
 //! nonzeros (DESIGN.md §6).
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShardedDataset};
 use crate::util::{parallel_chunks, scoped_pool};
 
 /// One f64 vector per task (sample-space block vector).
@@ -21,18 +21,22 @@ pub type Stacked = Vec<Vec<f64>>;
 // stacked-vector helpers
 // ---------------------------------------------------------------------------
 
+/// A zero stacked vector with the dataset's per-task lengths.
 pub fn stacked_zeros_like(ds: &Dataset) -> Stacked {
     ds.tasks.iter().map(|t| vec![0.0f64; t.n]).collect()
 }
 
+/// The responses widened to f64, one vector per task.
 pub fn y64(ds: &Dataset) -> Stacked {
     ds.tasks.iter().map(|t| t.y.iter().map(|&v| v as f64).collect()).collect()
 }
 
+/// Inner product of two stacked vectors (sum over tasks).
 pub fn stacked_dot(a: &Stacked, b: &Stacked) -> f64 {
     a.iter().zip(b).map(|(x, y)| crate::linalg::dot_f64(x, y)).sum()
 }
 
+/// Squared Euclidean norm of a stacked vector.
 pub fn stacked_sqnorm(a: &Stacked) -> f64 {
     stacked_dot(a, a)
 }
@@ -45,6 +49,7 @@ pub fn stacked_scale_add(a: &Stacked, s: f64, b: &Stacked) -> Stacked {
         .collect()
 }
 
+/// out = s*a (allocating).
 pub fn stacked_scale(a: &Stacked, s: f64) -> Stacked {
     a.iter().map(|x| x.iter().map(|v| v * s).collect()).collect()
 }
@@ -126,6 +131,7 @@ pub fn residual(ds: &Dataset, w: &[f64]) -> Stacked {
 // objective / duality machinery
 // ---------------------------------------------------------------------------
 
+/// ‖W‖₂,₁ = Σ_l ‖w^l‖ over the rows of a row-major (d × T) matrix.
 pub fn l21_norm(w: &[f64], t_count: usize) -> f64 {
     w.chunks_exact(t_count)
         .map(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt())
@@ -209,6 +215,59 @@ pub fn normal_at_lmax(ds: &Dataset, lstar: usize, lmax: f64) -> Stacked {
             out
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// block-streaming sweeps over sharded datasets (DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// g_l(v) for every feature of a sharded dataset, one column block at a
+/// time. Blocks stream serially — the disk is the bottleneck and the
+/// resident set stays at one pinned block plus the cache — while inside a
+/// block the sweep reuses [`gscore`]'s `parallel_chunks` workers over the
+/// block's columns. Per-column results are bit-identical to [`gscore`] on
+/// the materialized dataset (each column is the same dot in the same
+/// association order).
+pub fn stream_gscore(sh: &ShardedDataset, v: &Stacked) -> anyhow::Result<Vec<f64>> {
+    debug_assert_eq!(v.len(), sh.t());
+    let mut out = vec![0.0f64; sh.d()];
+    for b in 0..sh.n_blocks() {
+        let blk = sh.block(b)?;
+        let part = gscore(&blk, v);
+        let range = sh.block_range(b);
+        out[range].copy_from_slice(&part);
+    }
+    Ok(out)
+}
+
+/// The ‖x_l^{(t)}‖² table (d × T row-major) streamed block-by-block — the
+/// λ-independent b² moments of Theorem 7, computed once per shard by the
+/// screen-before-load pipeline. Matches [`Dataset::col_sqnorms`] on the
+/// materialized dataset exactly.
+pub fn stream_col_sqnorms(sh: &ShardedDataset) -> anyhow::Result<Vec<f64>> {
+    let t_count = sh.t();
+    let mut out = vec![0.0f64; sh.d() * t_count];
+    for b in 0..sh.n_blocks() {
+        let blk = sh.block(b)?;
+        let part = blk.col_sqnorms();
+        let range = sh.block_range(b);
+        out[range.start * t_count..range.end * t_count].copy_from_slice(&part);
+    }
+    Ok(out)
+}
+
+/// (λ_max, argmax feature l*, g_l(y) for all l) of a sharded dataset —
+/// Theorem 1 evaluated without ever materializing the matrix. Uses the
+/// identical first-strict-maximum fold as [`lambda_max`], so the argmax
+/// (and therefore the sequential screening reference) agrees with the
+/// in-RAM path bit-for-bit.
+pub fn stream_lambda_max(sh: &ShardedDataset) -> anyhow::Result<(f64, usize, Vec<f64>)> {
+    let g = stream_gscore(sh, &sh.y64())?;
+    let (lstar, gmax) = g
+        .iter()
+        .enumerate()
+        .fold((0usize, f64::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+    Ok((gmax.max(0.0).sqrt(), lstar, g))
 }
 
 #[cfg(test)]

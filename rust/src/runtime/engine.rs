@@ -23,9 +23,13 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
+/// The PJRT executor: compiles the AOT HLO artifacts on first use and
+/// serves the typed call wrappers. The default (offline) build ships a
+/// stub whose constructor errors with a pointer at the exact engine.
 pub struct AotEngine {
     #[cfg(feature = "aot")]
     client: xla::PjRtClient,
+    /// the artifact registry parsed from `manifest.tsv`
     pub manifest: Manifest,
     #[cfg(feature = "aot")]
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
@@ -33,22 +37,31 @@ pub struct AotEngine {
     pub compile_secs: Mutex<HashMap<String, f64>>,
 }
 
+/// Outputs of the `lammax` artifact (Theorem 1 on the accelerator).
 #[derive(Debug, Clone)]
 pub struct LamMaxOut {
+    /// λ_max
     pub lam_max: f32,
     /// n(lambda_max), row-major (T, N)
     pub normal: Vec<f32>,
+    /// g_l(y) per feature
     pub g: Vec<f32>,
 }
 
+/// Outputs of one `fista` chunk artifact (a fixed number of steps).
 #[derive(Debug, Clone)]
 pub struct FistaChunkOut {
+    /// iterate W, bucketed (db x T)
     pub w: Vec<f32>,
+    /// momentum point V, bucketed (db x T)
     pub v: Vec<f32>,
+    /// momentum scalar t
     pub t: f32,
     /// residual X W − y, row-major (T, N)
     pub r: Vec<f32>,
+    /// primal objective at W
     pub obj: f32,
+    /// duality gap at W
     pub gap: f32,
 }
 
@@ -68,6 +81,7 @@ fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
 
 #[cfg(feature = "aot")]
 impl AotEngine {
+    /// Load the manifest and create a PJRT CPU client.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
@@ -175,6 +189,7 @@ impl AotEngine {
 /// compile, but construction fails with a pointer at the exact engine.
 #[cfg(not(feature = "aot"))]
 impl AotEngine {
+    /// Stub constructor: always errors (the `xla` crate is absent).
     pub fn new(_artifact_dir: &Path) -> Result<Self> {
         anyhow::bail!(
             "built without the `aot` feature: the PJRT engine needs the external \
@@ -182,10 +197,12 @@ impl AotEngine {
         )
     }
 
+    /// Stub: always errors (see [`AotEngine::new`]).
     pub fn warmup_config(&self, _cfg: &str) -> Result<()> {
         anyhow::bail!("AOT engine unavailable: built without the `aot` feature")
     }
 
+    /// Stub: always errors (see [`AotEngine::new`]).
     pub fn call(&self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         anyhow::bail!("AOT engine unavailable: built without the `aot` feature")
     }

@@ -6,13 +6,17 @@
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// One tensor of an artifact's ABI: shape plus dtype string.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// dimensions, outermost first
     pub shape: Vec<usize>,
+    /// dtype name as emitted by aot.py (currently always `f32`)
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Element count (product of dims).
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -33,28 +37,44 @@ fn parse_specs(s: &str) -> Result<Vec<TensorSpec>> {
         .collect()
 }
 
+/// One artifact's registry row: identity, shape, and ABI.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// artifact name (also its `.hlo.txt` stem)
     pub name: String,
+    /// artifact kind: lammax | screen | lipschitz | fista
     pub kind: String,
+    /// shape-config label shared by one dataset shape's artifacts
     pub cfg: String,
+    /// task count the graph was lowered for
     pub t: usize,
+    /// per-task sample count the graph was lowered for
     pub n: usize,
+    /// full feature dimension the graph was lowered for
     pub d: usize,
+    /// solver bucket width (0 for non-solver artifacts)
     pub bucket: usize,
+    /// steps fused into one solver chunk (0 for non-solver artifacts)
     pub steps: usize,
+    /// input tensor ABI, in call order
     pub inputs: Vec<TensorSpec>,
+    /// output tensor ABI, in return order
     pub outputs: Vec<TensorSpec>,
+    /// path of the HLO text file
     pub path: PathBuf,
 }
 
+/// The parsed artifact registry of one `artifacts/` directory.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// every artifact row, in file order
     pub artifacts: Vec<ArtifactMeta>,
+    /// the directory the manifest was loaded from
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Parse `dir/manifest.tsv`, checking every referenced file exists.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&path)
@@ -94,6 +114,7 @@ impl Manifest {
         Ok(Manifest { artifacts, dir: dir.to_path_buf() })
     }
 
+    /// Look up an artifact by exact name.
     pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -61,10 +61,12 @@ pub struct CsScreener {
 }
 
 impl CsScreener {
+    /// Build the screener, caching the b² table (one O(nnz) sweep).
     pub fn new(ds: &Dataset) -> Self {
         CsScreener { b2: ds.col_sqnorms() }
     }
 
+    /// DPC ball + CS scores at λ from a reference at λ0 ≥ λ.
     pub fn screen(&self, ds: &Dataset, dref: &DualRef, lam: f64) -> ScreenOutcome {
         let (o, delta) = super::dpc::ball(ds, dref, lam);
         let scores = cs_scores(ds, &self.b2, &o, delta);

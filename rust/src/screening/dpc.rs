@@ -21,6 +21,7 @@ use crate::ops::{self, Stacked};
 /// plus the gap certificate that makes an inexact reference safe.
 #[derive(Debug, Clone)]
 pub struct DualRef {
+    /// the reference λ0 (screening targets λ ≤ λ0)
     pub lam0: f64,
     /// a dual-feasible approximation of θ*(λ0) (exact at λ_max)
     pub theta0: Stacked,
@@ -70,9 +71,16 @@ impl DualRef {
 /// returned ball is the smallest one enclosing plain-ball ∩ halfspace;
 /// at eps = 0 it equals the paper's (o = θ0 + ½r⊥, Δ = ½‖r⊥‖).
 pub fn ball(ds: &Dataset, dref: &DualRef, lam: f64) -> (Stacked, f64) {
-    let y = ops::y64(ds);
+    ball_from_y(&ops::y64(ds), dref, lam)
+}
+
+/// [`ball`] from a precomputed stacked response vector. The out-of-core
+/// pipeline (`screening::shard`) goes through this entry point: the
+/// shard keeps y resident in its header, and the ball construction is
+/// O(N) — it never needs the matrix.
+pub fn ball_from_y(y: &Stacked, dref: &DualRef, lam: f64) -> (Stacked, f64) {
     // r = y/λ − θ0 ; plain safe ball: center θ0 + ½r, radius ½‖r‖
-    let r = ops::stacked_scale_add(&ops::stacked_scale(&y, 1.0 / lam), -1.0, &dref.theta0);
+    let r = ops::stacked_scale_add(&ops::stacked_scale(y, 1.0 / lam), -1.0, &dref.theta0);
     let o_plain = ops::stacked_scale_add(&dref.theta0, 0.5, &r);
     let delta_plain = 0.5 * ops::stacked_sqnorm(&r).sqrt();
     let nn = ops::stacked_sqnorm(&dref.normal);
@@ -82,7 +90,7 @@ pub fn ball(ds: &Dataset, dref: &DualRef, lam: f64) -> (Stacked, f64) {
     let nnorm = nn.sqrt();
     // inexact-reference slack on the halfspace cut (0 for exact refs)
     let slack = if dref.eps > 0.0 {
-        let grid_step = ops::stacked_sqnorm(&y).sqrt() * (1.0 / lam - 1.0 / dref.lam0).abs();
+        let grid_step = ops::stacked_sqnorm(y).sqrt() * (1.0 / lam - 1.0 / dref.lam0).abs();
         dref.eps * (nnorm + 2.0 * dref.eps + grid_step)
     } else {
         0.0
@@ -107,6 +115,7 @@ pub struct DpcScreener {
 }
 
 impl DpcScreener {
+    /// Build the screener, caching the b² table (one O(nnz) sweep).
     pub fn new(ds: &Dataset) -> Self {
         DpcScreener { b2: ds.col_sqnorms() }
     }

@@ -32,6 +32,7 @@ pub fn certified_radius(gap: f64, lam: f64) -> f64 {
 pub struct GapBall {
     /// dual-feasible center (the scaled residual of the primal iterate)
     pub center: Stacked,
+    /// √(2·gap)/λ — the strong-concavity radius
     pub radius: f64,
     /// the certifying gap P(W) − D(center)
     pub gap: f64,
@@ -59,6 +60,7 @@ pub struct GapScreener {
 }
 
 impl GapScreener {
+    /// Build the screener, caching the b² table (one O(nnz) sweep).
     pub fn new(ds: &Dataset) -> Self {
         GapScreener { b2: ds.col_sqnorms() }
     }

@@ -9,7 +9,11 @@
 //!   primal/dual feasible pair (Ndiaye et al.), usable per-λ and
 //!   *dynamically inside the solver loop* as the gap shrinks;
 //! * [`bounds`] — cheaper-but-looser score bounds (ablation ABL1);
-//! * [`safety`] — post-hoc verifier that no active feature was rejected.
+//! * [`safety`] — post-hoc verifier that no active feature was rejected;
+//! * [`shard`] — screen-before-load: the same DPC/GapSafe rules evaluated
+//!   block-by-block against an out-of-core shard, so datasets that never
+//!   fit in RAM are screened before they are (partially) loaded
+//!   (DESIGN.md §10).
 //!
 //! Inexact-reference policy (DESIGN.md §9): every ball the exact engine
 //! screens with is certified — either closed-form (λ_max) or inflated by a
@@ -22,6 +26,7 @@ pub mod dpc;
 pub mod gap;
 pub mod safety;
 pub mod secular;
+pub mod shard;
 
 use crate::data::Dataset;
 use crate::ops::Stacked;
@@ -39,6 +44,7 @@ pub struct ScreenOutcome {
 }
 
 impl ScreenOutcome {
+    /// Surviving feature indices, ascending (the solver's column set).
     pub fn kept_indices(&self) -> Vec<usize> {
         self.rejected
             .iter()
@@ -47,6 +53,7 @@ impl ScreenOutcome {
             .collect()
     }
 
+    /// Number of certified-inactive features.
     pub fn num_rejected(&self) -> usize {
         self.rejected.iter().filter(|&&r| r).count()
     }

@@ -6,16 +6,19 @@
 use crate::data::Dataset;
 use crate::ops;
 
+/// What the post-hoc verifier found for one screening outcome.
 #[derive(Debug)]
 pub struct SafetyReport {
     /// rejected features whose solution row norm exceeded tol (must be empty)
     pub violations: Vec<(usize, f64)>,
     /// max g_l(θ̂) over rejected features (must be < 1 for strict safety)
     pub max_rejected_g: f64,
+    /// number of rejections examined
     pub checked: usize,
 }
 
 impl SafetyReport {
+    /// True when no rejected feature was active in the solution.
     pub fn is_safe(&self) -> bool {
         self.violations.is_empty()
     }

@@ -24,11 +24,16 @@ pub enum Branch {
     Newton,
 }
 
+/// One QP1QC solve: the score plus solver diagnostics.
 #[derive(Debug, Clone, Copy)]
 pub struct Qp1qc {
+    /// s_l — the maximum of g_l over the ball (the screening score)
     pub s: f64,
+    /// the optimal trust-region multiplier α*
     pub alpha: f64,
+    /// which solution branch produced the result
     pub branch: Branch,
+    /// Newton iterations spent (0 on the closed-form branches)
     pub newton_iters: usize,
 }
 

@@ -1,0 +1,249 @@
+//! Screen-before-load: DPC / GAP-safe screening evaluated directly on an
+//! out-of-core [`ShardedDataset`], block by block (DESIGN.md §10).
+//!
+//! The insight that makes this work: every ball the screeners use is an
+//! O(N) object (a stacked dual center plus a radius), and the Theorem-7
+//! score of a feature depends only on that ball and the feature's own
+//! columns. So a column block can be faulted in, scored against the ball,
+//! and discarded — no state about it survives except one bit (kept /
+//! rejected) and its b² moments. Peak memory is the block cache plus the
+//! O(d) score/keep vectors, never the matrix.
+//!
+//! The sweeps here mirror their in-RAM twins call-for-call
+//! ([`super::ball_scores`], [`crate::ops::duality_gap`],
+//! [`super::dpc::DualRef::from_solution`]), so a sharded screen produces
+//! **bit-identical keep-sets** to the dense/CSC path on the same data —
+//! the parity contract `rust/tests/shard_backend.rs` pins down.
+
+use super::dpc::{ball_from_y, DualRef};
+use super::gap::certified_radius;
+use super::{ball_scores, ScreenOutcome};
+use crate::data::ShardedDataset;
+use crate::ops::{self, Stacked};
+use anyhow::Result;
+
+/// The out-of-core screener: caches the λ-independent b² column-norm
+/// table (one streaming pass at construction) and scores every later ball
+/// with one block-streamed sweep.
+pub struct ShardScreener {
+    /// (d × T) row-major ‖x_l^{(t)}‖², streamed once
+    b2: Vec<f64>,
+}
+
+impl ShardScreener {
+    /// Build the screener with one streaming b² pass over the shard.
+    pub fn new(sh: &ShardedDataset) -> Result<Self> {
+        Ok(ShardScreener { b2: ops::stream_col_sqnorms(sh)? })
+    }
+
+    /// Theorem-7 scores s_l over the ball (o, Δ) for every feature,
+    /// streamed block-by-block. Bit-identical per column to
+    /// [`super::dpc::DpcScreener::scores`] on the materialized dataset.
+    pub fn scores(&self, sh: &ShardedDataset, o: &Stacked, delta: f64) -> Result<Vec<f64>> {
+        let t_count = sh.t();
+        let mut out = vec![0.0f64; sh.d()];
+        for b in 0..sh.n_blocks() {
+            let blk = sh.block(b)?;
+            let range = sh.block_range(b);
+            let b2_slice = &self.b2[range.start * t_count..range.end * t_count];
+            let part = ball_scores(&blk, b2_slice, o, delta);
+            out[range].copy_from_slice(&part);
+        }
+        Ok(out)
+    }
+
+    /// Screen with an explicit ball (the GAP-safe entry point — the
+    /// caller certifies (o, Δ) from a duality gap).
+    pub fn screen_ball(
+        &self,
+        sh: &ShardedDataset,
+        o: &Stacked,
+        delta: f64,
+    ) -> Result<ScreenOutcome> {
+        let scores = self.scores(sh, o, delta)?;
+        let rejected = scores.iter().map(|&s| s < 1.0).collect();
+        Ok(ScreenOutcome { rejected, scores, delta })
+    }
+
+    /// Full DPC step (Theorem 8 / Corollary 9) at λ from a gap-certified
+    /// reference at λ0 ≥ λ. `y` is the shard's stacked response
+    /// ([`ShardedDataset::y64`], cached by the caller across the grid).
+    pub fn screen(
+        &self,
+        sh: &ShardedDataset,
+        y: &Stacked,
+        dref: &DualRef,
+        lam: f64,
+    ) -> Result<ScreenOutcome> {
+        assert!(
+            lam <= dref.lam0 * (1.0 + 1e-12),
+            "DPC requires lam <= lam0 (got {lam} > {})",
+            dref.lam0
+        );
+        let (o, delta) = ball_from_y(y, dref, lam);
+        self.screen_ball(sh, &o, delta)
+    }
+}
+
+/// The (obj, gap, θ_feasible) triple of [`crate::ops::duality_gap`],
+/// evaluated against a shard: the primal objective, the duality gap, and
+/// the dual-feasible scaling of the residual.
+pub struct StreamedGap {
+    /// primal objective P(W) at the evaluated solution
+    pub obj: f64,
+    /// duality gap P(W) − D(θ) (certifies every ball built from this)
+    pub gap: f64,
+    /// the dual-feasible scaled residual
+    pub theta: Stacked,
+}
+
+/// Evaluate the duality-gap state at `lam` from a residual `r = X W − y`
+/// and the ℓ2,1 norm of the W that produced it. The feasibility scaling
+/// needs max_l g_l over *all* features — that is the one full streamed
+/// sweep sequential screening re-pays per grid point. Matches
+/// [`crate::ops::duality_gap`] on the materialized dataset bit-for-bit
+/// (same residual, same per-column dots, same fold).
+pub fn streamed_gap(
+    sh: &ShardedDataset,
+    y: &Stacked,
+    lam: f64,
+    r: &Stacked,
+    l21: f64,
+) -> Result<StreamedGap> {
+    let obj = 0.5 * ops::stacked_sqnorm(r) + lam * l21;
+    let z = ops::stacked_scale(r, -1.0 / lam);
+    let m = ops::stream_gscore(sh, &z)?.into_iter().fold(0.0f64, f64::max).sqrt();
+    let theta = if m > 1.0 { ops::stacked_scale(&z, 1.0 / m) } else { z };
+    let dual = ops::dual_obj(y, &theta, lam);
+    Ok(StreamedGap { obj, gap: obj - dual, theta })
+}
+
+/// Sequential DPC reference from a streamed gap state — the sharded
+/// analogue of [`DualRef::from_solution`]: same dual-feasible point, same
+/// Eq. 20 normal, same √(2·gap)/λ0 certificate.
+pub fn dual_ref_from_streamed(y: &Stacked, lam0: f64, sg: &StreamedGap) -> DualRef {
+    let normal =
+        ops::stacked_scale_add(&ops::stacked_scale(y, 1.0 / lam0), -1.0, &sg.theta);
+    DualRef {
+        lam0,
+        theta0: sg.theta.clone(),
+        normal,
+        eps: certified_radius(sg.gap, lam0),
+    }
+}
+
+/// The closed-form λ_max reference (Theorem 1 + Eq. 20 case 2) streamed:
+/// one g-sweep for λ_max, then a single block load for the argmax
+/// column's gradient normal. Returns (reference, λ_max).
+pub fn dual_ref_at_lambda_max(sh: &ShardedDataset) -> Result<(DualRef, f64)> {
+    let (lmax, lstar, _) = ops::stream_lambda_max(sh)?;
+    let y = sh.y64();
+    let theta0 = ops::stacked_scale(&y, 1.0 / lmax);
+    let b = sh.block_of(lstar);
+    let blk = sh.block(b)?;
+    let local = lstar - sh.block_range(b).start;
+    // Eq. 20 case 2, written out because block tasks carry no y (the
+    // responses are header-resident): n_t = 2 <x_{l*}^{(t)}, y_t/λmax>
+    // x_{l*}^{(t)} — same kernels, same order as `ops::normal_at_lmax`
+    let normal: Stacked = blk
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(ti, task)| {
+            let col = task.col(local);
+            let c = 2.0 * col.dot_f32(&sh.y()[ti]) / lmax;
+            let mut out = vec![0.0f64; task.n];
+            col.axpy_into(c, &mut out);
+            out
+        })
+        .collect();
+    Ok((DualRef { lam0: lmax, theta0, normal, eps: 0.0 }, lmax))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::save_sharded;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::data::Dataset;
+    use crate::screening::dpc::DpcScreener;
+    use crate::solver::{fista, SolveOptions};
+
+    fn problem() -> Dataset {
+        synthetic1(&SynthOptions { t: 3, n: 11, d: 64, seed: 41, ..Default::default() }).0
+    }
+
+    fn sharded(ds: &Dataset, tag: &str) -> (ShardedDataset, std::path::PathBuf) {
+        let p = std::env::temp_dir()
+            .join(format!("mtfl_scrshard_{}_{tag}.mtd3", std::process::id()));
+        // narrow blocks so the streamed sweeps genuinely cross boundaries
+        save_sharded(ds, &p, 11 * 3 * 4 * 5).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        assert!(sh.n_blocks() > 3, "want multiple blocks, got {}", sh.n_blocks());
+        (sh, p)
+    }
+
+    #[test]
+    fn lambda_max_reference_matches_in_ram() {
+        let ds = problem();
+        let (sh, p) = sharded(&ds, "lmaxref");
+        let (dref_ram, lmax_ram) = DualRef::at_lambda_max(&ds);
+        let (dref_sh, lmax_sh) = dual_ref_at_lambda_max(&sh).unwrap();
+        assert_eq!(lmax_sh.to_bits(), lmax_ram.to_bits());
+        assert_eq!(dref_sh.lam0.to_bits(), dref_ram.lam0.to_bits());
+        assert_eq!(dref_sh.theta0, dref_ram.theta0);
+        assert_eq!(dref_sh.normal, dref_ram.normal);
+        assert_eq!(dref_sh.eps, 0.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn streamed_scores_and_keep_sets_match_dense_screener() {
+        let ds = problem();
+        let (sh, p) = sharded(&ds, "scores");
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let y = sh.y64();
+        let in_ram = DpcScreener::new(&ds);
+        let streamed = ShardScreener::new(&sh).unwrap();
+        for ratio in [0.9, 0.6, 0.35] {
+            let lam = ratio * lmax;
+            let a = in_ram.screen(&ds, &dref, lam);
+            let b = streamed.screen(&sh, &y, &dref, lam).unwrap();
+            assert_eq!(a.delta.to_bits(), b.delta.to_bits(), "ratio {ratio}");
+            for l in 0..ds.d {
+                assert_eq!(
+                    a.scores[l].to_bits(),
+                    b.scores[l].to_bits(),
+                    "score mismatch at feature {l}, ratio {ratio}"
+                );
+            }
+            assert_eq!(a.rejected, b.rejected, "keep-set mismatch at ratio {ratio}");
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn streamed_gap_matches_duality_gap_on_solution() {
+        let ds = problem();
+        let (sh, p) = sharded(&ds, "gap");
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        let lam = 0.4 * lmax;
+        let sol = fista(&ds, lam, None, &SolveOptions::default());
+        let (obj_ram, gap_ram, theta_ram) = ops::duality_gap(&ds, &sol.w, lam);
+        // the streamed form takes the residual + l21 the solver already has
+        let r = ops::residual(&ds, &sol.w);
+        let l21 = ops::l21_norm(&sol.w, ds.t());
+        let y = sh.y64();
+        let sg = streamed_gap(&sh, &y, lam, &r, l21).unwrap();
+        assert_eq!(sg.obj.to_bits(), obj_ram.to_bits());
+        assert_eq!(sg.gap.to_bits(), gap_ram.to_bits());
+        assert_eq!(sg.theta, theta_ram);
+        // and the sequential reference built from it matches from_solution
+        let dref_ram = DualRef::from_solution(&ds, lam, &sol.w);
+        let dref_sh = dual_ref_from_streamed(&y, lam, &sg);
+        assert_eq!(dref_sh.theta0, dref_ram.theta0);
+        assert_eq!(dref_sh.normal, dref_ram.normal);
+        assert_eq!(dref_sh.eps.to_bits(), dref_ram.eps.to_bits());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -124,9 +124,13 @@ pub struct SolveResult {
     /// row-major (d x T) — always full problem size, with zeros on any
     /// rows dynamic screening removed mid-solve
     pub w: Vec<f64>,
+    /// primal objective at `w`
     pub obj: f64,
+    /// duality gap at `w` (the stopping certificate)
     pub gap: f64,
+    /// iterations run (FISTA steps / BCD sweeps)
     pub iters: usize,
+    /// whether the gap test passed before `max_iters`
     pub converged: bool,
     /// estimated Lipschitz constant (FISTA only; 0 for BCD)
     pub lipschitz: f64,

@@ -8,7 +8,9 @@ use crate::util::Pcg64;
 /// Configuration for a property run.
 #[derive(Clone, Debug)]
 pub struct PropConfig {
+    /// randomized cases per property (`MTFL_PROP_CASES` override)
     pub cases: usize,
+    /// base seed; case i replays from seed + i (`MTFL_PROP_SEED` override)
     pub seed: u64,
 }
 
@@ -59,14 +61,17 @@ where
 pub mod gen {
     use crate::util::Pcg64;
 
+    /// Uniform usize in `lo..=hi`.
     pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
         lo + rng.below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform f64 in `lo..hi`.
     pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
         rng.uniform_in(lo, hi)
     }
 
+    /// A vector of n scaled standard normals.
     pub fn vec_normal(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f64> {
         (0..n).map(|_| rng.normal() * scale).collect()
     }

@@ -4,13 +4,19 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Log severity, most to least severe.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 #[repr(u8)]
 pub enum Level {
+    /// unrecoverable problems
     Error = 0,
+    /// suspicious-but-continuing conditions
     Warn = 1,
+    /// progress messages (the default level)
     Info = 2,
+    /// verbose diagnostics
     Debug = 3,
+    /// per-iteration firehose
     Trace = 4,
 }
 
@@ -28,16 +34,19 @@ fn init_level() -> u8 {
     lvl
 }
 
+/// Would a message at `level` be emitted under the current threshold?
 pub fn enabled(level: Level) -> bool {
     let cur = LEVEL.load(Ordering::Relaxed);
     let cur = if cur == 255 { init_level() } else { cur };
     (level as u8) <= cur
 }
 
+/// Override the threshold programmatically (tests; `MTFL_LOG` otherwise).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Emit a message to stderr if `level` is enabled (the macros' backend).
 pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if enabled(level) {
         eprintln!("[{}] {}", tag(level), args);
@@ -54,18 +63,22 @@ fn tag(level: Level) -> &'static str {
     }
 }
 
+/// Log at [`Level::Info`] with `format!` syntax.
 #[macro_export]
 macro_rules! info {
     ($($t:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*))
     };
 }
+/// Log at [`Level::Warn`] with `format!` syntax (named `warn_` to avoid
+/// shadowing the built-in `warn` attribute in call sites).
 #[macro_export]
 macro_rules! warn_ {
     ($($t:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*))
     };
 }
+/// Log at [`Level::Debug`] with `format!` syntax.
 #[macro_export]
 macro_rules! debug {
     ($($t:tt)*) => {

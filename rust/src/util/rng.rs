@@ -19,10 +19,13 @@ pub struct Pcg64 {
 const PCG_MUL: u128 = 0xda942042e4dd58b5;
 
 impl Pcg64 {
+    /// Seeded generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xcafe_f00d_d15e_a5e5)
     }
 
+    /// Seeded generator on an explicit stream (independent sequences
+    /// share a seed but differ by stream).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let inc = ((stream as u128) << 1) | 1;
         let mut rng = Pcg64 { state: 0, inc, spare_normal: None };
@@ -39,6 +42,7 @@ impl Pcg64 {
         Pcg64::with_stream(seed, stream)
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         // DXSM output permutation on the *pre-advance* state
@@ -99,6 +103,7 @@ impl Pcg64 {
         }
     }
 
+    /// Fill a buffer with N(mean, std²) samples, cast to f32.
     pub fn fill_normal_f32(&mut self, out: &mut [f32], mean: f64, std: f64) {
         for v in out.iter_mut() {
             *v = (mean + std * self.normal()) as f32;

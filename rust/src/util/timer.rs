@@ -17,16 +17,19 @@ impl Default for Stopwatch {
 }
 
 impl Stopwatch {
+    /// A stopped stopwatch at zero.
     pub fn new() -> Self {
         Stopwatch { accumulated: Duration::ZERO, started: None }
     }
 
+    /// Start (or resume) timing; a no-op if already running.
     pub fn start(&mut self) {
         if self.started.is_none() {
             self.started = Some(Instant::now());
         }
     }
 
+    /// Stop and accumulate the running interval; a no-op if stopped.
     pub fn stop(&mut self) {
         if let Some(t0) = self.started.take() {
             self.accumulated += t0.elapsed();
@@ -41,15 +44,18 @@ impl Stopwatch {
         r
     }
 
+    /// Total accumulated time, including a still-running interval.
     pub fn elapsed(&self) -> Duration {
         self.accumulated
             + self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO)
     }
 
+    /// [`Stopwatch::elapsed`] in seconds.
     pub fn secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
 
+    /// Zero the accumulator and stop.
     pub fn reset(&mut self) {
         self.accumulated = Duration::ZERO;
         self.started = None;
