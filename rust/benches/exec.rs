@@ -1,0 +1,178 @@
+//! Executor bench (DESIGN.md §11): (a) the spawn tax — the same chunked
+//! sweep dispatched 1 000 times through a spawn-per-call
+//! `std::thread::scope` (the pre-executor implementation, kept here as
+//! the baseline) vs the persistent pool; (b) the shard prefetch pipeline
+//! — one screen-before-load λ-path with prefetch off vs on, with the
+//! overlap ledger (hits, stall time). Results land in `BENCH_exec.json`
+//! at the repo root.
+//!
+//!     cargo bench --bench exec
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{
+    run_path_sharded, PathOptions, ScreenerKind, ShardRunResult,
+};
+use mtfl_dpc::data::io::save_sharded;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::ShardedDataset;
+use mtfl_dpc::solver::SolveOptions;
+use mtfl_dpc::util::{executor, num_threads, parallel_chunks};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// The pre-executor `parallel_chunks`: fresh OS threads per call via
+/// `std::thread::scope`. Kept verbatim as the spawn-tax baseline.
+fn spawn_per_call_chunks<R, F>(len: usize, max_workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize, usize) -> R + Sync,
+{
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = max_workers.min(num_threads()).min(len).max(1);
+    if workers == 1 {
+        return vec![f(0, 0, len)];
+    }
+    let chunk = len.div_ceil(workers);
+    let mut out: Vec<Option<R>> = (0..workers).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (i, slot) in out.iter_mut().enumerate() {
+            let start = i * chunk;
+            let end = ((i + 1) * chunk).min(len);
+            let fref = &f;
+            handles.push(s.spawn(move || {
+                if start < end {
+                    *slot = Some(fref(i, start, end));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    out.into_iter().flatten().collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let w = num_threads();
+    executor::ensure_init();
+    println!("== executor bench (num_threads = {w}) ==\n");
+
+    // -- (a) spawn tax: 1k dispatches of one chunked sum-of-squares sweep --
+    let data: Vec<f64> = (0..4096).map(|i| (i as f64).sin()).collect();
+    let reps = 1000usize;
+    let run_spawn = || {
+        spawn_per_call_chunks(data.len(), usize::MAX, |_, s, e| {
+            data[s..e].iter().map(|v| v * v).sum::<f64>()
+        })
+        .into_iter()
+        .sum::<f64>()
+    };
+    let run_pool = || {
+        parallel_chunks(data.len(), usize::MAX, |_, s, e| {
+            data[s..e].iter().map(|v| v * v).sum::<f64>()
+        })
+        .into_iter()
+        .sum::<f64>()
+    };
+    // warm both paths, and check they agree bit-for-bit
+    let a = run_spawn();
+    let b = run_pool();
+    assert_eq!(a.to_bits(), b.to_bits(), "dispatch paths disagree");
+
+    let t0 = Instant::now();
+    let mut acc = 0.0f64;
+    for _ in 0..reps {
+        acc += run_spawn();
+    }
+    let spawn_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        acc -= run_pool();
+    }
+    let pool_secs = t0.elapsed().as_secs_f64();
+    // the two dispatch paths return bitwise-equal sums (checked above);
+    // the accumulator only guards against the optimizer deleting the loop
+    assert!(acc.abs() < 1e-3 * a.abs().max(1.0), "sweep accumulators diverged: {acc}");
+
+    let spawn_us = 1e6 * spawn_secs / reps as f64;
+    let pool_us = 1e6 * pool_secs / reps as f64;
+    println!("spawn-per-call  {spawn_secs:>8.3}s total  {spawn_us:>9.1} us/dispatch");
+    println!(
+        "executor        {pool_secs:>8.3}s total  {pool_us:>9.1} us/dispatch  \
+         ({:.1}x)",
+        spawn_us / pool_us.max(1e-9)
+    );
+
+    // -- (b) shard path: prefetch off vs on --
+    let (t, n, d) = (4usize, 16usize, 2000usize);
+    let (ds, _) = synthetic1(&SynthOptions {
+        t,
+        n,
+        d,
+        support_frac: 0.05,
+        noise: 0.05,
+        seed: 42,
+    });
+    let opts = PathOptions {
+        ratios: lambda_grid(12, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-6, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    let shard_path = std::env::temp_dir()
+        .join(format!("mtfl_bench_exec_{}.mtd3", std::process::id()));
+    save_sharded(&ds, &shard_path, 64 << 10)?;
+
+    let run_shard = |prefetch: bool| -> anyhow::Result<ShardRunResult> {
+        // fresh open: cold block cache (the OS page cache is warmed for
+        // both sides by the warmup run below)
+        let sh = ShardedDataset::open(&shard_path)?;
+        sh.set_prefetch(prefetch);
+        run_path_sharded(&sh, &opts)
+    };
+    run_shard(false)?; // page-cache warmup, discarded
+    let off = run_shard(false)?;
+    let on = run_shard(true)?;
+    std::fs::remove_file(&shard_path).ok();
+
+    println!("\nshard path (T={t}, N={n}, d={d}, 12-pt grid):");
+    println!(
+        "prefetch off  {:>7.3}s   stalled {:>7.3}s",
+        off.path.total_secs, off.prefetch.stall_secs
+    );
+    println!(
+        "prefetch on   {:>7.3}s   stalled {:>7.3}s   {}/{} prefetches warm",
+        on.path.total_secs, on.prefetch.stall_secs, on.prefetch.hits, on.prefetch.issued
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"executor\",\n  \"generated_by\": \
+         \"cargo bench --bench exec\",\n  \"provisional\": false,\n  \
+         \"num_threads\": {w},\n  \"spawn_tax\": {{\"reps\": {reps}, \
+         \"sweep_len\": {}, \"spawn_per_call_us\": {spawn_us:.2}, \
+         \"executor_us\": {pool_us:.2}, \"speedup\": {:.2}}},\n  \
+         \"shard_prefetch\": {{\"shape\": {{\"t\": {t}, \"n\": {n}, \"d\": {d}}},\n    \
+         \"off\": {{\"total_secs\": {:.3}, \"stall_secs\": {:.4}}},\n    \
+         \"on\": {{\"total_secs\": {:.3}, \"stall_secs\": {:.4}, \
+         \"prefetch_hits\": {}, \"prefetch_issued\": {}}}}}\n}}\n",
+        data.len(),
+        spawn_us / pool_us.max(1e-9),
+        off.path.total_secs,
+        off.prefetch.stall_secs,
+        on.path.total_secs,
+        on.prefetch.stall_secs,
+        on.prefetch.hits,
+        on.prefetch.issued,
+    );
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_exec.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_exec.json"));
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {}", out_path.display());
+    Ok(())
+}

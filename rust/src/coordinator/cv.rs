@@ -126,6 +126,13 @@ pub fn cross_validate(
 ) -> Result<CvResult> {
     let t0 = std::time::Instant::now();
     let splits = kfold_splits(ds, k, seed)?;
+    // fold fan-out on the persistent executor's nested-safe scope: the
+    // solver/sweep parallelism underneath runs inline on whichever worker
+    // owns the fold, so cv→fista→ops composes to at most num_threads()
+    // execution streams — min(k, W) while folds remain, since nested
+    // work inlines rather than steals (DESIGN.md §11 documents the
+    // trade-off) — where the old spawn-per-layer stack multiplied
+    // workers into oversubscription instead
     let folds: Vec<Result<(Vec<f64>, usize)>> = scoped_pool(splits, usize::MAX, |(train, val)| {
         let mse = Vec::with_capacity(opts.ratios.len());
         let mut scorer = HeldOutScorer { val: &val, mse };

@@ -432,6 +432,10 @@ pub struct ShardRunResult {
     pub bytes_read: u64,
     /// block loads from disk across the run (cache misses only)
     pub blocks_loaded: u64,
+    /// prefetch-pipeline overlap across the run (DESIGN.md §11): issued
+    /// next-block prefetches, those consumed while still resident (decode
+    /// fully hidden behind compute), and wall time stalled on cold loads
+    pub prefetch: crate::data::PrefetchStats,
 }
 
 /// Run the λ-path out-of-core with a no-op observer (see
@@ -450,6 +454,10 @@ pub fn run_path_sharded(sh: &ShardedDataset, opts: &PathOptions) -> Result<Shard
 /// `verify_safety` need the matrix resident and are rejected with an
 /// error. Keep-sets and solutions match the in-RAM dense/CSC path
 /// bit-for-bit / to solver tolerance (`rust/tests/shard_backend.rs`).
+/// Every streamed sweep runs the shard's prefetch pipeline — block b+1
+/// decodes while block b is scored (DESIGN.md §11) — and the run's
+/// overlap ledger (prefetch hits, stall time) lands in
+/// [`ShardRunResult::prefetch`].
 pub fn run_path_sharded_with(
     sh: &ShardedDataset,
     opts: &PathOptions,
@@ -473,6 +481,7 @@ pub fn run_path_sharded_with(
     let d = sh.d();
     let bytes0 = sh.bytes_read();
     let blocks0 = sh.blocks_loaded();
+    let pf0 = sh.prefetch_stats();
     let mut total = Stopwatch::new();
     total.start();
 
@@ -612,6 +621,14 @@ pub fn run_path_sharded_with(
         payload_bytes: sh.payload_bytes(),
         bytes_read: sh.bytes_read() - bytes0,
         blocks_loaded: sh.blocks_loaded() - blocks0,
+        prefetch: {
+            let pf = sh.prefetch_stats();
+            crate::data::PrefetchStats {
+                issued: pf.issued - pf0.issued,
+                hits: pf.hits - pf0.hits,
+                stall_secs: (pf.stall_secs - pf0.stall_secs).max(0.0),
+            }
+        },
     })
 }
 

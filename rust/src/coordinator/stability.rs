@@ -86,6 +86,9 @@ pub fn stability_selection(
         .collect();
 
     let t_count = ds.t();
+    // subsample fan-out on the executor's nested-safe scope (DESIGN.md
+    // §11): inner path/solver parallelism inlines on the owning worker,
+    // never multiplying threads
     let masks: Vec<Result<Vec<bool>>> = scoped_pool(subs, usize::MAX, |sub| {
         let mut ever = EverActiveMask { mask: vec![false; sub.d], t_count, tol: opts.active_tol };
         run_path_with(&sub, opts, &EngineKind::Exact, &mut ever)

@@ -12,7 +12,7 @@ pub mod synthetic;
 pub mod textsim;
 pub mod transform;
 
-pub use shard::ShardedDataset;
+pub use shard::{PrefetchStats, ShardedDataset};
 
 use crate::linalg::{ColRef, CscMatrix};
 

@@ -16,20 +16,26 @@
 //! `Arc` pin for exactly the duration of the sweep) instead of single
 //! columns. The block-streaming sweeps in [`crate::ops`] and the
 //! screen-before-load pipeline in `screening::shard` are built on that
-//! contract, and [`ShardedDataset::restrict`] materializes only the
-//! surviving columns into a normal in-RAM dataset for the solver — peak
-//! RSS scales with the active set plus the cache budget, not with `d`.
+//! contract — via [`ShardedDataset::for_each_block_pipelined`], which
+//! overlaps the decode of block b+1 with the sweep of block b on the
+//! persistent executor (DESIGN.md §11) while consuming blocks strictly
+//! in order, so results stay bit-identical to a serial stream — and
+//! [`ShardedDataset::restrict`] materializes only the surviving columns
+//! into a normal in-RAM dataset for the solver: peak RSS scales with the
+//! active set plus the cache budget, not with `d`.
 
 use super::io::{self, Fnv64};
 use super::{Dataset, MatrixStore, Task};
 use crate::linalg::{BlockCache, ColRef, CscMatrix};
+use crate::util::executor;
 use anyhow::{bail, Context, Result};
 use std::fs::File;
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::ops::Range;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Default block-cache budget (bytes) for [`ShardedDataset::open`].
 pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
@@ -54,6 +60,26 @@ pub struct ShardedDataset {
     cache: BlockCache<Dataset>,
     bytes_read: AtomicU64,
     blocks_loaded: AtomicU64,
+    prefetch: AtomicBool,
+    prefetch_issued: AtomicU64,
+    prefetch_hits: AtomicU64,
+    stall_nanos: AtomicU64,
+}
+
+/// Overlap accounting of the shard's prefetch pipeline (DESIGN.md §11),
+/// accumulated across every pipelined streaming sweep since open (or the
+/// last [`ShardedDataset::reset_prefetch_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefetchStats {
+    /// next-block prefetches issued alongside a block sweep
+    pub issued: u64,
+    /// prefetched blocks found resident when the sweep came to consume
+    /// them — each one is a block decode fully hidden behind compute
+    pub hits: u64,
+    /// wall time the streaming loops spent blocked on a cold block load
+    /// (the initial block of each sweep, plus any prefetch that lost the
+    /// race or was evicted before consumption)
+    pub stall_secs: f64,
 }
 
 /// Byte cursor over one block's payload with truncation checks.
@@ -187,6 +213,10 @@ impl ShardedDataset {
             cache: BlockCache::new(cache_bytes),
             bytes_read: AtomicU64::new(0),
             blocks_loaded: AtomicU64::new(0),
+            prefetch: AtomicBool::new(true),
+            prefetch_issued: AtomicU64::new(0),
+            prefetch_hits: AtomicU64::new(0),
+            stall_nanos: AtomicU64::new(0),
         })
     }
 
@@ -280,6 +310,118 @@ impl ShardedDataset {
     /// Bytes currently resident in the block cache.
     pub fn cache_resident_bytes(&self) -> usize {
         self.cache.resident_bytes()
+    }
+
+    /// Enable or disable the next-block prefetch pipeline (on by
+    /// default). Results are bit-identical either way — prefetch only
+    /// warms the cache — so this is a benchmarking/ablation knob
+    /// (`cargo bench --bench exec` measures the overlap it buys).
+    pub fn set_prefetch(&self, on: bool) {
+        self.prefetch.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the prefetch pipeline is enabled (see
+    /// [`ShardedDataset::set_prefetch`]).
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch.load(Ordering::Relaxed)
+    }
+
+    /// Overlap accounting accumulated by the pipelined streaming sweeps.
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        PrefetchStats {
+            issued: self.prefetch_issued.load(Ordering::Relaxed),
+            hits: self.prefetch_hits.load(Ordering::Relaxed),
+            stall_secs: self.stall_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+
+    /// Reset the prefetch/stall counters (per-phase accounting in benches
+    /// and [`crate::coordinator::path::ShardRunResult`]).
+    pub fn reset_prefetch_stats(&self) {
+        self.prefetch_issued.store(0, Ordering::Relaxed);
+        self.prefetch_hits.store(0, Ordering::Relaxed);
+        self.stall_nanos.store(0, Ordering::Relaxed);
+    }
+
+    /// Fetch block `b` for in-order consumption, attributing the fetch to
+    /// the pipeline's overlap ledger: a resident block after a prefetch
+    /// counts as a hit, a cold load counts its wall time as stall.
+    fn consume_block(&self, b: usize, prefetched: bool) -> Result<Arc<Dataset>> {
+        if self.cache.contains(b) {
+            if prefetched {
+                self.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return self.block(b);
+        }
+        let t0 = Instant::now();
+        let blk = self.block(b);
+        self.stall_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        blk
+    }
+
+    /// Stream every block through `f` **in block order** — the iteration
+    /// the block-streaming sweeps ([`crate::ops::stream_gscore`] and
+    /// friends) are built on — while a reader lane decodes block b+1
+    /// (seek + read + checksum + parse into the cache) on one pool worker
+    /// as `f` sweeps block b (DESIGN.md §11). Consumption order, and
+    /// therefore per-column accumulation order, is exactly the serial
+    /// loop's: results are bit-identical with prefetch on, off, or
+    /// unavailable (worker thread, `MTFL_THREADS=1`). While the reader
+    /// lane runs, `f`'s own parallel sweeps are capped one stream short
+    /// so the composition still totals `num_threads()`.
+    ///
+    /// Errors: a failing sweep surfaces first (as in the serial loop); a
+    /// failing read (I/O, checksum) surfaces when its block is reached.
+    pub fn for_each_block_pipelined<F>(&self, mut f: F) -> Result<()>
+    where
+        F: FnMut(usize, &Dataset) -> Result<()> + Send,
+    {
+        let nb = self.n_blocks();
+        if nb == 0 {
+            return Ok(());
+        }
+        let mut cur = self.consume_block(0, false)?;
+        let mut prefetched_next = false;
+        for b in 0..nb {
+            let next = b + 1;
+            // only pipeline when the next block genuinely needs decoding:
+            // on a warm cache the sweep keeps its full width and the
+            // issued/hits ledger measures real decode-behind-compute
+            // overlap, not ordinary residency
+            let pipelined = next < nb
+                && self.prefetch_enabled()
+                && executor::can_offload()
+                && !self.cache.contains(next);
+            if pipelined {
+                self.prefetch_issued.fetch_add(1, Ordering::Relaxed);
+                // leave one execution stream for the reader lane, inside
+                // whatever width the caller already capped us to
+                let sweep_cap = executor::current_worker_cap()
+                    .min(crate::util::num_threads())
+                    .saturating_sub(1)
+                    .max(1);
+                let fref = &mut f;
+                let cur_ref: &Dataset = &cur;
+                let (sweep, load): (Result<()>, Result<()>) = executor::join(
+                    move || {
+                        executor::with_worker_cap(sweep_cap, || fref(b, cur_ref))
+                    },
+                    || self.block(next).map(drop),
+                );
+                sweep?;
+                load?;
+                prefetched_next = true;
+            } else {
+                let cur_ref: &Dataset = &cur;
+                f(b, cur_ref)?;
+                prefetched_next = false;
+            }
+            if next < nb {
+                cur = self.consume_block(next, prefetched_next)?;
+            }
+        }
+        Ok(())
     }
 
     /// Fetch block `b` as an in-RAM [`Dataset`] over its column range
@@ -610,6 +752,81 @@ mod tests {
             }
             assert_eq!(a.tasks[t].y, b.tasks[t].y);
         }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pipelined_stream_visits_blocks_in_order_with_identical_contents() {
+        let ds = small();
+        let p = tmp("pipeline.mtd3");
+        save_sharded(&ds, &p, 150).unwrap(); // several narrow blocks
+        let sh = ShardedDataset::open(&p).unwrap();
+        assert!(sh.n_blocks() > 3);
+        for prefetch in [true, false] {
+            sh.set_prefetch(prefetch);
+            let mut seen: Vec<usize> = Vec::new();
+            sh.for_each_block_pipelined(|b, blk| {
+                let range = sh.block_range(b);
+                assert_eq!(blk.d, range.len());
+                for t in 0..ds.t() {
+                    for (local, l) in range.clone().enumerate() {
+                        assert_eq!(blk.col(t, local).to_vec(), ds.col(t, l).to_vec());
+                    }
+                }
+                seen.push(b);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(
+                seen,
+                (0..sh.n_blocks()).collect::<Vec<_>>(),
+                "prefetch={prefetch}: consumption escaped block order"
+            );
+        }
+        let stats = sh.prefetch_stats();
+        assert!(stats.hits <= stats.issued, "hits {} > issued {}", stats.hits, stats.issued);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pipelined_stream_propagates_sweep_errors() {
+        let ds = small();
+        let p = tmp("pipeerr.mtd3");
+        save_sharded(&ds, &p, 150).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        let mut calls = 0usize;
+        let err = sh
+            .for_each_block_pipelined(|b, _| {
+                calls += 1;
+                if b == 1 {
+                    anyhow::bail!("sweep failed on block {b}")
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("block 1"), "got: {err}");
+        assert_eq!(calls, 2, "must stop at the failing block");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn prefetch_stats_reset_and_accumulate() {
+        let ds = small();
+        let p = tmp("pfstats.mtd3");
+        save_sharded(&ds, &p, 150).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        sh.for_each_block_pipelined(|_, _| Ok(())).unwrap();
+        // the initial block of the sweep is always a cold (stalled) load,
+        // so the stall ledger must have moved
+        assert!(
+            sh.prefetch_stats().stall_secs > 0.0,
+            "cold initial block load recorded no stall time"
+        );
+        sh.reset_prefetch_stats();
+        assert_eq!(
+            sh.prefetch_stats(),
+            PrefetchStats { issued: 0, hits: 0, stall_secs: 0.0 }
+        );
         std::fs::remove_file(&p).ok();
     }
 

@@ -12,8 +12,10 @@
 //!
 //! When every block over budget is pinned the cache runs over budget
 //! rather than failing: correctness first, the budget is a target. The
-//! block-serial streaming sweeps in `ops` keep at most one block pinned at
-//! a time, so in the intended access pattern the overshoot is one block.
+//! streaming sweeps in `ops` keep at most one block *pinned* at a time;
+//! with the prefetch pipeline (DESIGN.md §11) the working set is that
+//! pinned block plus the warm (unpinned) next block, so the intended-use
+//! overshoot is at most two blocks.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -105,6 +107,14 @@ impl<B> BlockCache<B> {
                 None => break, // everything left is pinned
             }
         }
+    }
+
+    /// Whether block `id` is currently resident (a subsequent
+    /// [`BlockCache::get_or_load`] would hit). Does not bump the LRU
+    /// stamp — the prefetch pipeline uses this to count hits without
+    /// perturbing eviction order.
+    pub fn contains(&self, id: usize) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&id)
     }
 
     /// Bytes currently resident (cached blocks, pinned or not).
@@ -200,6 +210,20 @@ mod tests {
         cache.clear();
         assert_eq!(cache.resident_blocks(), 1);
         assert_eq!(*hold, 0);
+    }
+
+    #[test]
+    fn contains_probes_without_reload_or_lru_bump() {
+        let cache: BlockCache<u64> = BlockCache::new(250);
+        cache.get_or_load(0, load_ok(0, 100)).unwrap();
+        cache.get_or_load(1, load_ok(1, 100)).unwrap();
+        assert!(cache.contains(0) && cache.contains(1) && !cache.contains(2));
+        // probing 0 must NOT make it recently-used: inserting 2 (over
+        // budget) still evicts 0, the true LRU
+        assert!(cache.contains(0));
+        cache.get_or_load(2, load_ok(2, 100)).unwrap();
+        assert!(!cache.contains(0), "contains() bumped the LRU stamp");
+        assert!(cache.contains(1) && cache.contains(2));
     }
 
     #[test]

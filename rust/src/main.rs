@@ -261,6 +261,11 @@ fn main() -> Result<()> {
                     mib(res.bytes_read),
                     res.blocks_loaded
                 );
+                println!(
+                    "pipeline: {}/{} prefetches consumed warm, {:.3}s stalled on \
+                     cold block loads",
+                    res.prefetch.hits, res.prefetch.issued, res.prefetch.stall_secs
+                );
                 print_path_summary(
                     &res.path,
                     &format!("path {} (sharded)", res.path.dataset),

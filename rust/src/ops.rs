@@ -6,13 +6,17 @@
 //!
 //! The two sweeps that dominate runtime — `task_corr` (X_tᵀ v_t for all
 //! tasks/features) and `forward` (X_t w_t) — are parallelized over
-//! contiguous feature chunks / tasks via [`crate::util::parallel_chunks`].
-//! Both address columns through [`crate::linalg::ColRef`], so they are
-//! backend-agnostic: on CSC storage the inner loops touch only stored
-//! nonzeros (DESIGN.md §6).
+//! contiguous feature chunks / tasks via [`crate::util::parallel_chunks`]
+//! on the persistent executor (DESIGN.md §11): no sweep ever spawns a
+//! thread, and sweeps issued from inside another parallel region run
+//! inline on their worker. Both address columns through
+//! [`crate::linalg::ColRef`], so they are backend-agnostic: on CSC
+//! storage the inner loops touch only stored nonzeros (DESIGN.md §6).
+//! Sweeps below [`crate::util::serial_below`]'s cutoff skip the pool
+//! entirely.
 
 use crate::data::{Dataset, ShardedDataset};
-use crate::util::{parallel_chunks, scoped_pool};
+use crate::util::{parallel_chunks, scoped_pool, serial_below};
 
 /// One f64 vector per task (sample-space block vector).
 pub type Stacked = Vec<Vec<f64>>;
@@ -65,9 +69,9 @@ pub fn task_corr(ds: &Dataset, v: &Stacked) -> Vec<f64> {
     debug_assert_eq!(v.len(), t_count);
     let d = ds.d;
     let mut out = vec![0.0f64; d * t_count];
-    // spawning threads costs ~10us each; stay serial below ~1 MFLOP of
-    // *stored* entries (a 1%-dense CSC sweep is ~100× cheaper than d·N)
-    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
+    // shared policy (util::threads): even a pooled dispatch has overhead,
+    // so sweeps below the stored-entry cutoff stay serial
+    let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     // parallel over feature chunks: each worker fills a disjoint slice
     let chunks = parallel_chunks(d, workers, |_, start, end| {
         let mut part = vec![0.0f64; (end - start) * t_count];
@@ -102,7 +106,7 @@ pub fn forward(ds: &Dataset, w: &[f64]) -> Stacked {
     let t_count = ds.t();
     debug_assert_eq!(w.len(), ds.d * t_count);
     let tasks: Vec<usize> = (0..t_count).collect();
-    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
+    let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     scoped_pool(tasks, workers, |ti| {
         let task = &ds.tasks[ti];
         let mut z = vec![0.0f64; task.n];
@@ -222,21 +226,22 @@ pub fn normal_at_lmax(ds: &Dataset, lstar: usize, lmax: f64) -> Stacked {
 // ---------------------------------------------------------------------------
 
 /// g_l(v) for every feature of a sharded dataset, one column block at a
-/// time. Blocks stream serially — the disk is the bottleneck and the
-/// resident set stays at one pinned block plus the cache — while inside a
-/// block the sweep reuses [`gscore`]'s `parallel_chunks` workers over the
-/// block's columns. Per-column results are bit-identical to [`gscore`] on
-/// the materialized dataset (each column is the same dot in the same
-/// association order).
+/// time. Blocks are *consumed* strictly in order — per-column results are
+/// bit-identical to [`gscore`] on the materialized dataset (each column
+/// is the same dot in the same association order) — but the shard's
+/// prefetch pipeline decodes block b+1 (read + checksum + parse) on a
+/// pool worker while block b is swept, so the disk and the sweep overlap
+/// ([`ShardedDataset::for_each_block_pipelined`], DESIGN.md §11). Inside
+/// a block the sweep reuses [`gscore`]'s `parallel_chunks` workers over
+/// the block's columns.
 pub fn stream_gscore(sh: &ShardedDataset, v: &Stacked) -> anyhow::Result<Vec<f64>> {
     debug_assert_eq!(v.len(), sh.t());
     let mut out = vec![0.0f64; sh.d()];
-    for b in 0..sh.n_blocks() {
-        let blk = sh.block(b)?;
-        let part = gscore(&blk, v);
-        let range = sh.block_range(b);
-        out[range].copy_from_slice(&part);
-    }
+    sh.for_each_block_pipelined(|b, blk| {
+        let part = gscore(blk, v);
+        out[sh.block_range(b)].copy_from_slice(&part);
+        Ok(())
+    })?;
     Ok(out)
 }
 
@@ -247,12 +252,12 @@ pub fn stream_gscore(sh: &ShardedDataset, v: &Stacked) -> anyhow::Result<Vec<f64
 pub fn stream_col_sqnorms(sh: &ShardedDataset) -> anyhow::Result<Vec<f64>> {
     let t_count = sh.t();
     let mut out = vec![0.0f64; sh.d() * t_count];
-    for b in 0..sh.n_blocks() {
-        let blk = sh.block(b)?;
+    sh.for_each_block_pipelined(|b, blk| {
         let part = blk.col_sqnorms();
         let range = sh.block_range(b);
         out[range.start * t_count..range.end * t_count].copy_from_slice(&part);
-    }
+        Ok(())
+    })?;
     Ok(out)
 }
 

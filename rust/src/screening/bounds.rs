@@ -12,7 +12,7 @@
 use super::{dpc::DualRef, ScreenOutcome};
 use crate::data::Dataset;
 use crate::ops::Stacked;
-use crate::util::parallel_chunks;
+use crate::util::{parallel_chunks, serial_below};
 
 fn moments(
     ds: &Dataset,
@@ -21,8 +21,9 @@ fn moments(
     f: impl Fn(&[f64], &[f64]) -> f64 + Sync,
 ) -> Vec<f64> {
     let t_count = ds.t();
-    // gate on stored sweep work, not d·N (CSC sweeps touch only nonzeros)
-    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
+    // shared serial-cutoff policy: stored sweep work, not d·N (CSC sweeps
+    // touch only nonzeros)
+    let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     let out = parallel_chunks(ds.d, workers, |_, start, end| {
         let mut part = vec![0.0f64; end - start];
         let mut a = vec![0.0f64; t_count];

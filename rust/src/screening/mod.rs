@@ -30,7 +30,7 @@ pub mod shard;
 
 use crate::data::Dataset;
 use crate::ops::Stacked;
-use crate::util::parallel_chunks;
+use crate::util::{parallel_chunks, serial_below};
 
 /// What a screener returns for one λ step.
 #[derive(Debug, Clone)]
@@ -61,13 +61,14 @@ impl ScreenOutcome {
 
 /// Theorem-7 scores s_l = max g_l over the ball (o, Δ) for all features —
 /// the sweep shared by the DPC and GAP-safe screeners. Parallel over
-/// feature chunks, gated on the dataset's *stored* sweep work so sparse
-/// CSC problems are not threaded as if they were dense. `b2` is the cached
+/// feature chunks on the persistent executor, gated by the shared
+/// [`serial_below`] policy on the dataset's *stored* sweep work so sparse
+/// CSC problems are not pooled as if they were dense. `b2` is the cached
 /// (d × T) row-major column-squared-norm table.
 pub fn ball_scores(ds: &Dataset, b2: &[f64], o: &Stacked, delta: f64) -> Vec<f64> {
     let t_count = ds.t();
     debug_assert_eq!(b2.len(), ds.d * t_count);
-    let workers = if ds.sweep_work() < 500_000 { 1 } else { usize::MAX };
+    let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     let out = parallel_chunks(ds.d, workers, |_, start, end| {
         let mut part = vec![0.0f64; end - start];
         let mut a = vec![0.0f64; t_count];

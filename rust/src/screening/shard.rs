@@ -37,18 +37,21 @@ impl ShardScreener {
     }
 
     /// Theorem-7 scores s_l over the ball (o, Δ) for every feature,
-    /// streamed block-by-block. Bit-identical per column to
-    /// [`super::dpc::DpcScreener::scores`] on the materialized dataset.
+    /// streamed block-by-block with the shard's prefetch pipeline (block
+    /// b+1 decodes while block b is scored — DESIGN.md §11). Bit-identical
+    /// per column to [`super::dpc::DpcScreener::scores`] on the
+    /// materialized dataset: consumption order is block order regardless
+    /// of prefetch.
     pub fn scores(&self, sh: &ShardedDataset, o: &Stacked, delta: f64) -> Result<Vec<f64>> {
         let t_count = sh.t();
         let mut out = vec![0.0f64; sh.d()];
-        for b in 0..sh.n_blocks() {
-            let blk = sh.block(b)?;
+        sh.for_each_block_pipelined(|b, blk| {
             let range = sh.block_range(b);
             let b2_slice = &self.b2[range.start * t_count..range.end * t_count];
-            let part = ball_scores(&blk, b2_slice, o, delta);
+            let part = ball_scores(blk, b2_slice, o, delta);
             out[range].copy_from_slice(&part);
-        }
+            Ok(())
+        })?;
         Ok(out)
     }
 

@@ -17,6 +17,12 @@
 //! §9): every K sweeps the live duality-gap ball certifies rows inactive;
 //! their (possibly nonzero) iterate mass is returned to the residual and
 //! the working set is compacted, so later sweeps skip them entirely.
+//!
+//! Execution model: the cyclic sweep itself is inherently serial (each
+//! row update feeds the next row's residual), so BCD's parallelism lives
+//! entirely in the `ops`/screening sweeps it calls — all routed through
+//! the persistent executor, and all inline when BCD runs inside a CV
+//! fold or stability subsample (DESIGN.md §11).
 
 use super::{DynamicSet, SolveOptions, SolveResult};
 use crate::data::Dataset;

@@ -22,9 +22,16 @@ use crate::screening::gap;
 use crate::util::Pcg64;
 
 /// L = max_t σ_max(X_t)² via per-task power iteration (f64 accumulation,
-/// backend-agnostic through [`crate::linalg::ColRef`]).
+/// backend-agnostic through [`crate::linalg::ColRef`]). The per-task
+/// fan-out runs on the persistent executor: called from inside a CV fold
+/// or another parallel region it inlines on its worker (nested-safe,
+/// DESIGN.md §11), and problems under the shared serial cutoff skip the
+/// pool — the power sweeps cost `iters · sweep_work` touches.
 pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
-    let per_task = crate::util::scoped_pool((0..ds.t()).collect::<Vec<_>>(), usize::MAX, |ti| {
+    // the gate weighs the whole power run (iters sweeps), not one sweep
+    let work = ds.sweep_work().saturating_mul(iters.max(1));
+    let workers = if crate::util::serial_below(work) { 1 } else { usize::MAX };
+    let per_task = crate::util::scoped_pool((0..ds.t()).collect::<Vec<_>>(), workers, |ti| {
         let task = &ds.tasks[ti];
         let n = task.n;
         let mut rng = Pcg64::with_stream(0x11b5, ti as u64);

@@ -1,0 +1,612 @@
+//! The persistent work-sharing executor every parallel sweep in the crate
+//! runs on (DESIGN.md §11).
+//!
+//! Before this module existed, each hot sweep paid a thread-spawn tax:
+//! `parallel_chunks` / `scoped_pool` built a fresh `std::thread::scope`
+//! per call, so a λ-path re-spawned workers at every grid point and every
+//! dynamic re-screen, and nested layers multiplied threads unchecked
+//! (CV folds × FISTA's per-task power iteration × column chunks could
+//! reach W³ live threads). Both problems are structural, so the fix is
+//! structural:
+//!
+//! * **One pool, process lifetime.** The first parallel region lazily
+//!   spawns `num_threads() − 1` workers that park on a condvar between
+//!   scopes. After that, no code path in the crate calls
+//!   `std::thread::spawn` again — [`spawn_count`] is the test hook that
+//!   pins this down.
+//! * **Scoped borrows, no `Arc`.** A scope enqueues lifetime-erased
+//!   runner handles and *blocks until every runner finishes*, so jobs may
+//!   borrow the caller's stack (data matrices, output buffers) exactly as
+//!   they could under `std::thread::scope`. The public call shapes
+//!   ([`parallel_chunks`], [`scoped_pool`]) are unchanged from the
+//!   spawn-per-call era.
+//! * **Nested-safe by construction.** A parallel call made *from a pool
+//!   worker* (or from the submitting thread while it is executing scope
+//!   jobs inline) runs serially inline instead of opening a new scope.
+//!   Composition therefore never exceeds W live workers: CV fans its
+//!   folds across the pool, and the solvers/sweeps underneath run inline
+//!   on whichever worker owns the fold. Inlining is free to do because
+//!   every consumer's accumulation order is per-column/per-item by
+//!   construction — results are bit-identical at any worker count, which
+//!   the determinism suite (`rust/tests/executor_parallel.rs`) pins.
+//!
+//! The submitting thread is not wasted while a scope runs: it executes
+//! one runner itself (temporarily marked as a worker), so a scope of
+//! width w uses the submitter plus `w − 1` pool workers — at most
+//! `num_threads()` execution streams, never more. (The flip side of
+//! inlining: an outer fan-out narrower than W bounds the whole
+//! composition at its own width — DESIGN.md §11 discusses the
+//! trade-off and the stealing upgrade path.)
+//!
+//! [`join`] is the two-lane primitive underneath the sharded backend's
+//! prefetch pipeline: it runs `a` on the calling thread while `b` (the
+//! block reader) executes on one pool worker, and is what "decode block
+//! b+1 while sweeping block b" compiles down to (DESIGN.md §11).
+
+use super::threads::num_threads;
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// pool
+// ---------------------------------------------------------------------------
+
+/// Total `std::thread::spawn` calls the executor has ever made. After the
+/// pool is up ([`ensure_init`]) this value never changes again — the
+/// zero-spawn acceptance test for the steady-state per-λ loop reads it
+/// before and after a full `run_path`.
+static SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+struct Pool {
+    /// pending runner handles; workers park on `available` when empty
+    queue: Mutex<VecDeque<RawRunner>>,
+    available: Condvar,
+    /// dedicated worker threads (`num_threads() − 1` at init)
+    workers: usize,
+    /// runners currently executing (pool workers + inline submitters)
+    active: AtomicUsize,
+    /// high-water mark of `active` since the last [`reset_peak_active`]
+    peak_active: AtomicUsize,
+}
+
+/// A lifetime-erased handle to one runner of a [`ScopeState`]. The scope
+/// that enqueued it blocks until `runners_left` hits zero, so the pointer
+/// outlives every dequeue-and-run — the same guarantee `std::thread::scope`
+/// gives, enforced by the completion wait instead of the borrow checker.
+struct RawRunner {
+    scope: *const ScopeState,
+}
+// SAFETY: the pointee is Sync (all fields are) and stays alive until every
+// runner has finished (the submitting thread blocks on `runners_left`).
+unsafe impl Send for RawRunner {}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let workers = num_threads().saturating_sub(1);
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            workers,
+            active: AtomicUsize::new(0),
+            peak_active: AtomicUsize::new(0),
+        }));
+        for i in 0..workers {
+            SPAWNS.fetch_add(1, Ordering::SeqCst);
+            std::thread::Builder::new()
+                .name(format!("mtfl-exec-{i}"))
+                .spawn(move || worker_main(p))
+                .expect("failed to spawn executor worker");
+        }
+        p
+    })
+}
+
+fn worker_main(pool: &'static Pool) {
+    IS_WORKER.with(|w| w.set(true));
+    loop {
+        let runner = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(r) = q.pop_front() {
+                    break r;
+                }
+                q = pool.available.wait(q).unwrap();
+            }
+        };
+        // SAFETY: see RawRunner — the owning scope is still blocked.
+        unsafe { (*runner.scope).run_runner(pool) };
+    }
+}
+
+thread_local! {
+    /// true on pool workers, and on a submitting thread while it executes
+    /// its own scope's jobs inline — both must not open nested scopes
+    static IS_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// per-thread cap on scope width (test/pipeline knob; `usize::MAX` =
+    /// uncapped). Nested caps only ever tighten — see [`with_worker_cap`].
+    static WORKER_CAP: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// True while the current thread is executing executor jobs (a pool
+/// worker, or a submitter running its inline share of a scope). Parallel
+/// entry points consult this to run nested calls inline.
+pub fn on_worker_thread() -> bool {
+    IS_WORKER.with(|w| w.get())
+}
+
+/// The current thread's scope-width cap (see [`with_worker_cap`]).
+pub fn current_worker_cap() -> usize {
+    WORKER_CAP.with(|c| c.get())
+}
+
+/// Run `f` with this thread's parallel width capped at `cap` execution
+/// streams (≥ 1). Caps only tighten under nesting: requesting a larger
+/// cap than the current one keeps the current one. `cap = 1` forces every
+/// parallel region `f` opens to run serially inline — the in-process
+/// equivalent of `MTFL_THREADS=1`, which is exactly what the determinism
+/// suite uses to compare serial and pooled runs bit-for-bit.
+pub fn with_worker_cap<R>(cap: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WORKER_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let old = WORKER_CAP.with(|c| c.get());
+    let eff = cap.max(1).min(old);
+    WORKER_CAP.with(|c| c.set(eff));
+    let _restore = Restore(old);
+    f()
+}
+
+/// Force the pool up (it is otherwise spawned lazily by the first
+/// parallel region). Returns the number of dedicated workers. Tests call
+/// this so spawn counting starts from a settled state.
+pub fn ensure_init() -> usize {
+    pool().workers
+}
+
+/// `std::thread::spawn` calls the executor has made so far (the pool
+/// workers, spawned once at init — nothing else, ever). Steady-state
+/// code asserts this does not move.
+pub fn spawn_count() -> usize {
+    SPAWNS.load(Ordering::SeqCst)
+}
+
+/// High-water mark of concurrently executing runners since the last
+/// [`reset_peak_active`]. Counts pool workers and inline submitters, so
+/// under any composition of scopes it is the number of live execution
+/// streams — the nested-oversubscription regression test asserts it
+/// never exceeds [`num_threads`]. (A [`join`]'s caller-side lane is
+/// counted through the scopes it opens, not separately.)
+pub fn peak_active() -> usize {
+    pool().peak_active.load(Ordering::SeqCst)
+}
+
+/// Reset the [`peak_active`] high-water mark to the current activity.
+pub fn reset_peak_active() {
+    let p = pool();
+    p.peak_active.store(p.active.load(Ordering::SeqCst), Ordering::SeqCst);
+}
+
+// ---------------------------------------------------------------------------
+// scopes
+// ---------------------------------------------------------------------------
+
+/// Shared state of one blocking scope: `count` jobs drained by a fixed
+/// set of runners through an atomic claim counter.
+struct ScopeState {
+    /// the job, lifetime-erased; valid until the submitting call returns
+    job: &'static (dyn Fn(usize) + Sync),
+    /// number of job indices to claim
+    count: usize,
+    /// next unclaimed job index
+    next: AtomicUsize,
+    /// runners (queued + inline) that have not finished yet
+    runners_left: Mutex<usize>,
+    done: Condvar,
+    /// first panic payload from any job, re-raised on the submitter
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl ScopeState {
+    /// Claim and run job indices until exhausted, then sign off. Catches
+    /// job panics (stored for the submitter) so the pool thread survives.
+    fn run_runner(&self, pool: &Pool) {
+        let now = pool.active.fetch_add(1, Ordering::SeqCst) + 1;
+        pool.peak_active.fetch_max(now, Ordering::SeqCst);
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.count {
+                break;
+            }
+            (self.job)(i);
+        }));
+        if let Err(payload) = result {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        pool.active.fetch_sub(1, Ordering::SeqCst);
+        let mut left = self.runners_left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait_done(&self) {
+        let mut left = self.runners_left.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// The scope width a parallel region will use: the caller's `max_workers`
+/// clamped by [`num_threads`], the thread's cap, and the job count.
+fn plan_workers(max_workers: usize, len: usize) -> usize {
+    max_workers.min(num_threads()).min(current_worker_cap()).min(len).max(1)
+}
+
+/// Run `count` indexed jobs across at most `max_workers` execution
+/// streams and block until all have finished. Jobs may borrow the
+/// caller's stack. Runs serially inline when the plan is one worker, when
+/// called from a worker thread (nested-safe), or when the pool has no
+/// dedicated workers (`MTFL_THREADS=1`). Panics in jobs are re-raised
+/// here after every runner has signed off.
+pub fn run_indexed(count: usize, max_workers: usize, job: &(dyn Fn(usize) + Sync)) {
+    if count == 0 {
+        return;
+    }
+    let workers = plan_workers(max_workers, count);
+    if workers == 1 || on_worker_thread() {
+        for i in 0..count {
+            job(i);
+        }
+        return;
+    }
+    let pool = pool();
+    if pool.workers == 0 {
+        for i in 0..count {
+            job(i);
+        }
+        return;
+    }
+    // SAFETY: the scope blocks in wait_done() until every runner has
+    // finished, so the erased borrow never outlives the real one.
+    let job_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(job)
+        };
+    let scope = ScopeState {
+        job: job_static,
+        count,
+        next: AtomicUsize::new(0),
+        runners_left: Mutex::new(workers),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    {
+        let mut q = pool.queue.lock().unwrap();
+        for _ in 0..workers - 1 {
+            q.push_back(RawRunner { scope: &scope });
+        }
+    }
+    pool.available.notify_all();
+    // the submitter is the scope's last runner; while it runs jobs it is
+    // a worker (nested parallel calls from those jobs must inline)
+    let was_worker = IS_WORKER.with(|w| w.replace(true));
+    scope.run_runner(pool);
+    IS_WORKER.with(|w| w.set(was_worker));
+    scope.wait_done();
+    if let Some(payload) = scope.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+/// Whether a [`join`] from this thread would actually offload its second
+/// lane (false on worker threads, under a cap of 1, or with no pool
+/// workers). The shard prefetch pipeline consults this so it only
+/// reserves a compute lane when the reader lane really runs concurrently.
+pub fn can_offload() -> bool {
+    !on_worker_thread() && current_worker_cap() > 1 && num_threads() > 1
+}
+
+/// Run `a` on the calling thread while `b` executes on one pool worker;
+/// return both results. Falls back to serial `(a(), b())` whenever
+/// [`can_offload`] is false. `a` may itself open parallel scopes (cap it
+/// with [`with_worker_cap`] if `b`'s worker must be accounted for);
+/// nested `join`s on worker threads run serially. Panics from either
+/// closure are re-raised after both lanes have finished, `b`'s first.
+pub fn join<RA, RB>(
+    a: impl FnOnce() -> RA + Send,
+    b: impl FnOnce() -> RB + Send,
+) -> (RA, RB)
+where
+    RA: Send,
+    RB: Send,
+{
+    if !can_offload() {
+        let ra = a();
+        let rb = b();
+        return (ra, rb);
+    }
+    let pool = pool();
+    if pool.workers == 0 {
+        let ra = a();
+        let rb = b();
+        return (ra, rb);
+    }
+    let b_cell: Mutex<Option<_>> = Mutex::new(Some(b));
+    let rb_slot: Mutex<Option<RB>> = Mutex::new(None);
+    let run_b = |_i: usize| {
+        let f = b_cell.lock().unwrap().take().expect("join lane claimed twice");
+        let r = f();
+        *rb_slot.lock().unwrap() = Some(r);
+    };
+    // SAFETY: as in run_indexed — wait_done() outlives the erased borrow.
+    let job_static: &'static (dyn Fn(usize) + Sync) =
+        unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(&run_b)
+        };
+    let scope = ScopeState {
+        job: job_static,
+        count: 1,
+        next: AtomicUsize::new(0),
+        runners_left: Mutex::new(1),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    };
+    {
+        let mut q = pool.queue.lock().unwrap();
+        q.push_back(RawRunner { scope: &scope });
+    }
+    pool.available.notify_one();
+    let ra = catch_unwind(AssertUnwindSafe(a));
+    scope.wait_done();
+    if let Some(payload) = scope.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+    let ra = match ra {
+        Ok(v) => v,
+        Err(payload) => resume_unwind(payload),
+    };
+    let rb = rb_slot.into_inner().unwrap().expect("join lane produced no result");
+    (ra, rb)
+}
+
+// ---------------------------------------------------------------------------
+// the two public call shapes (unchanged from the spawn-per-call era)
+// ---------------------------------------------------------------------------
+
+/// Process `0..len` in contiguous chunks, one chunk per execution stream.
+/// `f` receives (chunk_index, start, end) and returns a per-chunk result;
+/// results come back ordered by chunk index. Chunk boundaries depend only
+/// on the planned width, and every consumer accumulates per column /
+/// per item, so results are bit-identical at any width.
+pub fn parallel_chunks<R, F>(len: usize, max_workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize, usize) -> R + Sync,
+{
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = plan_workers(max_workers, len);
+    if workers == 1 {
+        return vec![f(0, 0, len)];
+    }
+    let chunk = len.div_ceil(workers);
+    let slots: Vec<Mutex<Option<R>>> = (0..workers).map(|_| Mutex::new(None)).collect();
+    run_indexed(workers, workers, &|i| {
+        let start = i * chunk;
+        let end = ((i + 1) * chunk).min(len);
+        if start < end {
+            // compute before locking: a panicking job must not poison a
+            // held result lock
+            let r = f(i, start, end);
+            *slots[i].lock().unwrap() = Some(r);
+        }
+    });
+    slots.into_iter().filter_map(|s| s.into_inner().unwrap()).collect()
+}
+
+/// Run independent jobs (one closure per item) across the pool; returns
+/// results in item order. Items are claimed dynamically (load-balanced),
+/// but the result order is by item index regardless of completion order.
+pub fn scoped_pool<T, R, F>(items: Vec<T>, max_workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = plan_workers(max_workers, n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let cells: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    run_indexed(n, workers, &|i| {
+        let item = cells[i].lock().unwrap().take().expect("item claimed twice");
+        let r = f(item);
+        *slots[i].lock().unwrap() = Some(r);
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("scope finished with a hole"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::thread::ThreadId;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits: Vec<(usize, usize)> =
+            parallel_chunks(1003, 7, |_, s, e| (s, e)).into_iter().collect();
+        let mut covered = vec![false; 1003];
+        for (s, e) in hits {
+            for c in covered.iter_mut().take(e).skip(s) {
+                assert!(!*c, "double coverage");
+                *c = true;
+            }
+        }
+        assert!(covered.into_iter().all(|c| c));
+    }
+
+    #[test]
+    fn chunk_sum_matches_serial() {
+        let data: Vec<f64> = (0..10_000).map(|i| i as f64).collect();
+        let partial =
+            parallel_chunks(data.len(), 8, |_, s, e| data[s..e].iter().sum::<f64>());
+        let total: f64 = partial.into_iter().sum();
+        assert_eq!(total, data.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn pool_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = scoped_pool(items, 8, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(parallel_chunks(0, 4, |_, _, _| ()).is_empty());
+        assert!(scoped_pool(Vec::<usize>::new(), 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_chunks(10, 1, |i, s, e| (i, s, e));
+        assert_eq!(out, vec![(0, 0, 10)]);
+    }
+
+    #[test]
+    fn pool_spawns_once_ever() {
+        ensure_init();
+        let s0 = spawn_count();
+        for round in 0..50 {
+            let got = scoped_pool((0..16).collect::<Vec<_>>(), usize::MAX, |i| i + round);
+            assert_eq!(got.len(), 16);
+            let _ = parallel_chunks(257, usize::MAX, |_, s, e| e - s);
+        }
+        assert_eq!(spawn_count(), s0, "steady-state scopes must never spawn");
+    }
+
+    #[test]
+    fn nested_calls_run_inline_on_their_worker() {
+        // every chunk of the inner region must run on the thread that owns
+        // the outer item — nesting adds zero execution streams
+        let placements = scoped_pool((0..8).collect::<Vec<_>>(), usize::MAX, |_| {
+            let outer: ThreadId = std::thread::current().id();
+            let inner: Vec<ThreadId> =
+                parallel_chunks(64, usize::MAX, |_, _, _| std::thread::current().id());
+            (outer, inner)
+        });
+        for (outer, inner) in placements {
+            for t in inner {
+                assert_eq!(t, outer, "nested region escaped its worker");
+            }
+        }
+    }
+
+    // NB: the "peak_active() ≤ num_threads() under nesting" assertion lives
+    // in rust/tests/executor_parallel.rs, where the test binary controls
+    // every scope in the process — inside this lib binary, unrelated tests
+    // open scopes concurrently and the global gauge counts their
+    // submitters too.
+
+    #[test]
+    fn cap_of_one_is_fully_serial() {
+        let here = std::thread::current().id();
+        let ids: HashSet<ThreadId> = with_worker_cap(1, || {
+            scoped_pool((0..32).collect::<Vec<_>>(), usize::MAX, |_| {
+                std::thread::current().id()
+            })
+        })
+        .into_iter()
+        .collect();
+        assert_eq!(ids.len(), 1);
+        assert!(ids.contains(&here));
+    }
+
+    #[test]
+    fn caps_only_tighten_under_nesting() {
+        with_worker_cap(2, || {
+            assert_eq!(current_worker_cap(), 2);
+            with_worker_cap(64, || assert_eq!(current_worker_cap(), 2));
+            with_worker_cap(1, || assert_eq!(current_worker_cap(), 1));
+            assert_eq!(current_worker_cap(), 2);
+        });
+        assert_eq!(current_worker_cap(), usize::MAX);
+    }
+
+    #[test]
+    fn join_returns_both_lanes() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let (a, b) = join(|| xs.iter().sum::<u64>(), || xs.iter().rev().max().copied());
+        assert_eq!(a, 499_500);
+        assert_eq!(b, Some(999));
+    }
+
+    #[test]
+    fn join_inside_scope_runs_serial() {
+        let out = scoped_pool((0..4).collect::<Vec<_>>(), usize::MAX, |i| {
+            let here = std::thread::current().id();
+            let (ta, tb) =
+                join(|| std::thread::current().id(), || std::thread::current().id());
+            assert_eq!(ta, here);
+            assert_eq!(tb, here, "nested join offloaded from a worker");
+            i
+        });
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn scope_panics_propagate_to_submitter() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            scoped_pool((0..8).collect::<Vec<_>>(), usize::MAX, |i| {
+                if i == 5 {
+                    panic!("job 5 exploded");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "panic was swallowed");
+        // the pool must still be usable afterwards
+        let ok = scoped_pool((0..8).collect::<Vec<_>>(), usize::MAX, |i| i * 3);
+        assert_eq!(ok, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_panics_propagate_and_pool_survives() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            join(|| 1u32, || -> u32 { panic!("reader lane died") })
+        }));
+        assert!(r.is_err());
+        let (a, b) = join(|| 2u32, || 3u32);
+        assert_eq!((a, b), (2, 3));
+    }
+}

@@ -1,12 +1,14 @@
 //! Substrate utilities built from scratch (no third-party crates are
-//! available offline beyond `xla`/`anyhow`): RNG, timers, a thread pool,
-//! and a tiny logger.
+//! available offline beyond `xla`/`anyhow`): RNG, timers, the persistent
+//! executor every parallel sweep runs on, and a tiny logger.
 
+pub mod executor;
 pub mod logging;
 pub mod rng;
 pub mod threads;
 pub mod timer;
 
+pub use executor::{join, parallel_chunks, scoped_pool};
 pub use rng::Pcg64;
-pub use threads::{num_threads, parallel_chunks, scoped_pool};
+pub use threads::{num_threads, serial_below};
 pub use timer::{Stopwatch, format_duration};

@@ -1,0 +1,251 @@
+//! Executor acceptance suite (DESIGN.md §11):
+//!
+//! * **Determinism under parallelism** — `run_path`, `cross_validate` and
+//!   `run_path_sharded` (prefetch enabled) produce bit-identical
+//!   solutions, keep-counts and col-ops at one execution stream vs four.
+//!   Accumulation order is per-column by construction; these tests pin it
+//!   so the executor can never silently reorder.
+//! * **Nested oversubscription** — cv → fista → ops composes to at most
+//!   `num_threads()` live execution streams (the old spawn-per-layer
+//!   stack multiplied workers per level).
+//! * **Zero steady-state spawns** — after the pool is up, a full λ-path
+//!   (and a sharded one, prefetch included) performs no
+//!   `std::thread::spawn` at all.
+//!
+//! Every test takes the process-wide `EXCLUSIVE` lock: the spawn counter
+//! and the peak-activity gauge are global, and the serial-cutoff env
+//! override must not leak between tests.
+
+use mtfl_dpc::coordinator::cv::cross_validate;
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{
+    run_path, run_path_sharded, EngineKind, PathOptions, PathRunResult, ScreenerKind,
+    ShardRunResult,
+};
+use mtfl_dpc::data::io::save_sharded;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::{Dataset, ShardedDataset};
+use mtfl_dpc::solver::SolveOptions;
+use mtfl_dpc::util::executor;
+use mtfl_dpc::util::num_threads;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+fn exclusive() -> std::sync::MutexGuard<'static, ()> {
+    EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Zero the serial cutoff for the guard's lifetime so even the small test
+/// problems exercise the pooled sweep paths; restores the prior value.
+struct ZeroCutoff(Option<String>);
+
+impl ZeroCutoff {
+    fn set() -> Self {
+        let old = std::env::var("MTFL_SERIAL_CUTOFF").ok();
+        std::env::set_var("MTFL_SERIAL_CUTOFF", "0");
+        ZeroCutoff(old)
+    }
+}
+
+impl Drop for ZeroCutoff {
+    fn drop(&mut self) {
+        match self.0.take() {
+            Some(v) => std::env::set_var("MTFL_SERIAL_CUTOFF", v),
+            None => std::env::remove_var("MTFL_SERIAL_CUTOFF"),
+        }
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mtfl_exec_{}_{}", std::process::id(), name))
+}
+
+fn problem() -> Dataset {
+    synthetic1(&SynthOptions {
+        t: 3,
+        n: 14,
+        d: 120,
+        support_frac: 0.08,
+        noise: 0.05,
+        seed: 61,
+    })
+    .0
+}
+
+fn path_opts() -> PathOptions {
+    PathOptions {
+        ratios: lambda_grid(10, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-7, dynamic_every: 7, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+fn assert_runs_identical(serial: &PathRunResult, pooled: &PathRunResult, what: &str) {
+    assert_bits_eq(&serial.last_w, &pooled.last_w, &format!("{what}: last_w"));
+    assert_eq!(serial.lam_max.to_bits(), pooled.lam_max.to_bits(), "{what}: lam_max");
+    assert_eq!(serial.records.len(), pooled.records.len());
+    for (s, p) in serial.records.iter().zip(&pooled.records) {
+        let at = format!("{what} at ratio {}", s.ratio);
+        assert_eq!(s.kept, p.kept, "{at}: kept");
+        assert_eq!(s.rejected, p.rejected, "{at}: rejected");
+        assert_eq!(s.inactive, p.inactive, "{at}: inactive");
+        assert_eq!(s.col_ops, p.col_ops, "{at}: col_ops");
+        assert_eq!(s.solver_iters, p.solver_iters, "{at}: iters");
+        assert_eq!(s.obj.to_bits(), p.obj.to_bits(), "{at}: obj");
+        assert_eq!(s.gap.to_bits(), p.gap.to_bits(), "{at}: gap");
+    }
+}
+
+fn run_at_cap(ds: &Dataset, opts: &PathOptions, cap: usize) -> PathRunResult {
+    executor::with_worker_cap(cap, || run_path(ds, opts, &EngineKind::Exact).unwrap())
+}
+
+#[test]
+fn run_path_bit_identical_serial_vs_pooled_dense() {
+    let _x = exclusive();
+    let _z = ZeroCutoff::set();
+    let ds = problem();
+    let serial = run_at_cap(&ds, &path_opts(), 1);
+    let pooled = run_at_cap(&ds, &path_opts(), 4);
+    assert_runs_identical(&serial, &pooled, "dense");
+    // sanity: the grid actually screened and solved nontrivially
+    assert!(serial.records.iter().any(|r| r.rejected > 0 && r.kept > 0));
+}
+
+#[test]
+fn run_path_bit_identical_serial_vs_pooled_csc() {
+    let _x = exclusive();
+    let _z = ZeroCutoff::set();
+    let ds = problem().to_csc();
+    // GapSafe exercises a different screener sweep than the dense test
+    let opts = PathOptions { screener: ScreenerKind::GapSafe, ..path_opts() };
+    let serial = run_at_cap(&ds, &opts, 1);
+    let pooled = run_at_cap(&ds, &opts, 4);
+    assert_runs_identical(&serial, &pooled, "csc");
+}
+
+#[test]
+fn run_path_sharded_bit_identical_serial_vs_pooled_with_prefetch() {
+    let _x = exclusive();
+    let _z = ZeroCutoff::set();
+    let ds = problem();
+    let p = tmp("determinism.mtd3");
+    // narrow blocks so the prefetch pipeline really crosses boundaries
+    save_sharded(&ds, &p, 14 * 3 * 4 * 8).unwrap();
+    let run = |cap: usize| -> ShardRunResult {
+        let sh = ShardedDataset::open(&p).unwrap();
+        assert!(sh.n_blocks() > 2, "want multiple blocks, got {}", sh.n_blocks());
+        assert!(sh.prefetch_enabled(), "prefetch must default on");
+        executor::with_worker_cap(cap, || run_path_sharded(&sh, &path_opts()).unwrap())
+    };
+    let serial = run(1);
+    let pooled = run(4);
+    std::fs::remove_file(&p).ok();
+    assert_runs_identical(&serial.path, &pooled.path, "sharded");
+    assert_eq!(serial.materialized_bytes, pooled.materialized_bytes);
+    let pf = pooled.prefetch;
+    assert!(pf.hits <= pf.issued, "hits {} > issued {}", pf.hits, pf.issued);
+    if num_threads() > 1 {
+        assert!(pf.issued > 0, "pooled sharded run never engaged the pipeline");
+    }
+}
+
+#[test]
+fn cross_validate_bit_identical_serial_vs_pooled() {
+    let _x = exclusive();
+    let _z = ZeroCutoff::set();
+    let ds = synthetic1(&SynthOptions {
+        t: 3,
+        n: 30,
+        d: 60,
+        support_frac: 0.1,
+        noise: 0.3,
+        seed: 62,
+    })
+    .0;
+    let opts = PathOptions {
+        ratios: lambda_grid(8, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-7, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    let serial = executor::with_worker_cap(1, || cross_validate(&ds, &opts, 3, 0).unwrap());
+    let pooled = executor::with_worker_cap(4, || cross_validate(&ds, &opts, 3, 0).unwrap());
+    assert_bits_eq(&serial.mse, &pooled.mse, "cv mse curve");
+    assert_eq!(serial.best_index, pooled.best_index);
+    assert_eq!(serial.col_ops, pooled.col_ops, "cv col_ops");
+    assert_eq!(serial.fold_col_ops, pooled.fold_col_ops, "per-fold col_ops");
+}
+
+#[test]
+fn nested_cv_fista_ops_never_exceeds_num_threads() {
+    let _x = exclusive();
+    let _z = ZeroCutoff::set();
+    let ds = synthetic1(&SynthOptions {
+        t: 3,
+        n: 30,
+        d: 80,
+        support_frac: 0.1,
+        noise: 0.3,
+        seed: 63,
+    })
+    .0;
+    let opts = PathOptions {
+        ratios: lambda_grid(6, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-6, dynamic_every: 5, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    executor::ensure_init();
+    executor::reset_peak_active();
+    // cv fans folds across the pool; each fold runs FISTA whose lipschitz
+    // fan-out and ops sweeps must inline on the fold's worker — the
+    // spawn-per-layer era multiplied these into W³ threads
+    cross_validate(&ds, &opts, 3, 0).unwrap();
+    let peak = executor::peak_active();
+    assert!(
+        peak <= num_threads(),
+        "cv→fista→ops composed to {peak} live execution streams \
+         (num_threads() = {})",
+        num_threads()
+    );
+}
+
+#[test]
+fn steady_state_path_performs_zero_spawns() {
+    let _x = exclusive();
+    let _z = ZeroCutoff::set();
+    let ds = problem();
+    executor::ensure_init();
+    // warm one scope so lazy bits are settled, then freeze the counter
+    let _ = executor::with_worker_cap(4, || {
+        mtfl_dpc::ops::gscore(&ds, &mtfl_dpc::ops::y64(&ds))
+    });
+    let spawns_before = executor::spawn_count();
+
+    let res = run_path(&ds, &path_opts(), &EngineKind::Exact).unwrap();
+    assert_eq!(res.records.len(), 10);
+
+    let p = tmp("zerospawn.mtd3");
+    save_sharded(&ds, &p, 14 * 3 * 4 * 8).unwrap();
+    let sh = ShardedDataset::open(&p).unwrap();
+    let shard_res = run_path_sharded(&sh, &path_opts()).unwrap();
+    std::fs::remove_file(&p).ok();
+    assert_eq!(shard_res.path.records.len(), 10);
+
+    assert_eq!(
+        executor::spawn_count(),
+        spawns_before,
+        "the steady-state per-λ loop spawned OS threads"
+    );
+}
