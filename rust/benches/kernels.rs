@@ -2,6 +2,9 @@
 //! feeds from this target):
 //!
 //!   * the correlation sweep `task_corr` (the dominant cost of DPC);
+//!   * the kernel layer scalar-vs-SIMD, per kernel and end-to-end, plus
+//!     panel-blocked vs per-column sweeps (recorded in
+//!     `BENCH_kernels.json` at the repo root, DESIGN.md §12);
 //!   * the per-feature QP1QC secular solve;
 //!   * full DPC screen at one λ;
 //!   * the DPC score sweep on CSC vs dense storage at 1% / 5% density
@@ -17,13 +20,33 @@
 use mtfl_dpc::bench::Bencher;
 use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
 use mtfl_dpc::data::{Dataset, Task};
-use mtfl_dpc::linalg::CscMatrix;
+use mtfl_dpc::linalg::{simd, CscMatrix};
 use mtfl_dpc::ops;
 use mtfl_dpc::runtime::AotEngine;
 use mtfl_dpc::screening::dpc::{ball, DpcScreener, DualRef};
 use mtfl_dpc::screening::secular::qp1qc_max;
 use mtfl_dpc::util::Pcg64;
 use std::path::PathBuf;
+
+/// Time `f` with the dispatcher pinned to scalar, then free (SIMD where
+/// detected); print the speedup and return one JSON results row. The two
+/// runs return bit-identical results (rust/tests/simd_kernels.rs), so the
+/// ratio is pure kernel throughput.
+fn bench_backends<R>(b: &Bencher, name: &str, mut f: impl FnMut() -> R) -> String {
+    simd::force_scalar(true);
+    let s = b.run(&format!("{name:<38} [scalar]"), &mut f);
+    simd::force_scalar(false);
+    let v = b.run(&format!("{name:<38} [{}]", simd::active_backend()), &mut f);
+    let speedup = s.median() / v.median();
+    println!("   -> {name}: {speedup:.2}x vs scalar\n");
+    format!(
+        "    {{\"name\": \"{name}\", \"scalar_median_s\": {:.6e}, \
+         \"simd_median_s\": {:.6e}, \"speedup\": {:.2}}}",
+        s.median(),
+        v.median(),
+        speedup
+    )
+}
 
 /// Random CSC dataset at a target density (rows per column chosen
 /// uniformly, Gaussian values) — the text/genomics shape of DESIGN.md §6.
@@ -117,6 +140,86 @@ fn main() -> anyhow::Result<()> {
 
     // exact lambda_max
     b.run("lambda_max (exact)", || ops::lambda_max(&ds));
+
+    // kernel layer: scalar vs SIMD dispatch per kernel, panel-blocked vs
+    // per-column sweeps, and two end-to-end consumers. The tall shape
+    // makes each task matrix (~10 MB) spill L2 so the cache blocking has
+    // something to win.
+    let (kt, kn, kd) = (4usize, 40_000usize, 64usize);
+    println!(
+        "\n== kernel layer: scalar vs {} (T={kt}, N={kn}, d={kd}, ACC_BLOCK={}) ==\n",
+        simd::active_backend(),
+        simd::ACC_BLOCK
+    );
+    let (kds, _) = synthetic1(&SynthOptions { t: kt, n: kn, d: kd, seed: 5, ..Default::default() });
+    let ky = ops::y64(&kds);
+    let mut krng = Pcg64::new(0x5edd);
+    let ka: Vec<f32> = (0..kn).map(|_| krng.normal() as f32).collect();
+    let kb: Vec<f64> = (0..kn).map(|_| krng.normal()).collect();
+    let kc: Vec<f64> = (0..kn).map(|_| krng.normal()).collect();
+    let spk = kn / 20;
+    let sp_idx: Vec<u32> = (0..spk).map(|i| (i * kn / spk) as u32).collect();
+    let sp_val: Vec<f32> = (0..spk).map(|_| krng.normal() as f32).collect();
+    let mut kz = vec![0.0f64; kn];
+    let (kdref, klmax) = DualRef::at_lambda_max(&kds);
+    let ksc = DpcScreener::new(&kds);
+    let (ko, kdelta) = ball(&kds, &kdref, 0.4 * klmax);
+    let kw = vec![0.01f64; kd * kt];
+    let mut kernel_rows = vec![
+        bench_backends(&b, &format!("dot_mixed n={kn}"), || simd::dot_mixed(&ka, &kb)),
+        bench_backends(&b, &format!("dot_f64 n={kn}"), || simd::dot_f64(&kb, &kc)),
+        bench_backends(&b, &format!("sp_dot_mixed nnz={spk}"), || {
+            simd::sp_dot_mixed(&sp_idx, &sp_val, &kb)
+        }),
+        bench_backends(&b, &format!("axpy_f64 n={kn}"), || {
+            simd::axpy_f64(1.0e-6, &ka, &mut kz);
+            kz[0]
+        }),
+        bench_backends(&b, "task_corr (panel-blocked sweep)", || ops::task_corr(&kds, &ky)),
+        bench_backends(&b, "DPC screen e2e (scores, all features)", || {
+            ksc.scores(&kds, &ko, kdelta)
+        }),
+        bench_backends(&b, "FISTA grad step e2e", || {
+            let r = ops::residual(&kds, &kw);
+            ops::task_corr(&kds, &r)
+        }),
+    ];
+    // panel blocking vs a per-column sweep that re-streams v every column
+    // (both on the active backend — isolates the cache effect)
+    let naive = b.run("task_corr naive per-column (unpaneled)", || {
+        let mut out = vec![0.0f64; kd * kt];
+        for (ti, vt) in ky.iter().enumerate() {
+            for l in 0..kd {
+                out[l * kt + ti] = kds.col(ti, l).dot_mixed(vt);
+            }
+        }
+        out
+    });
+    let panel = b.run("task_corr panel-blocked (same backend)", || ops::task_corr(&kds, &ky));
+    let blk_speedup = naive.median() / panel.median();
+    println!("   -> panel blocking: {blk_speedup:.2}x vs per-column\n");
+    kernel_rows.push(format!(
+        "    {{\"name\": \"task_corr blocking\", \"naive_median_s\": {:.6e}, \
+         \"panel_median_s\": {:.6e}, \"speedup\": {:.2}}}",
+        naive.median(),
+        panel.median(),
+        blk_speedup
+    ));
+    let kernels_json = format!(
+        "{{\n  \"bench\": \"kernel_layer_scalar_vs_simd\",\n  \"generated_by\": \
+         \"cargo bench --bench kernels\",\n  \"isa\": \"{}\",\n  \"acc_block\": {},\n  \
+         \"shape\": {{\"t\": {kt}, \"n\": {kn}, \"d\": {kd}}},\n  \"provisional\": false,\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        simd::active_backend(),
+        simd::ACC_BLOCK,
+        kernel_rows.join(",\n")
+    );
+    let kernels_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_kernels.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_kernels.json"));
+    std::fs::write(&kernels_path, &kernels_json)?;
+    println!("wrote {}", kernels_path.display());
 
     // sparse-vs-dense DPC score sweep (the backend refactor's headline):
     // same shape, 1% and 5% stored-entry density

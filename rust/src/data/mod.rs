@@ -289,7 +289,10 @@ impl Dataset {
     }
 
     /// ||x_l^{(t)}||^2 for every (l, t): the b² moments of Theorem 7.
-    /// Computed once per dataset and cached by the screeners.
+    /// Computed once per dataset and cached by the screeners. Each column
+    /// is one pass through the contract kernels (`ColRef::sqnorm` →
+    /// SIMD-dispatched `dot_f32_f64`, DESIGN.md §12); no panel blocking
+    /// applies because no vector is shared across columns.
     pub fn col_sqnorms(&self) -> Vec<f64> {
         let t_count = self.t();
         let mut out = vec![0.0f64; self.d * t_count];

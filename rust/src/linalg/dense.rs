@@ -1,4 +1,13 @@
-//! Feature-major matrix view + the hot vector kernels.
+//! Feature-major matrix view + the dense hot-kernel entry points.
+//!
+//! Since the kernel-layer refactor the arithmetic lives in
+//! [`super::simd`]: every function here is a thin wrapper over the
+//! dispatching kernel, which follows the bit-pinned accumulation
+//! contract (eight interleaved f64 accumulators per [`super::simd::ACC_BLOCK`]
+//! block, fixed tree reduction — DESIGN.md §12) on the scalar, AVX2 and
+//! NEON backends alike.
+
+use super::simd;
 
 /// A column-major (feature-major) matrix view over an `n x d` task matrix:
 /// column `l` (one feature's samples) is `data[l*n .. (l+1)*n]`, contiguous.
@@ -27,83 +36,43 @@ impl<'a> ColMajor<'a> {
     }
 }
 
-/// `<a, b>` with f64 accumulation, 4-way unrolled. The single hottest
-/// kernel in the exact engine (every screening/gradient sweep is a column
-/// dot).
+/// `<a, b>` with f64 accumulation under the kernel contract. The single
+/// hottest kernel in the exact engine (every screening/gradient sweep is
+/// a column dot).
 #[inline]
 pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] as f64 * b[j] as f64;
-        s1 += a[j + 1] as f64 * b[j + 1] as f64;
-        s2 += a[j + 2] as f64 * b[j + 2] as f64;
-        s3 += a[j + 3] as f64 * b[j + 3] as f64;
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += a[i] as f64 * b[i] as f64;
-    }
-    s
+    simd::dot_f32_f64(a, b)
 }
 
 /// Mixed dot: f32 column against an f64 vector.
 #[inline]
 pub fn dot_mixed(a: &[f32], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] as f64 * b[j];
-        s1 += a[j + 1] as f64 * b[j + 1];
-        s2 += a[j + 2] as f64 * b[j + 2];
-        s3 += a[j + 3] as f64 * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += a[i] as f64 * b[i];
-    }
-    s
+    simd::dot_mixed(a, b)
 }
 
-/// `<a, b>` for two f64 vectors.
+/// `<a, b>` for two f64 vectors — same 8-lane contract as the mixed
+/// kernels (it was a naive `zip().sum()` before the kernel layer).
 #[inline]
 pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    simd::dot_f64(a, b)
 }
 
 /// Euclidean norm of an f64 vector.
 #[inline]
 pub fn nrm2_f64(a: &[f64]) -> f64 {
-    dot_f64(a, a).sqrt()
+    simd::dot_f64(a, a).sqrt()
 }
 
 /// `y += alpha * x` where x is an f32 column, y an f64 accumulator.
 #[inline]
 pub fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    if alpha == 0.0 {
-        return;
-    }
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * *xi as f64;
-    }
+    simd::axpy_f64(alpha, x, y)
 }
 
 /// `out = a + s * b` elementwise (f64).
 #[inline]
 pub fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
-    debug_assert_eq!(a.len(), b.len());
-    debug_assert_eq!(a.len(), out.len());
-    for i in 0..a.len() {
-        out[i] = a[i] + s * b[i];
-    }
+    simd::scale_add(a, s, b, out)
 }
 
 #[cfg(test)]
@@ -128,12 +97,23 @@ mod tests {
 
     #[test]
     fn dot_unroll_tail() {
+        // products are exactly representable, so any association order
+        // must give the exact sum — valid under the 8-lane contract too
         for n in [0usize, 1, 3, 4, 5, 7, 8, 17] {
             let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
             let b: Vec<f32> = (0..n).map(|i| (i as f32) - 2.0).collect();
             let want: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
             assert_eq!(dot_f32_f64(&a, &b), want);
         }
+    }
+
+    #[test]
+    fn dot_f64_matches_exact_sum() {
+        let a: Vec<f64> = (0..23).map(|i| i as f64 * 0.25).collect();
+        let b: Vec<f64> = (0..23).map(|i| (i as f64) - 8.0).collect();
+        let want: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot_f64(&a, &b), want);
+        assert_eq!(nrm2_f64(&[3.0, 4.0]), 5.0);
     }
 
     #[test]

@@ -20,12 +20,15 @@
 //!
 //! Precision policy: matrices are f32 (memory: the ADNI-scale X is 2 GB at
 //! paper dims), all accumulations are f64 — screening thresholds compare
-//! against 1.0 at ~1e-12, which f32 accumulation cannot certify. The
-//! sparse kernels replicate the dense kernels' association order so a
-//! fully-stored CSC column is bit-identical to its dense twin.
+//! against 1.0 at ~1e-12, which f32 accumulation cannot certify. All
+//! reduction kernels live in [`simd`] behind one bit-pinned accumulation
+//! contract (DESIGN.md §12): scalar, AVX2 and NEON produce identical
+//! bits, and the sparse kernels share the contract over stored entries so
+//! a fully-stored CSC column is bit-identical to its dense twin.
 
 pub mod cache;
 pub mod dense;
+pub mod simd;
 pub mod sparse;
 
 pub use cache::BlockCache;

@@ -1,0 +1,928 @@
+//! The kernel layer: one bit-pinned accumulation contract, three
+//! implementations (scalar reference, x86-64 AVX2, aarch64 NEON), one
+//! runtime dispatcher (DESIGN.md §12).
+//!
+//! Every reduction kernel in the crate — dense and CSC dots, `sqnorm`,
+//! `dot_f64` — follows the **same canonical accumulation contract**:
+//!
+//! 1. The input is cut into blocks of [`ACC_BLOCK`] elements (stored
+//!    entries, on the sparse kernels).
+//! 2. Inside a block, eight interleaved f64 accumulators `s0..s7` run
+//!    over the 8-element chunks (`s_k` sums elements `j+k`), each as
+//!    round-to-nearest `s_k += a·b` — the product is rounded *before*
+//!    the add, so FMA is banned on every backend.
+//! 3. The eight lanes reduce in the fixed tree order
+//!    `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`, then the ≤7-element tail
+//!    is added left to right.
+//! 4. Block partials fold left to right into an accumulator that starts
+//!    at `0.0`.
+//!
+//! A SIMD register holding lanes `s_k..s_{k+3}` (AVX2) or `s_k, s_{k+1}`
+//! (NEON) performs *exactly* the scalar per-lane adds, and the lanes are
+//! extracted and reduced with the same scalar tree — so the scalar, AVX2
+//! and NEON paths are **bit-identical**, not merely close. That is what
+//! lets the dense/CSC parity suite, the sharded-streaming parity suite
+//! and the executor determinism suite keep pinning exact bits with the
+//! `simd` feature on or off (`rust/tests/simd_kernels.rs` asserts the
+//! equality kernel by kernel).
+//!
+//! Blocking is part of the contract, not a tuning detail: the panel
+//! sweeps in `ops` accumulate per column in the same [`ACC_BLOCK`]
+//! boundaries, which is why a cache-blocked sweep reproduces the plain
+//! per-column dot bit for bit. Elementwise kernels (`axpy_f64`,
+//! `scale_add`) have no accumulator and need no blocking; their SIMD
+//! forms are the scalar operation applied per element.
+//!
+//! Backend selection: AVX2 is detected once at runtime
+//! (`is_x86_feature_detected!`) and cached; NEON is baseline on aarch64;
+//! everything else — including `--no-default-features` builds — uses the
+//! scalar reference. [`force_scalar`] pins the dispatcher to the scalar
+//! path at runtime so tests and benches can compare backends in-process.
+//! AVX2 covers the gather-based sparse dots; NEON has no gather, so the
+//! sparse kernels stay on the scalar path there (still blocked, still
+//! the same contract).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Elements per accumulation block (stored entries on sparse kernels).
+///
+/// Tuning: 2048 f64s = 16 KiB per operand — two operand streams fit L1
+/// comfortably, and an `ops` panel re-uses one resident block of `v`
+/// against many columns before moving on (L2-sized working set). The
+/// value is part of the accumulation contract: changing it changes
+/// results (within normal fp reassociation error) and invalidates the
+/// recorded bit-parity fixtures, so treat it as a cross-cutting knob,
+/// not a per-call-site one.
+pub const ACC_BLOCK: usize = 2048;
+
+/// Interleaved f64 accumulators per block (the contract's lane count).
+pub const ACC_LANES: usize = 8;
+
+/// Which kernel implementation the dispatcher is using.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// portable reference implementation (always compiled)
+    Scalar,
+    /// x86-64 AVX2 (runtime-detected, `simd` feature)
+    Avx2,
+    /// aarch64 NEON (baseline on aarch64, `simd` feature)
+    Neon,
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Pin every dispatching kernel to the scalar reference path (`true`) or
+/// restore runtime detection (`false`). Process-global; intended for
+/// tests and benches that compare backends in-process. Because the
+/// backends are bit-identical, flipping this mid-computation is safe —
+/// it changes speed, never results.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// The implementation the dispatcher would use right now
+/// (respects [`force_scalar`]).
+#[inline]
+pub fn active_isa() -> Isa {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        return Isa::Scalar;
+    }
+    detect()
+}
+
+/// [`active_isa`] as a lowercase string ("scalar" / "avx2" / "neon") for
+/// logs and bench reports.
+pub fn active_backend() -> &'static str {
+    match active_isa() {
+        Isa::Scalar => "scalar",
+        Isa::Avx2 => "avx2",
+        Isa::Neon => "neon",
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn detect() -> Isa {
+    use std::sync::atomic::AtomicU8;
+    // 0 = undetected, 1 = scalar, 2 = avx2 (cpuid once, then one load)
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        2 => Isa::Avx2,
+        1 => Isa::Scalar,
+        _ => {
+            let avx2 = is_x86_feature_detected!("avx2");
+            CACHE.store(if avx2 { 2 } else { 1 }, Ordering::Relaxed);
+            if avx2 {
+                Isa::Avx2
+            } else {
+                Isa::Scalar
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[inline]
+fn detect() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+#[inline]
+fn detect() -> Isa {
+    Isa::Scalar
+}
+
+/// Fold `f(lo, hi)` over `[0, n)` in [`ACC_BLOCK`]-sized half-open
+/// ranges, summing partials left to right from `0.0` (contract step 4).
+#[inline]
+fn fold_blocks(n: usize, mut f: impl FnMut(usize, usize) -> f64) -> f64 {
+    let mut acc = 0.0f64;
+    let mut i = 0usize;
+    while i < n {
+        let hi = (i + ACC_BLOCK).min(n);
+        acc += f(i, hi);
+        i = hi;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// dispatching kernels (the crate-facing entry points)
+// ---------------------------------------------------------------------------
+
+/// `<a, b>` of one ≤[`ACC_BLOCK`] slice pair under the contract: the
+/// building block the cache-blocked panel sweeps in `ops` accumulate
+/// with. Dispatches per call (one relaxed atomic load, amortized over
+/// the block).
+#[inline]
+pub fn dot_mixed_block(a: &[f32], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection
+        return unsafe { avx2::dot_mixed_block(a, b) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if active_isa() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64
+        return unsafe { neon::dot_mixed_block(a, b) };
+    }
+    scalar::dot_mixed_block(a, b)
+}
+
+/// One-block `<a, b>` for two f32 slices (f64 accumulation).
+#[inline]
+pub fn dot_f32_block(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection
+        return unsafe { avx2::dot_f32_block(a, b) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if active_isa() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64
+        return unsafe { neon::dot_f32_block(a, b) };
+    }
+    scalar::dot_f32_block(a, b)
+}
+
+/// One-block `<a, b>` for two f64 slices.
+#[inline]
+pub fn dot_f64_block(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection
+        return unsafe { avx2::dot_f64_block(a, b) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if active_isa() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64
+        return unsafe { neon::dot_f64_block(a, b) };
+    }
+    scalar::dot_f64_block(a, b)
+}
+
+/// Mixed dot `<a, b>`, a f32 / b f64, blocked per the contract.
+#[inline]
+pub fn dot_mixed(a: &[f32], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    fold_blocks(a.len(), |lo, hi| dot_mixed_block(&a[lo..hi], &b[lo..hi]))
+}
+
+/// `<a, b>` of two f32 slices with f64 accumulation, blocked.
+#[inline]
+pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    fold_blocks(a.len(), |lo, hi| dot_f32_block(&a[lo..hi], &b[lo..hi]))
+}
+
+/// `<a, b>` of two f64 slices, blocked.
+#[inline]
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    fold_blocks(a.len(), |lo, hi| dot_f64_block(&a[lo..hi], &b[lo..hi]))
+}
+
+/// `y += alpha * x` (x f32, y f64). Elementwise — the SIMD form is the
+/// scalar operation per element, so it is bit-identical unblocked.
+/// `alpha == 0.0` returns immediately on every backend (adding `±0.0`
+/// could flip the sign bit of a `-0.0` in `y`).
+#[inline]
+pub fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection
+        unsafe { avx2::axpy_f64(alpha, x, y) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if active_isa() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64
+        unsafe { neon::axpy_f64(alpha, x, y) };
+        return;
+    }
+    scalar::axpy_f64(alpha, x, y);
+}
+
+/// `out = a + s * b` elementwise (f64).
+#[inline]
+pub fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection
+        unsafe { avx2::scale_add(a, s, b, out) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if active_isa() == Isa::Neon {
+        // SAFETY: NEON is baseline on aarch64
+        unsafe { neon::scale_add(a, s, b, out) };
+        return;
+    }
+    scalar::scale_add(a, s, b, out);
+}
+
+/// Sparse `<col, v>` against a dense f64 vector, blocked over *stored*
+/// entries with the same contract (a fully-stored column is therefore
+/// bit-identical to the dense kernel). AVX2 uses hardware gathers; the
+/// gather path requires `v.len() <= i32::MAX` (gather offsets are
+/// signed 32-bit) and falls back to scalar beyond that.
+#[inline]
+pub fn sp_dot_mixed(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    fold_blocks(values.len(), |lo, hi| {
+        sp_dot_mixed_block(&indices[lo..hi], &values[lo..hi], v)
+    })
+}
+
+/// Sparse `<col, v>` against a dense f32 vector (f64 accumulation),
+/// blocked over stored entries. Same gather policy as [`sp_dot_mixed`].
+#[inline]
+pub fn sp_dot_f32_f64(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    fold_blocks(values.len(), |lo, hi| {
+        sp_dot_f32_block(&indices[lo..hi], &values[lo..hi], v)
+    })
+}
+
+/// Sparse `y += alpha * col` scatter. There is no scatter instruction in
+/// AVX2/NEON, so every backend shares the scalar loop (index order —
+/// strictly increasing rows — is the accumulation order).
+#[inline]
+pub fn sp_axpy_f64(alpha: f64, indices: &[u32], values: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(indices.len(), values.len());
+    if alpha == 0.0 {
+        return;
+    }
+    scalar::sp_axpy_f64(alpha, indices, values, y);
+}
+
+#[inline]
+fn sp_dot_mixed_block(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 && v.len() <= i32::MAX as usize {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection;
+        // the kernel bounds-checks every gathered index against v.len()
+        return unsafe { avx2::sp_dot_mixed_block(indices, values, v) };
+    }
+    scalar::sp_dot_mixed_block(indices, values, v)
+}
+
+#[inline]
+fn sp_dot_f32_block(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if active_isa() == Isa::Avx2 && v.len() <= i32::MAX as usize {
+        // SAFETY: active_isa() returns Avx2 only after runtime detection;
+        // the kernel bounds-checks every gathered index against v.len()
+        return unsafe { avx2::sp_dot_f32_block(indices, values, v) };
+    }
+    scalar::sp_dot_f32_block(indices, values, v)
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference (the contract's defining implementation)
+// ---------------------------------------------------------------------------
+
+/// Portable reference implementation of every kernel — the definition of
+/// the accumulation contract. Always compiled; the SIMD backends are
+/// verified bit-identical against it (`rust/tests/simd_kernels.rs`).
+pub mod scalar {
+    use super::{fold_blocks, ACC_LANES};
+
+    /// One-block mixed dot under the contract (lanes + tree + tail).
+    #[inline]
+    pub fn dot_mixed_block(a: &[f32], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / ACC_LANES;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut s4, mut s5, mut s6, mut s7) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let j = c * ACC_LANES;
+            s0 += a[j] as f64 * b[j];
+            s1 += a[j + 1] as f64 * b[j + 1];
+            s2 += a[j + 2] as f64 * b[j + 2];
+            s3 += a[j + 3] as f64 * b[j + 3];
+            s4 += a[j + 4] as f64 * b[j + 4];
+            s5 += a[j + 5] as f64 * b[j + 5];
+            s6 += a[j + 6] as f64 * b[j + 6];
+            s7 += a[j + 7] as f64 * b[j + 7];
+        }
+        let mut acc = ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7));
+        for i in chunks * ACC_LANES..n {
+            acc += a[i] as f64 * b[i];
+        }
+        acc
+    }
+
+    /// One-block f32×f32 dot (f64 accumulation) under the contract.
+    #[inline]
+    pub fn dot_f32_block(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / ACC_LANES;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut s4, mut s5, mut s6, mut s7) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let j = c * ACC_LANES;
+            s0 += a[j] as f64 * b[j] as f64;
+            s1 += a[j + 1] as f64 * b[j + 1] as f64;
+            s2 += a[j + 2] as f64 * b[j + 2] as f64;
+            s3 += a[j + 3] as f64 * b[j + 3] as f64;
+            s4 += a[j + 4] as f64 * b[j + 4] as f64;
+            s5 += a[j + 5] as f64 * b[j + 5] as f64;
+            s6 += a[j + 6] as f64 * b[j + 6] as f64;
+            s7 += a[j + 7] as f64 * b[j + 7] as f64;
+        }
+        let mut acc = ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7));
+        for i in chunks * ACC_LANES..n {
+            acc += a[i] as f64 * b[i] as f64;
+        }
+        acc
+    }
+
+    /// One-block f64×f64 dot under the contract.
+    #[inline]
+    pub fn dot_f64_block(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / ACC_LANES;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut s4, mut s5, mut s6, mut s7) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let j = c * ACC_LANES;
+            s0 += a[j] * b[j];
+            s1 += a[j + 1] * b[j + 1];
+            s2 += a[j + 2] * b[j + 2];
+            s3 += a[j + 3] * b[j + 3];
+            s4 += a[j + 4] * b[j + 4];
+            s5 += a[j + 5] * b[j + 5];
+            s6 += a[j + 6] * b[j + 6];
+            s7 += a[j + 7] * b[j + 7];
+        }
+        let mut acc = ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7));
+        for i in chunks * ACC_LANES..n {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+
+    /// One-block sparse mixed dot (lanes run over stored entries).
+    #[inline]
+    pub fn sp_dot_mixed_block(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
+        let k = values.len();
+        let chunks = k / ACC_LANES;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut s4, mut s5, mut s6, mut s7) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let j = c * ACC_LANES;
+            s0 += values[j] as f64 * v[indices[j] as usize];
+            s1 += values[j + 1] as f64 * v[indices[j + 1] as usize];
+            s2 += values[j + 2] as f64 * v[indices[j + 2] as usize];
+            s3 += values[j + 3] as f64 * v[indices[j + 3] as usize];
+            s4 += values[j + 4] as f64 * v[indices[j + 4] as usize];
+            s5 += values[j + 5] as f64 * v[indices[j + 5] as usize];
+            s6 += values[j + 6] as f64 * v[indices[j + 6] as usize];
+            s7 += values[j + 7] as f64 * v[indices[j + 7] as usize];
+        }
+        let mut acc = ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7));
+        for j in chunks * ACC_LANES..k {
+            acc += values[j] as f64 * v[indices[j] as usize];
+        }
+        acc
+    }
+
+    /// One-block sparse dot against a dense f32 vector.
+    #[inline]
+    pub fn sp_dot_f32_block(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
+        let k = values.len();
+        let chunks = k / ACC_LANES;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut s4, mut s5, mut s6, mut s7) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for c in 0..chunks {
+            let j = c * ACC_LANES;
+            s0 += values[j] as f64 * v[indices[j] as usize] as f64;
+            s1 += values[j + 1] as f64 * v[indices[j + 1] as usize] as f64;
+            s2 += values[j + 2] as f64 * v[indices[j + 2] as usize] as f64;
+            s3 += values[j + 3] as f64 * v[indices[j + 3] as usize] as f64;
+            s4 += values[j + 4] as f64 * v[indices[j + 4] as usize] as f64;
+            s5 += values[j + 5] as f64 * v[indices[j + 5] as usize] as f64;
+            s6 += values[j + 6] as f64 * v[indices[j + 6] as usize] as f64;
+            s7 += values[j + 7] as f64 * v[indices[j + 7] as usize] as f64;
+        }
+        let mut acc = ((s0 + s1) + (s2 + s3)) + ((s4 + s5) + (s6 + s7));
+        for j in chunks * ACC_LANES..k {
+            acc += values[j] as f64 * v[indices[j] as usize] as f64;
+        }
+        acc
+    }
+
+    /// Full blocked mixed dot (reference composite of the block kernel).
+    #[inline]
+    pub fn dot_mixed(a: &[f32], b: &[f64]) -> f64 {
+        fold_blocks(a.len(), |lo, hi| dot_mixed_block(&a[lo..hi], &b[lo..hi]))
+    }
+
+    /// Full blocked f32×f32 dot.
+    #[inline]
+    pub fn dot_f32_f64(a: &[f32], b: &[f32]) -> f64 {
+        fold_blocks(a.len(), |lo, hi| dot_f32_block(&a[lo..hi], &b[lo..hi]))
+    }
+
+    /// Full blocked f64×f64 dot.
+    #[inline]
+    pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        fold_blocks(a.len(), |lo, hi| dot_f64_block(&a[lo..hi], &b[lo..hi]))
+    }
+
+    /// Full blocked sparse mixed dot.
+    #[inline]
+    pub fn sp_dot_mixed(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
+        fold_blocks(values.len(), |lo, hi| {
+            sp_dot_mixed_block(&indices[lo..hi], &values[lo..hi], v)
+        })
+    }
+
+    /// Full blocked sparse f32 dot.
+    #[inline]
+    pub fn sp_dot_f32_f64(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
+        fold_blocks(values.len(), |lo, hi| {
+            sp_dot_f32_block(&indices[lo..hi], &values[lo..hi], v)
+        })
+    }
+
+    /// `y += alpha * x` (elementwise: mul rounds, then add).
+    #[inline]
+    pub fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
+        if alpha == 0.0 {
+            return;
+        }
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * *xi as f64;
+        }
+    }
+
+    /// `out = a + s * b` elementwise.
+    #[inline]
+    pub fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
+        for i in 0..a.len() {
+            out[i] = a[i] + s * b[i];
+        }
+    }
+
+    /// Sparse scatter `y[indices[k]] += alpha * values[k]`.
+    #[inline]
+    pub fn sp_axpy_f64(alpha: f64, indices: &[u32], values: &[f32], y: &mut [f64]) {
+        if alpha == 0.0 {
+            return;
+        }
+        for (i, v) in indices.iter().zip(values) {
+            y[*i as usize] += alpha * *v as f64;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 AVX2
+// ---------------------------------------------------------------------------
+
+/// AVX2 kernels. Each `__m256d` accumulator holds four of the contract's
+/// eight lanes (`acc_lo` = s0..s3, `acc_hi` = s4..s7); `mul_pd` +
+/// `add_pd` per chunk performs exactly the scalar `s_k += a·b` (no FMA),
+/// and the reduction stores the lanes out and applies the scalar tree.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Extract the eight lanes and reduce with the contract's tree.
+    #[inline]
+    unsafe fn reduce8(lo: __m256d, hi: __m256d) -> f64 {
+        let mut s = [0.0f64; 8];
+        _mm256_storeu_pd(s.as_mut_ptr(), lo);
+        _mm256_storeu_pd(s.as_mut_ptr().add(4), hi);
+        ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+    }
+
+    /// Widen 8 f32 lanes to two f64 quads (a[j..j+4], a[j+4..j+8]).
+    #[inline]
+    unsafe fn widen8(p: *const f32) -> (__m256d, __m256d) {
+        let v = _mm256_loadu_ps(p);
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+        (lo, hi)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_mixed_block(a: &[f32], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let j = c * 8;
+            let (alo, ahi) = widen8(a.as_ptr().add(j));
+            let blo = _mm256_loadu_pd(b.as_ptr().add(j));
+            let bhi = _mm256_loadu_pd(b.as_ptr().add(j + 4));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        }
+        let mut acc = reduce8(acc_lo, acc_hi);
+        for i in chunks * 8..n {
+            acc += a[i] as f64 * b[i];
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32_block(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let j = c * 8;
+            let (alo, ahi) = widen8(a.as_ptr().add(j));
+            let (blo, bhi) = widen8(b.as_ptr().add(j));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        }
+        let mut acc = reduce8(acc_lo, acc_hi);
+        for i in chunks * 8..n {
+            acc += a[i] as f64 * b[i] as f64;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f64_block(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let j = c * 8;
+            let alo = _mm256_loadu_pd(a.as_ptr().add(j));
+            let ahi = _mm256_loadu_pd(a.as_ptr().add(j + 4));
+            let blo = _mm256_loadu_pd(b.as_ptr().add(j));
+            let bhi = _mm256_loadu_pd(b.as_ptr().add(j + 4));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        }
+        let mut acc = reduce8(acc_lo, acc_hi);
+        for i in chunks * 8..n {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+
+    /// Sparse mixed dot via `vgatherdpd`. Caller guarantees
+    /// `v.len() <= i32::MAX`; every chunk's indices are range-checked
+    /// before the gather (the scalar path would panic on the same
+    /// out-of-range access, so behavior matches).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sp_dot_mixed_block(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
+        let k = values.len();
+        let n = v.len();
+        let chunks = k / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let j = c * 8;
+            let mut mx = 0u32;
+            for t in 0..8 {
+                mx = mx.max(indices[j + t]);
+            }
+            assert!((mx as usize) < n, "sparse row index {mx} out of range (n = {n})");
+            let idx_lo = _mm_loadu_si128(indices.as_ptr().add(j) as *const __m128i);
+            let idx_hi = _mm_loadu_si128(indices.as_ptr().add(j + 4) as *const __m128i);
+            let vlo = _mm256_i32gather_pd::<8>(v.as_ptr(), idx_lo);
+            let vhi = _mm256_i32gather_pd::<8>(v.as_ptr(), idx_hi);
+            let wv = _mm256_loadu_ps(values.as_ptr().add(j));
+            let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
+            let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(wlo, vlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(whi, vhi));
+        }
+        let mut acc = reduce8(acc_lo, acc_hi);
+        for j in chunks * 8..k {
+            acc += values[j] as f64 * v[indices[j] as usize];
+        }
+        acc
+    }
+
+    /// Sparse f32 dot via `vgatherdps`; same guard policy as
+    /// [`sp_dot_mixed_block`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sp_dot_f32_block(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
+        let k = values.len();
+        let n = v.len();
+        let chunks = k / 8;
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let j = c * 8;
+            let mut mx = 0u32;
+            for t in 0..8 {
+                mx = mx.max(indices[j + t]);
+            }
+            assert!((mx as usize) < n, "sparse row index {mx} out of range (n = {n})");
+            let idx = _mm256_loadu_si256(indices.as_ptr().add(j) as *const __m256i);
+            let g = _mm256_i32gather_ps::<4>(v.as_ptr(), idx);
+            let vlo = _mm256_cvtps_pd(_mm256_castps256_ps128(g));
+            let vhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(g));
+            let wv = _mm256_loadu_ps(values.as_ptr().add(j));
+            let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
+            let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(wlo, vlo));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(whi, vhi));
+        }
+        let mut acc = reduce8(acc_lo, acc_hi);
+        for j in chunks * 8..k {
+            acc += values[j] as f64 * v[indices[j] as usize] as f64;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 8;
+        let va = _mm256_set1_pd(alpha);
+        for c in 0..chunks {
+            let j = c * 8;
+            let (xlo, xhi) = widen8(x.as_ptr().add(j));
+            let ylo = _mm256_loadu_pd(y.as_ptr().add(j));
+            let yhi = _mm256_loadu_pd(y.as_ptr().add(j + 4));
+            _mm256_storeu_pd(
+                y.as_mut_ptr().add(j),
+                _mm256_add_pd(ylo, _mm256_mul_pd(va, xlo)),
+            );
+            _mm256_storeu_pd(
+                y.as_mut_ptr().add(j + 4),
+                _mm256_add_pd(yhi, _mm256_mul_pd(va, xhi)),
+            );
+        }
+        for i in chunks * 8..n {
+            y[i] += alpha * x[i] as f64;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
+        let n = a.len();
+        let chunks = n / 4;
+        let vs = _mm256_set1_pd(s);
+        for c in 0..chunks {
+            let j = c * 4;
+            let av = _mm256_loadu_pd(a.as_ptr().add(j));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(j));
+            _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_add_pd(av, _mm256_mul_pd(vs, bv)));
+        }
+        for i in chunks * 4..n {
+            out[i] = a[i] + s * b[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 NEON
+// ---------------------------------------------------------------------------
+
+/// NEON kernels. Four `float64x2_t` accumulators hold the contract's
+/// eight lanes pairwise (`s01` = s0,s1 … `s67` = s6,s7); `vmulq` +
+/// `vaddq` per chunk matches the scalar `s_k += a·b` (no `vfmaq` — FMA
+/// would skip the product rounding the contract requires). NEON has no
+/// gather, so the sparse dots stay on the scalar path.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// Reduce the four lane pairs with the contract's tree.
+    #[inline]
+    unsafe fn reduce8(
+        s01: float64x2_t,
+        s23: float64x2_t,
+        s45: float64x2_t,
+        s67: float64x2_t,
+    ) -> f64 {
+        let p0 = vgetq_lane_f64::<0>(s01) + vgetq_lane_f64::<1>(s01);
+        let p1 = vgetq_lane_f64::<0>(s23) + vgetq_lane_f64::<1>(s23);
+        let p2 = vgetq_lane_f64::<0>(s45) + vgetq_lane_f64::<1>(s45);
+        let p3 = vgetq_lane_f64::<0>(s67) + vgetq_lane_f64::<1>(s67);
+        (p0 + p1) + (p2 + p3)
+    }
+
+    /// Widen 8 f32 lanes to four f64 pairs.
+    #[inline]
+    unsafe fn widen8(p: *const f32) -> (float64x2_t, float64x2_t, float64x2_t, float64x2_t) {
+        let lo4 = vld1q_f32(p);
+        let hi4 = vld1q_f32(p.add(4));
+        (
+            vcvt_f64_f32(vget_low_f32(lo4)),
+            vcvt_high_f64_f32(lo4),
+            vcvt_f64_f32(vget_low_f32(hi4)),
+            vcvt_high_f64_f32(hi4),
+        )
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_mixed_block(a: &[f32], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut s01 = vdupq_n_f64(0.0);
+        let mut s23 = vdupq_n_f64(0.0);
+        let mut s45 = vdupq_n_f64(0.0);
+        let mut s67 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let j = c * 8;
+            let (a01, a23, a45, a67) = widen8(a.as_ptr().add(j));
+            s01 = vaddq_f64(s01, vmulq_f64(a01, vld1q_f64(b.as_ptr().add(j))));
+            s23 = vaddq_f64(s23, vmulq_f64(a23, vld1q_f64(b.as_ptr().add(j + 2))));
+            s45 = vaddq_f64(s45, vmulq_f64(a45, vld1q_f64(b.as_ptr().add(j + 4))));
+            s67 = vaddq_f64(s67, vmulq_f64(a67, vld1q_f64(b.as_ptr().add(j + 6))));
+        }
+        let mut acc = reduce8(s01, s23, s45, s67);
+        for i in chunks * 8..n {
+            acc += a[i] as f64 * b[i];
+        }
+        acc
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32_block(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut s01 = vdupq_n_f64(0.0);
+        let mut s23 = vdupq_n_f64(0.0);
+        let mut s45 = vdupq_n_f64(0.0);
+        let mut s67 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let j = c * 8;
+            let (a01, a23, a45, a67) = widen8(a.as_ptr().add(j));
+            let (b01, b23, b45, b67) = widen8(b.as_ptr().add(j));
+            s01 = vaddq_f64(s01, vmulq_f64(a01, b01));
+            s23 = vaddq_f64(s23, vmulq_f64(a23, b23));
+            s45 = vaddq_f64(s45, vmulq_f64(a45, b45));
+            s67 = vaddq_f64(s67, vmulq_f64(a67, b67));
+        }
+        let mut acc = reduce8(s01, s23, s45, s67);
+        for i in chunks * 8..n {
+            acc += a[i] as f64 * b[i] as f64;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f64_block(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut s01 = vdupq_n_f64(0.0);
+        let mut s23 = vdupq_n_f64(0.0);
+        let mut s45 = vdupq_n_f64(0.0);
+        let mut s67 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let j = c * 8;
+            let m0 = vmulq_f64(vld1q_f64(a.as_ptr().add(j)), vld1q_f64(b.as_ptr().add(j)));
+            let m1 =
+                vmulq_f64(vld1q_f64(a.as_ptr().add(j + 2)), vld1q_f64(b.as_ptr().add(j + 2)));
+            let m2 =
+                vmulq_f64(vld1q_f64(a.as_ptr().add(j + 4)), vld1q_f64(b.as_ptr().add(j + 4)));
+            let m3 =
+                vmulq_f64(vld1q_f64(a.as_ptr().add(j + 6)), vld1q_f64(b.as_ptr().add(j + 6)));
+            s01 = vaddq_f64(s01, m0);
+            s23 = vaddq_f64(s23, m1);
+            s45 = vaddq_f64(s45, m2);
+            s67 = vaddq_f64(s67, m3);
+        }
+        let mut acc = reduce8(s01, s23, s45, s67);
+        for i in chunks * 8..n {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
+        let n = x.len();
+        let chunks = n / 8;
+        let va = vdupq_n_f64(alpha);
+        for c in 0..chunks {
+            let j = c * 8;
+            let (x01, x23, x45, x67) = widen8(x.as_ptr().add(j));
+            let p = y.as_mut_ptr();
+            vst1q_f64(p.add(j), vaddq_f64(vld1q_f64(p.add(j)), vmulq_f64(va, x01)));
+            vst1q_f64(p.add(j + 2), vaddq_f64(vld1q_f64(p.add(j + 2)), vmulq_f64(va, x23)));
+            vst1q_f64(p.add(j + 4), vaddq_f64(vld1q_f64(p.add(j + 4)), vmulq_f64(va, x45)));
+            vst1q_f64(p.add(j + 6), vaddq_f64(vld1q_f64(p.add(j + 6)), vmulq_f64(va, x67)));
+        }
+        for i in chunks * 8..n {
+            y[i] += alpha * x[i] as f64;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
+        let n = a.len();
+        let chunks = n / 2;
+        let vs = vdupq_n_f64(s);
+        for c in 0..chunks {
+            let j = c * 2;
+            let av = vld1q_f64(a.as_ptr().add(j));
+            let bv = vld1q_f64(b.as_ptr().add(j));
+            vst1q_f64(out.as_mut_ptr().add(j), vaddq_f64(av, vmulq_f64(vs, bv)));
+        }
+        if n % 2 == 1 {
+            out[n - 1] = a[n - 1] + s * b[n - 1];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn data(n: usize, seed: u64) -> (Vec<f32>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_bitwise() {
+        for n in [0usize, 7, 8, 17, ACC_BLOCK, ACC_BLOCK + 3, 3 * ACC_BLOCK + 5] {
+            let (a, b) = data(n, 42 + n as u64);
+            let a32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            assert_eq!(dot_mixed(&a, &b).to_bits(), scalar::dot_mixed(&a, &b).to_bits());
+            assert_eq!(
+                dot_f32_f64(&a, &a32).to_bits(),
+                scalar::dot_f32_f64(&a, &a32).to_bits()
+            );
+            assert_eq!(dot_f64(&b, &b).to_bits(), scalar::dot_f64(&b, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn force_scalar_pins_backend() {
+        force_scalar(true);
+        assert_eq!(active_isa(), Isa::Scalar);
+        assert_eq!(active_backend(), "scalar");
+        force_scalar(false);
+        // whatever the platform offers, the report string is well-formed
+        assert!(["scalar", "avx2", "neon"].contains(&active_backend()));
+    }
+
+    #[test]
+    fn blocked_fold_starts_at_zero() {
+        // empty inputs reduce to the fold's 0.0 seed on every backend
+        assert_eq!(dot_mixed(&[], &[]).to_bits(), 0.0f64.to_bits());
+        assert_eq!(dot_f64(&[], &[]).to_bits(), 0.0f64.to_bits());
+    }
+}

@@ -7,12 +7,15 @@
 //! product stay unit-stride over the *stored* entries and skip zeros
 //! entirely.
 //!
-//! Precision/parity policy: every kernel accumulates in f64 with the same
-//! 4-way unrolled association order as its dense counterpart in
-//! [`super::dense`]. A CSC matrix that stores all `n` entries of a column
-//! (indices `0..n`) therefore produces **bit-identical** results to the
-//! dense kernel on that column — the property the dense/CSC parity suite
-//! in `rust/tests/prop_invariants.rs` leans on.
+//! Precision/parity policy: every kernel follows the bit-pinned
+//! accumulation contract of [`super::simd`] (eight interleaved f64
+//! accumulators per `ACC_BLOCK` run, fixed tree reduction — DESIGN.md
+//! §12), blocked over *stored* entries. A CSC matrix that stores all `n`
+//! entries of a column (indices `0..n`) therefore produces
+//! **bit-identical** results to the dense kernel on that column — the
+//! property the dense/CSC parity suite in `rust/tests/prop_invariants.rs`
+//! leans on. On AVX2 the dots use hardware gathers over the index runs;
+//! NEON has no gather, so sparse dots take the scalar contract path.
 
 use anyhow::{ensure, Result};
 
@@ -242,63 +245,30 @@ impl CscMatrix {
 }
 
 // ---------------------------------------------------------------------------
-// sparse kernels (association order matches linalg::dense exactly)
+// sparse kernels (accumulation contract shared with linalg::dense)
 // ---------------------------------------------------------------------------
 
-/// Sparse `<col, v>` against a dense f64 vector, f64 accumulation, 4-way
-/// unrolled in the same association order as [`super::dense::dot_mixed`].
+/// Sparse `<col, v>` against a dense f64 vector — the stored-entry twin
+/// of [`super::dense::dot_mixed`] under the [`super::simd`] contract.
 #[inline]
 pub fn sp_dot_mixed(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
     debug_assert_eq!(indices.len(), values.len());
-    let k = values.len();
-    let chunks = k / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for c in 0..chunks {
-        let j = c * 4;
-        s0 += values[j] as f64 * v[indices[j] as usize];
-        s1 += values[j + 1] as f64 * v[indices[j + 1] as usize];
-        s2 += values[j + 2] as f64 * v[indices[j + 2] as usize];
-        s3 += values[j + 3] as f64 * v[indices[j + 3] as usize];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..k {
-        s += values[j] as f64 * v[indices[j] as usize];
-    }
-    s
+    super::simd::sp_dot_mixed(indices, values, v)
 }
 
-/// Sparse `<col, v>` against a dense f32 vector (f64 accumulation), same
-/// association order as [`super::dense::dot_f32_f64`].
+/// Sparse `<col, v>` against a dense f32 vector (f64 accumulation), the
+/// stored-entry twin of [`super::dense::dot_f32_f64`].
 #[inline]
 pub fn sp_dot_f32_f64(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
     debug_assert_eq!(indices.len(), values.len());
-    let k = values.len();
-    let chunks = k / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for c in 0..chunks {
-        let j = c * 4;
-        s0 += values[j] as f64 * v[indices[j] as usize] as f64;
-        s1 += values[j + 1] as f64 * v[indices[j + 1] as usize] as f64;
-        s2 += values[j + 2] as f64 * v[indices[j + 2] as usize] as f64;
-        s3 += values[j + 3] as f64 * v[indices[j + 3] as usize] as f64;
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..k {
-        s += values[j] as f64 * v[indices[j] as usize] as f64;
-    }
-    s
+    super::simd::sp_dot_f32_f64(indices, values, v)
 }
 
 /// Sparse `y += alpha * col` scatter into an f64 accumulator.
 #[inline]
 pub fn sp_axpy_f64(alpha: f64, indices: &[u32], values: &[f32], y: &mut [f64]) {
     debug_assert_eq!(indices.len(), values.len());
-    if alpha == 0.0 {
-        return;
-    }
-    for (i, v) in indices.iter().zip(values) {
-        y[*i as usize] += alpha * *v as f64;
-    }
+    super::simd::sp_axpy_f64(alpha, indices, values, y)
 }
 
 #[cfg(test)]

@@ -9,13 +9,20 @@
 //! contiguous feature chunks / tasks via [`crate::util::parallel_chunks`]
 //! on the persistent executor (DESIGN.md §11): no sweep ever spawns a
 //! thread, and sweeps issued from inside another parallel region run
-//! inline on their worker. Both address columns through
-//! [`crate::linalg::ColRef`], so they are backend-agnostic: on CSC
-//! storage the inner loops touch only stored nonzeros (DESIGN.md §6).
-//! Sweeps below [`crate::util::serial_below`]'s cutoff skip the pool
-//! entirely.
+//! inline on their worker. On the dense backend both are additionally
+//! **cache-blocked** ([`corr_panel`] / [`axpy_panel`]): the sweep walks
+//! [`crate::linalg::simd::ACC_BLOCK`]-sized sample blocks in the outer
+//! loop and streams many columns past each resident block of `v_t` /
+//! `z_t`, instead of re-streaming the whole vector per column. Because
+//! blocking runs on the kernel layer's accumulation-contract boundaries
+//! (DESIGN.md §12), the blocked sweep is bit-identical to the plain
+//! per-column dot. CSC columns go through [`crate::linalg::ColRef`]
+//! unblocked — their inner loops touch only stored nonzeros (DESIGN.md
+//! §6). Sweeps below [`crate::util::serial_below`]'s cutoff skip the
+//! pool entirely.
 
-use crate::data::{Dataset, ShardedDataset};
+use crate::data::{Dataset, MatrixStore, ShardedDataset, Task};
+use crate::linalg::simd;
 use crate::util::{parallel_chunks, scoped_pool, serial_below};
 
 /// One f64 vector per task (sample-space block vector).
@@ -53,17 +60,104 @@ pub fn stacked_scale_add(a: &Stacked, s: f64, b: &Stacked) -> Stacked {
         .collect()
 }
 
+/// out = a + s*b written into an existing buffer (no allocation — the
+/// solvers' hot loops use the `_into`/`_inplace` family).
+pub fn stacked_scale_add_into(a: &Stacked, s: f64, b: &Stacked, out: &mut Stacked) {
+    debug_assert_eq!(a.len(), out.len());
+    for ((x, y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        crate::linalg::scale_add(x, s, y, o);
+    }
+}
+
 /// out = s*a (allocating).
 pub fn stacked_scale(a: &Stacked, s: f64) -> Stacked {
     a.iter().map(|x| x.iter().map(|v| v * s).collect()).collect()
+}
+
+/// out = s*a written into an existing buffer (no allocation).
+pub fn stacked_scale_into(a: &Stacked, s: f64, out: &mut Stacked) {
+    debug_assert_eq!(a.len(), out.len());
+    for (x, o) in a.iter().zip(out.iter_mut()) {
+        for (oi, &xi) in o.iter_mut().zip(x) {
+            *oi = xi * s;
+        }
+    }
+}
+
+/// a *= s in place.
+pub fn stacked_scale_inplace(a: &mut Stacked, s: f64) {
+    for x in a.iter_mut() {
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
 // the two hot sweeps
 // ---------------------------------------------------------------------------
 
+/// Cache-blocked panel of column dots for one task:
+/// `out[(l-start)*stride] += <x_l, vt>` for `l` in `[start, end)`.
+///
+/// Dense backend: the outer loop walks [`simd::ACC_BLOCK`]-sized sample
+/// blocks and the inner loop streams the panel's columns past the
+/// resident block of `vt`, so `vt` is read once per block instead of
+/// once per column. Per-column block partials accumulate in the same
+/// order as [`crate::linalg::dense::dot_mixed`]'s internal fold — the
+/// blocked sweep is bit-identical to the plain dot (DESIGN.md §12). CSC
+/// columns are one stored-entry scan each and need no panel blocking.
+///
+/// Accumulates with `+=` into a zeroed buffer: the contract's fold also
+/// starts at `0.0`, so this cannot differ (even on signed zeros) from
+/// assigning the dot directly.
+pub(crate) fn corr_panel(
+    task: &Task,
+    start: usize,
+    end: usize,
+    vt: &[f64],
+    out: &mut [f64],
+    stride: usize,
+) {
+    match &task.x {
+        MatrixStore::Dense(x) => {
+            let n = task.n;
+            debug_assert_eq!(vt.len(), n);
+            let mut b0 = 0usize;
+            while b0 < n {
+                let b1 = (b0 + simd::ACC_BLOCK).min(n);
+                let vblk = &vt[b0..b1];
+                for l in start..end {
+                    let col = &x[l * n + b0..l * n + b1];
+                    out[(l - start) * stride] += simd::dot_mixed_block(col, vblk);
+                }
+                b0 = b1;
+            }
+            // n == 0: no blocks, out stays zero — matches an empty dot
+        }
+        MatrixStore::Csc(_) => {
+            for l in start..end {
+                out[(l - start) * stride] += task.col(l).dot_mixed(vt);
+            }
+        }
+    }
+}
+
+/// The `(end-start) × T` row-major slice of the correlation matrix —
+/// [`task_corr`]'s per-worker body, shared with the screening score
+/// sweeps so every consumer gets the blocked panels.
+pub(crate) fn corr_chunk(ds: &Dataset, start: usize, end: usize, v: &Stacked) -> Vec<f64> {
+    let t_count = ds.t();
+    let mut part = vec![0.0f64; (end - start) * t_count];
+    for (ti, task) in ds.tasks.iter().enumerate() {
+        corr_panel(task, start, end, &v[ti], &mut part[ti..], t_count);
+    }
+    part
+}
+
 /// c[l*T + t] = <x_l^{(t)}, v_t>  — the correlation sweep (Eq. 8's m^l rows,
-/// FISTA's gradient, the screening moments). Parallel over feature chunks.
+/// FISTA's gradient, the screening moments). Parallel over feature chunks,
+/// cache-blocked per panel ([`corr_panel`]).
 pub fn task_corr(ds: &Dataset, v: &Stacked) -> Vec<f64> {
     let t_count = ds.t();
     debug_assert_eq!(v.len(), t_count);
@@ -73,25 +167,18 @@ pub fn task_corr(ds: &Dataset, v: &Stacked) -> Vec<f64> {
     // so sweeps below the stored-entry cutoff stay serial
     let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     // parallel over feature chunks: each worker fills a disjoint slice
-    let chunks = parallel_chunks(d, workers, |_, start, end| {
-        let mut part = vec![0.0f64; (end - start) * t_count];
-        for (ti, task) in ds.tasks.iter().enumerate() {
-            let vt = &v[ti];
-            for l in start..end {
-                part[(l - start) * t_count + ti] = task.col(l).dot_mixed(vt);
-            }
-        }
-        (start, part)
-    });
+    let chunks =
+        parallel_chunks(d, workers, |_, start, end| (start, corr_chunk(ds, start, end, v)));
     for (start, part) in chunks {
         out[start * t_count..start * t_count + part.len()].copy_from_slice(&part);
     }
     out
 }
 
-/// g_l(v) = sum_t c[l,t]^2 from a correlation buffer.
+/// g_l(v) = sum_t c[l,t]^2 from a correlation buffer (contract kernel:
+/// identical to the naive sum for T < 8, SIMD-dispatched beyond).
 pub fn gscore_from_corr(corr: &[f64], t_count: usize) -> Vec<f64> {
-    corr.chunks_exact(t_count).map(|row| row.iter().map(|c| c * c).sum()).collect()
+    corr.chunks_exact(t_count).map(|row| crate::linalg::dot_f64(row, row)).collect()
 }
 
 /// g_l(v) for all features (Eq. 16).
@@ -99,9 +186,41 @@ pub fn gscore(ds: &Dataset, v: &Stacked) -> Vec<f64> {
     gscore_from_corr(&task_corr(ds, v), ds.t())
 }
 
+/// Blocked multi-column axpy panel: `z += Σ w_l · x_l` over the given
+/// `(column, weight)` pairs (weights must be nonzero — callers filter).
+///
+/// Dense backend: sample-block outer loop keeps one [`simd::ACC_BLOCK`]
+/// block of `z` resident while every active column's matching block
+/// streams past. axpy is elementwise (no cross-element accumulator), so
+/// only the *column order within each element* matters — preserved — and
+/// the blocked panel is bit-identical to per-column axpys. CSC columns
+/// scatter once each, unblocked.
+pub(crate) fn axpy_panel(task: &Task, cols: &[(usize, f64)], z: &mut [f64]) {
+    match &task.x {
+        MatrixStore::Dense(x) => {
+            let n = task.n;
+            debug_assert_eq!(z.len(), n);
+            let mut b0 = 0usize;
+            while b0 < n {
+                let b1 = (b0 + simd::ACC_BLOCK).min(n);
+                let zblk = &mut z[b0..b1];
+                for &(l, wl) in cols {
+                    simd::axpy_f64(wl, &x[l * n + b0..l * n + b1], zblk);
+                }
+                b0 = b1;
+            }
+        }
+        MatrixStore::Csc(_) => {
+            for &(l, wl) in cols {
+                task.col(l).axpy_into(wl, z);
+            }
+        }
+    }
+}
+
 /// z_t = X_t w_t for all tasks. Skips zero rows of W, so the cost scales
 /// with the *active* set — the asymmetry screening exploits. Parallel over
-/// tasks.
+/// tasks, cache-blocked per panel ([`axpy_panel`]).
 pub fn forward(ds: &Dataset, w: &[f64]) -> Stacked {
     let t_count = ds.t();
     debug_assert_eq!(w.len(), ds.d * t_count);
@@ -110,12 +229,13 @@ pub fn forward(ds: &Dataset, w: &[f64]) -> Stacked {
     scoped_pool(tasks, workers, |ti| {
         let task = &ds.tasks[ti];
         let mut z = vec![0.0f64; task.n];
-        for l in 0..ds.d {
-            let wl = w[l * t_count + ti];
-            if wl != 0.0 {
-                task.col(l).axpy_into(wl, &mut z);
-            }
-        }
+        let active: Vec<(usize, f64)> = (0..ds.d)
+            .filter_map(|l| {
+                let wl = w[l * t_count + ti];
+                (wl != 0.0).then_some((l, wl))
+            })
+            .collect();
+        axpy_panel(task, &active, &mut z);
         z
     })
 }
@@ -136,16 +256,16 @@ pub fn residual(ds: &Dataset, w: &[f64]) -> Stacked {
 // ---------------------------------------------------------------------------
 
 /// ‖W‖₂,₁ = Σ_l ‖w^l‖ over the rows of a row-major (d × T) matrix.
+/// Row norms go through [`crate::linalg::nrm2_f64`] — the same contract
+/// kernel the prox row pass uses, so activity thresholds agree.
 pub fn l21_norm(w: &[f64], t_count: usize) -> f64 {
-    w.chunks_exact(t_count)
-        .map(|row| row.iter().map(|v| v * v).sum::<f64>().sqrt())
-        .sum()
+    w.chunks_exact(t_count).map(crate::linalg::nrm2_f64).sum()
 }
 
 /// ‖w^l‖ > tol — the row-activity predicate shared by the path runners'
 /// ground-truth bookkeeping and stability selection's union-over-λ mask.
 pub fn row_is_active(row: &[f64], tol: f64) -> bool {
-    row.iter().map(|v| v * v).sum::<f64>().sqrt() > tol
+    crate::linalg::nrm2_f64(row) > tol
 }
 
 /// F(W) = ½ Σ_t ||X_t w_t − y_t||² + λ||W||₂,₁ (problem (1)).
@@ -161,7 +281,8 @@ pub fn primal_obj(ds: &Dataset, w: &[f64], lam: f64) -> f64 {
 pub fn dual_feasible(ds: &Dataset, z: Stacked) -> (Stacked, f64) {
     let m = gscore(ds, &z).into_iter().fold(0.0f64, f64::max).sqrt();
     if m > 1.0 {
-        let theta = stacked_scale(&z, 1.0 / m);
+        let mut theta = z;
+        stacked_scale_inplace(&mut theta, 1.0 / m);
         (theta, m)
     } else {
         (z, 1.0)
@@ -184,11 +305,12 @@ pub fn dual_obj(y: &Stacked, theta: &Stacked, lam: f64) -> f64 {
 /// (obj, gap, theta_feasible).
 pub fn duality_gap(ds: &Dataset, w: &[f64], lam: f64) -> (f64, f64, Stacked) {
     let y = y64(ds);
-    let r = residual(ds, w);
+    let mut r = residual(ds, w);
     let obj = 0.5 * stacked_sqnorm(&r) + lam * l21_norm(w, ds.t());
-    // z = (y - Xw)/lam = -r/lam ; scale into the feasible set F
-    let z = stacked_scale(&r, -1.0 / lam);
-    let (theta, _) = dual_feasible(ds, z);
+    // z = (y - Xw)/lam = -r/lam, scaled in place (the residual buffer is
+    // ours), then projected into the feasible set F
+    stacked_scale_inplace(&mut r, -1.0 / lam);
+    let (theta, _) = dual_feasible(ds, r);
     let dual = dual_obj(&y, &theta, lam);
     (obj, obj - dual, theta)
 }

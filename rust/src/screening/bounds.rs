@@ -22,16 +22,15 @@ fn moments(
 ) -> Vec<f64> {
     let t_count = ds.t();
     // shared serial-cutoff policy: stored sweep work, not d·N (CSC sweeps
-    // touch only nonzeros)
+    // touch only nonzeros); moments ride the same cache-blocked panels as
+    // task_corr (ops::corr_chunk)
     let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     let out = parallel_chunks(ds.d, workers, |_, start, end| {
+        let corr = crate::ops::corr_chunk(ds, start, end, o);
         let mut part = vec![0.0f64; end - start];
-        let mut a = vec![0.0f64; t_count];
         for l in start..end {
-            for (ti, task) in ds.tasks.iter().enumerate() {
-                a[ti] = task.col(l).dot_mixed(&o[ti]);
-            }
-            part[l - start] = f(&a, &b2[l * t_count..(l + 1) * t_count]);
+            let a = &corr[(l - start) * t_count..(l - start + 1) * t_count];
+            part[l - start] = f(a, &b2[l * t_count..(l + 1) * t_count]);
         }
         part
     });

@@ -63,21 +63,21 @@ impl ScreenOutcome {
 /// the sweep shared by the DPC and GAP-safe screeners. Parallel over
 /// feature chunks on the persistent executor, gated by the shared
 /// [`serial_below`] policy on the dataset's *stored* sweep work so sparse
-/// CSC problems are not pooled as if they were dense. `b2` is the cached
-/// (d × T) row-major column-squared-norm table.
+/// CSC problems are not pooled as if they were dense. The correlation
+/// moments come from the same cache-blocked panels as `task_corr`
+/// ([`crate::ops::corr_chunk`]); only the per-feature secular solve is
+/// local. `b2` is the cached (d × T) row-major column-squared-norm table.
 pub fn ball_scores(ds: &Dataset, b2: &[f64], o: &Stacked, delta: f64) -> Vec<f64> {
     let t_count = ds.t();
     debug_assert_eq!(b2.len(), ds.d * t_count);
     let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     let out = parallel_chunks(ds.d, workers, |_, start, end| {
+        let corr = crate::ops::corr_chunk(ds, start, end, o);
         let mut part = vec![0.0f64; end - start];
-        let mut a = vec![0.0f64; t_count];
         for l in start..end {
-            for (ti, task) in ds.tasks.iter().enumerate() {
-                a[ti] = task.col(l).dot_mixed(&o[ti]);
-            }
+            let a = &corr[(l - start) * t_count..(l - start + 1) * t_count];
             let b2l = &b2[l * t_count..(l + 1) * t_count];
-            part[l - start] = secular::qp1qc_max(&a, b2l, delta).s;
+            part[l - start] = secular::qp1qc_max(a, b2l, delta).s;
         }
         part
     });

@@ -38,14 +38,15 @@ pub fn verify(
     for (l, &rej) in rejected.iter().enumerate() {
         if rej {
             let row = &w[l * t_count..(l + 1) * t_count];
-            let norm = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let norm = crate::linalg::nrm2_f64(row);
             if norm > row_tol {
                 violations.push((l, norm));
             }
         }
     }
 
-    let theta = ops::stacked_scale(&ops::residual(ds, w), -1.0 / lam);
+    let mut theta = ops::residual(ds, w);
+    ops::stacked_scale_inplace(&mut theta, -1.0 / lam);
     let g = ops::gscore(ds, &theta);
     let max_rejected_g = rejected
         .iter()

@@ -31,7 +31,7 @@ use crate::screening::gap;
 
 /// Solve the row secular equation; returns ν = ‖v‖ (0 if ‖c‖ <= lam).
 fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
-    let cn2: f64 = c.iter().map(|v| v * v).sum();
+    let cn2 = crate::linalg::dot_f64(c, c);
     if cn2.sqrt() <= lam {
         return 0.0;
     }
@@ -161,21 +161,25 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
                     if let Some(kept) = gap::dynamic_keep(dsc, &b2_all, &theta, gap, lam) {
                         if !kept.is_empty() {
                             // return the dropped rows' iterate mass to the
-                            // residual before they leave the working set
+                            // residual before they leave the working set —
+                            // one blocked axpy panel per task, columns in
+                            // ascending order exactly as the old per-row
+                            // loop visited them
                             let mut is_kept = vec![false; d];
                             for &j in &kept {
                                 is_kept[j] = true;
                             }
-                            for (j, &kj) in is_kept.iter().enumerate() {
-                                if kj {
-                                    continue;
-                                }
-                                for ti in 0..t_count {
-                                    let wj = w[j * t_count + ti];
-                                    if wj != 0.0 {
-                                        dsc.tasks[ti].col(j).axpy_into(wj, &mut r[ti]);
-                                    }
-                                }
+                            for ti in 0..t_count {
+                                let dropped: Vec<(usize, f64)> = is_kept
+                                    .iter()
+                                    .enumerate()
+                                    .filter(|&(_, &kj)| !kj)
+                                    .filter_map(|(j, _)| {
+                                        let wj = w[j * t_count + ti];
+                                        (wj != 0.0).then_some((j, wj))
+                                    })
+                                    .collect();
+                                crate::ops::axpy_panel(&dsc.tasks[ti], &dropped, &mut r[ti]);
                             }
                             shrink = Some((dsc.restrict(&kept), kept));
                         }

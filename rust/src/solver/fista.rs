@@ -37,20 +37,19 @@ pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
         let mut rng = Pcg64::with_stream(0x11b5, ti as u64);
         let mut v: Vec<f64> = (0..ds.d).map(|_| rng.normal()).collect();
         let mut xv = vec![0.0f64; n];
+        let mut active: Vec<(usize, f64)> = Vec::with_capacity(ds.d);
         let mut sigma2 = 0.0f64;
         for _ in 0..iters {
-            // xv = X v
+            // xv = X v — blocked multi-column axpy panel (ops::axpy_panel)
             xv.fill(0.0);
-            for l in 0..ds.d {
-                let vl = v[l];
-                if vl != 0.0 {
-                    task.col(l).axpy_into(vl, &mut xv);
-                }
-            }
-            // v = X^T xv
-            for l in 0..ds.d {
-                v[l] = task.col(l).dot_mixed(&xv);
-            }
+            active.clear();
+            active.extend(
+                v.iter().enumerate().filter_map(|(l, &vl)| (vl != 0.0).then_some((l, vl))),
+            );
+            crate::ops::axpy_panel(task, &active, &mut xv);
+            // v = X^T xv — blocked correlation panel (stride-1 output)
+            v.fill(0.0);
+            crate::ops::corr_panel(task, 0, ds.d, &xv, &mut v, 1);
             let norm = crate::linalg::nrm2_f64(&v).max(1e-300);
             sigma2 = norm; // v = X^T X v_prev with ||v_prev|| = 1 => ||v|| -> sigma^2
             for vi in v.iter_mut() {
@@ -78,6 +77,9 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
         None => vec![0.0; d_full * t_count],
     };
     let mut v = w.clone();
+    // reusable iterate buffer: the prox output is built here and swapped
+    // into `w`, so the hot loop allocates nothing per iteration
+    let mut w_buf: Vec<f64> = Vec::with_capacity(w.len());
     let mut t = 1.0f64;
 
     let mut ws = DynamicSet::new(d_full, t_count);
@@ -99,12 +101,11 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             // gradient at the momentum point V
             let r = ops::residual(dsc, &v);
             let g = ops::task_corr(dsc, &r); // (d x T)
-            // W_new = prox(V - G/L)
-            let mut w_new = vec![0.0f64; dtc];
-            for i in 0..dtc {
-                w_new[i] = v[i] - step * g[i];
-            }
-            prox21_inplace(&mut w_new, t_count, kappa);
+            // W_new = prox(V - G/L), built in the reusable buffer via the
+            // elementwise contract kernel
+            w_buf.resize(dtc, 0.0);
+            crate::linalg::scale_add(&v, -step, &g, &mut w_buf);
+            prox21_inplace(&mut w_buf, t_count, kappa);
 
             // O'Donoghue–Candès adaptive restart: when the momentum
             // direction opposes the latest step (⟨v − w_new, w_new − w⟩ >
@@ -112,7 +113,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             // ~2-5x (EXPERIMENTS.md §Perf entry 2).
             let mut osc = 0.0f64;
             for i in 0..dtc {
-                osc += (v[i] - w_new[i]) * (w_new[i] - w[i]);
+                osc += (v[i] - w_buf[i]) * (w_buf[i] - w[i]);
             }
             if osc > 0.0 {
                 t = 1.0;
@@ -121,9 +122,10 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
             let momentum = (t - 1.0) / t_new;
             for i in 0..dtc {
-                v[i] = w_new[i] + momentum * (w_new[i] - w[i]);
+                v[i] = w_buf[i] + momentum * (w_buf[i] - w[i]);
             }
-            w = w_new;
+            // w <- w_new; the displaced iterate becomes next round's buffer
+            std::mem::swap(&mut w, &mut w_buf);
             t = t_new;
 
             let due_check = it % opts.check_every.max(1) == 0 || it == opts.max_iters;

@@ -144,11 +144,9 @@ pub struct SolveResult {
 
 impl SolveResult {
     /// Row norms ‖w^l‖ — the quantity screening certifies to be zero.
+    /// Same contract kernel as the prox/`l21_norm` row passes.
     pub fn row_norms(&self, t_count: usize) -> Vec<f64> {
-        self.w
-            .chunks_exact(t_count)
-            .map(|r| r.iter().map(|v| v * v).sum::<f64>().sqrt())
-            .collect()
+        self.w.chunks_exact(t_count).map(crate::linalg::nrm2_f64).collect()
     }
 
     /// Indices of rows with norm > tol (the active set).

@@ -2,11 +2,15 @@
 
 /// In-place prox on a row-major (d x T) matrix: each row shrinks by
 /// max(0, 1 − κ/‖row‖). Returns the number of surviving (nonzero) rows.
+/// Row norms use the contract kernel ([`crate::linalg::nrm2_f64`]) — the
+/// same one `ops::l21_norm`/`ops::row_is_active` use, so the prox's
+/// survive/zero decision and the bookkeeping's activity predicate can
+/// never disagree on a row.
 pub fn prox21_inplace(w: &mut [f64], t_count: usize, kappa: f64) -> usize {
     debug_assert_eq!(w.len() % t_count, 0);
     let mut alive = 0usize;
     for row in w.chunks_exact_mut(t_count) {
-        let norm = row.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let norm = crate::linalg::nrm2_f64(row);
         if norm <= kappa {
             row.fill(0.0);
         } else {

@@ -1,0 +1,293 @@
+//! Kernel-layer acceptance suite (DESIGN.md §12):
+//!
+//! * **Backend bit-equality** — every dispatching kernel (dense dots,
+//!   sparse dots, axpy, scale_add) returns exactly the bits of the scalar
+//!   reference implementation, across tail lengths that hit every branch
+//!   of the accumulation contract (empty, sub-lane, one chunk ± 1, one
+//!   block ± 1, multi-block) and random data.
+//! * **Blocking is the contract** — the cache-blocked panel sweeps in
+//!   `ops` (`task_corr`, `forward`) reproduce the plain per-column
+//!   kernels bit for bit, on both matrix backends.
+//! * **End-to-end pinning** — a full λ-path run is bit-identical with the
+//!   dispatcher pinned to scalar vs. free to use SIMD, so the PR 1/5
+//!   parity and determinism suites keep holding with the `simd` feature
+//!   on or off.
+//!
+//! Tests that flip the process-global [`simd::force_scalar`] switch hold
+//! `BACKEND` for their whole body so the pin cannot leak mid-test.
+
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKind};
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::Dataset;
+use mtfl_dpc::linalg::simd;
+use mtfl_dpc::ops;
+use mtfl_dpc::solver::SolveOptions;
+use mtfl_dpc::util::Pcg64;
+use std::sync::Mutex;
+
+static BACKEND: Mutex<()> = Mutex::new(());
+
+fn backend_lock() -> std::sync::MutexGuard<'static, ()> {
+    BACKEND.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pin the dispatcher to scalar for the guard's lifetime.
+struct ForceScalar;
+
+impl ForceScalar {
+    fn pin() -> Self {
+        simd::force_scalar(true);
+        ForceScalar
+    }
+}
+
+impl Drop for ForceScalar {
+    fn drop(&mut self) {
+        simd::force_scalar(false);
+    }
+}
+
+/// Every length class the contract branches on: empty, below one lane
+/// chunk, exactly one chunk, chunk ± 1, a few chunks with tails, exactly
+/// one block, block ± 1, and a multi-block size with a ragged tail.
+const LENS: &[usize] = &[
+    0,
+    1,
+    2,
+    3,
+    4,
+    5,
+    6,
+    7,
+    8,
+    9,
+    10,
+    11,
+    12,
+    13,
+    14,
+    15,
+    16,
+    17,
+    31,
+    33,
+    simd::ACC_BLOCK,
+    simd::ACC_BLOCK + 1,
+    2 * simd::ACC_BLOCK - 1,
+];
+
+fn rand_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn rand_f64(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn assert_vec_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn dense_dots_dispatch_equals_scalar_bitwise() {
+    for (li, &n) in LENS.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(0xd07, li as u64);
+        let af = rand_f32(&mut rng, n);
+        let bf = rand_f32(&mut rng, n);
+        let ad = rand_f64(&mut rng, n);
+        let bd = rand_f64(&mut rng, n);
+        let cases = [
+            ("dot_mixed", simd::dot_mixed(&af, &bd), simd::scalar::dot_mixed(&af, &bd)),
+            ("dot_f32_f64", simd::dot_f32_f64(&af, &bf), simd::scalar::dot_f32_f64(&af, &bf)),
+            ("dot_f64", simd::dot_f64(&ad, &bd), simd::scalar::dot_f64(&ad, &bd)),
+        ];
+        for (name, got, want) in cases {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{name} n={n} [{}]: dispatch {got} != scalar {want}",
+                simd::active_backend()
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_dots_match_naive_values() {
+    // the contract reassociates; the *value* must still be the same sum
+    // to normal rounding error
+    let mut rng = Pcg64::with_stream(0xacc, 1);
+    let n = 4999;
+    let a = rand_f32(&mut rng, n);
+    let b = rand_f64(&mut rng, n);
+    let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y).sum();
+    let got = simd::dot_mixed(&a, &b);
+    assert!((got - naive).abs() <= 1e-9 * naive.abs().max(1.0), "{got} vs naive {naive}");
+    let ad = rand_f64(&mut rng, n);
+    let naive2: f64 = ad.iter().map(|&x| x * x).sum();
+    let got2 = mtfl_dpc::linalg::nrm2_f64(&ad);
+    assert!((got2 * got2 - naive2).abs() <= 1e-9 * naive2.max(1.0));
+}
+
+#[test]
+fn sparse_dots_dispatch_equals_scalar_bitwise() {
+    let vlen = 6000usize;
+    for (li, &k) in LENS.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(0x59a5, li as u64);
+        // k distinct, strictly increasing row indices in [0, vlen)
+        let indices: Vec<u32> = (0..k).map(|i| (i * vlen / k.max(1)) as u32).collect();
+        let values = rand_f32(&mut rng, k);
+        let v64 = rand_f64(&mut rng, vlen);
+        let v32 = rand_f32(&mut rng, vlen);
+        let gm = simd::sp_dot_mixed(&indices, &values, &v64);
+        let wm = simd::scalar::sp_dot_mixed(&indices, &values, &v64);
+        assert_eq!(gm.to_bits(), wm.to_bits(), "sp_dot_mixed k={k}: {gm} vs {wm}");
+        let gf = simd::sp_dot_f32_f64(&indices, &values, &v32);
+        let wf = simd::scalar::sp_dot_f32_f64(&indices, &values, &v32);
+        assert_eq!(gf.to_bits(), wf.to_bits(), "sp_dot_f32_f64 k={k}: {gf} vs {wf}");
+        let mut ya = rand_f64(&mut rng, vlen);
+        let mut yb = ya.clone();
+        simd::sp_axpy_f64(0.75, &indices, &values, &mut ya);
+        simd::scalar::sp_axpy_f64(0.75, &indices, &values, &mut yb);
+        assert_vec_bits_eq(&ya, &yb, &format!("sp_axpy_f64 k={k}"));
+    }
+}
+
+#[test]
+fn elementwise_kernels_dispatch_equals_scalar_bitwise() {
+    for (li, &n) in LENS.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(0xe1e, li as u64);
+        let x = rand_f32(&mut rng, n);
+        let a = rand_f64(&mut rng, n);
+        let b = rand_f64(&mut rng, n);
+        let mut ya = rand_f64(&mut rng, n);
+        let mut yb = ya.clone();
+        simd::axpy_f64(-1.25, &x, &mut ya);
+        simd::scalar::axpy_f64(-1.25, &x, &mut yb);
+        assert_vec_bits_eq(&ya, &yb, &format!("axpy_f64 n={n}"));
+        let mut oa = vec![0.0f64; n];
+        let mut ob = vec![0.0f64; n];
+        simd::scale_add(&a, 0.375, &b, &mut oa);
+        simd::scalar::scale_add(&a, 0.375, &b, &mut ob);
+        assert_vec_bits_eq(&oa, &ob, &format!("scale_add n={n}"));
+    }
+}
+
+#[test]
+fn axpy_alpha_zero_preserves_negative_zero() {
+    // alpha == 0 must be a no-op: adding ±0.0 would flip -0.0 to +0.0
+    let x = vec![1.0f32; 9];
+    let mut y = vec![-0.0f64; 9];
+    simd::axpy_f64(0.0, &x, &mut y);
+    for (i, v) in y.iter().enumerate() {
+        assert_eq!(v.to_bits(), (-0.0f64).to_bits(), "axpy(0.0) disturbed y[{i}]");
+    }
+}
+
+/// A multi-block problem (n > ACC_BLOCK) so the panel sweeps really cross
+/// block boundaries.
+fn tall_problem() -> Dataset {
+    synthetic1(&SynthOptions {
+        t: 2,
+        n: simd::ACC_BLOCK + 52,
+        d: 6,
+        ..Default::default()
+    })
+    .0
+}
+
+#[test]
+fn blocked_task_corr_equals_per_column_dots_bitwise() {
+    for ds in [tall_problem(), tall_problem().to_csc()] {
+        let v = ops::y64(&ds);
+        let corr = ops::task_corr(&ds, &v);
+        for ti in 0..ds.t() {
+            for l in 0..ds.d {
+                let want = ds.col(ti, l).dot_mixed(&v[ti]);
+                let got = corr[l * ds.t() + ti];
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "task_corr[{l},{ti}] {got} != plain dot {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_forward_equals_per_column_axpy_bitwise() {
+    let ds = tall_problem();
+    let t = ds.t();
+    let mut rng = Pcg64::with_stream(0xf0d, 3);
+    let w: Vec<f64> =
+        (0..ds.d * t).map(|i| if i % 3 == 0 { 0.0 } else { rng.normal() }).collect();
+    let z = ops::forward(&ds, &w);
+    for ti in 0..t {
+        let mut zn = vec![0.0f64; ds.tasks[ti].n];
+        for l in 0..ds.d {
+            let wl = w[l * t + ti];
+            if wl != 0.0 {
+                let col = ds.col(ti, l).to_vec();
+                simd::axpy_f64(wl, &col, &mut zn);
+            }
+        }
+        assert_vec_bits_eq(&z[ti], &zn, &format!("forward task {ti}"));
+    }
+}
+
+#[test]
+fn col_sqnorms_bit_stable_under_backend_pin() {
+    let _g = backend_lock();
+    let ds = tall_problem();
+    let free = ds.col_sqnorms();
+    let pinned = {
+        let _p = ForceScalar::pin();
+        assert_eq!(simd::active_backend(), "scalar");
+        ds.col_sqnorms()
+    };
+    assert_vec_bits_eq(&free, &pinned, "col_sqnorms");
+}
+
+#[test]
+fn full_path_bit_identical_scalar_vs_simd_dispatch() {
+    let _g = backend_lock();
+    let ds = synthetic1(&SynthOptions {
+        t: 3,
+        n: 14,
+        d: 120,
+        support_frac: 0.08,
+        noise: 0.05,
+        seed: 61,
+    })
+    .0;
+    let opts = PathOptions {
+        ratios: lambda_grid(8, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-7, dynamic_every: 7, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+    let free = run_path(&ds, &opts, &EngineKind::Exact).unwrap();
+    let pinned = {
+        let _p = ForceScalar::pin();
+        run_path(&ds, &opts, &EngineKind::Exact).unwrap()
+    };
+    assert_eq!(free.lam_max.to_bits(), pinned.lam_max.to_bits(), "lam_max");
+    assert_vec_bits_eq(&free.last_w, &pinned.last_w, "last_w");
+    assert_eq!(free.records.len(), pinned.records.len());
+    for (a, b) in free.records.iter().zip(&pinned.records) {
+        let at = format!("ratio {}", a.ratio);
+        assert_eq!(a.kept, b.kept, "{at}: kept");
+        assert_eq!(a.rejected, b.rejected, "{at}: rejected");
+        assert_eq!(a.solver_iters, b.solver_iters, "{at}: iters");
+        assert_eq!(a.col_ops, b.col_ops, "{at}: col_ops");
+        assert_eq!(a.obj.to_bits(), b.obj.to_bits(), "{at}: obj");
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{at}: gap");
+    }
+    // sanity: the grid actually screened and solved nontrivially
+    assert!(free.records.iter().any(|r| r.rejected > 0 && r.kept > 0));
+}
