@@ -36,6 +36,7 @@ where
     }
     let chunk = len.div_ceil(workers);
     let mut out: Vec<Option<R>> = (0..workers).map(|_| None).collect();
+    // repro-lint: allow(no-spawn): this IS the spawn-per-call baseline the bench compares the pooled executor against
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(workers);
         for (i, slot) in out.iter_mut().enumerate() {

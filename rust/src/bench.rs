@@ -30,7 +30,7 @@ impl BenchStats {
     }
     /// Arithmetic mean of the samples.
     pub fn mean(&self) -> f64 {
-        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+        crate::linalg::simd::mean_serial_f64(&self.samples)
     }
     /// One-line "median + IQR" summary (what [`Bencher::run`] prints).
     pub fn summary(&self) -> String {

@@ -12,7 +12,8 @@
 
 use super::path::{run_path_with, EngineKind, LambdaRecord, PathObserver, PathOptions};
 use crate::data::{Dataset, Task};
-use crate::util::scoped_pool;
+use crate::linalg::simd::{sum_serial_f64, sumsq_serial_f64};
+use crate::util::{scoped_pool, Stopwatch};
 use anyhow::{Context, Result};
 
 /// Split every task's samples into `k` folds (by sample index, seeded
@@ -77,7 +78,13 @@ fn subset_task(task: &Task, d: usize, idx: &[usize]) -> Task {
 /// Mean squared validation error of a (d x T) solution on a dataset.
 pub fn validation_mse(ds: &Dataset, w: &[f64]) -> f64 {
     let r = crate::ops::residual(ds, w);
-    let total: f64 = r.iter().map(|rt| rt.iter().map(|v| v * v).sum::<f64>()).sum();
+    // per-task Σr² partials re-folded left to right: the same grouping
+    // (and the same bits) as the old nested iterator sums, through the
+    // pinned-order reduction home
+    let mut total = 0.0f64;
+    for rt in &r {
+        total += sumsq_serial_f64(rt);
+    }
     total / ds.total_n() as f64
 }
 
@@ -124,7 +131,7 @@ pub fn cross_validate(
     k: usize,
     seed: u64,
 ) -> Result<CvResult> {
-    let t0 = std::time::Instant::now();
+    let sw = Stopwatch::started();
     let splits = kfold_splits(ds, k, seed)?;
     // fold fan-out on the persistent executor's nested-safe scope: the
     // solver/sweep parallelism underneath runs inline on whichever worker
@@ -151,8 +158,14 @@ pub fn cross_validate(
     }
 
     let kf = fold_mse.len() as f64;
+    let mut across = vec![0.0f64; fold_mse.len()];
     let mse: Vec<f64> = (0..opts.ratios.len())
-        .map(|i| fold_mse.iter().map(|f| f[i]).sum::<f64>() / kf)
+        .map(|i| {
+            for (g, f) in across.iter_mut().zip(&fold_mse) {
+                *g = f[i];
+            }
+            sum_serial_f64(&across) / kf
+        })
         .collect();
     let best_index = mse
         .iter()
@@ -167,7 +180,7 @@ pub fn cross_validate(
         ratios: opts.ratios.clone(),
         col_ops: fold_col_ops.iter().sum(),
         fold_col_ops,
-        total_secs: t0.elapsed().as_secs_f64(),
+        total_secs: sw.secs(),
     })
 }
 

@@ -71,12 +71,16 @@ pub fn mean_rejection_curve(runs: &[PathRunResult]) -> Vec<(f64, f64)> {
     assert!(!runs.is_empty());
     let k = runs[0].records.len();
     assert!(runs.iter().all(|r| r.records.len() == k), "trials must share the grid");
+    let mut across = vec![0.0f64; runs.len()];
     (0..k)
         .map(|i| {
             let ratio = runs[0].records[i].ratio;
-            let mean = runs.iter().map(|r| r.records[i].rejection_ratio).sum::<f64>()
-                / runs.len() as f64;
-            (ratio, mean)
+            for (g, r) in across.iter_mut().zip(runs) {
+                *g = r.records[i].rejection_ratio;
+            }
+            // runs is non-empty (asserted above), so the mean's len.max(1)
+            // divisor equals runs.len() — bit-identical to the old fold
+            (ratio, crate::linalg::simd::mean_serial_f64(&across))
         })
         .collect()
 }

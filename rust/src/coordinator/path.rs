@@ -200,7 +200,7 @@ impl PathRunResult {
     /// Mean of the per-λ rejection ratios (the figures' y-axis).
     pub fn mean_rejection_ratio(&self) -> f64 {
         let rs: Vec<f64> = self.records.iter().map(|r| r.rejection_ratio).collect();
-        rs.iter().sum::<f64>() / rs.len().max(1) as f64
+        crate::linalg::simd::mean_serial_f64(&rs)
     }
 
     /// Total solver column-sweep work along the path (the BENCH_gap metric).

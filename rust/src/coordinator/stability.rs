@@ -76,7 +76,7 @@ pub fn stability_selection(
     seed: u64,
 ) -> Result<StabilityResult> {
     anyhow::ensure!(b >= 2, "stability selection needs at least 2 subsamples, got b={b}");
-    let t0 = std::time::Instant::now();
+    let sw = crate::util::Stopwatch::started();
     let mut root = Pcg64::with_stream(seed, 0x57ab);
     let subs: Vec<Dataset> = (0..b)
         .map(|i| {
@@ -96,23 +96,23 @@ pub fn stability_selection(
         Ok(ever.mask)
     });
 
-    let mut frequency = vec![0.0f64; ds.d];
+    // integer hit counts, converted once — same values as accumulating
+    // 1.0s in f64 (exact up to 2^53), without a float fold
+    let mut hits = vec![0usize; ds.d];
     for mask in masks {
         for (l, m) in mask?.into_iter().enumerate() {
             if m {
-                frequency[l] += 1.0;
+                hits[l] += 1;
             }
         }
     }
-    for f in frequency.iter_mut() {
-        *f /= b as f64;
-    }
+    let frequency: Vec<f64> = hits.iter().map(|&c| c as f64 / b as f64).collect();
     let stable = frequency
         .iter()
         .enumerate()
         .filter_map(|(l, &f)| (f >= threshold).then_some(l))
         .collect();
-    Ok(StabilityResult { frequency, stable, subsamples: b, total_secs: t0.elapsed().as_secs_f64() })
+    Ok(StabilityResult { frequency, stable, subsamples: b, total_secs: sw.secs() })
 }
 
 #[cfg(test)]

@@ -73,6 +73,7 @@ pub fn imagesim(opts: &ImageSimOptions) -> Dataset {
             for j in 0..bd {
                 let mut v = rng.normal() * 0.5;
                 for (r, zr) in z.iter().enumerate() {
+                    // repro-lint: allow(kernel-reduction): rank-length (~4) mixing fold in the generator, strided access no kernel serves
                     v += m[r * bd + j] * zr;
                 }
                 out[off + j] = v * scales[bi];
@@ -80,6 +81,7 @@ pub fn imagesim(opts: &ImageSimOptions) -> Dataset {
             off += bd;
         }
         for &(l, mu) in &class_means[class] {
+            // repro-lint: allow(kernel-reduction): one scatter-add of a class mean per pixel, not a reduction
             out[l] += mu * scales[0].max(1.0);
         }
     };

@@ -93,16 +93,50 @@ impl<W: Write> HashingWriter<W> {
         self.hash.update(buf);
         self.inner.write_all(buf)
     }
+
+    /// Write an f32 slice as LE bytes through a bounded staging buffer —
+    /// no full-slice copy (the dense X of one task can be gigabytes) and
+    /// no unsafe cast; byte-identical to the raw in-memory bytes on the
+    /// little-endian targets the format asserts at save/load.
+    fn write_f32s_hashed(&mut self, v: &[f32]) -> std::io::Result<()> {
+        let mut buf = [0u8; 4096];
+        for chunk in v.chunks(1024) {
+            for (i, &x) in chunk.iter().enumerate() {
+                buf[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            self.write_all_hashed(&buf[..chunk.len() * 4])?;
+        }
+        Ok(())
+    }
+
+    /// u32 twin of [`Self::write_f32s_hashed`].
+    fn write_u32s_hashed(&mut self, v: &[u32]) -> std::io::Result<()> {
+        let mut buf = [0u8; 4096];
+        for chunk in v.chunks(1024) {
+            for (i, &x) in chunk.iter().enumerate() {
+                buf[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            self.write_all_hashed(&buf[..chunk.len() * 4])?;
+        }
+        Ok(())
+    }
 }
 
-fn f32s_as_bytes(v: &[f32]) -> &[u8] {
-    // f32 -> LE bytes without a copy (we only ship little-endian targets;
-    // asserted at save/load below)
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+/// Append an f32 slice to `buf` as LE bytes (in-memory serialization
+/// twin of [`HashingWriter::write_f32s_hashed`]).
+fn push_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
 }
 
-fn u32s_as_bytes(v: &[u32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+/// u32 twin of [`push_f32s`].
+fn push_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    buf.reserve(v.len() * 4);
+    for &x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
 }
 
 pub(crate) fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
@@ -138,7 +172,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         match &task.x {
             MatrixStore::Dense(x) => {
                 w.write_all_hashed(&[STORAGE_DENSE])?;
-                w.write_all_hashed(f32s_as_bytes(x))?;
+                w.write_f32s_hashed(x)?;
             }
             MatrixStore::Csc(m) => {
                 w.write_all_hashed(&[STORAGE_CSC])?;
@@ -148,11 +182,11 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
                     ptr_bytes.extend_from_slice(&(p as u64).to_le_bytes());
                 }
                 w.write_all_hashed(&ptr_bytes)?;
-                w.write_all_hashed(u32s_as_bytes(&m.indices))?;
-                w.write_all_hashed(f32s_as_bytes(&m.values))?;
+                w.write_u32s_hashed(&m.indices)?;
+                w.write_f32s_hashed(&m.values)?;
             }
         }
-        w.write_all_hashed(f32s_as_bytes(&task.y))?;
+        w.write_f32s_hashed(&task.y)?;
     }
     let digest = w.hash.digest();
     w.inner.write_all(&digest.to_le_bytes())?;
@@ -283,9 +317,7 @@ fn serialize_block(ds: &Dataset, first: usize, cols: usize) -> Vec<u8> {
         match &task.x {
             MatrixStore::Dense(x) => {
                 buf.push(STORAGE_DENSE);
-                buf.extend_from_slice(f32s_as_bytes(
-                    &x[first * task.n..(first + cols) * task.n],
-                ));
+                push_f32s(&mut buf, &x[first * task.n..(first + cols) * task.n]);
             }
             MatrixStore::Csc(m) => {
                 buf.push(STORAGE_CSC);
@@ -295,8 +327,8 @@ fn serialize_block(ds: &Dataset, first: usize, cols: usize) -> Vec<u8> {
                 for l in first..=first + cols {
                     buf.extend_from_slice(&((m.col_ptr[l] - lo) as u64).to_le_bytes());
                 }
-                buf.extend_from_slice(u32s_as_bytes(&m.indices[lo..hi]));
-                buf.extend_from_slice(f32s_as_bytes(&m.values[lo..hi]));
+                push_u32s(&mut buf, &m.indices[lo..hi]);
+                push_f32s(&mut buf, &m.values[lo..hi]);
             }
         }
     }
@@ -329,7 +361,7 @@ pub fn save_sharded(ds: &Dataset, path: &Path, shard_bytes: usize) -> Result<Sha
         header.extend_from_slice(&(task.n as u64).to_le_bytes());
     }
     for task in &ds.tasks {
-        header.extend_from_slice(f32s_as_bytes(&task.y));
+        push_f32s(&mut header, &task.y);
     }
     header.extend_from_slice(&(block_cols as u64).to_le_bytes());
     header.extend_from_slice(&(n_blocks as u64).to_le_bytes());

@@ -33,9 +33,9 @@ use std::fs::File;
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::ops::Range;
 use std::path::{Path, PathBuf};
+use crate::util::Stopwatch;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// Default block-cache budget (bytes) for [`ShardedDataset::open`].
 pub const DEFAULT_CACHE_BYTES: usize = 256 << 20;
@@ -353,10 +353,10 @@ impl ShardedDataset {
             }
             return self.block(b);
         }
-        let t0 = Instant::now();
+        let sw = Stopwatch::started();
         let blk = self.block(b);
         self.stall_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(sw.elapsed().as_nanos() as u64, Ordering::Relaxed);
         blk
     }
 

@@ -139,6 +139,7 @@ pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
                         cols[l].push((ni as u32, g as f32));
                     }
                     if wl != 0.0 {
+                        // repro-lint: allow(kernel-reduction): generator-side y accumulation fused with streaming genotype synthesis
                         y64[ni] += g as f64 * wl;
                     }
                 } else {
@@ -146,14 +147,16 @@ pub fn snpsim(opts: &SnpSimOptions) -> (Dataset, GroundTruth) {
                     let centered = g as f64 - 2.0 * maf;
                     x[col_start + ni] = centered as f32;
                     if wl != 0.0 {
+                        // repro-lint: allow(kernel-reduction): dense twin of the sparse fused accumulation above
                         y64[ni] += centered * wl;
                     }
                 }
             }
         }
-        // per-task standardization of y + noise (mirrors volume z-scoring)
-        let m = y64.iter().sum::<f64>() / n as f64;
-        let var = y64.iter().map(|v| (v - m).powi(2)).sum::<f64>() / n as f64;
+        // per-task standardization of y + noise (mirrors volume z-scoring);
+        // serial pinned-order moments — (v-m)² groups like the old powi(2)
+        let m = crate::linalg::simd::sum_serial_f64(&y64) / n as f64;
+        let var = crate::linalg::simd::centered_sumsq_serial_f64(&y64, m) / n as f64;
         let sd = var.sqrt().max(1e-9);
         let y: Vec<f32> = y64
             .iter()

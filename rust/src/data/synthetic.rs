@@ -75,6 +75,7 @@ fn build(opts: &SynthOptions, corr: Option<f64>, name: &str) -> (Dataset, Ground
             let mut acc = 0.0f64;
             for (j, &v) in row.iter().enumerate() {
                 x[j * n + ni] = v as f32;
+                // repro-lint: allow(kernel-reduction): generator-side y = Xw fused with filling X — row never exists as a slice to hand a kernel
                 acc += v * w[j * t + ti];
             }
             y[ni] = (acc + noise * rng.normal()) as f32;

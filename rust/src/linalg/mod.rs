@@ -28,6 +28,12 @@
 
 pub mod cache;
 pub mod dense;
+// `unsafe` is denied crate-wide (Cargo.toml [lints]); the kernel layer is
+// one of the two allowlisted homes — `core::arch` SIMD intrinsics are
+// unsafe by signature. Every unsafe operation sits in an inner block with
+// its own `// SAFETY:` line (enforced by `unsafe_op_in_unsafe_fn` and
+// repro-lint's confined-unsafe rule).
+#[allow(unsafe_code)]
 pub mod simd;
 pub mod sparse;
 

@@ -329,6 +329,73 @@ fn sp_dot_f32_block(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// serial statistics reductions (the pinned-order home for non-kernel sums)
+// ---------------------------------------------------------------------------
+//
+// Coordinator/metrics/report code occasionally needs a small reduction —
+// a mean of fold errors, a residual sum of squares for an objective —
+// that is not worth a SIMD kernel but still feeds deterministic output.
+// Iterator `.sum()` documents no association order, so repro-lint's
+// kernel-reduction rule rejects ad-hoc float folds outside this file;
+// these helpers are the sanctioned route: strict left-to-right
+// accumulation from 0.0, defined here so the fold order is pinned in one
+// place alongside the block contract.
+
+/// Left-to-right serial sum from `0.0`.
+#[inline]
+pub fn sum_serial_f64(v: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in v {
+        acc += x;
+    }
+    acc
+}
+
+/// Serial mean: [`sum_serial_f64`] divided by `len.max(1)` (an empty
+/// slice yields `0.0`, not NaN).
+#[inline]
+pub fn mean_serial_f64(v: &[f64]) -> f64 {
+    sum_serial_f64(v) / v.len().max(1) as f64
+}
+
+/// Left-to-right serial `Σ xᵢ²` (each product rounds before its add).
+#[inline]
+pub fn sumsq_serial_f64(v: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in v {
+        acc += x * x;
+    }
+    acc
+}
+
+/// Left-to-right serial `Σ (xᵢ − m)²` around a precomputed center `m`.
+#[inline]
+pub fn centered_sumsq_serial_f64(v: &[f64], m: f64) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in v {
+        let d = x - m;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Continue `acc` with the serial `Σ (yᵢ/λ − tᵢ)²` of one task — the
+/// dual-objective distance term. Takes and returns the running
+/// accumulator so a multi-task caller keeps one global left-to-right
+/// fold (splitting into per-task partials would change the bits). The
+/// division by `λ` is kept as a division: `yᵢ * (1/λ)` rounds
+/// differently.
+#[inline]
+pub fn scaled_diff_sumsq_serial(mut acc: f64, y: &[f64], t: &[f64], lam: f64) -> f64 {
+    debug_assert_eq!(y.len(), t.len());
+    for (&yi, &ti) in y.iter().zip(t) {
+        let d = yi / lam - ti;
+        acc += d * d;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
 // scalar reference (the contract's defining implementation)
 // ---------------------------------------------------------------------------
 
@@ -541,188 +608,254 @@ mod avx2 {
     use core::arch::x86_64::*;
 
     /// Extract the eight lanes and reduce with the contract's tree.
+    ///
+    /// # Safety
+    /// AVX2 must be available (every caller is
+    /// `#[target_feature(enable = "avx2")]`).
     #[inline]
     unsafe fn reduce8(lo: __m256d, hi: __m256d) -> f64 {
         let mut s = [0.0f64; 8];
-        _mm256_storeu_pd(s.as_mut_ptr(), lo);
-        _mm256_storeu_pd(s.as_mut_ptr().add(4), hi);
+        // SAFETY: `s` is an 8-slot local; the two unaligned stores write
+        // slots 0..4 and 4..8, entirely inside it.
+        unsafe {
+            _mm256_storeu_pd(s.as_mut_ptr(), lo);
+            _mm256_storeu_pd(s.as_mut_ptr().add(4), hi);
+        }
         ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
     }
 
     /// Widen 8 f32 lanes to two f64 quads (a[j..j+4], a[j+4..j+8]).
+    ///
+    /// # Safety
+    /// `p` must be valid for reading 8 consecutive f32s, and AVX2 must
+    /// be available.
     #[inline]
     unsafe fn widen8(p: *const f32) -> (__m256d, __m256d) {
-        let v = _mm256_loadu_ps(p);
-        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
-        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
-        (lo, hi)
+        // SAFETY: caller guarantees 8 readable f32s at `p` (loadu has no
+        // alignment requirement); the converts are register-only.
+        unsafe {
+            let v = _mm256_loadu_ps(p);
+            let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+            let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+            (lo, hi)
+        }
     }
 
+    /// # Safety
+    /// AVX2 must be available — the dispatcher calls this only after
+    /// `active_isa() == Isa::Avx2`. `a` and `b` must be equal length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_mixed_block(a: &[f32], b: &[f64]) -> f64 {
         let n = a.len();
         let chunks = n / 8;
-        let mut acc_lo = _mm256_setzero_pd();
-        let mut acc_hi = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let j = c * 8;
-            let (alo, ahi) = widen8(a.as_ptr().add(j));
-            let blo = _mm256_loadu_pd(b.as_ptr().add(j));
-            let bhi = _mm256_loadu_pd(b.as_ptr().add(j + 4));
-            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
-            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        // SAFETY: chunk c reads elements j..j+8 with j = c*8 and
+        // c*8 + 8 <= n, so every load stays inside the borrowed slices;
+        // the tail uses checked indexing.
+        unsafe {
+            let mut acc_lo = _mm256_setzero_pd();
+            let mut acc_hi = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let j = c * 8;
+                let (alo, ahi) = widen8(a.as_ptr().add(j));
+                let blo = _mm256_loadu_pd(b.as_ptr().add(j));
+                let bhi = _mm256_loadu_pd(b.as_ptr().add(j + 4));
+                acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+                acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+            }
+            let mut acc = reduce8(acc_lo, acc_hi);
+            for i in chunks * 8..n {
+                acc += a[i] as f64 * b[i];
+            }
+            acc
         }
-        let mut acc = reduce8(acc_lo, acc_hi);
-        for i in chunks * 8..n {
-            acc += a[i] as f64 * b[i];
-        }
-        acc
     }
 
+    /// # Safety
+    /// AVX2 must be available; `a` and `b` must be equal length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_f32_block(a: &[f32], b: &[f32]) -> f64 {
         let n = a.len();
         let chunks = n / 8;
-        let mut acc_lo = _mm256_setzero_pd();
-        let mut acc_hi = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let j = c * 8;
-            let (alo, ahi) = widen8(a.as_ptr().add(j));
-            let (blo, bhi) = widen8(b.as_ptr().add(j));
-            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
-            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        // SAFETY: chunk c reads elements j..j+8, j = c*8, c*8 + 8 <= n —
+        // inside both slices; tail is checked indexing.
+        unsafe {
+            let mut acc_lo = _mm256_setzero_pd();
+            let mut acc_hi = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let j = c * 8;
+                let (alo, ahi) = widen8(a.as_ptr().add(j));
+                let (blo, bhi) = widen8(b.as_ptr().add(j));
+                acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+                acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+            }
+            let mut acc = reduce8(acc_lo, acc_hi);
+            for i in chunks * 8..n {
+                acc += a[i] as f64 * b[i] as f64;
+            }
+            acc
         }
-        let mut acc = reduce8(acc_lo, acc_hi);
-        for i in chunks * 8..n {
-            acc += a[i] as f64 * b[i] as f64;
-        }
-        acc
     }
 
+    /// # Safety
+    /// AVX2 must be available; `a` and `b` must be equal length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot_f64_block(a: &[f64], b: &[f64]) -> f64 {
         let n = a.len();
         let chunks = n / 8;
-        let mut acc_lo = _mm256_setzero_pd();
-        let mut acc_hi = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let j = c * 8;
-            let alo = _mm256_loadu_pd(a.as_ptr().add(j));
-            let ahi = _mm256_loadu_pd(a.as_ptr().add(j + 4));
-            let blo = _mm256_loadu_pd(b.as_ptr().add(j));
-            let bhi = _mm256_loadu_pd(b.as_ptr().add(j + 4));
-            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
-            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        // SAFETY: chunk c reads elements j..j+8, j = c*8, c*8 + 8 <= n —
+        // inside both slices; tail is checked indexing.
+        unsafe {
+            let mut acc_lo = _mm256_setzero_pd();
+            let mut acc_hi = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let j = c * 8;
+                let alo = _mm256_loadu_pd(a.as_ptr().add(j));
+                let ahi = _mm256_loadu_pd(a.as_ptr().add(j + 4));
+                let blo = _mm256_loadu_pd(b.as_ptr().add(j));
+                let bhi = _mm256_loadu_pd(b.as_ptr().add(j + 4));
+                acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+                acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+            }
+            let mut acc = reduce8(acc_lo, acc_hi);
+            for i in chunks * 8..n {
+                acc += a[i] * b[i];
+            }
+            acc
         }
-        let mut acc = reduce8(acc_lo, acc_hi);
-        for i in chunks * 8..n {
-            acc += a[i] * b[i];
-        }
-        acc
     }
 
-    /// Sparse mixed dot via `vgatherdpd`. Caller guarantees
-    /// `v.len() <= i32::MAX`; every chunk's indices are range-checked
-    /// before the gather (the scalar path would panic on the same
-    /// out-of-range access, so behavior matches).
+    /// Sparse mixed dot via `vgatherdpd`. Every chunk's indices are
+    /// range-checked before the gather (the scalar path would panic on
+    /// the same out-of-range access, so behavior matches).
+    ///
+    /// # Safety
+    /// AVX2 must be available, and `v.len() <= i32::MAX` (gather offsets
+    /// are signed 32-bit — the dispatcher checks both).
     #[target_feature(enable = "avx2")]
     pub unsafe fn sp_dot_mixed_block(indices: &[u32], values: &[f32], v: &[f64]) -> f64 {
         let k = values.len();
         let n = v.len();
         let chunks = k / 8;
-        let mut acc_lo = _mm256_setzero_pd();
-        let mut acc_hi = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let j = c * 8;
-            let mut mx = 0u32;
-            for t in 0..8 {
-                mx = mx.max(indices[j + t]);
+        // SAFETY: chunk c reads indices/values j..j+8 with j = c*8 and
+        // c*8 + 8 <= k; the gathers only touch v[idx] for indices the
+        // assert just bounded below n (caller bounds n itself by
+        // i32::MAX, so the 32-bit offsets cannot wrap).
+        unsafe {
+            let mut acc_lo = _mm256_setzero_pd();
+            let mut acc_hi = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let j = c * 8;
+                let mut mx = 0u32;
+                for t in 0..8 {
+                    mx = mx.max(indices[j + t]);
+                }
+                assert!((mx as usize) < n, "sparse row index {mx} out of range (n = {n})");
+                let idx_lo = _mm_loadu_si128(indices.as_ptr().add(j) as *const __m128i);
+                let idx_hi = _mm_loadu_si128(indices.as_ptr().add(j + 4) as *const __m128i);
+                let vlo = _mm256_i32gather_pd::<8>(v.as_ptr(), idx_lo);
+                let vhi = _mm256_i32gather_pd::<8>(v.as_ptr(), idx_hi);
+                let wv = _mm256_loadu_ps(values.as_ptr().add(j));
+                let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
+                let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
+                acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(wlo, vlo));
+                acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(whi, vhi));
             }
-            assert!((mx as usize) < n, "sparse row index {mx} out of range (n = {n})");
-            let idx_lo = _mm_loadu_si128(indices.as_ptr().add(j) as *const __m128i);
-            let idx_hi = _mm_loadu_si128(indices.as_ptr().add(j + 4) as *const __m128i);
-            let vlo = _mm256_i32gather_pd::<8>(v.as_ptr(), idx_lo);
-            let vhi = _mm256_i32gather_pd::<8>(v.as_ptr(), idx_hi);
-            let wv = _mm256_loadu_ps(values.as_ptr().add(j));
-            let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
-            let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
-            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(wlo, vlo));
-            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(whi, vhi));
+            let mut acc = reduce8(acc_lo, acc_hi);
+            for j in chunks * 8..k {
+                acc += values[j] as f64 * v[indices[j] as usize];
+            }
+            acc
         }
-        let mut acc = reduce8(acc_lo, acc_hi);
-        for j in chunks * 8..k {
-            acc += values[j] as f64 * v[indices[j] as usize];
-        }
-        acc
     }
 
     /// Sparse f32 dot via `vgatherdps`; same guard policy as
     /// [`sp_dot_mixed_block`].
+    ///
+    /// # Safety
+    /// AVX2 must be available, and `v.len() <= i32::MAX`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn sp_dot_f32_block(indices: &[u32], values: &[f32], v: &[f32]) -> f64 {
         let k = values.len();
         let n = v.len();
         let chunks = k / 8;
-        let mut acc_lo = _mm256_setzero_pd();
-        let mut acc_hi = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let j = c * 8;
-            let mut mx = 0u32;
-            for t in 0..8 {
-                mx = mx.max(indices[j + t]);
+        // SAFETY: same argument as sp_dot_mixed_block — chunked reads
+        // stay inside indices/values, gathers are asserted below n.
+        unsafe {
+            let mut acc_lo = _mm256_setzero_pd();
+            let mut acc_hi = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let j = c * 8;
+                let mut mx = 0u32;
+                for t in 0..8 {
+                    mx = mx.max(indices[j + t]);
+                }
+                assert!((mx as usize) < n, "sparse row index {mx} out of range (n = {n})");
+                let idx = _mm256_loadu_si256(indices.as_ptr().add(j) as *const __m256i);
+                let g = _mm256_i32gather_ps::<4>(v.as_ptr(), idx);
+                let vlo = _mm256_cvtps_pd(_mm256_castps256_ps128(g));
+                let vhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(g));
+                let wv = _mm256_loadu_ps(values.as_ptr().add(j));
+                let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
+                let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
+                acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(wlo, vlo));
+                acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(whi, vhi));
             }
-            assert!((mx as usize) < n, "sparse row index {mx} out of range (n = {n})");
-            let idx = _mm256_loadu_si256(indices.as_ptr().add(j) as *const __m256i);
-            let g = _mm256_i32gather_ps::<4>(v.as_ptr(), idx);
-            let vlo = _mm256_cvtps_pd(_mm256_castps256_ps128(g));
-            let vhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(g));
-            let wv = _mm256_loadu_ps(values.as_ptr().add(j));
-            let wlo = _mm256_cvtps_pd(_mm256_castps256_ps128(wv));
-            let whi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(wv));
-            acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(wlo, vlo));
-            acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(whi, vhi));
+            let mut acc = reduce8(acc_lo, acc_hi);
+            for j in chunks * 8..k {
+                acc += values[j] as f64 * v[indices[j] as usize] as f64;
+            }
+            acc
         }
-        let mut acc = reduce8(acc_lo, acc_hi);
-        for j in chunks * 8..k {
-            acc += values[j] as f64 * v[indices[j] as usize] as f64;
-        }
-        acc
     }
 
+    /// # Safety
+    /// AVX2 must be available; `x` and `y` must be equal length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
         let n = x.len();
         let chunks = n / 8;
-        let va = _mm256_set1_pd(alpha);
-        for c in 0..chunks {
-            let j = c * 8;
-            let (xlo, xhi) = widen8(x.as_ptr().add(j));
-            let ylo = _mm256_loadu_pd(y.as_ptr().add(j));
-            let yhi = _mm256_loadu_pd(y.as_ptr().add(j + 4));
-            _mm256_storeu_pd(
-                y.as_mut_ptr().add(j),
-                _mm256_add_pd(ylo, _mm256_mul_pd(va, xlo)),
-            );
-            _mm256_storeu_pd(
-                y.as_mut_ptr().add(j + 4),
-                _mm256_add_pd(yhi, _mm256_mul_pd(va, xhi)),
-            );
+        // SAFETY: chunk c touches x[j..j+8] and y[j..j+8] with j = c*8
+        // and c*8 + 8 <= n; loads and stores on y never overlap between
+        // chunks, and `y` is exclusively borrowed.
+        unsafe {
+            let va = _mm256_set1_pd(alpha);
+            for c in 0..chunks {
+                let j = c * 8;
+                let (xlo, xhi) = widen8(x.as_ptr().add(j));
+                let ylo = _mm256_loadu_pd(y.as_ptr().add(j));
+                let yhi = _mm256_loadu_pd(y.as_ptr().add(j + 4));
+                _mm256_storeu_pd(
+                    y.as_mut_ptr().add(j),
+                    _mm256_add_pd(ylo, _mm256_mul_pd(va, xlo)),
+                );
+                _mm256_storeu_pd(
+                    y.as_mut_ptr().add(j + 4),
+                    _mm256_add_pd(yhi, _mm256_mul_pd(va, xhi)),
+                );
+            }
         }
         for i in chunks * 8..n {
             y[i] += alpha * x[i] as f64;
         }
     }
 
+    /// # Safety
+    /// AVX2 must be available; `a`, `b`, and `out` must be equal length.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
         let n = a.len();
         let chunks = n / 4;
-        let vs = _mm256_set1_pd(s);
-        for c in 0..chunks {
-            let j = c * 4;
-            let av = _mm256_loadu_pd(a.as_ptr().add(j));
-            let bv = _mm256_loadu_pd(b.as_ptr().add(j));
-            _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_add_pd(av, _mm256_mul_pd(vs, bv)));
+        // SAFETY: chunk c touches elements j..j+4 with j = c*4 and
+        // c*4 + 4 <= n — inside all three slices; `out` is exclusively
+        // borrowed.
+        unsafe {
+            let vs = _mm256_set1_pd(s);
+            for c in 0..chunks {
+                let j = c * 4;
+                let av = _mm256_loadu_pd(a.as_ptr().add(j));
+                let bv = _mm256_loadu_pd(b.as_ptr().add(j));
+                _mm256_storeu_pd(out.as_mut_ptr().add(j), _mm256_add_pd(av, _mm256_mul_pd(vs, bv)));
+            }
         }
         for i in chunks * 4..n {
             out[i] = a[i] + s * b[i];
@@ -744,6 +877,10 @@ mod neon {
     use core::arch::aarch64::*;
 
     /// Reduce the four lane pairs with the contract's tree.
+    ///
+    /// # Safety
+    /// NEON must be available (baseline on aarch64; every caller is
+    /// `#[target_feature(enable = "neon")]`).
     #[inline]
     unsafe fn reduce8(
         s01: float64x2_t,
@@ -751,131 +888,174 @@ mod neon {
         s45: float64x2_t,
         s67: float64x2_t,
     ) -> f64 {
-        let p0 = vgetq_lane_f64::<0>(s01) + vgetq_lane_f64::<1>(s01);
-        let p1 = vgetq_lane_f64::<0>(s23) + vgetq_lane_f64::<1>(s23);
-        let p2 = vgetq_lane_f64::<0>(s45) + vgetq_lane_f64::<1>(s45);
-        let p3 = vgetq_lane_f64::<0>(s67) + vgetq_lane_f64::<1>(s67);
-        (p0 + p1) + (p2 + p3)
+        // SAFETY: register-only lane extracts; no memory is touched.
+        unsafe {
+            let p0 = vgetq_lane_f64::<0>(s01) + vgetq_lane_f64::<1>(s01);
+            let p1 = vgetq_lane_f64::<0>(s23) + vgetq_lane_f64::<1>(s23);
+            let p2 = vgetq_lane_f64::<0>(s45) + vgetq_lane_f64::<1>(s45);
+            let p3 = vgetq_lane_f64::<0>(s67) + vgetq_lane_f64::<1>(s67);
+            (p0 + p1) + (p2 + p3)
+        }
     }
 
     /// Widen 8 f32 lanes to four f64 pairs.
+    ///
+    /// # Safety
+    /// `p` must be valid for reading 8 consecutive f32s, and NEON must
+    /// be available.
     #[inline]
     unsafe fn widen8(p: *const f32) -> (float64x2_t, float64x2_t, float64x2_t, float64x2_t) {
-        let lo4 = vld1q_f32(p);
-        let hi4 = vld1q_f32(p.add(4));
-        (
-            vcvt_f64_f32(vget_low_f32(lo4)),
-            vcvt_high_f64_f32(lo4),
-            vcvt_f64_f32(vget_low_f32(hi4)),
-            vcvt_high_f64_f32(hi4),
-        )
+        // SAFETY: caller guarantees 8 readable f32s at `p`; the converts
+        // are register-only.
+        unsafe {
+            let lo4 = vld1q_f32(p);
+            let hi4 = vld1q_f32(p.add(4));
+            (
+                vcvt_f64_f32(vget_low_f32(lo4)),
+                vcvt_high_f64_f32(lo4),
+                vcvt_f64_f32(vget_low_f32(hi4)),
+                vcvt_high_f64_f32(hi4),
+            )
+        }
     }
 
+    /// # Safety
+    /// NEON must be available; `a` and `b` must be equal length.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_mixed_block(a: &[f32], b: &[f64]) -> f64 {
         let n = a.len();
         let chunks = n / 8;
-        let mut s01 = vdupq_n_f64(0.0);
-        let mut s23 = vdupq_n_f64(0.0);
-        let mut s45 = vdupq_n_f64(0.0);
-        let mut s67 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let j = c * 8;
-            let (a01, a23, a45, a67) = widen8(a.as_ptr().add(j));
-            s01 = vaddq_f64(s01, vmulq_f64(a01, vld1q_f64(b.as_ptr().add(j))));
-            s23 = vaddq_f64(s23, vmulq_f64(a23, vld1q_f64(b.as_ptr().add(j + 2))));
-            s45 = vaddq_f64(s45, vmulq_f64(a45, vld1q_f64(b.as_ptr().add(j + 4))));
-            s67 = vaddq_f64(s67, vmulq_f64(a67, vld1q_f64(b.as_ptr().add(j + 6))));
+        // SAFETY: chunk c reads elements j..j+8 with j = c*8 and
+        // c*8 + 8 <= n — inside both slices; tail is checked indexing.
+        unsafe {
+            let mut s01 = vdupq_n_f64(0.0);
+            let mut s23 = vdupq_n_f64(0.0);
+            let mut s45 = vdupq_n_f64(0.0);
+            let mut s67 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let j = c * 8;
+                let (a01, a23, a45, a67) = widen8(a.as_ptr().add(j));
+                s01 = vaddq_f64(s01, vmulq_f64(a01, vld1q_f64(b.as_ptr().add(j))));
+                s23 = vaddq_f64(s23, vmulq_f64(a23, vld1q_f64(b.as_ptr().add(j + 2))));
+                s45 = vaddq_f64(s45, vmulq_f64(a45, vld1q_f64(b.as_ptr().add(j + 4))));
+                s67 = vaddq_f64(s67, vmulq_f64(a67, vld1q_f64(b.as_ptr().add(j + 6))));
+            }
+            let mut acc = reduce8(s01, s23, s45, s67);
+            for i in chunks * 8..n {
+                acc += a[i] as f64 * b[i];
+            }
+            acc
         }
-        let mut acc = reduce8(s01, s23, s45, s67);
-        for i in chunks * 8..n {
-            acc += a[i] as f64 * b[i];
-        }
-        acc
     }
 
+    /// # Safety
+    /// NEON must be available; `a` and `b` must be equal length.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_f32_block(a: &[f32], b: &[f32]) -> f64 {
         let n = a.len();
         let chunks = n / 8;
-        let mut s01 = vdupq_n_f64(0.0);
-        let mut s23 = vdupq_n_f64(0.0);
-        let mut s45 = vdupq_n_f64(0.0);
-        let mut s67 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let j = c * 8;
-            let (a01, a23, a45, a67) = widen8(a.as_ptr().add(j));
-            let (b01, b23, b45, b67) = widen8(b.as_ptr().add(j));
-            s01 = vaddq_f64(s01, vmulq_f64(a01, b01));
-            s23 = vaddq_f64(s23, vmulq_f64(a23, b23));
-            s45 = vaddq_f64(s45, vmulq_f64(a45, b45));
-            s67 = vaddq_f64(s67, vmulq_f64(a67, b67));
+        // SAFETY: chunk c reads elements j..j+8, j = c*8, c*8 + 8 <= n —
+        // inside both slices; tail is checked indexing.
+        unsafe {
+            let mut s01 = vdupq_n_f64(0.0);
+            let mut s23 = vdupq_n_f64(0.0);
+            let mut s45 = vdupq_n_f64(0.0);
+            let mut s67 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let j = c * 8;
+                let (a01, a23, a45, a67) = widen8(a.as_ptr().add(j));
+                let (b01, b23, b45, b67) = widen8(b.as_ptr().add(j));
+                s01 = vaddq_f64(s01, vmulq_f64(a01, b01));
+                s23 = vaddq_f64(s23, vmulq_f64(a23, b23));
+                s45 = vaddq_f64(s45, vmulq_f64(a45, b45));
+                s67 = vaddq_f64(s67, vmulq_f64(a67, b67));
+            }
+            let mut acc = reduce8(s01, s23, s45, s67);
+            for i in chunks * 8..n {
+                acc += a[i] as f64 * b[i] as f64;
+            }
+            acc
         }
-        let mut acc = reduce8(s01, s23, s45, s67);
-        for i in chunks * 8..n {
-            acc += a[i] as f64 * b[i] as f64;
-        }
-        acc
     }
 
+    /// # Safety
+    /// NEON must be available; `a` and `b` must be equal length.
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_f64_block(a: &[f64], b: &[f64]) -> f64 {
         let n = a.len();
         let chunks = n / 8;
-        let mut s01 = vdupq_n_f64(0.0);
-        let mut s23 = vdupq_n_f64(0.0);
-        let mut s45 = vdupq_n_f64(0.0);
-        let mut s67 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let j = c * 8;
-            let m0 = vmulq_f64(vld1q_f64(a.as_ptr().add(j)), vld1q_f64(b.as_ptr().add(j)));
-            let m1 =
-                vmulq_f64(vld1q_f64(a.as_ptr().add(j + 2)), vld1q_f64(b.as_ptr().add(j + 2)));
-            let m2 =
-                vmulq_f64(vld1q_f64(a.as_ptr().add(j + 4)), vld1q_f64(b.as_ptr().add(j + 4)));
-            let m3 =
-                vmulq_f64(vld1q_f64(a.as_ptr().add(j + 6)), vld1q_f64(b.as_ptr().add(j + 6)));
-            s01 = vaddq_f64(s01, m0);
-            s23 = vaddq_f64(s23, m1);
-            s45 = vaddq_f64(s45, m2);
-            s67 = vaddq_f64(s67, m3);
+        // SAFETY: chunk c reads elements j..j+8, j = c*8, c*8 + 8 <= n —
+        // inside both slices; tail is checked indexing.
+        unsafe {
+            let mut s01 = vdupq_n_f64(0.0);
+            let mut s23 = vdupq_n_f64(0.0);
+            let mut s45 = vdupq_n_f64(0.0);
+            let mut s67 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let j = c * 8;
+                let m0 = vmulq_f64(vld1q_f64(a.as_ptr().add(j)), vld1q_f64(b.as_ptr().add(j)));
+                let m1 =
+                    vmulq_f64(vld1q_f64(a.as_ptr().add(j + 2)), vld1q_f64(b.as_ptr().add(j + 2)));
+                let m2 =
+                    vmulq_f64(vld1q_f64(a.as_ptr().add(j + 4)), vld1q_f64(b.as_ptr().add(j + 4)));
+                let m3 =
+                    vmulq_f64(vld1q_f64(a.as_ptr().add(j + 6)), vld1q_f64(b.as_ptr().add(j + 6)));
+                s01 = vaddq_f64(s01, m0);
+                s23 = vaddq_f64(s23, m1);
+                s45 = vaddq_f64(s45, m2);
+                s67 = vaddq_f64(s67, m3);
+            }
+            let mut acc = reduce8(s01, s23, s45, s67);
+            for i in chunks * 8..n {
+                acc += a[i] * b[i];
+            }
+            acc
         }
-        let mut acc = reduce8(s01, s23, s45, s67);
-        for i in chunks * 8..n {
-            acc += a[i] * b[i];
-        }
-        acc
     }
 
+    /// # Safety
+    /// NEON must be available; `x` and `y` must be equal length.
     #[target_feature(enable = "neon")]
     pub unsafe fn axpy_f64(alpha: f64, x: &[f32], y: &mut [f64]) {
         let n = x.len();
         let chunks = n / 8;
-        let va = vdupq_n_f64(alpha);
-        for c in 0..chunks {
-            let j = c * 8;
-            let (x01, x23, x45, x67) = widen8(x.as_ptr().add(j));
-            let p = y.as_mut_ptr();
-            vst1q_f64(p.add(j), vaddq_f64(vld1q_f64(p.add(j)), vmulq_f64(va, x01)));
-            vst1q_f64(p.add(j + 2), vaddq_f64(vld1q_f64(p.add(j + 2)), vmulq_f64(va, x23)));
-            vst1q_f64(p.add(j + 4), vaddq_f64(vld1q_f64(p.add(j + 4)), vmulq_f64(va, x45)));
-            vst1q_f64(p.add(j + 6), vaddq_f64(vld1q_f64(p.add(j + 6)), vmulq_f64(va, x67)));
+        // SAFETY: chunk c touches x[j..j+8] and y[j..j+8] with j = c*8
+        // and c*8 + 8 <= n; `y` is exclusively borrowed and chunks never
+        // overlap.
+        unsafe {
+            let va = vdupq_n_f64(alpha);
+            for c in 0..chunks {
+                let j = c * 8;
+                let (x01, x23, x45, x67) = widen8(x.as_ptr().add(j));
+                let p = y.as_mut_ptr();
+                vst1q_f64(p.add(j), vaddq_f64(vld1q_f64(p.add(j)), vmulq_f64(va, x01)));
+                vst1q_f64(p.add(j + 2), vaddq_f64(vld1q_f64(p.add(j + 2)), vmulq_f64(va, x23)));
+                vst1q_f64(p.add(j + 4), vaddq_f64(vld1q_f64(p.add(j + 4)), vmulq_f64(va, x45)));
+                vst1q_f64(p.add(j + 6), vaddq_f64(vld1q_f64(p.add(j + 6)), vmulq_f64(va, x67)));
+            }
         }
         for i in chunks * 8..n {
             y[i] += alpha * x[i] as f64;
         }
     }
 
+    /// # Safety
+    /// NEON must be available; `a`, `b`, and `out` must be equal length.
     #[target_feature(enable = "neon")]
     pub unsafe fn scale_add(a: &[f64], s: f64, b: &[f64], out: &mut [f64]) {
         let n = a.len();
         let chunks = n / 2;
-        let vs = vdupq_n_f64(s);
-        for c in 0..chunks {
-            let j = c * 2;
-            let av = vld1q_f64(a.as_ptr().add(j));
-            let bv = vld1q_f64(b.as_ptr().add(j));
-            vst1q_f64(out.as_mut_ptr().add(j), vaddq_f64(av, vmulq_f64(vs, bv)));
+        // SAFETY: chunk c touches elements j..j+2 with j = c*2 and
+        // c*2 + 2 <= n — inside all three slices; `out` is exclusively
+        // borrowed.
+        unsafe {
+            let vs = vdupq_n_f64(s);
+            for c in 0..chunks {
+                let j = c * 2;
+                let av = vld1q_f64(a.as_ptr().add(j));
+                let bv = vld1q_f64(b.as_ptr().add(j));
+                vst1q_f64(out.as_mut_ptr().add(j), vaddq_f64(av, vmulq_f64(vs, bv)));
+            }
         }
         if n % 2 == 1 {
             out[n - 1] = a[n - 1] + s * b[n - 1];

@@ -291,12 +291,11 @@ pub fn dual_feasible(ds: &Dataset, z: Stacked) -> (Stacked, f64) {
 
 /// Dual objective D(θ) = ½‖y‖² − λ²/2 ‖y/λ − θ‖² at a (feasible) θ.
 pub fn dual_obj(y: &Stacked, theta: &Stacked, lam: f64) -> f64 {
+    // one global left-to-right fold threaded across tasks (splitting into
+    // per-task partials would regroup the adds and change the bits)
     let mut diff_sq = 0.0;
     for (yt, tt) in y.iter().zip(theta) {
-        for (&yi, &ti) in yt.iter().zip(tt) {
-            let d = yi / lam - ti;
-            diff_sq += d * d;
-        }
+        diff_sq = crate::linalg::simd::scaled_diff_sumsq_serial(diff_sq, yt, tt, lam);
     }
     0.5 * stacked_sqnorm(y) - 0.5 * lam * lam * diff_sq
 }

@@ -97,7 +97,7 @@ impl AotEngine {
         if let Some(exe) = self.cache.lock().unwrap().get(&meta.name) {
             return Ok(exe.clone());
         }
-        let t0 = std::time::Instant::now();
+        let sw = crate::util::Stopwatch::started();
         let proto = xla::HloModuleProto::from_text_file(&meta.path)
             .with_context(|| format!("parse HLO text {}", meta.path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -107,7 +107,7 @@ impl AotEngine {
         self.compile_secs
             .lock()
             .unwrap()
-            .insert(meta.name.clone(), t0.elapsed().as_secs_f64());
+            .insert(meta.name.clone(), sw.secs());
         self.cache.lock().unwrap().insert(meta.name.clone(), exe.clone());
         Ok(exe)
     }

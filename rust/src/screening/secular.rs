@@ -13,6 +13,8 @@
 //!
 //! Then  s_l = Σ_t a_t² + (α*/2)Δ² − ½ qᵀu*  (Theorem 7.4).
 
+// repro-lint: allow-file(kernel-reduction): every fold here is T-length (T = task count, ~20) inside the per-feature Newton iteration — far below any SIMD cutoff, and the serial loop order IS the pinned order (DESIGN §12 governs n-length data folds, not these).
+
 /// Result of one QP1QC solve (diagnostics carried for tests/benches).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Branch {

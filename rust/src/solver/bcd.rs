@@ -36,6 +36,7 @@ fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
         return 0.0;
     }
     let f = |nu: f64| -> f64 {
+        // repro-lint: allow(kernel-reduction): T-length secular fold (T ~ tasks, tiny); serial iterator order is the pinned order
         c.iter().zip(b2).map(|(&ct, &bt)| (ct / (bt * nu + lam)).powi(2)).sum::<f64>()
     };
     // bracket: f(0) > 1; grow hi until f(hi) < 1
@@ -58,7 +59,9 @@ fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
         for (&ct, &bt) in c.iter().zip(b2) {
             let den = bt * nu + lam;
             let r = ct / den;
+            // repro-lint: allow(kernel-reduction): T-length Newton fold sharing r between f and f' — serial loop order pinned
             fv += r * r;
+            // repro-lint: allow(kernel-reduction): derivative half of the fold above
             dfv += -2.0 * r * r * bt / den;
         }
         if fv > 1.0 {

@@ -113,6 +113,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             // ~2-5x (EXPERIMENTS.md §Perf entry 2).
             let mut osc = 0.0f64;
             for i in 0..dtc {
+                // repro-lint: allow(kernel-reduction): restart heuristic — only the sign of osc matters, serial order pinned
                 osc += (v[i] - w_buf[i]) * (w_buf[i] - w[i]);
             }
             if osc > 0.0 {

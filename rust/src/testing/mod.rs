@@ -20,12 +20,67 @@ impl Default for PropConfig {
         let cases = std::env::var("MTFL_PROP_CASES")
             .ok()
             .and_then(|v| v.parse().ok())
-            .unwrap_or(32);
+            .unwrap_or(if scale::shrunk() { 4 } else { 32 });
         let seed = std::env::var("MTFL_PROP_SEED")
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(0x9d5f_11e7);
         PropConfig { cases, seed }
+    }
+}
+
+/// Problem-size knobs for interpreter-speed test runs.
+///
+/// Miri executes roughly 1000x slower than native code and loom multiplies
+/// every test body by the number of explored interleavings, so the CI legs
+/// that run under them (`cargo miri test`, `--features loom-model`) need
+/// much smaller inputs than a native run. These helpers pick the size once,
+/// so every test states its native size and shrinks the same way.
+///
+/// The shrunk sizes are NOT arbitrary: anything fed to the accumulation
+/// kernels must still cross the internal block boundaries that the
+/// bit-pinned contract (DESIGN.md §12) is defined over — a vector shorter
+/// than ACC_BLOCK (2048) plus a ragged tail would leave the block-fold and
+/// tail paths unexercised, and Miri would be checking a dead branch.
+/// `kernel_len` therefore never shrinks below one full block plus a tail
+/// that is not a multiple of the 8-wide lane group.
+pub mod scale {
+    /// True when running under an interpreter/model-checker leg that needs
+    /// shrunk problem sizes (Miri, or a loom-enabled build).
+    pub const fn shrunk() -> bool {
+        cfg!(miri) || cfg!(loom)
+    }
+
+    /// Pick `native` normally, `small` under Miri/loom.
+    pub const fn pick(native: usize, small: usize) -> usize {
+        if shrunk() {
+            small
+        } else {
+            native
+        }
+    }
+
+    /// A reduction length for kernel tests. The shrunk value 2061 =
+    /// ACC_BLOCK + 13 still crosses the block boundary AND leaves a tail
+    /// (13) that is not a multiple of the 8 accumulator lanes, so the
+    /// block fold, the lane tree, and the ragged tail all execute.
+    pub const fn kernel_len(native: usize) -> usize {
+        pick(native, 2061)
+    }
+
+    /// A feature-count (d) for end-to-end solver/screening tests.
+    pub const fn d(native: usize) -> usize {
+        pick(native, 24)
+    }
+
+    /// A sample-count (n) for end-to-end solver/screening tests.
+    pub const fn n(native: usize) -> usize {
+        pick(native, 8)
+    }
+
+    /// A grid/path length (number of lambda values, CV points, ...).
+    pub const fn grid(native: usize) -> usize {
+        pick(native, 3)
     }
 }
 

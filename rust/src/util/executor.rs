@@ -80,8 +80,27 @@ struct Pool {
 struct RawRunner {
     scope: *const ScopeState,
 }
-// SAFETY: the pointee is Sync (all fields are) and stays alive until every
-// runner has finished (the submitting thread blocks on `runners_left`).
+// SAFETY: sending a RawRunner to a pool worker is a `&ScopeState` transfer
+// in disguise. It is sound because:
+//  (1) aliasing — workers only ever take shared access. ScopeState is Sync
+//      (its fields are `&'static (dyn Fn + Sync)`, usize, AtomicUsize,
+//      Mutex, Condvar), so concurrent `&ScopeState` use from many threads
+//      is the ordinary already-safe case once the reference is delivered.
+//  (2) lifetime — the pointee is a stack local of `run_indexed`/`join`,
+//      and neither returns before `wait_done()` observes
+//      `runners_left == 0`. Every handle decrements that counter exactly
+//      once, under the same mutex the waiter sleeps on, as its *final*
+//      touch of the scope (`run_runner` never uses `self` after the
+//      decrement), so zero implies no runner dereferences the pointer
+//      again. A queued-but-never-run handle cannot exist: handles are
+//      popped only by `worker_main`, which always runs what it pops, and
+//      workers never exit.
+//  (3) panics keep (2) — a panicking job is caught inside `run_runner`,
+//      which still signs off before returning to `worker_main`.
+// The protocol this argument leans on — sign-off barrier, hand-off,
+// memory visibility of job writes, panic delivery — is model-checked
+// exhaustively by the loom re-implementation in `util/loom_model.rs`
+// (`--features loom-model`), not merely asserted here.
 unsafe impl Send for RawRunner {}
 
 fn pool() -> &'static Pool {
@@ -118,7 +137,13 @@ fn worker_main(pool: &'static Pool) {
                 q = pool.available.wait(q).unwrap();
             }
         };
-        // SAFETY: see RawRunner — the owning scope is still blocked.
+        // SAFETY: the owning scope is still blocked in `wait_done()` — it
+        // cannot observe `runners_left == 0` until this very runner signs
+        // off at the end of `run_runner` — so the pointer is live for the
+        // whole call, and `ScopeState: Sync` makes the shared deref sound.
+        // The `unsafe impl Send for RawRunner` above carries the full
+        // argument; the barrier it relies on is loom-checked in
+        // `util/loom_model.rs`.
         unsafe { (*runner.scope).run_runner(pool) };
     }
 }
@@ -279,9 +304,16 @@ pub fn run_indexed(count: usize, max_workers: usize, job: &(dyn Fn(usize) + Sync
         }
         return;
     }
-    // SAFETY: the scope blocks in wait_done() until every runner has
-    // finished, so the erased borrow never outlives the real one.
+    // SAFETY: pure lifetime erasure — data pointer and vtable are
+    // untouched; only the borrow's region is forged to 'static so it can
+    // sit in ScopeState. The forgery never outlives the real borrow: the
+    // only copies live in `scope`, every runner handle signs off before
+    // `wait_done()` returns below (see the RawRunner Send argument), and
+    // the queue is empty of this scope's handles by then, so all calls
+    // through `job_static` happen while `job` is still in scope. The
+    // `+ Sync` bound keeps the concurrent shared calls themselves safe.
     let job_static: &'static (dyn Fn(usize) + Sync) =
+        // SAFETY: see the erasure argument above.
         unsafe {
             std::mem::transmute::<
                 &(dyn Fn(usize) + Sync),
@@ -354,8 +386,14 @@ where
         let r = f();
         *rb_slot.lock().unwrap() = Some(r);
     };
-    // SAFETY: as in run_indexed — wait_done() outlives the erased borrow.
+    // SAFETY: same lifetime erasure as in `run_indexed`, one frame deeper:
+    // `run_b` borrows the stack locals `b_cell` and `rb_slot`, and the
+    // single runner holding the forged &'static signs off before
+    // `scope.wait_done()` returns below — strictly before those locals
+    // (and `run_b` itself) drop at the end of this function. The data
+    // pointer and vtable are untouched; `+ Sync` covers the shared call.
     let job_static: &'static (dyn Fn(usize) + Sync) =
+        // SAFETY: see the erasure argument above.
         unsafe {
             std::mem::transmute::<
                 &(dyn Fn(usize) + Sync),

@@ -1,0 +1,332 @@
+//! Loom model of the executor's scope protocol (DESIGN.md §11, §13).
+//!
+//! `util/executor.rs` rests on one load-bearing claim: a scope's
+//! `ScopeState` — a stack local holding a lifetime-erased job borrow —
+//! is never touched after `wait_done()` observes `runners_left == 0`,
+//! and everything the job wrote is visible to the submitter at that
+//! point. That claim cannot be unit-tested (a violation is a data race
+//! or use-after-free, not a wrong value), so this module re-implements
+//! the protocol 1:1 on `loom` primitives — injector queue under a
+//! `Mutex` + `Condvar`, atomic task claiming via `fetch_add`, sign-off
+//! by decrementing `runners_left` under the waiter's mutex, first-panic
+//! slot with rethrow, and the `IS_WORKER` nested-inline policy — and
+//! lets loom enumerate every interleaving of:
+//!
+//! * **sign-off barrier**: after `run_indexed` returns, every task's
+//!   `Relaxed` write is visible to the submitter. `Relaxed` is the
+//!   point: the data slots themselves provide no ordering, so the test
+//!   passes only if the barrier (mutex-protected decrement + condvar)
+//!   carries the happens-before edge the executor's `unsafe impl Send
+//!   for RawRunner` relies on.
+//! * **injector hand-off**: queued runner handles are always drained
+//!   and run; the pool survives repeated scopes and a stop request.
+//! * **nested-inline policy**: a job that submits again runs the inner
+//!   scope inline on the current thread — loom completing the model
+//!   proves there is no hand-off deadlock to reach.
+//! * **panic rethrow**: a panicking task is caught in the runner, still
+//!   signs off (so the barrier cannot hang), and resurfaces exactly
+//!   once on the submitting thread.
+//!
+//! The model intentionally contains **no unsafe**: where the executor
+//! erases the job's lifetime with a transmute, the model uses
+//! `Arc<dyn Fn>`. The pointer arithmetic is not what needs checking —
+//! the barrier ordering that *justifies* it is, and that is identical
+//! here. Run with
+//! `RUSTFLAGS="--cfg loom" cargo test --release --features loom-model loom_`.
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::{Arc, Condvar, Mutex};
+use loom::thread;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+type Job = dyn Fn(usize) + Send + Sync;
+
+/// Model twin of `executor::ScopeState`. The real struct holds
+/// `&'static dyn Fn` (transmuted); the model holds `Arc<Job>` —
+/// everything else is field-for-field the same protocol.
+struct Scope {
+    job: Arc<Job>,
+    count: usize,
+    next: AtomicUsize,
+    runners_left: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Scope {
+    /// Model twin of `ScopeState::run_runner`: claim tasks until the
+    /// counter runs dry, stash the first panic, sign off last.
+    fn run_runner(&self) {
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.count {
+                break;
+            }
+            (self.job)(i);
+        }));
+        if let Err(p) = result {
+            let mut slot = self.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        // Sign-off: the final touch of the scope, under the same mutex
+        // wait_done() sleeps on — this release/acquire pair is the whole
+        // happens-before argument of the executor's unsafe.
+        let mut left = self.runners_left.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Model twin of `ScopeState::wait_done`.
+    fn wait_done(&self) {
+        let mut left = self.runners_left.lock().unwrap();
+        while *left != 0 {
+            left = self.done.wait(left).unwrap();
+        }
+        drop(left);
+        if let Some(p) = self.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Model twin of `executor::Pool`: an injector queue of scope handles
+/// plus a stop flag (the real pool leaks its workers instead of
+/// stopping; the model must join them so each loom execution is finite).
+struct PoolModel {
+    /// (pending runner handles, stop requested)
+    queue: Mutex<(VecDeque<Arc<Scope>>, bool)>,
+    available: Condvar,
+}
+
+loom::thread_local! {
+    /// Model twin of the executor's `IS_WORKER` flag: set on pool
+    /// threads and on the submitter while it runs its own runner, so a
+    /// nested submission runs inline instead of re-entering the queue.
+    static IS_WORKER: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// Model twin of `worker_main`: block on the condvar, pop, run, repeat
+/// until stop is raised with the queue empty.
+fn worker_main(pool: &Arc<PoolModel>) {
+    IS_WORKER.with(|w| w.set(true));
+    loop {
+        let scope = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(s) = q.0.pop_front() {
+                    break Some(s);
+                }
+                if q.1 {
+                    break None;
+                }
+                q = pool.available.wait(q).unwrap();
+            }
+        };
+        match scope {
+            Some(s) => s.run_runner(),
+            None => return,
+        }
+    }
+}
+
+struct ModelPool {
+    shared: Arc<PoolModel>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+fn spawn_pool(extra_workers: usize) -> ModelPool {
+    let shared = Arc::new(PoolModel {
+        queue: Mutex::new((VecDeque::new(), false)),
+        available: Condvar::new(),
+    });
+    let handles = (0..extra_workers)
+        .map(|_| {
+            let s = Arc::clone(&shared);
+            thread::spawn(move || worker_main(&s))
+        })
+        .collect();
+    ModelPool { shared, handles }
+}
+
+impl ModelPool {
+    fn shutdown(self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// Model twin of `executor::run_indexed`: enqueue `workers - 1` handles,
+/// run one runner on the submitting thread (flagged as a worker so
+/// nested submissions inline), then block in `wait_done`. Takes the
+/// shared half of the pool so jobs can hold a clone (the nested test).
+fn run_indexed(pool: &Arc<PoolModel>, workers: usize, count: usize, job: Arc<Job>) {
+    if count == 0 {
+        return;
+    }
+    if workers <= 1 || IS_WORKER.with(|w| w.get()) {
+        // Nested-inline policy: a job already on a pool thread (or a
+        // single-worker scope) runs every task serially right here —
+        // submitting to the queue from inside a runner could deadlock
+        // the pool on itself.
+        for i in 0..count {
+            (job)(i);
+        }
+        return;
+    }
+    let extra = workers - 1;
+    let scope = Arc::new(Scope {
+        job,
+        count,
+        next: AtomicUsize::new(0),
+        runners_left: Mutex::new(extra + 1),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut q = pool.queue.lock().unwrap();
+        for _ in 0..extra {
+            q.0.push_back(Arc::clone(&scope));
+        }
+    }
+    pool.available.notify_all();
+    let was = IS_WORKER.with(|w| w.replace(true));
+    scope.run_runner();
+    IS_WORKER.with(|w| w.set(was));
+    scope.wait_done();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Loom model builder with the standard preemption bound. Bounding
+    /// at 3 forced preemptions keeps each model finite while still
+    /// covering the interleavings where ordering bugs live (loom's
+    /// documented guidance: most bugs manifest within 2-3 preemptions).
+    fn model() -> loom::model::Builder {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(3);
+        b
+    }
+
+    /// Sign-off barrier: every task's `Relaxed` write must be visible to
+    /// the submitter once `run_indexed` returns. The slots deliberately
+    /// carry no ordering of their own — only the runners_left decrement
+    /// under the waiter's mutex can publish them. This is the memory-
+    /// visibility half of the executor's `unsafe impl Send for
+    /// RawRunner` argument, checked over every interleaving.
+    #[test]
+    fn loom_signoff_barrier_publishes_all_writes() {
+        model().check(|| {
+            let pool = spawn_pool(1);
+            let slots: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..3).map(|_| AtomicUsize::new(0)).collect());
+            let s = Arc::clone(&slots);
+            run_indexed(
+                &pool.shared,
+                2,
+                3,
+                Arc::new(move |i| s[i].store(i + 1, Ordering::Relaxed)),
+            );
+            for (i, slot) in slots.iter().enumerate() {
+                assert_eq!(slot.load(Ordering::Relaxed), i + 1, "task {i} write lost");
+            }
+            pool.shutdown();
+        });
+    }
+
+    /// Injector hand-off: two back-to-back scopes over the same pool.
+    /// Every queued handle must be drained and run (the second scope's
+    /// barrier would hang if a handle from either scope were dropped),
+    /// and shutdown must join cleanly — no handle left behind.
+    #[test]
+    fn loom_injector_handoff_drains_repeated_scopes() {
+        model().check(|| {
+            let pool = spawn_pool(1);
+            let hits = Arc::new(AtomicUsize::new(0));
+            for _ in 0..2 {
+                let h = Arc::clone(&hits);
+                run_indexed(&pool.shared, 2, 2, Arc::new(move |_| {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            assert_eq!(hits.load(Ordering::Relaxed), 4);
+            pool.shutdown();
+        });
+    }
+
+    /// Nested-inline policy: a task that submits again must run the
+    /// inner scope inline on its own thread. If the inner scope were
+    /// queued instead, the lone extra worker could be the one inside the
+    /// outer task, and the inner barrier would wait on a queue nobody
+    /// drains — loom completing this model proves that deadlock is
+    /// unreachable; the counter proves the inner tasks actually ran.
+    #[test]
+    fn loom_nested_submission_runs_inline() {
+        model().check(|| {
+            let pool = spawn_pool(1);
+            let inner_hits = Arc::new(AtomicUsize::new(0));
+            {
+                let p = Arc::clone(&pool.shared);
+                let h = Arc::clone(&inner_hits);
+                run_indexed(
+                    &pool.shared,
+                    2,
+                    2,
+                    Arc::new(move |_| {
+                        let hh = Arc::clone(&h);
+                        run_indexed(&p, 2, 2, Arc::new(move |_| {
+                            hh.fetch_add(1, Ordering::Relaxed);
+                        }));
+                    }),
+                );
+            }
+            assert_eq!(inner_hits.load(Ordering::Relaxed), 4);
+            pool.shutdown();
+        });
+    }
+
+    /// Panic rethrow: a panicking task must (a) not kill the pool
+    /// worker, (b) still sign off so the barrier cannot hang, and
+    /// (c) resurface exactly once on the submitting thread. The pool is
+    /// reused afterwards to prove (a).
+    #[test]
+    fn loom_panic_rethrows_to_submitter_once() {
+        model().check(|| {
+            let pool = spawn_pool(1);
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                run_indexed(
+                    &pool.shared,
+                    2,
+                    2,
+                    Arc::new(|i| {
+                        if i == 1 {
+                            std::panic::panic_any("task 1 down");
+                        }
+                    }),
+                );
+            }));
+            assert!(caught.is_err(), "panic must cross wait_done to the submitter");
+            // the worker caught the panic and signed off — it is still
+            // alive to serve another scope
+            let hits = Arc::new(AtomicUsize::new(0));
+            let h = Arc::clone(&hits);
+            run_indexed(&pool.shared, 2, 2, Arc::new(move |_| {
+                h.fetch_add(1, Ordering::Relaxed);
+            }));
+            assert_eq!(hits.load(Ordering::Relaxed), 2);
+            pool.shutdown();
+        });
+    }
+}

@@ -2,8 +2,19 @@
 //! available offline beyond `xla`/`anyhow`): RNG, timers, the persistent
 //! executor every parallel sweep runs on, and a tiny logger.
 
+// `unsafe` is denied crate-wide (Cargo.toml [lints]); the executor is one
+// of the two allowlisted homes — its lifetime-erased scope protocol needs
+// `unsafe impl Send` plus two transmutes, each carrying a full SAFETY
+// argument and model-checked by `loom_model` below.
+#[allow(unsafe_code)]
 pub mod executor;
 pub mod logging;
+// Loom re-implementation of the executor's scope protocol; compiled only
+// under `--features loom-model` (the loom CI job). Uses no unsafe — it
+// exists to exhaustively model-check the barrier the executor's unsafe
+// relies on.
+#[cfg(feature = "loom-model")]
+pub mod loom_model;
 pub mod rng;
 pub mod threads;
 pub mod timer;

@@ -22,6 +22,14 @@ impl Stopwatch {
         Stopwatch { accumulated: Duration::ZERO, started: None }
     }
 
+    /// A stopwatch already running from now — the `let t0 =
+    /// Instant::now()` idiom, routed through the timing substrate
+    /// (repro-lint's nondeterminism rule keeps raw `Instant` out of
+    /// library code; this file is its allowlisted home).
+    pub fn started() -> Self {
+        Stopwatch { accumulated: Duration::ZERO, started: Some(Instant::now()) }
+    }
+
     /// Start (or resume) timing; a no-op if already running.
     pub fn start(&mut self) {
         if self.started.is_none() {

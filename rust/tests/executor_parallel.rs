@@ -26,6 +26,7 @@ use mtfl_dpc::data::io::save_sharded;
 use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
 use mtfl_dpc::data::{Dataset, ShardedDataset};
 use mtfl_dpc::solver::SolveOptions;
+use mtfl_dpc::testing::scale;
 use mtfl_dpc::util::executor;
 use mtfl_dpc::util::num_threads;
 use std::path::PathBuf;
@@ -65,8 +66,8 @@ fn tmp(name: &str) -> PathBuf {
 fn problem() -> Dataset {
     synthetic1(&SynthOptions {
         t: 3,
-        n: 14,
-        d: 120,
+        n: scale::n(14),
+        d: scale::d(120),
         support_frac: 0.08,
         noise: 0.05,
         seed: 61,
@@ -74,9 +75,15 @@ fn problem() -> Dataset {
     .0
 }
 
+/// Bytes per shard block, sized off the (possibly shrunk) sample count so
+/// the sharded runs always split into several blocks.
+fn shard_block_bytes() -> usize {
+    scale::n(14) * 3 * 4 * 8
+}
+
 fn path_opts() -> PathOptions {
     PathOptions {
-        ratios: lambda_grid(10, 1.0, 0.05),
+        ratios: lambda_grid(scale::grid(10), 1.0, 0.05),
         solve: SolveOptions { tol: 1e-7, dynamic_every: 7, ..Default::default() },
         screener: ScreenerKind::Dpc,
         ..Default::default()
@@ -118,8 +125,11 @@ fn run_path_bit_identical_serial_vs_pooled_dense() {
     let serial = run_at_cap(&ds, &path_opts(), 1);
     let pooled = run_at_cap(&ds, &path_opts(), 4);
     assert_runs_identical(&serial, &pooled, "dense");
-    // sanity: the grid actually screened and solved nontrivially
-    assert!(serial.records.iter().any(|r| r.rejected > 0 && r.kept > 0));
+    // sanity: the grid actually screened and solved nontrivially (the
+    // shrunk Miri/loom sizes are too small to guarantee both at once)
+    if !scale::shrunk() {
+        assert!(serial.records.iter().any(|r| r.rejected > 0 && r.kept > 0));
+    }
 }
 
 #[test]
@@ -141,7 +151,7 @@ fn run_path_sharded_bit_identical_serial_vs_pooled_with_prefetch() {
     let ds = problem();
     let p = tmp("determinism.mtd3");
     // narrow blocks so the prefetch pipeline really crosses boundaries
-    save_sharded(&ds, &p, 14 * 3 * 4 * 8).unwrap();
+    save_sharded(&ds, &p, shard_block_bytes()).unwrap();
     let run = |cap: usize| -> ShardRunResult {
         let sh = ShardedDataset::open(&p).unwrap();
         assert!(sh.n_blocks() > 2, "want multiple blocks, got {}", sh.n_blocks());
@@ -166,15 +176,15 @@ fn cross_validate_bit_identical_serial_vs_pooled() {
     let _z = ZeroCutoff::set();
     let ds = synthetic1(&SynthOptions {
         t: 3,
-        n: 30,
-        d: 60,
+        n: scale::n(30),
+        d: scale::d(60),
         support_frac: 0.1,
         noise: 0.3,
         seed: 62,
     })
     .0;
     let opts = PathOptions {
-        ratios: lambda_grid(8, 1.0, 0.05),
+        ratios: lambda_grid(scale::grid(8), 1.0, 0.05),
         solve: SolveOptions { tol: 1e-7, ..Default::default() },
         screener: ScreenerKind::Dpc,
         ..Default::default()
@@ -193,15 +203,15 @@ fn nested_cv_fista_ops_never_exceeds_num_threads() {
     let _z = ZeroCutoff::set();
     let ds = synthetic1(&SynthOptions {
         t: 3,
-        n: 30,
-        d: 80,
+        n: scale::n(30),
+        d: scale::d(80),
         support_frac: 0.1,
         noise: 0.3,
         seed: 63,
     })
     .0;
     let opts = PathOptions {
-        ratios: lambda_grid(6, 1.0, 0.05),
+        ratios: lambda_grid(scale::grid(6), 1.0, 0.05),
         solve: SolveOptions { tol: 1e-6, dynamic_every: 5, ..Default::default() },
         screener: ScreenerKind::Dpc,
         ..Default::default()
@@ -234,14 +244,14 @@ fn steady_state_path_performs_zero_spawns() {
     let spawns_before = executor::spawn_count();
 
     let res = run_path(&ds, &path_opts(), &EngineKind::Exact).unwrap();
-    assert_eq!(res.records.len(), 10);
+    assert_eq!(res.records.len(), scale::grid(10));
 
     let p = tmp("zerospawn.mtd3");
-    save_sharded(&ds, &p, 14 * 3 * 4 * 8).unwrap();
+    save_sharded(&ds, &p, shard_block_bytes()).unwrap();
     let sh = ShardedDataset::open(&p).unwrap();
     let shard_res = run_path_sharded(&sh, &path_opts()).unwrap();
     std::fs::remove_file(&p).ok();
-    assert_eq!(shard_res.path.records.len(), 10);
+    assert_eq!(shard_res.path.records.len(), scale::grid(10));
 
     assert_eq!(
         executor::spawn_count(),

@@ -1,0 +1,602 @@
+//! repro-lint — mechanical enforcement of the mtfl-dpc safety contracts.
+//!
+//! The repo's correctness story rests on invariants that used to live only
+//! in DESIGN.md prose and runtime spot-checks. This crate turns each of
+//! them into a blocking diagnostic (DESIGN.md §13 maps every rule to the
+//! design section it enforces and the CI job that runs it):
+//!
+//! | rule id            | invariant                                                    |
+//! |--------------------|--------------------------------------------------------------|
+//! | `no-fma`           | no fused multiply-add anywhere (`mul_add`, `_mm256_fmadd_*`, |
+//! |                    | `vfmaq_*`, …) — DESIGN.md §12 accumulation contract          |
+//! | `kernel-reduction` | float reductions route through `linalg/simd.rs` — no         |
+//! |                    | `.sum::<f32/f64>()` or `acc += a*b` fold loops in library    |
+//! |                    | code outside the kernel layer                                |
+//! | `no-spawn`         | `std::thread::{spawn, scope, Builder}` only inside           |
+//! |                    | `util/executor.rs` — DESIGN.md §11 zero-spawn invariant      |
+//! | `confined-unsafe`  | `unsafe` only in `linalg/simd.rs` + `util/executor.rs`, and  |
+//! |                    | every occurrence carries a `// SAFETY:` (or `# Safety` doc)  |
+//! |                    | justification on or directly above its line                  |
+//! | `nondeterminism`   | no `Instant`/`SystemTime`/entropy-seeded RNG outside         |
+//! |                    | `util/{timer,rng}.rs` and the bench harness                  |
+//!
+//! ## Scoping
+//!
+//! `no-fma`, `no-spawn`, and `confined-unsafe` apply to every scanned file
+//! (`rust/src`, `rust/tests`, `rust/benches`, `examples`). The two
+//! determinism-of-results rules are scoped to library code, where the
+//! pinned bit-streams are produced:
+//!
+//! * `kernel-reduction` applies to `rust/src` only (tests/benches/examples
+//!   legitimately hold naive reference reductions to compare the kernels
+//!   against) and skips `#[cfg(test)]` items for the same reason.
+//! * `nondeterminism` skips `rust/benches` (a timing harness measures
+//!   wallclock by definition) and `#[cfg(test)]` items.
+//!
+//! ## Detection strategy
+//!
+//! Most rules run on the raw token stream of the whole file, so they see
+//! into `macro_rules!` bodies that `syn` item visitors skip; the
+//! `kernel-reduction` fold rule needs expression structure (`+=` with a
+//! float-shaped right-hand side) and runs on the parsed AST. The fold
+//! heuristic flags `acc += rhs` where `rhs` contains a float literal, a
+//! product of two non-integer-literal operands, or a `powi`/`powf` call —
+//! integer work counters (`col_ops += 2 * d`) and plain re-accumulation of
+//! kernel partials (`total += sumsq_serial_f64(rt)`) pass. `// SAFETY:`
+//! detection reads the raw source lines, since comments never reach the
+//! token stream.
+//!
+//! ## Waivers
+//!
+//! A deliberate exception is recorded in place, with its reason:
+//!
+//! ```text
+//! // repro-lint: allow(kernel-reduction): T-length secular fold, serial order pinned
+//! ```
+//!
+//! A waiver suppresses its rule on its own line and the line directly
+//! below. `allow-file(rule)` (anywhere in the file) waives the whole
+//! file. Waivers without a reason, or naming an unknown rule, are
+//! themselves diagnostics; unused waivers are reported as warnings so
+//! stale exceptions cannot accumulate silently.
+
+use proc_macro2::{TokenStream, TokenTree};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use syn::spanned::Spanned;
+use syn::visit::Visit;
+
+/// Every rule id this lint can emit (fixture tests assert against these).
+pub const RULES: [&str; 5] =
+    ["no-fma", "kernel-reduction", "no-spawn", "confined-unsafe", "nondeterminism"];
+
+/// One finding, pointing at the offending token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// rule id (one of [`RULES`], or `parse-error` / `bad-waiver`)
+    pub rule: String,
+    /// repo-relative path, `/`-separated
+    pub path: String,
+    /// 1-based line of the offending token
+    pub line: usize,
+    /// 1-based column of the offending token
+    pub col: usize,
+    /// what fired and what to do instead
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{} [{}] {}", self.path, self.line, self.col, self.rule, self.msg)
+    }
+}
+
+/// Outcome of linting one file or a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// blocking findings (empty = pass)
+    pub diags: Vec<Diagnostic>,
+    /// waivers that suppressed at least one finding
+    pub waivers_used: usize,
+    /// waivers that suppressed nothing: (path, line, rule)
+    pub unused_waivers: Vec<(String, usize, String)>,
+}
+
+// ---------------------------------------------------------------------------
+// Rule scoping: which files each rule applies to
+// ---------------------------------------------------------------------------
+
+fn in_dir(rel: &str, dir: &str) -> bool {
+    rel.starts_with(dir) && rel.as_bytes().get(dir.len()) == Some(&b'/')
+}
+
+const KERNEL_HOME: &str = "rust/src/linalg/simd.rs";
+const UNSAFE_ALLOWED: [&str; 2] = [KERNEL_HOME, "rust/src/util/executor.rs"];
+const SPAWN_ALLOWED: [&str; 2] = ["rust/src/util/executor.rs", "rust/src/util/loom_model.rs"];
+const TIME_ALLOWED: [&str; 3] =
+    ["rust/src/util/timer.rs", "rust/src/util/rng.rs", "rust/src/bench.rs"];
+
+fn reduction_in_scope(rel: &str) -> bool {
+    in_dir(rel, "rust/src") && rel != KERNEL_HOME
+}
+
+fn nondet_in_scope(rel: &str) -> bool {
+    !in_dir(rel, "rust/benches") && !TIME_ALLOWED.contains(&rel)
+}
+
+// ---------------------------------------------------------------------------
+// Waivers
+// ---------------------------------------------------------------------------
+
+struct Waiver {
+    line: usize,
+    rule: String,
+    file_level: bool,
+    used: bool,
+}
+
+fn parse_waivers(rel: &str, lines: &[&str]) -> (Vec<Waiver>, Vec<Diagnostic>) {
+    let mut waivers = Vec::new();
+    let mut diags = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let line = i + 1;
+        let Some(pos) = raw.find("repro-lint:") else { continue };
+        let mut bad = |msg: &str| {
+            diags.push(Diagnostic {
+                rule: "bad-waiver".into(),
+                path: rel.to_string(),
+                line,
+                col: pos + 1,
+                msg: msg.to_string(),
+            });
+        };
+        let rest = raw[pos + "repro-lint:".len()..].trim_start();
+        let (file_level, rest) = if let Some(r) = rest.strip_prefix("allow-file(") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow(") {
+            (false, r)
+        } else {
+            bad("expected `repro-lint: allow(<rule>): <reason>` or `allow-file(...)`");
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            bad("unclosed `allow(` in waiver");
+            continue;
+        };
+        let rule = rest[..close].trim();
+        if !RULES.contains(&rule) {
+            bad(&format!("waiver names unknown rule `{rule}`"));
+            continue;
+        }
+        let reason = rest[close + 1..].trim_start_matches(':').trim();
+        if reason.is_empty() {
+            bad("waiver must state a reason: `allow(<rule>): <reason>`");
+            continue;
+        }
+        waivers.push(Waiver { line, rule: rule.to_string(), file_level, used: false });
+    }
+    (waivers, diags)
+}
+
+fn waived(waivers: &mut [Waiver], rule: &str, line: usize) -> bool {
+    for w in waivers.iter_mut() {
+        if w.rule == rule && (w.file_level || w.line == line || w.line + 1 == line) {
+            w.used = true;
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Raw-source helpers: SAFETY comments
+// ---------------------------------------------------------------------------
+
+/// `unsafe` on `line` is justified when that line, or the contiguous run
+/// of comment/attribute lines directly above it, contains `SAFETY:` (block
+/// comments) or `# Safety` (rustdoc sections on `unsafe fn`).
+fn has_safety_comment(lines: &[&str], line: usize) -> bool {
+    let ok = |s: &str| s.contains("SAFETY:") || s.contains("# Safety");
+    if line == 0 || line > lines.len() {
+        return false;
+    }
+    if ok(lines[line - 1]) {
+        return true;
+    }
+    let mut idx = line - 1; // 0-based index of the `unsafe` line itself
+    while idx > 0 {
+        idx -= 1;
+        let t = lines[idx].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![") {
+            if ok(t) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Token-stream scan (sees macro bodies too)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Hit {
+    rule: &'static str,
+    line: usize,
+    col: usize,
+    msg: String,
+}
+
+fn is_fma_ident(s: &str) -> bool {
+    s == "mul_add"
+        || s.contains("fmadd")
+        || s.contains("fmsub")
+        || s.contains("fnmadd")
+        || s.contains("fnmsub")
+        || s.starts_with("vfma")
+        || s.starts_with("vfms")
+}
+
+/// Nearest ident strictly before `i`, skipping `::` punctuation — so
+/// `std::thread::spawn` resolves `spawn`'s qualifier to `thread`.
+fn prev_path_ident(toks: &[TokenTree], i: usize) -> Option<String> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        match &toks[j] {
+            TokenTree::Punct(p) if p.as_char() == ':' => continue,
+            TokenTree::Ident(id) => return Some(id.to_string()),
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Does `sum` at index `i` carry a `::<f32>` / `::<f64>` turbofish?
+fn float_turbofish(toks: &[TokenTree], i: usize) -> bool {
+    let punct = |k: usize, c: char| {
+        matches!(toks.get(k), Some(TokenTree::Punct(p)) if p.as_char() == c)
+    };
+    punct(i + 1, ':')
+        && punct(i + 2, ':')
+        && punct(i + 3, '<')
+        && matches!(toks.get(i + 4), Some(TokenTree::Ident(id))
+            if id == "f32" || id == "f64")
+}
+
+fn scan_tokens(ts: TokenStream, hits: &mut Vec<Hit>) {
+    let toks: Vec<TokenTree> = ts.into_iter().collect();
+    for (i, t) in toks.iter().enumerate() {
+        match t {
+            TokenTree::Group(g) => scan_tokens(g.stream(), hits),
+            TokenTree::Ident(id) => {
+                let s = id.to_string();
+                let start = id.span().start();
+                let (line, col) = (start.line, start.column + 1);
+                if is_fma_ident(&s) {
+                    hits.push(Hit {
+                        rule: "no-fma",
+                        line,
+                        col,
+                        msg: format!(
+                            "`{s}` fuses the multiply — the §12 accumulation contract \
+                             requires the product rounded before the add"
+                        ),
+                    });
+                }
+                if s == "unsafe" {
+                    hits.push(Hit {
+                        rule: "confined-unsafe",
+                        line,
+                        col,
+                        msg: String::new(), // finalized in the filter stage
+                    });
+                }
+                if matches!(
+                    s.as_str(),
+                    "Instant" | "SystemTime" | "thread_rng" | "from_entropy" | "OsRng"
+                        | "getrandom"
+                ) {
+                    hits.push(Hit {
+                        rule: "nondeterminism",
+                        line,
+                        col,
+                        msg: format!(
+                            "`{s}` is ambient nondeterminism — route wallclock through \
+                             util::Stopwatch and randomness through util::Pcg64"
+                        ),
+                    });
+                }
+                if matches!(s.as_str(), "spawn" | "scope" | "Builder")
+                    && prev_path_ident(&toks, i).as_deref() == Some("thread")
+                {
+                    hits.push(Hit {
+                        rule: "no-spawn",
+                        line,
+                        col,
+                        msg: format!(
+                            "`thread::{s}` outside util/executor.rs breaks the §11 \
+                             zero-spawn invariant — use the persistent executor"
+                        ),
+                    });
+                }
+                if s == "sum" && float_turbofish(&toks, i) {
+                    hits.push(Hit {
+                        rule: "kernel-reduction",
+                        line,
+                        col,
+                        msg: "`.sum::<float>()` outside the kernel layer — use the \
+                              linalg::simd serial helpers or the blocked kernels"
+                            .into(),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AST passes: cfg(test) ranges + the `+=` fold rule
+// ---------------------------------------------------------------------------
+
+fn has_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if a.path().is_ident("test") {
+            return true;
+        }
+        if !a.path().is_ident("cfg") {
+            return false;
+        }
+        let mut found = false;
+        let _ = a.parse_nested_meta(|m| {
+            if m.path.is_ident("test") {
+                found = true;
+            }
+            Ok(())
+        });
+        found
+    })
+}
+
+struct TestRanges<'a> {
+    ranges: &'a mut Vec<(usize, usize)>,
+}
+
+impl<'ast> Visit<'ast> for TestRanges<'_> {
+    fn visit_item(&mut self, node: &'ast syn::Item) {
+        let attrs = match node {
+            syn::Item::Mod(i) => Some(&i.attrs),
+            syn::Item::Fn(i) => Some(&i.attrs),
+            syn::Item::Impl(i) => Some(&i.attrs),
+            syn::Item::Struct(i) => Some(&i.attrs),
+            syn::Item::Enum(i) => Some(&i.attrs),
+            syn::Item::Const(i) => Some(&i.attrs),
+            syn::Item::Static(i) => Some(&i.attrs),
+            syn::Item::Trait(i) => Some(&i.attrs),
+            syn::Item::Type(i) => Some(&i.attrs),
+            syn::Item::Use(i) => Some(&i.attrs),
+            _ => None,
+        };
+        if let Some(attrs) = attrs {
+            if has_cfg_test(attrs) {
+                let sp = node.span();
+                self.ranges.push((sp.start().line, sp.end().line));
+                return; // the whole item is test-gated; no need to descend
+            }
+        }
+        syn::visit::visit_item(self, node);
+    }
+}
+
+fn is_int_lit(e: &syn::Expr) -> bool {
+    match e {
+        syn::Expr::Lit(l) => matches!(l.lit, syn::Lit::Int(_)),
+        syn::Expr::Unary(u) => is_int_lit(&u.expr),
+        syn::Expr::Paren(p) => is_int_lit(&p.expr),
+        syn::Expr::Cast(c) => is_int_lit(&c.expr),
+        _ => false,
+    }
+}
+
+/// Float-shaped right-hand side of an `acc += rhs`: a float literal, a
+/// product of two non-integer-literal operands, or a `powi`/`powf` call.
+fn rhs_is_float_fold(e: &syn::Expr) -> bool {
+    match e {
+        syn::Expr::Lit(l) => matches!(l.lit, syn::Lit::Float(_)),
+        syn::Expr::Binary(b) => {
+            if matches!(b.op, syn::BinOp::Mul(_))
+                && !is_int_lit(&b.left)
+                && !is_int_lit(&b.right)
+            {
+                return true;
+            }
+            rhs_is_float_fold(&b.left) || rhs_is_float_fold(&b.right)
+        }
+        syn::Expr::MethodCall(m) => {
+            let id = m.method.to_string();
+            id == "powi"
+                || id == "powf"
+                || rhs_is_float_fold(&m.receiver)
+                || m.args.iter().any(rhs_is_float_fold)
+        }
+        syn::Expr::Call(c) => c.args.iter().any(rhs_is_float_fold),
+        syn::Expr::Paren(p) => rhs_is_float_fold(&p.expr),
+        syn::Expr::Cast(c) => rhs_is_float_fold(&c.expr),
+        syn::Expr::Unary(u) => rhs_is_float_fold(&u.expr),
+        syn::Expr::Reference(r) => rhs_is_float_fold(&r.expr),
+        syn::Expr::Index(ix) => rhs_is_float_fold(&ix.expr) || rhs_is_float_fold(&ix.index),
+        _ => false,
+    }
+}
+
+struct FoldVisitor<'a> {
+    hits: &'a mut Vec<Hit>,
+}
+
+impl<'ast> Visit<'ast> for FoldVisitor<'_> {
+    fn visit_expr_binary(&mut self, node: &'ast syn::ExprBinary) {
+        if matches!(node.op, syn::BinOp::AddAssign(_)) && rhs_is_float_fold(&node.right) {
+            let start = node.span().start();
+            self.hits.push(Hit {
+                rule: "kernel-reduction",
+                line: start.line,
+                col: start.column + 1,
+                msg: "float accumulation fold outside the kernel layer — use the \
+                      linalg::simd serial helpers or the blocked kernels"
+                    .into(),
+            });
+        }
+        syn::visit::visit_expr_binary(self, node);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-file entry point
+// ---------------------------------------------------------------------------
+
+/// Lint one file's source. `rel` is its repo-relative path (`/`-separated;
+/// rule scoping keys on it).
+pub fn lint_source(rel: &str, src: &str) -> Report {
+    let rel = rel.replace('\\', "/");
+    let lines: Vec<&str> = src.lines().collect();
+    let (mut waivers, mut diags) = parse_waivers(&rel, &lines);
+
+    let mut test_ranges: Vec<(usize, usize)> = Vec::new();
+    let mut hits: Vec<Hit> = Vec::new();
+
+    match syn::parse_file(src) {
+        Ok(ast) => {
+            TestRanges { ranges: &mut test_ranges }.visit_file(&ast);
+            if reduction_in_scope(&rel) {
+                FoldVisitor { hits: &mut hits }.visit_file(&ast);
+            }
+        }
+        Err(e) => {
+            let start = e.span().start();
+            diags.push(Diagnostic {
+                rule: "parse-error".into(),
+                path: rel.clone(),
+                line: start.line,
+                col: start.column + 1,
+                msg: format!("file does not parse: {e}"),
+            });
+        }
+    }
+
+    match src.parse::<TokenStream>() {
+        Ok(ts) => scan_tokens(ts, &mut hits),
+        Err(_) => {} // already reported via syn above
+    }
+
+    let in_test =
+        |line: usize| test_ranges.iter().any(|&(s, e)| line >= s && line <= e);
+
+    for h in hits {
+        let (keep, msg) = match h.rule {
+            "no-fma" => (true, h.msg),
+            "no-spawn" => (!SPAWN_ALLOWED.contains(&rel.as_str()), h.msg),
+            "kernel-reduction" => (reduction_in_scope(&rel) && !in_test(h.line), h.msg),
+            "nondeterminism" => (nondet_in_scope(&rel) && !in_test(h.line), h.msg),
+            "confined-unsafe" => {
+                if UNSAFE_ALLOWED.contains(&rel.as_str()) {
+                    (
+                        !has_safety_comment(&lines, h.line),
+                        "`unsafe` in an allowlisted file without a `// SAFETY:` \
+                         justification on or above its line"
+                            .to_string(),
+                    )
+                } else {
+                    (
+                        true,
+                        "`unsafe` outside linalg/simd.rs + util/executor.rs — the \
+                         allowlist is closed (DESIGN.md §13)"
+                            .to_string(),
+                    )
+                }
+            }
+            _ => (true, h.msg),
+        };
+        if keep && !waived(&mut waivers, h.rule, h.line) {
+            diags.push(Diagnostic {
+                rule: h.rule.to_string(),
+                path: rel.clone(),
+                line: h.line,
+                col: h.col,
+                msg,
+            });
+        }
+    }
+
+    let mut report = Report::default();
+    for w in &waivers {
+        if w.used {
+            report.waivers_used += 1;
+        } else {
+            report.unused_waivers.push((rel.clone(), w.line, w.rule.clone()));
+        }
+    }
+    diags.sort_by_key(|d| (d.line, d.col, d.rule.clone()));
+    report.diags = diags;
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Tree walker
+// ---------------------------------------------------------------------------
+
+/// The four source trees the lint covers, relative to the repo root.
+pub const SCAN_ROOTS: [&str; 4] = ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Lint every `.rs` file under [`SCAN_ROOTS`]. Returns the merged report
+/// and the number of files scanned.
+pub fn lint_repo(root: &Path) -> (Report, usize) {
+    let mut files = Vec::new();
+    for d in SCAN_ROOTS {
+        collect(&root.join(d), &mut files);
+    }
+    files.sort();
+    let mut merged = Report::default();
+    for p in &files {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = match std::fs::read_to_string(p) {
+            Ok(s) => s,
+            Err(e) => {
+                merged.diags.push(Diagnostic {
+                    rule: "parse-error".into(),
+                    path: rel,
+                    line: 1,
+                    col: 1,
+                    msg: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        let r = lint_source(&rel, &src);
+        merged.diags.extend(r.diags);
+        merged.waivers_used += r.waivers_used;
+        merged.unused_waivers.extend(r.unused_waivers);
+    }
+    (merged, files.len())
+}

@@ -1,0 +1,37 @@
+//! CLI: `cargo run -p repro-lint [--release] [REPO_ROOT]`.
+//!
+//! Exits 0 when the tree is clean, 1 on any diagnostic (CI blocks on
+//! this), 2 when the root does not look like the repo.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| PathBuf::from("."));
+    if !root.join("rust/src").is_dir() {
+        eprintln!(
+            "repro-lint: `{}` has no rust/src — run from the repo root or pass it as arg 1",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+    let (report, files) = repro_lint::lint_repo(&root);
+    for d in &report.diags {
+        println!("{d}");
+    }
+    for (path, line, rule) in &report.unused_waivers {
+        eprintln!("warning: {path}:{line}: unused waiver for `{rule}` — remove it");
+    }
+    eprintln!(
+        "repro-lint: {} file(s), {} diagnostic(s), {} waiver(s) honored, {} unused",
+        files,
+        report.diags.len(),
+        report.waivers_used,
+        report.unused_waivers.len()
+    );
+    if report.diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

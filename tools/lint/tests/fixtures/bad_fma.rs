@@ -1,0 +1,7 @@
+// no-fma fixture: the §12 accumulation contract rounds every product
+// before the add, so fused multiply-adds are banned on every backend.
+use core::arch::x86_64::_mm256_fmadd_pd;
+
+pub fn fused(a: f64, b: f64, c: f64) -> f64 {
+    a.mul_add(b, c)
+}

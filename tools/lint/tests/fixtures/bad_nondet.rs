@@ -1,0 +1,9 @@
+// nondeterminism fixture: wallclock types are confined to util/timer.rs
+// and the bench harness; entropy-seeded RNG is banned everywhere.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+pub fn epoch() {
+    let _ = std::time::SystemTime::now();
+}

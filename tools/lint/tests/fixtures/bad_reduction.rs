@@ -1,0 +1,13 @@
+// kernel-reduction fixture: float reductions belong to linalg/simd.rs —
+// both the iterator sum and the manual fold loop must fire.
+pub fn total(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>()
+}
+
+pub fn sumsq(v: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in v {
+        acc += x * x;
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// no-spawn fixture: thread creation is util/executor.rs's monopoly
+// (DESIGN.md §11 — the zero-spawn invariant the tests pin dynamically).
+pub fn fan_out() {
+    let h = std::thread::spawn(|| 1 + 1);
+    std::thread::scope(|_s| {});
+    h.join().unwrap();
+}

@@ -1,0 +1,5 @@
+// confined-unsafe fixture: `unsafe` outside the two allowlisted kernel
+// files is rejected outright, justified or not.
+pub fn peek(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,23 @@
+// Clean fixture: the shapes library code is supposed to use — integer
+// work counters, re-accumulation of kernel partials, and an explicit,
+// reasoned waiver. Must produce zero diagnostics.
+pub fn counters(cols: usize, d: usize) -> usize {
+    let mut col_ops = 0usize;
+    for _ in 0..cols {
+        col_ops += 2 * d; // integer work accounting, not a float fold
+    }
+    col_ops
+}
+
+pub fn refold(partials: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for &p in partials {
+        total += p; // left-to-right re-fold of kernel partials: no product
+    }
+    total
+}
+
+pub fn waived(v: &[f64]) -> f64 {
+    // repro-lint: allow(kernel-reduction): fixture exercising the waiver path
+    v.iter().sum::<f64>()
+}

@@ -1,0 +1,174 @@
+//! Fixture-driven proof that every rule is live: each known-bad snippet
+//! must fire with the exact rule id and line, the clean fixture and the
+//! full repo tree must pass, and the scoping/waiver machinery must behave
+//! as documented.
+
+use repro_lint::{lint_repo, lint_source, Report};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// (line, rule) pairs of a report, sorted.
+fn fired(r: &Report) -> Vec<(usize, String)> {
+    let mut v: Vec<_> = r.diags.iter().map(|d| (d.line, d.rule.clone())).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn no_fma_fires_on_method_and_intrinsic() {
+    let r = lint_source("rust/src/ops.rs", &fixture("bad_fma.rs"));
+    assert_eq!(
+        fired(&r),
+        vec![(3, "no-fma".to_string()), (6, "no-fma".to_string())],
+        "{:#?}",
+        r.diags
+    );
+}
+
+#[test]
+fn kernel_reduction_fires_on_sum_and_fold() {
+    let r = lint_source("rust/src/ops.rs", &fixture("bad_reduction.rs"));
+    assert_eq!(
+        fired(&r),
+        vec![(4, "kernel-reduction".to_string()), (10, "kernel-reduction".to_string())],
+        "{:#?}",
+        r.diags
+    );
+}
+
+#[test]
+fn kernel_reduction_is_scoped_to_library_code() {
+    // the same source is a legitimate reference reduction in a test file,
+    // in a bench, and inside the kernel layer itself
+    for rel in ["rust/tests/foo.rs", "rust/benches/foo.rs", "rust/src/linalg/simd.rs"] {
+        let r = lint_source(rel, &fixture("bad_reduction.rs"));
+        assert!(r.diags.is_empty(), "{rel} should be out of scope: {:#?}", r.diags);
+    }
+    // ... and inside a #[cfg(test)] module of library code
+    let src = format!("#[cfg(test)]\nmod tests {{\n{}\n}}\n", fixture("bad_reduction.rs"));
+    let r = lint_source("rust/src/ops.rs", &src);
+    assert!(r.diags.is_empty(), "cfg(test) should be exempt: {:#?}", r.diags);
+}
+
+#[test]
+fn no_spawn_fires_on_spawn_and_scope() {
+    let r = lint_source("rust/src/coordinator/cv.rs", &fixture("bad_spawn.rs"));
+    assert_eq!(
+        fired(&r),
+        vec![(4, "no-spawn".to_string()), (5, "no-spawn".to_string())],
+        "{:#?}",
+        r.diags
+    );
+    // ... but the executor itself is the allowlisted home
+    let r = lint_source("rust/src/util/executor.rs", &fixture("bad_spawn.rs"));
+    assert!(r.diags.is_empty(), "{:#?}", r.diags);
+}
+
+#[test]
+fn confined_unsafe_fires_outside_the_allowlist() {
+    let r = lint_source("rust/src/data/io.rs", &fixture("bad_unsafe.rs"));
+    assert_eq!(fired(&r), vec![(4, "confined-unsafe".to_string())], "{:#?}", r.diags);
+}
+
+#[test]
+fn allowlisted_unsafe_requires_a_safety_comment() {
+    // same snippet inside the kernel layer: still fires, because the
+    // block carries no justification ...
+    let r = lint_source("rust/src/linalg/simd.rs", &fixture("bad_unsafe.rs"));
+    assert_eq!(fired(&r), vec![(4, "confined-unsafe".to_string())], "{:#?}", r.diags);
+    // ... and passes once a SAFETY comment sits directly above the block
+    let src = "pub fn peek(v: &[u8]) -> u8 {\n    \
+               // SAFETY: slice pointers are valid for reads of len >= 1\n    \
+               unsafe { *v.as_ptr() }\n}\n";
+    let r = lint_source("rust/src/linalg/simd.rs", src);
+    assert!(r.diags.is_empty(), "{:#?}", r.diags);
+}
+
+#[test]
+fn nondeterminism_fires_on_instant_and_systemtime() {
+    let r = lint_source("rust/src/coordinator/cv.rs", &fixture("bad_nondet.rs"));
+    assert_eq!(
+        fired(&r),
+        vec![
+            (3, "nondeterminism".to_string()),
+            (4, "nondeterminism".to_string()),
+            (8, "nondeterminism".to_string())
+        ],
+        "{:#?}",
+        r.diags
+    );
+    // the timing substrate and the bench harness are the allowlisted homes
+    for rel in ["rust/src/util/timer.rs", "rust/src/bench.rs", "rust/benches/exec.rs"] {
+        let r = lint_source(rel, &fixture("bad_nondet.rs"));
+        assert!(r.diags.is_empty(), "{rel} should be allowlisted: {:#?}", r.diags);
+    }
+}
+
+#[test]
+fn clean_fixture_passes_and_honors_its_waiver() {
+    let r = lint_source("rust/src/ops.rs", &fixture("clean.rs"));
+    assert!(r.diags.is_empty(), "{:#?}", r.diags);
+    assert_eq!(r.waivers_used, 1);
+    assert!(r.unused_waivers.is_empty(), "{:?}", r.unused_waivers);
+}
+
+#[test]
+fn file_level_waiver_covers_the_whole_file() {
+    let src = format!(
+        "// repro-lint: allow-file(kernel-reduction): reference fold, reason here\n{}",
+        fixture("bad_reduction.rs")
+    );
+    let r = lint_source("rust/src/ops.rs", &src);
+    assert!(r.diags.is_empty(), "{:#?}", r.diags);
+    assert_eq!(r.waivers_used, 1);
+}
+
+#[test]
+fn malformed_waivers_are_diagnostics() {
+    // unknown rule
+    let r = lint_source("rust/src/ops.rs", "// repro-lint: allow(no-such-rule): why\n");
+    assert_eq!(fired(&r), vec![(1, "bad-waiver".to_string())], "{:#?}", r.diags);
+    // missing reason
+    let r = lint_source("rust/src/ops.rs", "// repro-lint: allow(no-fma):\n");
+    assert_eq!(fired(&r), vec![(1, "bad-waiver".to_string())], "{:#?}", r.diags);
+    // unused waivers surface as warnings, not diagnostics
+    let r = lint_source("rust/src/ops.rs", "// repro-lint: allow(no-fma): nothing here\n");
+    assert!(r.diags.is_empty());
+    assert_eq!(r.unused_waivers.len(), 1);
+}
+
+#[test]
+fn macro_bodies_are_scanned() {
+    // syn's item visitors do not descend into macro_rules! bodies; the
+    // token-level pass must still catch a fused op hidden there
+    let src = "macro_rules! sneaky {\n    () => {\n        a.mul_add(b, c)\n    };\n}\n";
+    let r = lint_source("rust/src/ops.rs", src);
+    assert_eq!(fired(&r), vec![(3, "no-fma".to_string())], "{:#?}", r.diags);
+}
+
+#[test]
+fn full_tree_is_clean() {
+    // the acceptance gate: `cargo run -p repro-lint` over the real repo
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let (report, files) = lint_repo(&root);
+    assert!(files > 40, "walker found only {files} files — wrong root?");
+    assert!(
+        report.diags.is_empty(),
+        "the repo tree must lint clean:\n{}",
+        report
+            .diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        report.unused_waivers.is_empty(),
+        "stale waivers: {:?}",
+        report.unused_waivers
+    );
+}
