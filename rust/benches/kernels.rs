@@ -12,6 +12,10 @@
 //!   * static-DPC vs gap-dynamic screening on the synthetic2 path:
 //!     epochs-to-converge and total column-sweep work (recorded in
 //!     `BENCH_gap.json` at the repo root);
+//!   * the penalty seam (DESIGN.md §14): concrete ℓ2,1 kernels vs the
+//!     same operations routed through `PenaltyKind` dispatch, plus the
+//!     absolute cost of the sgl/gowl prox kernels (recorded in
+//!     `BENCH_penalty.json` at the repo root);
 //!   * one FISTA iteration (exact) / one FISTA chunk step (AOT);
 //!   * the AOT screen artifact (PJRT end-to-end including marshalling).
 //!
@@ -22,6 +26,7 @@ use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
 use mtfl_dpc::data::{Dataset, Task};
 use mtfl_dpc::linalg::{simd, CscMatrix};
 use mtfl_dpc::ops;
+use mtfl_dpc::penalty::{Penalty, PenaltyKind};
 use mtfl_dpc::runtime::AotEngine;
 use mtfl_dpc::screening::dpc::{ball, DpcScreener, DualRef};
 use mtfl_dpc::screening::secular::qp1qc_max;
@@ -282,6 +287,80 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| PathBuf::from("BENCH_gap.json"));
     std::fs::write(&gap_path, &gap_json)?;
     println!("wrote {}", gap_path.display());
+
+    // penalty seam (DESIGN.md §14): what the trait costs. Each dispatch
+    // row times a hot operation through the concrete ℓ2,1 entry point and
+    // through PenaltyKind enum dispatch — bit-identical results
+    // (rust/tests/penalty_parity.rs), so the ratio is pure seam overhead.
+    // The instance rows record the absolute prox cost of the non-ℓ2,1
+    // penalties (gowl pays a per-row sort + PAV pass on top of sgl's two
+    // thresholds).
+    println!("\n== penalty seam: concrete ℓ2,1 vs PenaltyKind dispatch (T={t}, N={n}, d={d}) ==\n");
+    let pk = PenaltyKind::L21;
+    let pw = vec![0.01f64; d * t];
+    let b2 = ds.col_sqnorms();
+    let plam = 0.4 * lmax;
+    let mut dispatch_rows: Vec<String> = Vec::new();
+    let mut dispatch_row = |name: &str, c: f64, s: f64| {
+        let overhead = s / c;
+        println!("   -> {name}: seam/concrete = {overhead:.3}\n");
+        dispatch_rows.push(format!(
+            "    {{\"name\": \"{name}\", \"concrete_median_s\": {c:.6e}, \
+             \"seam_median_s\": {s:.6e}, \"overhead\": {overhead:.3}}}"
+        ));
+    };
+    let c = b.run("l21 value (ops::l21_norm)", || ops::l21_norm(&pw, t));
+    let s = b.run("l21 value (PenaltyKind seam)", || pk.value(&pw, t));
+    dispatch_row("value", c.median(), s.median());
+    let c = b.run("prox21_inplace (concrete, incl. clone)", || {
+        let mut wb = pw.clone();
+        mtfl_dpc::solver::prox::prox21_inplace(&mut wb, t, 0.02)
+    });
+    let s = b.run("prox (PenaltyKind seam, incl. clone)", || {
+        let mut wb = pw.clone();
+        pk.prox_inplace(&mut wb, t, 0.02)
+    });
+    dispatch_row("prox", c.median(), s.median());
+    let c = b.run("ball_scores (concrete sweep)", || {
+        mtfl_dpc::screening::ball_scores(&ds, &b2, &o, delta)
+    });
+    let s = b.run("ball_scores_for (PenaltyKind seam)", || {
+        mtfl_dpc::screening::ball_scores_for(&ds, &b2, &o, delta, &pk)
+    });
+    dispatch_row("ball_scores", c.median(), s.median());
+    let c = b.run("duality_gap (concrete)", || ops::duality_gap(&ds, &pw, plam));
+    let s = b.run("duality_gap_for (PenaltyKind seam)", || {
+        ops::duality_gap_for(&ds, &pw, plam, &pk)
+    });
+    dispatch_row("duality_gap", c.median(), s.median());
+    let mut instance_rows: Vec<String> = Vec::new();
+    for (label, kind) in [
+        ("l21", PenaltyKind::L21),
+        ("sgl(a=0.3)", PenaltyKind::Sgl { alpha: 0.3 }),
+        ("gowl(g=1)", PenaltyKind::Gowl { gamma: 1.0 }),
+    ] {
+        let st = b.run(&format!("prox {label} (incl. clone)"), || {
+            let mut wb = pw.clone();
+            kind.prox_inplace(&mut wb, t, 0.02)
+        });
+        instance_rows.push(format!(
+            "    {{\"name\": \"prox {label}\", \"median_s\": {:.6e}}}",
+            st.median()
+        ));
+    }
+    let pen_json = format!(
+        "{{\n  \"bench\": \"penalty_seam_dispatch_overhead\",\n  \"generated_by\": \
+         \"cargo bench --bench kernels\",\n  \"shape\": {{\"t\": {t}, \"n\": {n}, \"d\": {d}}},\n  \
+         \"provisional\": false,\n  \"dispatch\": [\n{}\n  ],\n  \"instances\": [\n{}\n  ]\n}}\n",
+        dispatch_rows.join(",\n"),
+        instance_rows.join(",\n")
+    );
+    let pen_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_penalty.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_penalty.json"));
+    std::fs::write(&pen_path, &pen_json)?;
+    println!("wrote {}", pen_path.display());
 
     // AOT engine micro-benches if artifacts exist
     let dir = PathBuf::from("artifacts");

@@ -9,6 +9,13 @@
 //! and hardcoded FISTA + DPC while doing it, ignoring the configured
 //! screener/solver). The winner is the λ with the lowest mean validation
 //! MSE. Folds run in parallel; per-fold failures propagate as errors.
+//!
+//! Penalty seam (DESIGN.md §14): the penalty rides along in
+//! `PathOptions::solve.penalty` untouched — CV composes with any penalty
+//! the path runner accepts. [`validation_mse`] is *loss*-owned, not
+//! penalty-owned (held-out error is squared loss regardless of the
+//! regularizer); a future multinomial loss would swap it through the
+//! `penalty::loss` seam.
 
 use super::path::{run_path_with, EngineKind, LambdaRecord, PathObserver, PathOptions};
 use crate::data::{Dataset, Task};

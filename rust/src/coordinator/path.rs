@@ -18,6 +18,14 @@
 //! combined with `SolveOptions::dynamic_every` the solvers keep
 //! re-screening mid-solve as the gap shrinks.
 //!
+//! Penalty seam (DESIGN.md §14): the path reads the penalty from
+//! `opts.solve.penalty` and validates capabilities up front — DPC
+//! variants and the BCD solver are ℓ2,1 geometry and are rejected for
+//! other penalties with an actionable error; sparse-group lasso and
+//! group OWL run through `None`/`GapSafe` + FISTA, with λ_max, gap
+//! evaluation, screening scores, and safety verification all supplied by
+//! the penalty's own operations.
+//!
 //! The exact path is storage-agnostic: screening, compaction
 //! ([`Dataset::restrict`]), and both solvers address columns through
 //! [`crate::linalg::ColRef`], so a CSC-backed dataset (text/genomics)
@@ -257,6 +265,25 @@ fn run_path_exact(
     obs: &mut dyn PathObserver,
 ) -> Result<PathRunResult> {
     ds.validate()?;
+    let pen: &dyn crate::penalty::Penalty = &opts.solve.penalty;
+    if !opts.solve.penalty.is_l21() {
+        // capability gate (DESIGN.md §14): DPC's Theorem-5 ball and BCD's
+        // row secular solve are ℓ2,1 geometry; fail here with a cure
+        // instead of screening unsafely / solving the wrong problem
+        anyhow::ensure!(
+            matches!(opts.screener, ScreenerKind::None | ScreenerKind::GapSafe),
+            "screener {:?} is ℓ2,1-only (DPC's Theorem-5 ball is ℓ2,1 dual geometry); \
+             penalty {} screens with --screener gap or none",
+            opts.screener,
+            pen.name()
+        );
+        anyhow::ensure!(
+            matches!(opts.solver, SolverKind::Fista),
+            "solver Bcd is ℓ2,1-only (its row update is the ℓ2,1 secular solve); \
+             penalty {} solves with --solver fista",
+            pen.name()
+        );
+    }
     let t_count = ds.t();
     let mut total = Stopwatch::new();
     total.start();
@@ -266,7 +293,15 @@ fn run_path_exact(
         .then(|| DpcScreener::new(ds));
     let cs = matches!(opts.screener, ScreenerKind::DpcCs).then(|| CsScreener::new(ds));
     let gs = matches!(opts.screener, ScreenerKind::GapSafe).then(|| GapScreener::new(ds));
-    let (dref0, lam_max) = DualRef::at_lambda_max(ds);
+    // λ_max and the DPC dual reference: the closed-form reference exists
+    // only in ℓ2,1 geometry; other penalties take λ_max from their own
+    // infeasibility functional and never build a DualRef
+    let l21_head = opts.solve.penalty.is_l21().then(|| DualRef::at_lambda_max(ds));
+    let lam_max = match &l21_head {
+        Some((_, lmax)) => *lmax,
+        None => ops::lambda_max_for(ds, pen).0,
+    };
+    let dref0 = l21_head.map(|(d, _)| d);
     let mut dref = dref0.clone();
 
     let mut prev_w = vec![0.0f64; ds.d * t_count];
@@ -282,16 +317,20 @@ fn run_path_exact(
             match opts.screener {
                 ScreenerKind::None => (0..ds.d).collect(),
                 ScreenerKind::Dpc => step_screen
-                    .time(|| screener.as_ref().unwrap().screen(ds, &dref, lam))
+                    .time(|| {
+                        screener.as_ref().unwrap().screen(ds, dref.as_ref().unwrap(), lam)
+                    })
                     .kept_indices(),
                 ScreenerKind::DpcOneShot => step_screen
-                    .time(|| screener.as_ref().unwrap().screen(ds, &dref0, lam))
+                    .time(|| {
+                        screener.as_ref().unwrap().screen(ds, dref0.as_ref().unwrap(), lam)
+                    })
                     .kept_indices(),
                 ScreenerKind::DpcCs => step_screen
-                    .time(|| cs.as_ref().unwrap().screen(ds, &dref, lam))
+                    .time(|| cs.as_ref().unwrap().screen(ds, dref.as_ref().unwrap(), lam))
                     .kept_indices(),
                 ScreenerKind::GapSafe => step_screen
-                    .time(|| gs.as_ref().unwrap().screen_primal(ds, lam, &prev_w))
+                    .time(|| gs.as_ref().unwrap().screen_primal_for(ds, lam, &prev_w, pen))
                     .kept_indices(),
             }
         };
@@ -300,7 +339,7 @@ fn run_path_exact(
         let mut step_solve = Stopwatch::new();
         let mut w_full = vec![0.0f64; ds.d * t_count];
         let (obj, gap, iters, col_ops) = if keep.is_empty() {
-            let (o, g, _) = ops::duality_gap(ds, &w_full, lam);
+            let (o, g, _) = ops::duality_gap_for(ds, &w_full, lam, pen);
             (o, g, 0, 0)
         } else if keep.len() == ds.d {
             let res = step_solve.time(|| solve_exact(ds, lam, Some(&prev_w), opts));
@@ -346,13 +385,18 @@ fn run_path_exact(
                 }
                 m
             };
-            // a tight reference regardless of the screened run's tolerance:
-            // the verifier must stay discriminating in exactly the loose
-            // regime gap certification exists for
+            // a tight reference regardless of the screened run's tolerance
+            // — same penalty, or the verifier would solve a different
+            // problem: the verifier must stay discriminating in exactly
+            // the loose regime gap certification exists for
             let mut vopts = opts.clone();
-            vopts.solve = crate::solver::SolveOptions::tight();
+            vopts.solve = crate::solver::SolveOptions {
+                penalty: opts.solve.penalty,
+                ..crate::solver::SolveOptions::tight()
+            };
             let full = solve_exact(ds, lam, Some(&prev_w), &vopts);
-            let report = safety::verify(ds, &full.w, lam, &mask, 10.0 * opts.active_tol);
+            let report =
+                safety::verify_for(ds, &full.w, lam, &mask, 10.0 * opts.active_tol, pen);
             anyhow::ensure!(
                 report.is_safe(),
                 "screening violated safety at ratio {ratio}: {:?}",
@@ -389,7 +433,7 @@ fn run_path_exact(
         // update (it costs a correlation sweep).
         let seq = matches!(opts.screener, ScreenerKind::Dpc | ScreenerKind::DpcCs);
         if seq && ratio < 1.0 - 1e-12 {
-            dref = DualRef::from_solution(ds, lam, &w_full);
+            dref = Some(DualRef::from_solution(ds, lam, &w_full));
         }
         prev_w = w_full;
     }
@@ -476,6 +520,13 @@ pub fn run_path_sharded_with(
         !opts.verify_safety,
         "verify_safety re-solves the unrestricted problem and needs the matrix \
          in RAM — run it on the dense/CSC backends"
+    );
+    anyhow::ensure!(
+        opts.solve.penalty.is_l21(),
+        "penalty {} is not supported out-of-core: the streamed gap scaling \
+         (screening::shard::streamed_gap) is the ℓ2,1 feasibility rule — run \
+         this penalty on the dense/CSC backends",
+        opts.solve.penalty
     );
     let t_count = sh.t();
     let d = sh.d();
@@ -676,6 +727,12 @@ fn run_path_aot(
     anyhow::ensure!(
         opts.solve.dynamic_every == 0,
         "dynamic screening (dynamic_every > 0) is exact-engine only"
+    );
+    anyhow::ensure!(
+        opts.solve.penalty.is_l21(),
+        "penalty {} is exact-engine only: the AOT artifacts bake in the ℓ2,1 \
+         prox and dual scaling",
+        opts.solve.penalty
     );
     engine.warmup_config(&cfg)?;
 
@@ -959,6 +1016,59 @@ mod tests {
         let s: usize = cs.records.iter().map(|r| r.rejected).sum();
         let o: usize = dpc.records.iter().map(|r| r.rejected).sum();
         assert!(s <= o, "CS rejected more than exact DPC");
+    }
+
+    #[test]
+    fn non_l21_penalties_are_gated_to_supported_components() {
+        let ds = small();
+        let sgl = crate::penalty::PenaltyKind::Sgl { alpha: 0.5 };
+        // DPC screener: ℓ2,1 geometry, must be refused with a cure
+        let mut o = opts(ScreenerKind::Dpc);
+        o.solve.penalty = sgl;
+        let err = run_path(&ds, &o, &EngineKind::Exact).unwrap_err().to_string();
+        assert!(err.contains("--screener gap"), "unhelpful error: {err}");
+        // BCD solver: ℓ2,1 row subproblem, must be refused with a cure
+        let mut o = opts(ScreenerKind::GapSafe);
+        o.solve.penalty = sgl;
+        o.solver = SolverKind::Bcd;
+        let err = run_path(&ds, &o, &EngineKind::Exact).unwrap_err().to_string();
+        assert!(err.contains("--solver fista"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn generic_penalty_paths_run_screened_and_verified() {
+        // GapSafe + FISTA + paranoid verification for both new penalties:
+        // the λ_max head of the grid must solve to W = 0, every rejection
+        // must survive the penalty-aware independent verifier, and the
+        // screeners must actually fire somewhere along the grid
+        let ds = small();
+        for pk in [
+            crate::penalty::PenaltyKind::Sgl { alpha: 0.4 },
+            crate::penalty::PenaltyKind::Gowl { gamma: 1.0 },
+        ] {
+            let mut o = opts(ScreenerKind::GapSafe);
+            o.solve.penalty = pk;
+            let res = run_path(&ds, &o, &EngineKind::Exact)
+                .unwrap_or_else(|e| panic!("{pk} path failed: {e:#}"));
+            let head = &res.records[0];
+            assert_eq!(head.kept, 0, "{pk}: λ_max head must keep nothing");
+            assert!(
+                head.gap <= 1e-6 * head.obj.abs().max(1.0),
+                "{pk}: W=0 not optimal at its own λ_max (gap {})",
+                head.gap
+            );
+            // every per-λ solve must have certified itself (records carry
+            // the final gap); verify_safety already errored on any unsafe
+            // rejection inside run_path
+            for r in &res.records {
+                assert!(
+                    r.gap <= 10.0 * o.solve.tol * r.obj.abs().max(1.0),
+                    "{pk}: unconverged at ratio {} (gap {})",
+                    r.ratio,
+                    r.gap
+                );
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,11 @@
 //! a [`PathObserver`] as the path streams each per-λ solution — the
 //! pre-observer implementation only tested the final (smallest-λ)
 //! solution, silently missing features active only at larger λ.
+//!
+//! Penalty seam (DESIGN.md §14): penalty-agnostic by construction — the
+//! penalty rides along in `PathOptions::solve.penalty`, and the
+//! union-over-λ activity test (nonzero solution rows) is exactly the row
+//! structure every [`crate::penalty::Penalty`] instance regularizes.
 
 use super::path::{run_path_with, EngineKind, LambdaRecord, PathObserver, PathOptions};
 use crate::data::{Dataset, Task};

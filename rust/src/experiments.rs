@@ -278,8 +278,13 @@ pub fn run_table1(scale: Scale, engine: &EngineKind) -> Result<String> {
 // ABL1/ABL2: exact QP1QC vs CS bound; sequential vs one-shot
 // ---------------------------------------------------------------------------
 
-/// The ABL1/ABL2 screener ablation table (DESIGN.md §8).
+/// The ABL1/ABL2 screener ablation table (DESIGN.md §8), extended with
+/// penalty-seam rows (DESIGN.md §14): sparse-group lasso and group OWL
+/// run the same grid through the GAP-safe screener, so their rejection
+/// power and column-sweep cost line up against the ℓ2,1 screeners in one
+/// table.
 pub fn run_ablation(scale: Scale) -> Result<String> {
+    use crate::penalty::PenaltyKind;
     let d = *scale.synth_dims().first().unwrap();
     let ds = build_synthetic(2, d, scale, 42);
     let engine = EngineKind::Exact;
@@ -288,16 +293,29 @@ pub fn run_ablation(scale: Scale) -> Result<String> {
     let mut table = crate::bench::Table::new(&[
         "screener", "total rejected", "mean rejection", "screen(s)", "col-ops", "total(s)",
     ]);
-    for (name, kind, dynamic_every) in [
-        ("DPC (exact QP1QC, sequential)", ScreenerKind::Dpc, 0usize),
-        ("DPC + dynamic gap screening", ScreenerKind::Dpc, DYNAMIC_EVERY),
-        ("GAP-safe (gap ball, static)", ScreenerKind::GapSafe, 0),
-        ("DPC-CS (Cauchy-Schwarz bound)", ScreenerKind::DpcCs, 0),
-        ("DPC one-shot (from lambda_max)", ScreenerKind::DpcOneShot, 0),
-        ("no screening", ScreenerKind::None, 0),
+    for (name, kind, dynamic_every, penalty) in [
+        ("DPC (exact QP1QC, sequential)", ScreenerKind::Dpc, 0usize, PenaltyKind::L21),
+        ("DPC + dynamic gap screening", ScreenerKind::Dpc, DYNAMIC_EVERY, PenaltyKind::L21),
+        ("GAP-safe (gap ball, static)", ScreenerKind::GapSafe, 0, PenaltyKind::L21),
+        ("DPC-CS (Cauchy-Schwarz bound)", ScreenerKind::DpcCs, 0, PenaltyKind::L21),
+        ("DPC one-shot (from lambda_max)", ScreenerKind::DpcOneShot, 0, PenaltyKind::L21),
+        ("no screening", ScreenerKind::None, 0, PenaltyKind::L21),
+        (
+            "sgl(a=0.3) + GAP-safe",
+            ScreenerKind::GapSafe,
+            0,
+            PenaltyKind::Sgl { alpha: 0.3 },
+        ),
+        (
+            "gowl(g=1) + GAP-safe",
+            ScreenerKind::GapSafe,
+            0,
+            PenaltyKind::Gowl { gamma: 1.0 },
+        ),
     ] {
         let mut opts = exp_opts(scale.grid_len(), kind);
         opts.solve.dynamic_every = dynamic_every;
+        opts.solve.penalty = penalty;
         let res = run_path(&ds, &opts, &engine)?;
         let rejected: usize = res.records.iter().map(|r| r.rejected).sum();
         table.row(&[
@@ -309,7 +327,7 @@ pub fn run_ablation(scale: Scale) -> Result<String> {
             format!("{:.2}", res.total_secs),
         ]);
     }
-    out.push_str(&format!("ABL1/ABL2 on {} (d={})\n", ds.name, ds.d));
+    out.push_str(&format!("ABL1/ABL2 + penalty seam on {} (d={})\n", ds.name, ds.d));
     out.push_str(&table.render());
     Ok(out)
 }

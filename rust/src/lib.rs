@@ -25,6 +25,11 @@
 //! sharded backend and its screen-before-load pipeline (DESIGN.md §10):
 //! [`data::ShardedDataset`], `screening::shard`,
 //! [`coordinator::path::run_path_sharded`].
+//!
+//! The regularizer is a seam, not a constant (DESIGN.md §14): every layer
+//! programs against the [`penalty::Penalty`] trait, with the paper's ℓ2,1
+//! norm as the bit-identical default and sparse-group lasso / group OWL
+//! as drop-in instances (`--penalty sgl|gowl`).
 
 #![warn(missing_docs)]
 
@@ -35,6 +40,7 @@ pub mod data;
 pub mod experiments;
 pub mod linalg;
 pub mod ops;
+pub mod penalty;
 pub mod runtime;
 pub mod screening;
 pub mod solver;
@@ -42,5 +48,6 @@ pub mod testing;
 pub mod util;
 
 pub use data::Dataset;
+pub use penalty::{Penalty, PenaltyKind};
 pub use screening::dpc::DpcScreener;
 pub use solver::{SolveOptions, SolveResult};

@@ -368,6 +368,17 @@ pub fn sumsq_serial_f64(v: &[f64]) -> f64 {
     acc
 }
 
+/// Left-to-right serial `Σ |xᵢ|` — the ℓ1 part of the sparse-group-lasso
+/// penalty value (`penalty::sgl`), pinned here with the other folds.
+#[inline]
+pub fn abs_sum_serial_f64(v: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in v {
+        acc += x.abs();
+    }
+    acc
+}
+
 /// Left-to-right serial `Σ (xᵢ − m)²` around a precomputed center `m`.
 #[inline]
 pub fn centered_sumsq_serial_f64(v: &[f64], m: f64) -> f64 {

@@ -36,6 +36,10 @@ path / cv / stability options:
   --dynamic-every K   re-screen inside the solver every K epochs on the
                       live duality-gap ball (0 = off, default)
   --solver fista|bcd
+  --penalty l21|sgl|gowl   row-structured penalty (default l21, the paper's
+                      norm; sgl/gowl require --screener gap|none + fista)
+  --penalty-alpha A   sgl mixing weight in [0,1) (default 0.5)
+  --penalty-gamma G   gowl weight decay, >= 0 (default 1.0)
   --seed S
 
 path options (storage backend):
@@ -109,12 +113,17 @@ fn parse_solver(args: &Args) -> Result<SolverKind> {
     })
 }
 
-/// Shared --screener/--solver/--dynamic-every parsing + options assembly
-/// for the grid subcommands (path, cv, stability).
+/// Shared --screener/--solver/--penalty/--dynamic-every parsing + options
+/// assembly for the grid subcommands (path, cv, stability).
 fn grid_opts(args: &Args, grid: usize) -> Result<PathOptions> {
     let mut opts = experiments::exp_opts(grid, parse_screener(args)?);
     opts.solver = parse_solver(args)?;
     opts.solve.dynamic_every = args.get_usize("dynamic-every", 0)?;
+    opts.solve.penalty = mtfl_dpc::PenaltyKind::parse(
+        args.get_or("penalty", "l21"),
+        args.get_f64("penalty-alpha", 0.5)?,
+        args.get_f64("penalty-gamma", 1.0)?,
+    )?;
     Ok(opts)
 }
 

@@ -289,6 +289,28 @@ pub fn dual_feasible(ds: &Dataset, z: Stacked) -> (Stacked, f64) {
     }
 }
 
+/// [`dual_feasible`] generalized over the penalty seam (DESIGN.md §14):
+/// scale `z` by `1/max(1, s)` where `s` is the penalty's dual
+/// infeasibility of the correlations `c(z)`. For the ℓ2,1 instance the
+/// scale equals [`dual_feasible`]'s `max_l √g_l` (same correlation
+/// sweep, same maximum), so the projected point is numerically
+/// identical; non-ℓ2,1 penalties supply their own dual norm.
+pub fn dual_feasible_for(
+    ds: &Dataset,
+    z: Stacked,
+    pen: &dyn crate::penalty::Penalty,
+) -> (Stacked, f64) {
+    let corr = task_corr(ds, &z);
+    let (m, _) = pen.infeasibility(&corr, ds.t());
+    if m > 1.0 {
+        let mut theta = z;
+        stacked_scale_inplace(&mut theta, 1.0 / m);
+        (theta, m)
+    } else {
+        (z, 1.0)
+    }
+}
+
 /// Dual objective D(θ) = ½‖y‖² − λ²/2 ‖y/λ − θ‖² at a (feasible) θ.
 pub fn dual_obj(y: &Stacked, theta: &Stacked, lam: f64) -> f64 {
     // one global left-to-right fold threaded across tasks (splitting into
@@ -314,6 +336,35 @@ pub fn duality_gap(ds: &Dataset, w: &[f64], lam: f64) -> (f64, f64, Stacked) {
     (obj, obj - dual, theta)
 }
 
+/// Generalized primal objective F(W) = ½ Σ_t ‖X_t w_t − y_t‖² + λ·Ω(W)
+/// for any [`crate::penalty::Penalty`] Ω.
+pub fn primal_obj_for(ds: &Dataset, w: &[f64], lam: f64, pen: &dyn crate::penalty::Penalty) -> f64 {
+    let r = residual(ds, w);
+    0.5 * stacked_sqnorm(&r) + lam * pen.value(w, ds.t())
+}
+
+/// [`duality_gap`] generalized over the penalty seam: the primal uses the
+/// penalty's value and the dual point is projected with the penalty's
+/// dual norm ([`dual_feasible_for`]). The dual objective itself is
+/// loss-owned (squared loss here — `penalty::loss`), not penalty-owned,
+/// so [`dual_obj`] is shared. For ℓ2,1 this evaluates the identical
+/// sweeps in the identical order as [`duality_gap`]
+/// (`rust/tests/penalty_parity.rs` pins the equality).
+pub fn duality_gap_for(
+    ds: &Dataset,
+    w: &[f64],
+    lam: f64,
+    pen: &dyn crate::penalty::Penalty,
+) -> (f64, f64, Stacked) {
+    let y = y64(ds);
+    let mut r = residual(ds, w);
+    let obj = 0.5 * stacked_sqnorm(&r) + lam * pen.value(w, ds.t());
+    stacked_scale_inplace(&mut r, -1.0 / lam);
+    let (theta, _) = dual_feasible_for(ds, r, pen);
+    let dual = dual_obj(&y, &theta, lam);
+    (obj, obj - dual, theta)
+}
+
 // ---------------------------------------------------------------------------
 // Theorem 1: lambda_max and the normal vector at y/lambda_max
 // ---------------------------------------------------------------------------
@@ -326,6 +377,17 @@ pub fn lambda_max(ds: &Dataset) -> (f64, usize, Vec<f64>) {
         .enumerate()
         .fold((0usize, f64::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
     (gmax.max(0.0).sqrt(), lstar, g)
+}
+
+/// Theorem 1 generalized over the penalty seam: λ_max is the smallest λ
+/// with `y/λ` dual-feasible, i.e. the penalty's dual infeasibility of
+/// `c(y)` (DESIGN.md §14 — the same operation [`dual_feasible_for`]
+/// scales with, evaluated at `z = y`). Returns (λ_max, witness feature).
+/// For ℓ2,1 both numbers match [`lambda_max`] exactly (same correlation
+/// sweep, same first-strict-maximum fold).
+pub fn lambda_max_for(ds: &Dataset, pen: &dyn crate::penalty::Penalty) -> (f64, usize) {
+    let corr = task_corr(ds, &y64(ds));
+    pen.lambda_max(&corr, ds.t())
 }
 
 /// n(lambda_max) = ∇g_{l*}(y/λmax): n_t = 2 <x_{l*}^{(t)}, y_t/λmax> x_{l*}^{(t)}.

@@ -1,0 +1,270 @@
+//! Group OWL: ordered weighted ℓ1 applied to the sorted row norms
+//! (Bao et al. 2025, "safe screening rules for group OWL models" —
+//! PAPERS.md), `Ω(W) = Σ_i λ̃_i · ‖W‖_[i]` where `‖W‖_[i]` is the i-th
+//! largest row ℓ2 norm and `λ̃` is a fixed non-increasing weight
+//! sequence.
+//!
+//! **Weight sequence.** `λ̃_i = 1 + γ/(i + 1)` (i = 0, 1, …): strictly
+//! decreasing toward 1, with `γ = 0` recovering the flat ℓ2,1 weights
+//! exactly. The harmonic form is chosen deliberately: the weights depend
+//! only on the *rank* i, not on the problem size, so when screening
+//! compacts the live problem to its top-k rows, the compacted penalty is
+//! the same [`GroupOwl`] — zero rows pair with the smallest (tail)
+//! weights and contribute nothing, and the surviving rows keep the head
+//! weights `λ̃_0..λ̃_{k−1}`. A d-dependent sequence would change the
+//! restricted problem under compaction and break warm starts.
+//!
+//! **Dual geometry.** On sorted constraint magnitudes, the OWL dual set
+//! is the prefix polytope `{c : Σ_{i≤k} u_[i] ≤ Σ_{i≤k} λ̃_i ∀k}` with
+//! `u_l = ‖c_l‖₂`. Scaling shrinks every prefix linearly, so the minimal
+//! feasibility scale is exact: `s = max_k (Σ_{i≤k} u_[i]) / (Σ_{i≤k}
+//! λ̃_i)` ([`GroupOwl::infeasibility`]) — the "sorted-weights dual
+//! projection". Evaluated at `c(y)` this is λ_max (seam convention).
+//!
+//! **Screening.** Conservative decoupled test: every weight satisfies
+//! `λ̃_i > 1`, and at an optimum a nonzero row l forces
+//! `‖c_l(θ*)‖ = λ̃_{rank(l)} ≥ min_i λ̃_i > 1`. So if the Theorem-7
+//! maximum of `g_l = ‖c_l‖²` over the ball stays below 1, row l is
+//! certifiably zero — the *identical* per-feature QP1QC solve as ℓ2,1,
+//! reused verbatim, just read against the weight floor. (The coupled
+//! prefix test of Bao et al. rejects more; the decoupled one is safe and
+//! costs nothing new — `tests/gap_safety.rs` gates it.)
+//!
+//! **Prox.** Prox of OWL-on-row-norms: sort row norms descending, shrink
+//! by `κλ̃`, restore monotonicity with pool-adjacent-violators (isotonic
+//! regression), clamp at 0, and rescale each row to its new norm — the
+//! standard OWL prox lifted to groups.
+
+use super::{ActiveRowCount, Penalty};
+use crate::linalg::nrm2_f64;
+use crate::linalg::simd::sum_serial_f64;
+
+/// Group OWL penalty with harmonic weight decay `gamma ≥ 0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupOwl {
+    /// weight decay: sorted-rank weight i is `1 + gamma/(i + 1)`
+    pub gamma: f64,
+}
+
+impl GroupOwl {
+    /// The rank-i weight `λ̃_i = 1 + γ/(i+1)` (non-increasing in i).
+    #[inline]
+    pub fn weight(&self, i: usize) -> f64 {
+        1.0 + self.gamma / (i as f64 + 1.0)
+    }
+
+    /// Row norms with their original indices, sorted by norm descending
+    /// (ties broken by index ascending — a total, deterministic order).
+    fn sorted_row_norms(&self, w: &[f64], t_count: usize) -> Vec<(usize, f64)> {
+        let mut v: Vec<(usize, f64)> = w
+            .chunks_exact(t_count)
+            .enumerate()
+            .map(|(l, row)| (l, nrm2_f64(row)))
+            .collect();
+        v.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        v
+    }
+}
+
+/// Isotonic regression onto the non-increasing cone (pool adjacent
+/// violators): returns the Euclidean projection of `z` onto
+/// `{p : p_0 ≥ p_1 ≥ …}`. Plain-variable left-to-right pooling — the
+/// block sums are float adds of slice elements with a pinned order.
+fn pav_nonincreasing(z: &[f64]) -> Vec<f64> {
+    // blocks of (sum, count); merge while the tail mean exceeds its
+    // predecessor's (a violation of non-increase)
+    let mut sums: Vec<f64> = Vec::with_capacity(z.len());
+    let mut counts: Vec<usize> = Vec::with_capacity(z.len());
+    for &zi in z {
+        sums.push(zi);
+        counts.push(1);
+        while sums.len() >= 2 {
+            let k = sums.len();
+            if sums[k - 1] * counts[k - 2] as f64 > sums[k - 2] * counts[k - 1] as f64 {
+                let s = sums.pop().unwrap();
+                let c = counts.pop().unwrap();
+                sums[k - 2] += s;
+                counts[k - 2] += c;
+            } else {
+                break;
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(z.len());
+    for (s, c) in sums.iter().zip(&counts) {
+        let mean = s / *c as f64;
+        for _ in 0..*c {
+            out.push(mean);
+        }
+    }
+    out
+}
+
+impl Penalty for GroupOwl {
+    fn name(&self) -> String {
+        format!("gowl(gamma={})", self.gamma)
+    }
+
+    fn value(&self, w: &[f64], t_count: usize) -> f64 {
+        let sorted = self.sorted_row_norms(w, t_count);
+        let weighted: Vec<f64> =
+            sorted.iter().enumerate().map(|(i, &(_, u))| self.weight(i) * u).collect();
+        sum_serial_f64(&weighted)
+    }
+
+    fn prox_inplace(&self, w: &mut [f64], t_count: usize, kappa: f64) -> ActiveRowCount {
+        debug_assert_eq!(w.len() % t_count, 0);
+        let sorted = self.sorted_row_norms(w, t_count);
+        // shifted norms in sorted order, isotonic-projected, clamped at 0
+        let z: Vec<f64> =
+            sorted.iter().enumerate().map(|(i, &(_, u))| u - kappa * self.weight(i)).collect();
+        let p = pav_nonincreasing(&z);
+        let mut alive = 0usize;
+        for (i, &(l, u)) in sorted.iter().enumerate() {
+            let row = &mut w[l * t_count..(l + 1) * t_count];
+            let target = p[i].max(0.0);
+            if target <= 0.0 || u <= 0.0 {
+                row.fill(0.0);
+            } else {
+                let s = target / u;
+                for v in row.iter_mut() {
+                    *v *= s;
+                }
+                alive += 1;
+            }
+        }
+        alive
+    }
+
+    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+        let sorted = self.sorted_row_norms(corr, t_count);
+        if sorted.is_empty() {
+            return (0.0, 0);
+        }
+        // max over prefixes of Σ u_[i] / Σ λ̃_i — plain running adds
+        let mut pu = 0.0f64;
+        let mut pw = 0.0f64;
+        let mut best = f64::MIN;
+        for (i, &(_, u)) in sorted.iter().enumerate() {
+            pu += u;
+            pw += self.weight(i);
+            let ratio = pu / pw;
+            if ratio > best {
+                best = ratio;
+            }
+        }
+        // witness: the largest-norm feature (the rank-0 row — the feature
+        // that saturates the first prefix constraint as γ → 0)
+        (best.max(0.0), sorted[0].0)
+    }
+
+    fn ball_scores(&self, corr: &[f64], b2: &[f64], t_count: usize, delta: f64) -> Vec<f64> {
+        // identical QP1QC maximization as ℓ2,1 (module docs: the weight
+        // floor min_i λ̃_i > 1 makes the g < 1 test safe for group OWL)
+        super::L21.ball_scores(corr, b2, t_count, delta)
+    }
+
+    fn dual_constraints(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
+        // decoupled certificate against the weight floor (g_l vs 1)
+        crate::ops::gscore_from_corr(corr, t_count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::ops;
+
+    const T: usize = 2;
+
+    #[test]
+    fn pav_projects_onto_nonincreasing() {
+        let p = pav_nonincreasing(&[3.0, 1.0, 2.0, 0.5]);
+        for i in 1..p.len() {
+            assert!(p[i - 1] >= p[i] - 1e-15, "not monotone: {p:?}");
+        }
+        // pooled block [1,2] averages to 1.5; untouched values pass through
+        assert!((p[0] - 3.0).abs() < 1e-15);
+        assert!((p[1] - 1.5).abs() < 1e-15 && (p[2] - 1.5).abs() < 1e-15);
+        assert!((p[3] - 0.5).abs() < 1e-15);
+        // already-sorted input is a fixed point
+        let q = pav_nonincreasing(&[5.0, 4.0, 2.0]);
+        assert_eq!(q, vec![5.0, 4.0, 2.0]);
+    }
+
+    #[test]
+    fn gamma_zero_matches_l21_value_and_prox() {
+        let pen = GroupOwl { gamma: 0.0 };
+        let w0 = vec![3.0, 4.0, 0.3, 0.4, -1.0, 2.0];
+        assert!((pen.value(&w0, T) - ops::l21_norm(&w0, T)).abs() < 1e-12);
+        let mut a = w0.clone();
+        let mut b = w0.clone();
+        let na = pen.prox_inplace(&mut a, T, 1.0);
+        let nb = crate::solver::prox::prox21_inplace(&mut b, T, 1.0);
+        assert_eq!(na, nb);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12, "gamma=0 prox diverged: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn value_weights_larger_rows_more() {
+        // two rows with norms 2 and 1: value = λ̃_0·2 + λ̃_1·1
+        let pen = GroupOwl { gamma: 1.0 };
+        let w = vec![2.0, 0.0, 0.0, 1.0];
+        let want = (1.0 + 1.0) * 2.0 + (1.0 + 0.5) * 1.0;
+        assert!((pen.value(&w, T) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prox_output_norms_are_nonincreasing_in_input_rank() {
+        let pen = GroupOwl { gamma: 2.0 };
+        let mut w = vec![5.0, 0.0, 0.0, 4.9, 4.8, 0.0, 0.1, 0.0];
+        pen.prox_inplace(&mut w, T, 1.0);
+        let norms: Vec<f64> = w.chunks_exact(T).map(nrm2_f64).collect();
+        // rank order of the input was rows 0,1,2,3 (descending norms)
+        for i in 1..norms.len() {
+            assert!(norms[i - 1] >= norms[i] - 1e-12, "rank inversion: {norms:?}");
+        }
+        // the near-tied head rows must have pooled close together
+        assert!((norms[0] - norms[1]).abs() < 0.2, "{norms:?}");
+    }
+
+    #[test]
+    fn infeasibility_scale_is_exact_on_the_prefix_polytope() {
+        let pen = GroupOwl { gamma: 1.5 };
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 10, d: 25, seed: 13, ..Default::default() }).0;
+        let corr = ops::task_corr(&ds, &ops::y64(&ds));
+        let (s, _) = pen.infeasibility(&corr, ds.t());
+        assert!(s > 0.0);
+        // after scaling by s every prefix constraint holds, one tightly
+        let scaled: Vec<f64> = corr.iter().map(|v| v / s).collect();
+        let sorted = pen.sorted_row_norms(&scaled, ds.t());
+        let mut pu = 0.0;
+        let mut pw = 0.0;
+        let mut max_ratio = 0.0f64;
+        for (i, &(_, u)) in sorted.iter().enumerate() {
+            pu += u;
+            pw += pen.weight(i);
+            max_ratio = max_ratio.max(pu / pw);
+        }
+        assert!(max_ratio <= 1.0 + 1e-12, "still infeasible: {max_ratio}");
+        assert!(max_ratio >= 1.0 - 1e-9, "scale not minimal: {max_ratio}");
+    }
+
+    #[test]
+    fn gamma_zero_infeasibility_matches_l21_lambda_max() {
+        let pen = GroupOwl { gamma: 0.0 };
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 10, d: 25, seed: 14, ..Default::default() }).0;
+        let corr = ops::task_corr(&ds, &ops::y64(&ds));
+        let (s, lstar) = pen.infeasibility(&corr, ds.t());
+        let (lmax, lstar_ref, _) = ops::lambda_max(&ds);
+        // flat weights: the max prefix ratio is attained at k = 1 with
+        // value u_[0] = max_l ‖c_l‖ = λ_max
+        assert!((s - lmax).abs() <= 1e-12 * lmax.max(1.0), "{s} vs {lmax}");
+        assert_eq!(lstar, lstar_ref);
+    }
+}

@@ -1,0 +1,101 @@
+//! The paper's ℓ2,1 norm as a [`Penalty`] instance.
+//!
+//! Every method **delegates to the exact pre-seam free function** — the
+//! same code the hardcoded stack called before the seam existed
+//! (`ops::l21_norm`, `prox::prox21_inplace`, `ops::gscore_from_corr`,
+//! `secular::qp1qc_max`, and `ops::lambda_max`'s first-strict-maximum
+//! fold) — so routing through the trait is bit-identical to `main` before
+//! this refactor. `rust/tests/penalty_parity.rs` pins the equality
+//! operation by operation and path by path.
+
+use super::{ActiveRowCount, Penalty};
+
+/// The ℓ2,1 norm Ω(W) = Σ_l ‖w^l‖₂ (problem (1) of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct L21;
+
+impl Penalty for L21 {
+    fn name(&self) -> String {
+        "l21".to_string()
+    }
+
+    fn value(&self, w: &[f64], t_count: usize) -> f64 {
+        crate::ops::l21_norm(w, t_count)
+    }
+
+    fn prox_inplace(&self, w: &mut [f64], t_count: usize, kappa: f64) -> ActiveRowCount {
+        crate::solver::prox::prox21_inplace(w, t_count, kappa)
+    }
+
+    /// Eq. 15 scale: `max(1, max_l √g_l)` with the identical
+    /// first-strict-maximum fold as `ops::lambda_max`, so both the dual
+    /// projection (`ops::dual_feasible`) and the Theorem-1 argmax witness
+    /// come out bit-for-bit as before the seam.
+    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+        let g = crate::ops::gscore_from_corr(corr, t_count);
+        let (lstar, gmax) = g
+            .iter()
+            .enumerate()
+            .fold((0usize, f64::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+        (gmax.max(0.0).sqrt(), lstar)
+    }
+
+    /// Theorem-7 QP1QC score maximization per feature — the identical
+    /// per-row secular solve `screening::ball_scores` always ran.
+    fn ball_scores(&self, corr: &[f64], b2: &[f64], t_count: usize, delta: f64) -> Vec<f64> {
+        debug_assert_eq!(corr.len(), b2.len());
+        let rows = corr.len() / t_count;
+        let mut out = vec![0.0f64; rows];
+        for l in 0..rows {
+            let a = &corr[l * t_count..(l + 1) * t_count];
+            let b2l = &b2[l * t_count..(l + 1) * t_count];
+            out[l] = crate::screening::secular::qp1qc_max(a, b2l, delta).s;
+        }
+        out
+    }
+
+    /// The paper's g_l(θ) = Σ_t c_{l,t}² (Eq. 15/16 constraint values).
+    fn dual_constraints(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
+        crate::ops::gscore_from_corr(corr, t_count)
+    }
+
+    fn supports_row_secular(&self) -> bool {
+        true
+    }
+
+    fn supports_dpc_geometry(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::ops;
+
+    #[test]
+    fn value_and_prox_delegate_bit_for_bit() {
+        let w0 = vec![3.0, 4.0, 0.1, -0.2, 0.0, 0.0, -1.5, 2.5];
+        assert_eq!(L21.value(&w0, 2).to_bits(), ops::l21_norm(&w0, 2).to_bits());
+        let mut via_trait = w0.clone();
+        let mut via_fn = w0.clone();
+        let n_trait = L21.prox_inplace(&mut via_trait, 2, 0.7);
+        let n_fn = crate::solver::prox::prox21_inplace(&mut via_fn, 2, 0.7);
+        assert_eq!(n_trait, n_fn);
+        for (a, b) in via_trait.iter().zip(&via_fn) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn infeasibility_matches_lambda_max_fold() {
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 10, d: 40, seed: 21, ..Default::default() }).0;
+        let corr = ops::task_corr(&ds, &ops::y64(&ds));
+        let (s, lstar) = L21.infeasibility(&corr, ds.t());
+        let (lmax, lstar_ref, _) = ops::lambda_max(&ds);
+        assert_eq!(s.to_bits(), lmax.to_bits());
+        assert_eq!(lstar, lstar_ref);
+    }
+}

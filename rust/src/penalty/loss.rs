@@ -1,0 +1,141 @@
+//! The smooth-loss seam stub: the counterpart of the [`super::Penalty`]
+//! trait for the data-fit term, scoped so multinomial-logistic
+//! multi-class MTFL (Ndiaye et al. 2015's other axis) lands as a
+//! follow-up without another stack-wide refactor.
+//!
+//! Today every layer hardcodes the squared loss `Σ_t ½‖X_t w_t − y_t‖²`
+//! — its gradient factors as `X_tᵀ(X_t w_t − y_t)`, its dual is the
+//! λ²-strongly-concave quadratic `ops::dual_obj` computes, and the
+//! GAP-safe radius `√(2·gap)/λ` comes from exactly that strong
+//! concavity. [`SmoothLoss`] names the three loss-owned pieces
+//! (residual-like gradient seed, loss value, dual strong-concavity
+//! constant); [`SquaredLoss`] delegates to the existing `ops` functions,
+//! and [`MultinomialLogistic`] is a documented stub that fails loudly —
+//! its per-sample softmax residual and 1/λ²-scaled dual curvature slot
+//! into the same three methods, which is the point of the seam.
+
+use crate::data::Dataset;
+use crate::ops::{self, Stacked};
+
+/// A smooth, separable-over-tasks data-fit term `L(W)`. The three
+/// operations are what the solver/gap layers consume: the gradient seed
+/// `∇L` in sample space (the generalized residual), the loss value, and
+/// the strong-concavity constant of the dual at regularization λ (which
+/// sets the certified GAP-ball radius `√(2·gap·κ(λ))`).
+pub trait SmoothLoss: std::fmt::Debug + Send + Sync {
+    /// Human-readable name (report labels).
+    fn name(&self) -> String;
+
+    /// The sample-space gradient seed at `w`: the stacked vector `r` with
+    /// `∇_w L = X_tᵀ r_t` per task (for squared loss, the residual
+    /// `X_t w_t − y_t`).
+    fn gradient_seed(&self, ds: &Dataset, w: &[f64]) -> Stacked;
+
+    /// The loss value `L(W)`.
+    fn value(&self, ds: &Dataset, w: &[f64]) -> f64;
+
+    /// `κ(λ)` with `‖θ − θ*‖² ≤ 2·gap·κ(λ)`: the inverse strong-concavity
+    /// constant of the dual objective (squared loss: `1/λ²`, giving the
+    /// classic `√(2·gap)/λ` radius).
+    fn dual_curvature(&self, lam: f64) -> f64;
+}
+
+/// The paper's squared loss — delegates to the existing `ops` sweeps, so
+/// it is definitionally identical to what every layer computes today.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SquaredLoss;
+
+impl SmoothLoss for SquaredLoss {
+    fn name(&self) -> String {
+        "squared".to_string()
+    }
+
+    fn gradient_seed(&self, ds: &Dataset, w: &[f64]) -> Stacked {
+        ops::residual(ds, w)
+    }
+
+    fn value(&self, ds: &Dataset, w: &[f64]) -> f64 {
+        let r = ops::residual(ds, w);
+        0.5 * ops::stacked_sqnorm(&r)
+    }
+
+    fn dual_curvature(&self, lam: f64) -> f64 {
+        1.0 / (lam * lam)
+    }
+}
+
+/// Multinomial-logistic loss for multi-class MTFL — **stub**. The class
+/// scores per task are `X_t w_t`, the gradient seed is the softmax
+/// residual `p − y` (1-Lipschitz ⇒ the dual curvature is `4/λ²` by the
+/// standard 1/4-smoothness bound), and the dual feasible set keeps the
+/// same per-feature correlation structure the [`super::Penalty`] seam
+/// already abstracts. Every method panics with a pointer here until the
+/// follow-up lands; the type exists so callers can already be written
+/// against `&dyn SmoothLoss`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MultinomialLogistic;
+
+impl SmoothLoss for MultinomialLogistic {
+    fn name(&self) -> String {
+        "multinomial-logistic".to_string()
+    }
+
+    fn gradient_seed(&self, _ds: &Dataset, _w: &[f64]) -> Stacked {
+        unimplemented!(
+            "multinomial-logistic MTFL is the scoped follow-up of the penalty seam \
+             (penalty/loss.rs module docs): softmax residual p − y goes here"
+        )
+    }
+
+    fn value(&self, _ds: &Dataset, _w: &[f64]) -> f64 {
+        unimplemented!("multinomial-logistic MTFL is a scoped follow-up (penalty/loss.rs)")
+    }
+
+    fn dual_curvature(&self, lam: f64) -> f64 {
+        // 1/4-smoothness of softmax ⇒ κ(λ) = 4/λ² (kept real so radius
+        // plumbing can be exercised before the gradient lands)
+        4.0 / (lam * lam)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+
+    #[test]
+    fn squared_loss_matches_ops_definitions() {
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 9, d: 15, seed: 3, ..Default::default() }).0;
+        let w = vec![0.01f64; 15 * 3];
+        let loss = SquaredLoss;
+        let seed = loss.gradient_seed(&ds, &w);
+        let reference = ops::residual(&ds, &w);
+        assert_eq!(seed, reference);
+        let v = loss.value(&ds, &w);
+        assert!((v - 0.5 * ops::stacked_sqnorm(&reference)).abs() < 1e-12 * v.max(1.0));
+        // squared loss: the GAP radius κ(λ) reproduces √(2g)/λ
+        let lam = 2.0;
+        let g = 0.3;
+        let radius = (2.0 * g * loss.dual_curvature(lam)).sqrt();
+        assert!((radius - (2.0f64 * g).sqrt() / lam).abs() < 1e-15);
+    }
+
+    #[test]
+    fn multinomial_stub_fails_loudly_but_exposes_curvature() {
+        let m = MultinomialLogistic;
+        assert!(m.dual_curvature(2.0) > SquaredLoss.dual_curvature(2.0));
+        let caught = std::panic::catch_unwind(|| {
+            let ds = synthetic1(&SynthOptions {
+                t: 2,
+                n: 5,
+                d: 4,
+                seed: 1,
+                ..Default::default()
+            })
+            .0;
+            m.value(&ds, &vec![0.0; 8])
+        });
+        assert!(caught.is_err(), "stub must refuse to pretend it computes a loss");
+    }
+}

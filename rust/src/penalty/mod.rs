@@ -1,0 +1,314 @@
+//! The penalty seam (DESIGN.md §14): the five operations every layer of
+//! the stack used to assume were the ℓ2,1 norm, abstracted into the
+//! [`Penalty`] trait so the *same* solvers, gap machinery, screeners and
+//! coordinators run any row-structured penalty.
+//!
+//! The problem family is
+//!
+//! ```text
+//! min_W  Σ_t ½‖y_t − X_t w_t‖² + λ·Ω(W)          (generalized problem (1))
+//! ```
+//!
+//! where `Ω` is a convex, row-structured penalty on the (d × T) weight
+//! matrix. Everything the repo does with the paper's ℓ2,1 norm factors
+//! through exactly five penalty-specific operations:
+//!
+//! | op | consumer layers |
+//! |---|---|
+//! | [`Penalty::value`] | `ops` (primal objective, duality gap), path records |
+//! | [`Penalty::prox_inplace`] | FISTA's iterate update |
+//! | [`Penalty::infeasibility`] | `ops::dual_feasible_for` (dual projection) **and** `ops::lambda_max_for` — they are the same computation, see below |
+//! | [`Penalty::ball_scores`] | DPC / GAP-safe / dynamic screening sweeps |
+//! | [`Penalty::dual_constraints`] | `screening::safety` (post-hoc KKT certificate) |
+//!
+//! **Dual-scaling convention.** The dual feasible set of the generalized
+//! problem is `F = {θ : Ω°(c(θ)) ≤ 1}` where `c_l(θ)_t = ⟨x_l^{(t)}, θ_t⟩`
+//! is the per-feature correlation row and `Ω°` is the dual (polar) norm of
+//! `Ω`. [`Penalty::infeasibility`] returns the smallest `s ≥ Ω°(c(z))`
+//! such that `z / max(1, s)` is feasible — exactly the paper's Eq. 15
+//! scaling for ℓ2,1, generalized.
+//!
+//! **Why λ_max belongs to the penalty.** `λ_max` is the smallest λ for
+//! which `W = 0` is optimal, i.e. the smallest λ with `y/λ ∈ F`. By
+//! positive homogeneity of the feasibility scale that is *precisely*
+//! `infeasibility(c(y))` — the same number the dual projection computes,
+//! evaluated at `z = y`. One penalty-owned operation therefore serves
+//! both; [`Penalty::lambda_max`] is a provided method that delegates.
+//!
+//! Three concrete instances ship:
+//!
+//! * [`l21::L21`] — the paper's ℓ2,1 norm. Delegates to the *exact*
+//!   pre-seam free functions (`ops::l21_norm`, `prox::prox21_inplace`,
+//!   the Theorem-7 secular solve), so results are bit-identical to the
+//!   hardcoded code path (`rust/tests/penalty_parity.rs` pins this).
+//! * [`sgl::SparseGroupLasso`] — sparse-group lasso,
+//!   `Ω(W) = Σ_l α‖w^l‖₁ + (1−α)‖w^l‖₂`.
+//! * [`gowl::GroupOwl`] — group ordered-weighted-ℓ1 (OWL on sorted row
+//!   norms, Bao et al. 2025 in PAPERS.md) with the sorted-prefix dual
+//!   projection and a pool-adjacent-violators prox.
+//!
+//! [`loss`] holds the matching smooth-loss seam stub (squared vs.
+//! multinomial-logistic) so multi-class MTFL lands without re-threading.
+
+pub mod gowl;
+pub mod l21;
+pub mod loss;
+pub mod sgl;
+
+pub use gowl::GroupOwl;
+pub use l21::L21;
+pub use sgl::SparseGroupLasso;
+
+/// The number of rows left nonzero by a prox application — the working
+/// row count FISTA's dynamic bookkeeping tracks. (Named type for what
+/// used to be an undocumented bare `usize` return of `prox21_inplace`.)
+pub type ActiveRowCount = usize;
+
+/// A convex row-structured penalty `Ω` on a row-major (d × T) weight
+/// matrix — the seam every solver/screening/coordinator layer programs
+/// against (module docs have the op-per-layer contract table).
+///
+/// Implementations must be deterministic and obey the DESIGN.md §12
+/// accumulation contract: any float reduction either routes through the
+/// kernel layer (`linalg`) or carries a pinned serial order.
+pub trait Penalty: std::fmt::Debug + Send + Sync {
+    /// Human-readable name (CLI/report labels), e.g. `"l21"`.
+    fn name(&self) -> String;
+
+    /// Ω(W) for a row-major (d × T) matrix.
+    fn value(&self, w: &[f64], t_count: usize) -> f64;
+
+    /// In-place proximal operator `w ← argmin_u ½‖u − w‖² + κ·Ω(u)`.
+    /// Returns the number of rows left nonzero (see [`ActiveRowCount`]):
+    /// a row counts as alive iff at least one of its entries is nonzero
+    /// after the prox, so the count always equals the number of nonzero
+    /// rows of the output.
+    fn prox_inplace(&self, w: &mut [f64], t_count: usize, kappa: f64) -> ActiveRowCount;
+
+    /// Dual-infeasibility scale of a correlation buffer `c` (row-major
+    /// d × T): the smallest `s` such that `c/s` satisfies every dual
+    /// constraint, together with the first feature attaining the maximal
+    /// constraint (the λ_max argmax / Theorem-1 witness). A point `z`
+    /// with correlations `c(z)` is projected into the feasible set as
+    /// `z / max(1, s)`; evaluated at `z = y` this same `s` *is* λ_max
+    /// (module docs).
+    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize);
+
+    /// λ_max = the smallest λ for which W = 0 is optimal, from the
+    /// correlation buffer of the response `c(y)`. Provided: identical to
+    /// [`Self::infeasibility`] by homogeneity of the dual norm.
+    fn lambda_max(&self, corr_y: &[f64], t_count: usize) -> (f64, usize) {
+        self.infeasibility(corr_y, t_count)
+    }
+
+    /// Safe-screening scores for one contiguous feature chunk: `corr` is
+    /// the chunk's (rows × T) correlation buffer at the ball center `o`,
+    /// `b2` the matching slice of the per-(feature, task) squared column
+    /// norms, and `delta` the ball radius. Returns one score per row with
+    /// the uniform convention **score < 1 ⇒ the feature's dual constraint
+    /// is strictly slack everywhere on the ball ⇒ its row of W* is zero**
+    /// (rejection is safe). Scores may be conservative (over-estimates
+    /// reject less, never unsafely).
+    fn ball_scores(&self, corr: &[f64], b2: &[f64], t_count: usize, delta: f64) -> Vec<f64>;
+
+    /// Per-feature dual-constraint values at a correlation buffer,
+    /// normalized so `< 1` means strictly slack — the post-hoc KKT
+    /// certificate `screening::safety` reports for rejected features.
+    /// For ℓ2,1 this is the paper's `g_l` (so the existing reports keep
+    /// their meaning bit-for-bit).
+    fn dual_constraints(&self, corr: &[f64], t_count: usize) -> Vec<f64>;
+
+    /// Whether BCD's per-row secular solve (`solver::bcd::row_nu`) is an
+    /// exact minimizer for this penalty. Only true for ℓ2,1; BCD refuses
+    /// other penalties rather than silently solving the wrong problem.
+    fn supports_row_secular(&self) -> bool {
+        false
+    }
+
+    /// Whether the DPC Theorem-5 ball construction (projection geometry
+    /// of the ℓ2,1 dual set) applies. Other penalties screen with
+    /// GAP-safe balls, which only need [`Self::ball_scores`].
+    fn supports_dpc_geometry(&self) -> bool {
+        false
+    }
+}
+
+/// The penalty selector threaded through [`crate::solver::SolveOptions`]
+/// (and from there through every path/CV/stability/experiment driver and
+/// the CLI's `--penalty` flag). `Copy` so options stay cheap to clone;
+/// enum dispatch (not trait objects) so the solver hot loops stay
+/// monomorphic-friendly and `SolveOptions` stays `Clone + Debug`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PenaltyKind {
+    /// The paper's ℓ2,1 norm (default — bit-identical to the pre-seam code).
+    L21,
+    /// Sparse-group lasso with mixing weight `alpha ∈ [0, 1)`.
+    Sgl {
+        /// weight of the elementwise ℓ1 part (0 recovers ℓ2,1)
+        alpha: f64,
+    },
+    /// Group OWL with decay `gamma ≥ 0` (0 recovers ℓ2,1 weights).
+    Gowl {
+        /// weight-sequence decay: sorted weight i is `1 + gamma/(i+1)`
+        gamma: f64,
+    },
+}
+
+impl Default for PenaltyKind {
+    fn default() -> Self {
+        PenaltyKind::L21
+    }
+}
+
+impl PenaltyKind {
+    /// Parse a CLI `--penalty` value with its knobs (`--penalty-alpha`,
+    /// `--penalty-gamma`). Errors name the valid spellings and ranges.
+    pub fn parse(name: &str, alpha: f64, gamma: f64) -> anyhow::Result<Self> {
+        match name {
+            "l21" => Ok(PenaltyKind::L21),
+            "sgl" => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&alpha),
+                    "--penalty-alpha must be in [0, 1) (got {alpha}); alpha = 1 is a pure \
+                     lasso with no group structure — use a per-feature model instead"
+                );
+                Ok(PenaltyKind::Sgl { alpha })
+            }
+            "gowl" => {
+                anyhow::ensure!(
+                    gamma >= 0.0,
+                    "--penalty-gamma must be >= 0 (got {gamma})"
+                );
+                Ok(PenaltyKind::Gowl { gamma })
+            }
+            other => anyhow::bail!("unknown penalty '{other}' (expected l21 | sgl | gowl)"),
+        }
+    }
+
+    /// True for the ℓ2,1 instance — the coordinators use this to keep the
+    /// exact pre-seam code path (DPC geometry, BCD, sharded streaming)
+    /// and to reject penalty/algorithm combinations that would be wrong.
+    pub fn is_l21(&self) -> bool {
+        matches!(self, PenaltyKind::L21)
+    }
+}
+
+impl std::fmt::Display for PenaltyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&Penalty::name(self))
+    }
+}
+
+impl Penalty for PenaltyKind {
+    fn name(&self) -> String {
+        match *self {
+            PenaltyKind::L21 => L21.name(),
+            PenaltyKind::Sgl { alpha } => SparseGroupLasso { alpha }.name(),
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.name(),
+        }
+    }
+
+    fn value(&self, w: &[f64], t_count: usize) -> f64 {
+        match *self {
+            PenaltyKind::L21 => L21.value(w, t_count),
+            PenaltyKind::Sgl { alpha } => SparseGroupLasso { alpha }.value(w, t_count),
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.value(w, t_count),
+        }
+    }
+
+    fn prox_inplace(&self, w: &mut [f64], t_count: usize, kappa: f64) -> ActiveRowCount {
+        match *self {
+            PenaltyKind::L21 => L21.prox_inplace(w, t_count, kappa),
+            PenaltyKind::Sgl { alpha } => {
+                SparseGroupLasso { alpha }.prox_inplace(w, t_count, kappa)
+            }
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.prox_inplace(w, t_count, kappa),
+        }
+    }
+
+    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+        match *self {
+            PenaltyKind::L21 => L21.infeasibility(corr, t_count),
+            PenaltyKind::Sgl { alpha } => {
+                SparseGroupLasso { alpha }.infeasibility(corr, t_count)
+            }
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.infeasibility(corr, t_count),
+        }
+    }
+
+    fn ball_scores(&self, corr: &[f64], b2: &[f64], t_count: usize, delta: f64) -> Vec<f64> {
+        match *self {
+            PenaltyKind::L21 => L21.ball_scores(corr, b2, t_count, delta),
+            PenaltyKind::Sgl { alpha } => {
+                SparseGroupLasso { alpha }.ball_scores(corr, b2, t_count, delta)
+            }
+            PenaltyKind::Gowl { gamma } => {
+                GroupOwl { gamma }.ball_scores(corr, b2, t_count, delta)
+            }
+        }
+    }
+
+    fn dual_constraints(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
+        match *self {
+            PenaltyKind::L21 => L21.dual_constraints(corr, t_count),
+            PenaltyKind::Sgl { alpha } => {
+                SparseGroupLasso { alpha }.dual_constraints(corr, t_count)
+            }
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.dual_constraints(corr, t_count),
+        }
+    }
+
+    fn supports_row_secular(&self) -> bool {
+        match *self {
+            PenaltyKind::L21 => L21.supports_row_secular(),
+            PenaltyKind::Sgl { alpha } => SparseGroupLasso { alpha }.supports_row_secular(),
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.supports_row_secular(),
+        }
+    }
+
+    fn supports_dpc_geometry(&self) -> bool {
+        match *self {
+            PenaltyKind::L21 => L21.supports_dpc_geometry(),
+            PenaltyKind::Sgl { alpha } => SparseGroupLasso { alpha }.supports_dpc_geometry(),
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.supports_dpc_geometry(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_cookbook_spellings() {
+        assert_eq!(PenaltyKind::parse("l21", 0.5, 1.0).unwrap(), PenaltyKind::L21);
+        assert_eq!(
+            PenaltyKind::parse("sgl", 0.3, 1.0).unwrap(),
+            PenaltyKind::Sgl { alpha: 0.3 }
+        );
+        assert_eq!(
+            PenaltyKind::parse("gowl", 0.5, 2.0).unwrap(),
+            PenaltyKind::Gowl { gamma: 2.0 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_knobs() {
+        assert!(PenaltyKind::parse("sgl", 1.0, 0.0).is_err(), "alpha = 1 must be rejected");
+        assert!(PenaltyKind::parse("sgl", -0.1, 0.0).is_err());
+        assert!(PenaltyKind::parse("gowl", 0.0, -1.0).is_err());
+        assert!(PenaltyKind::parse("elastic", 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn default_is_l21_and_only_l21_gets_the_exact_algorithms() {
+        let def = PenaltyKind::default();
+        assert!(def.is_l21());
+        assert!(def.supports_row_secular() && def.supports_dpc_geometry());
+        for pk in [PenaltyKind::Sgl { alpha: 0.4 }, PenaltyKind::Gowl { gamma: 1.0 }] {
+            assert!(!pk.is_l21());
+            assert!(!pk.supports_row_secular(), "{pk}: BCD must refuse");
+            assert!(!pk.supports_dpc_geometry(), "{pk}: DPC must refuse");
+        }
+    }
+}

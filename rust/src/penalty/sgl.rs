@@ -1,0 +1,284 @@
+//! Sparse-group lasso: `Ω(W) = Σ_l α‖w^l‖₁ + (1−α)‖w^l‖₂`, `α ∈ [0, 1)`.
+//!
+//! The multi-task analogue of Simon et al.'s sparse-group lasso: the
+//! group part keeps whole feature rows sparse (the paper's structure),
+//! the elementwise part additionally zeroes individual (feature, task)
+//! coefficients inside surviving rows. `α = 0` recovers ℓ2,1 exactly.
+//!
+//! **Dual geometry.** The row dual norm of `u ↦ α‖u‖₁ + (1−α)‖u‖₂`
+//! satisfies the classic characterization
+//!
+//! ```text
+//! Ω°_row(c) ≤ 1   ⇔   ‖S_α(c)‖₂ ≤ 1 − α
+//! ```
+//!
+//! where `S_α` soft-thresholds each coordinate at `α`. Everything below
+//! is that one fact, pushed through the seam's five operations:
+//!
+//! * **projection / λ_max** ([`SparseGroupLasso::infeasibility`]): the
+//!   minimal scale `s` with `‖S_{αs}(c_l)‖₂ ≤ (1−α)s` for every feature.
+//!   Per feature the slack `g(s) = ‖S_{αs}(c)‖₂ − (1−α)s` is strictly
+//!   decreasing, so a bisection bracketed by `[0, ‖c‖₂/(1−α)]` converges
+//!   deterministically; the feasible (upper) endpoint is returned so the
+//!   scaled point is always inside the dual set.
+//! * **screening** ([`SparseGroupLasso::ball_scores`]): over a ball of
+//!   radius δ around `o`, `‖c_l(θ) − c_l(o)‖₂ ≤ δ·max_t ‖x_l^{(t)}‖`
+//!   (Cauchy–Schwarz per task), and `S_α` is 1-Lipschitz, so
+//!   `s_l = (‖S_α(c_l(o))‖₂ + δ·max_t b_t) / (1−α) < 1` certifies the
+//!   dual constraint strictly slack on the whole ball ⇒ row l of W* is
+//!   zero. Conservative next to ℓ2,1's exact QP1QC maximization (it
+//!   collapses the per-task radii to their max), but safe at any δ —
+//!   `tests/gap_safety.rs` gates it with independent tight solves.
+//! * **prox** ([`SparseGroupLasso::prox_inplace`]): prox of the sum =
+//!   elementwise soft-threshold at `κα`, then group shrink at `κ(1−α)`
+//!   (the standard composition — the ℓ1 prox output stays fixed under
+//!   the group shrink's scaling).
+
+use super::{ActiveRowCount, Penalty};
+use crate::linalg::nrm2_f64;
+use crate::linalg::simd::abs_sum_serial_f64;
+
+/// Sparse-group lasso penalty with ℓ1 mixing weight `alpha ∈ [0, 1)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparseGroupLasso {
+    /// weight of the elementwise ℓ1 part; `1 − alpha` weights the group ℓ2
+    pub alpha: f64,
+}
+
+/// Elementwise soft-threshold at `t ≥ 0`.
+#[inline]
+fn soft(v: f64, t: f64) -> f64 {
+    if v > t {
+        v - t
+    } else if v < -t {
+        v + t
+    } else {
+        0.0
+    }
+}
+
+impl SparseGroupLasso {
+    /// `‖S_{αs}(c)‖₂` into a caller-provided scratch buffer (len T).
+    fn thresholded_norm(&self, c: &[f64], s: f64, scratch: &mut [f64]) -> f64 {
+        let t = self.alpha * s;
+        for (o, &v) in scratch.iter_mut().zip(c) {
+            *o = soft(v, t);
+        }
+        nrm2_f64(scratch)
+    }
+
+    /// Per-feature minimal feasibility scale: smallest `s ≥ 0` with
+    /// `‖S_{αs}(c)‖₂ ≤ (1−α)s`. Bisection on the strictly decreasing
+    /// slack; returns the feasible (upper) endpoint of the final bracket.
+    fn feature_scale(&self, c: &[f64], scratch: &mut [f64]) -> f64 {
+        let norm = nrm2_f64(c);
+        if norm == 0.0 {
+            return 0.0;
+        }
+        let one_minus = 1.0 - self.alpha;
+        // g(0) = ‖c‖ > 0; at hi = ‖c‖/(1−α): ‖S(c)‖ ≤ ‖c‖ = (1−α)·hi ⇒ g(hi) ≤ 0
+        let mut lo = 0.0f64;
+        let mut hi = norm / one_minus;
+        for _ in 0..90 {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break; // bracket at f64 resolution
+            }
+            if self.thresholded_norm(c, mid, scratch) > one_minus * mid {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+}
+
+impl Penalty for SparseGroupLasso {
+    fn name(&self) -> String {
+        format!("sgl(alpha={})", self.alpha)
+    }
+
+    fn value(&self, w: &[f64], t_count: usize) -> f64 {
+        let per_row: Vec<f64> = w
+            .chunks_exact(t_count)
+            .map(|row| self.alpha * abs_sum_serial_f64(row) + (1.0 - self.alpha) * nrm2_f64(row))
+            .collect();
+        crate::linalg::simd::sum_serial_f64(&per_row)
+    }
+
+    fn prox_inplace(&self, w: &mut [f64], t_count: usize, kappa: f64) -> ActiveRowCount {
+        debug_assert_eq!(w.len() % t_count, 0);
+        let ka = kappa * self.alpha;
+        let kg = kappa * (1.0 - self.alpha);
+        let mut alive = 0usize;
+        for row in w.chunks_exact_mut(t_count) {
+            for v in row.iter_mut() {
+                *v = soft(*v, ka);
+            }
+            let norm = nrm2_f64(row);
+            if norm <= kg {
+                row.fill(0.0);
+            } else {
+                let s = 1.0 - kg / norm;
+                for v in row.iter_mut() {
+                    *v *= s;
+                }
+                alive += 1;
+            }
+        }
+        alive
+    }
+
+    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+        let mut scratch = vec![0.0f64; t_count];
+        let mut best = f64::MIN;
+        let mut arg = 0usize;
+        for (l, c) in corr.chunks_exact(t_count).enumerate() {
+            let s = self.feature_scale(c, &mut scratch);
+            if s > best {
+                best = s;
+                arg = l;
+            }
+        }
+        (best.max(0.0), arg)
+    }
+
+    fn ball_scores(&self, corr: &[f64], b2: &[f64], t_count: usize, delta: f64) -> Vec<f64> {
+        debug_assert_eq!(corr.len(), b2.len());
+        let rows = corr.len() / t_count;
+        let one_minus = 1.0 - self.alpha;
+        let mut scratch = vec![0.0f64; t_count];
+        let mut out = vec![0.0f64; rows];
+        for l in 0..rows {
+            let c = &corr[l * t_count..(l + 1) * t_count];
+            let b2l = &b2[l * t_count..(l + 1) * t_count];
+            let rho = b2l.iter().cloned().fold(0.0f64, f64::max).sqrt();
+            // ‖S_α(c(θ))‖ ≤ ‖S_α(c(o))‖ + δ·ρ on the ball (module docs)
+            out[l] = (self.thresholded_norm(c, 1.0, &mut scratch) + delta * rho) / one_minus;
+        }
+        out
+    }
+
+    fn dual_constraints(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
+        let one_minus = 1.0 - self.alpha;
+        let mut scratch = vec![0.0f64; t_count];
+        corr.chunks_exact(t_count)
+            .map(|c| {
+                let r = self.thresholded_norm(c, 1.0, &mut scratch) / one_minus;
+                r * r // squared, matching the ℓ2,1 g_l convention
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{synthetic1, SynthOptions};
+    use crate::ops;
+
+    const T: usize = 3;
+
+    #[test]
+    fn alpha_zero_prox_and_value_match_l21() {
+        let pen = SparseGroupLasso { alpha: 0.0 };
+        let w0 = vec![3.0, 4.0, 0.5, 0.1, -0.2, 0.05, 2.0, -1.0, 0.3];
+        assert!((pen.value(&w0, T) - ops::l21_norm(&w0, T)).abs() < 1e-12);
+        let mut a = w0.clone();
+        let mut b = w0.clone();
+        let na = pen.prox_inplace(&mut a, T, 0.8);
+        let nb = crate::solver::prox::prox21_inplace(&mut b, T, 0.8);
+        assert_eq!(na, nb);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-14, "alpha=0 prox diverged: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn prox_satisfies_subgradient_optimality() {
+        // v = prox_κ(z) ⇒ z − v ∈ κ·∂Ω(v): for a nonzero output entry,
+        // z_i − v_i = κ(α·sign(v_i) + (1−α)·v_i/‖v‖)
+        let pen = SparseGroupLasso { alpha: 0.4 };
+        let z = vec![3.0, -4.0, 0.2];
+        let mut v = z.clone();
+        let kappa = 1.1;
+        pen.prox_inplace(&mut v, T, kappa);
+        let vn = nrm2_f64(&v);
+        assert!(vn > 0.0);
+        for i in 0..T {
+            if v[i] != 0.0 {
+                let want = kappa * (0.4 * v[i].signum() + 0.6 * v[i] / vn);
+                assert!(
+                    ((z[i] - v[i]) - want).abs() < 1e-12,
+                    "KKT residual at {i}: {} vs {want}",
+                    z[i] - v[i]
+                );
+            } else {
+                // zeroed coordinate: |z_i − v_i| ≤ κα (the ℓ1 subdifferential)
+                assert!(z[i].abs() <= kappa * 0.4 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasibility_scale_lands_exactly_on_the_constraint() {
+        let pen = SparseGroupLasso { alpha: 0.3 };
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 10, d: 30, seed: 5, ..Default::default() }).0;
+        let corr = ops::task_corr(&ds, &ops::y64(&ds));
+        let (s, lstar) = pen.infeasibility(&corr, ds.t());
+        assert!(s > 0.0);
+        // at the returned scale every feature is feasible ...
+        let scaled: Vec<f64> = corr.iter().map(|v| v / s).collect();
+        for (l, g) in pen.dual_constraints(&scaled, ds.t()).iter().enumerate() {
+            assert!(*g <= 1.0 + 1e-9, "feature {l} infeasible after scaling: {g}");
+        }
+        // ... and the witness feature saturates it
+        let g_star = pen.dual_constraints(&scaled, ds.t())[lstar];
+        assert!((g_star - 1.0).abs() < 1e-6, "witness slack: {g_star}");
+    }
+
+    #[test]
+    fn alpha_zero_infeasibility_matches_l21_lambda_max() {
+        let pen = SparseGroupLasso { alpha: 0.0 };
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 10, d: 30, seed: 6, ..Default::default() }).0;
+        let corr = ops::task_corr(&ds, &ops::y64(&ds));
+        let (s, _) = pen.infeasibility(&corr, ds.t());
+        let (lmax, _, _) = ops::lambda_max(&ds);
+        assert!((s - lmax).abs() <= 1e-10 * lmax, "{s} vs {lmax}");
+    }
+
+    #[test]
+    fn ball_scores_are_safe_upper_bounds() {
+        // score < 1 at radius δ must imply the constraint holds strictly
+        // at every probe point within δ of the center
+        let pen = SparseGroupLasso { alpha: 0.5 };
+        let ds =
+            synthetic1(&SynthOptions { t: 3, n: 8, d: 20, seed: 7, ..Default::default() }).0;
+        let y = ops::y64(&ds);
+        let (lmax, _) = pen.infeasibility(&ops::task_corr(&ds, &y), ds.t());
+        let o = ops::stacked_scale(&y, 1.0 / lmax);
+        let b2 = ds.col_sqnorms();
+        let delta = 0.05;
+        let corr_o = ops::task_corr(&ds, &o);
+        let scores = pen.ball_scores(&corr_o, &b2, ds.t(), delta);
+        // probe: shift every task vector by delta/√(T·n_t) in each unit dir
+        let mut probe = o.clone();
+        let shift = delta / (ds.t() as f64).sqrt();
+        for pt in probe.iter_mut() {
+            let n = pt.len() as f64;
+            for v in pt.iter_mut() {
+                *v += shift / n.sqrt();
+            }
+        }
+        let corr_p = ops::task_corr(&ds, &probe);
+        let g_probe = pen.dual_constraints(&corr_p, ds.t());
+        for (l, (&s, &g)) in scores.iter().zip(&g_probe).enumerate() {
+            if s < 1.0 {
+                assert!(g < 1.0, "feature {l}: score {s} < 1 but probe constraint {g} >= 1");
+            }
+        }
+    }
+}

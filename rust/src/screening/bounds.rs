@@ -8,6 +8,11 @@
 //! * [`center_scores`] — g_l at the ball center only. NOT safe (a
 //!   heuristic, like the Strong-Rule family without the check); included
 //!   to measure how often unsafe screening actually mis-rejects.
+//!
+//! Both ablations bound the ℓ2,1 constraint functional g_l specifically
+//! and are compared against the ℓ2,1 QP1QC scores, so this module stays
+//! outside the penalty seam (DESIGN.md §14) — ABL1 is an ablation of the
+//! paper's rule, not of the generic screener.
 
 use super::{dpc::DualRef, ScreenOutcome};
 use crate::data::Dataset;

@@ -12,6 +12,14 @@
 //! slack; at `eps = 0` the construction reduces *exactly* to the paper's
 //! ball, and at any `eps > 0` it still contains θ*(λ) — no unsound
 //! `margin` knob anywhere.
+//!
+//! Penalty scope (DESIGN.md §14): every construction here — the y/λ_max
+//! closed form, the Eq. 20 normal, the projection-halfspace cut — is the
+//! geometry of the **ℓ2,1 dual ball** ‖Σ_t x_l^t θ_t‖ ≤ 1 and proves
+//! nothing about other feasible sets. DPC therefore stays ℓ2,1-only
+//! (`Penalty::supports_dpc_geometry`); other penalties screen through the
+//! penalty-generic GAP-safe rule ([`super::gap`]), whose strong-concavity
+//! ball never references the feasible set's shape.
 
 use super::{gap, ScreenOutcome};
 use crate::data::Dataset;

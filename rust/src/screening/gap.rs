@@ -17,9 +17,10 @@
 //! iterate, which is exactly what lets the solvers re-screen mid-solve as
 //! the gap shrinks.
 
-use super::{ball_scores, ScreenOutcome};
+use super::{ball_scores, ball_scores_for, ScreenOutcome};
 use crate::data::Dataset;
 use crate::ops::{self, Stacked};
+use crate::penalty::Penalty;
 
 /// ‖θ*(λ) − θ‖ ≤ √(2·max(gap, 0))/λ for any feasible pair with duality
 /// gap `gap` (strong concavity of the dual — module docs).
@@ -42,6 +43,16 @@ impl GapBall {
     /// Ball from a primal iterate: one residual + one correlation sweep.
     pub fn from_primal(ds: &Dataset, lam: f64, w: &[f64]) -> GapBall {
         let (_, gap, theta) = ops::duality_gap(ds, w, lam);
+        GapBall::from_feasible(theta, gap, lam)
+    }
+
+    /// Penalty-generic [`GapBall::from_primal`]: the gap and the feasible
+    /// center both come from the penalty's own objective and dual scaling
+    /// (`ops::duality_gap_for`), so the strong-concavity radius certifies
+    /// the *right* dual optimum. With [`crate::penalty::L21`] this is
+    /// bit-identical to `from_primal`.
+    pub fn from_primal_for(ds: &Dataset, lam: f64, w: &[f64], pen: &dyn Penalty) -> GapBall {
+        let (_, gap, theta) = ops::duality_gap_for(ds, w, lam, pen);
         GapBall::from_feasible(theta, gap, lam)
     }
 
@@ -77,6 +88,26 @@ impl GapScreener {
     pub fn screen_primal(&self, ds: &Dataset, lam: f64, w: &[f64]) -> ScreenOutcome {
         self.screen(ds, &GapBall::from_primal(ds, lam, w))
     }
+
+    /// Penalty-generic [`GapScreener::screen`]: scores come from the
+    /// penalty's own ball test ([`ball_scores_for`]); the s < 1 rejection
+    /// contract is shared across penalties.
+    pub fn screen_for(&self, ds: &Dataset, ball: &GapBall, pen: &dyn Penalty) -> ScreenOutcome {
+        let scores = ball_scores_for(ds, &self.b2, &ball.center, ball.radius, pen);
+        let rejected = scores.iter().map(|&s| s < 1.0).collect();
+        ScreenOutcome { rejected, scores, delta: ball.radius }
+    }
+
+    /// Penalty-generic [`GapScreener::screen_primal`].
+    pub fn screen_primal_for(
+        &self,
+        ds: &Dataset,
+        lam: f64,
+        w: &[f64],
+        pen: &dyn Penalty,
+    ) -> ScreenOutcome {
+        self.screen_for(ds, &GapBall::from_primal_for(ds, lam, w, pen), pen)
+    }
 }
 
 /// One dynamic screen inside a solver: given the (obj, gap, θ_feasible)
@@ -91,8 +122,25 @@ pub fn dynamic_keep(
     gap: f64,
     lam: f64,
 ) -> Option<Vec<usize>> {
+    dynamic_keep_for(ds, b2, theta, gap, lam, &crate::penalty::L21)
+}
+
+/// Penalty-generic [`dynamic_keep`] (DESIGN.md §14): same certified
+/// radius, same keep/reject bookkeeping, with the per-feature ball test
+/// supplied by the penalty. The solvers pass their own
+/// `SolveOptions::penalty` here so the mid-solve screen certifies rows of
+/// the problem they are actually solving. With [`crate::penalty::L21`]
+/// this is bit-identical to the ℓ2,1 path.
+pub fn dynamic_keep_for(
+    ds: &Dataset,
+    b2: &[f64],
+    theta: &Stacked,
+    gap: f64,
+    lam: f64,
+    pen: &dyn Penalty,
+) -> Option<Vec<usize>> {
     let radius = certified_radius(gap, lam);
-    let scores = ball_scores(ds, b2, theta, radius);
+    let scores = ball_scores_for(ds, b2, theta, radius, pen);
     let keep: Vec<usize> = scores
         .iter()
         .enumerate()

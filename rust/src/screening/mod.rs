@@ -67,19 +67,32 @@ impl ScreenOutcome {
 /// moments come from the same cache-blocked panels as `task_corr`
 /// ([`crate::ops::corr_chunk`]); only the per-feature secular solve is
 /// local. `b2` is the cached (d × T) row-major column-squared-norm table.
+///
+/// ℓ2,1-specialized alias: delegates to [`ball_scores_for`] with the
+/// [`crate::penalty::L21`] instance, whose chunk body is the exact
+/// per-feature `qp1qc_max` loop this function always ran — bit-identical.
 pub fn ball_scores(ds: &Dataset, b2: &[f64], o: &Stacked, delta: f64) -> Vec<f64> {
+    ball_scores_for(ds, b2, o, delta, &crate::penalty::L21)
+}
+
+/// Penalty-generic ball-score sweep (DESIGN.md §14): the executor layout —
+/// chunking, `serial_below` gating, cache-blocked `corr_chunk` panels —
+/// stays here, while the per-chunk score math is the penalty's
+/// [`crate::penalty::Penalty::ball_scores`]. Scores keep the universal
+/// contract: s_l < 1 certifies row l inactive over the whole ball.
+pub fn ball_scores_for(
+    ds: &Dataset,
+    b2: &[f64],
+    o: &Stacked,
+    delta: f64,
+    pen: &dyn crate::penalty::Penalty,
+) -> Vec<f64> {
     let t_count = ds.t();
     debug_assert_eq!(b2.len(), ds.d * t_count);
     let workers = if serial_below(ds.sweep_work()) { 1 } else { usize::MAX };
     let out = parallel_chunks(ds.d, workers, |_, start, end| {
         let corr = crate::ops::corr_chunk(ds, start, end, o);
-        let mut part = vec![0.0f64; end - start];
-        for l in start..end {
-            let a = &corr[(l - start) * t_count..(l - start + 1) * t_count];
-            let b2l = &b2[l * t_count..(l + 1) * t_count];
-            part[l - start] = secular::qp1qc_max(a, b2l, delta).s;
-        }
-        part
+        pen.ball_scores(&corr, &b2[start * t_count..end * t_count], t_count, delta)
     });
     out.concat()
 }

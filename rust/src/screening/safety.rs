@@ -26,12 +26,34 @@ impl SafetyReport {
 
 /// Verify a screening outcome against a solved W (row-norm check) and the
 /// KKT dual certificate (g_l(θ̂) < 1 for every rejected l, Eq. 15).
+///
+/// ℓ2,1-specialized alias for [`verify_for`] with [`crate::penalty::L21`]:
+/// the generic dual certificate `pen.dual_constraints(task_corr(θ̂))` is
+/// exactly `ops::gscore`'s body for ℓ2,1, so this delegation is
+/// bit-identical to the pre-seam verifier.
 pub fn verify(
     ds: &Dataset,
     w: &[f64],
     lam: f64,
     rejected: &[bool],
     row_tol: f64,
+) -> SafetyReport {
+    verify_for(ds, w, lam, rejected, row_tol, &crate::penalty::L21)
+}
+
+/// Penalty-generic [`verify`] (DESIGN.md §14). The row-norm check is
+/// penalty-independent (every row-structured Ω certifies row norms zero);
+/// the dual certificate is the penalty's own constraint functional
+/// g_l(θ̂) = [`crate::penalty::Penalty::dual_constraints`], which must be
+/// < 1 on every rejected row at (near-)optimal θ̂ for the rejection to
+/// have been safe.
+pub fn verify_for(
+    ds: &Dataset,
+    w: &[f64],
+    lam: f64,
+    rejected: &[bool],
+    row_tol: f64,
+    pen: &dyn crate::penalty::Penalty,
 ) -> SafetyReport {
     let t_count = ds.t();
     let mut violations = Vec::new();
@@ -47,7 +69,7 @@ pub fn verify(
 
     let mut theta = ops::residual(ds, w);
     ops::stacked_scale_inplace(&mut theta, -1.0 / lam);
-    let g = ops::gscore(ds, &theta);
+    let g = pen.dual_constraints(&ops::task_corr(ds, &theta), t_count);
     let max_rejected_g = rejected
         .iter()
         .zip(&g)

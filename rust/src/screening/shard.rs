@@ -101,19 +101,26 @@ pub struct StreamedGap {
 }
 
 /// Evaluate the duality-gap state at `lam` from a residual `r = X W − y`
-/// and the ℓ2,1 norm of the W that produced it. The feasibility scaling
-/// needs max_l g_l over *all* features — that is the one full streamed
-/// sweep sequential screening re-pays per grid point. Matches
+/// and `penalty_value` = Ω(W), the penalty value of the W that produced
+/// it (the ℓ2,1 norm here — see below). The feasibility scaling needs
+/// max_l g_l over *all* features — that is the one full streamed sweep
+/// sequential screening re-pays per grid point. Matches
 /// [`crate::ops::duality_gap`] on the materialized dataset bit-for-bit
 /// (same residual, same per-column dots, same fold).
+///
+/// Penalty scope (DESIGN.md §14): the streamed feasibility scaling is the
+/// ℓ2,1 rule (max √g over streamed g-scores), so the sharded path is
+/// ℓ2,1-only for now; `run_path_sharded` rejects other penalties up
+/// front. Generalizing needs a streamed analogue of
+/// `Penalty::infeasibility` — noted in ROADMAP.
 pub fn streamed_gap(
     sh: &ShardedDataset,
     y: &Stacked,
     lam: f64,
     r: &Stacked,
-    l21: f64,
+    penalty_value: f64,
 ) -> Result<StreamedGap> {
-    let obj = 0.5 * ops::stacked_sqnorm(r) + lam * l21;
+    let obj = 0.5 * ops::stacked_sqnorm(r) + lam * penalty_value;
     let z = ops::stacked_scale(r, -1.0 / lam);
     let m = ops::stream_gscore(sh, &z)?.into_iter().fold(0.0f64, f64::max).sqrt();
     let theta = if m > 1.0 { ops::stacked_scale(&z, 1.0 / m) } else { z };

@@ -84,7 +84,22 @@ fn row_nu(c: &[f64], b2: &[f64], lam: f64) -> f64 {
 }
 
 /// Cyclic BCD; `w0` warm start optional.
+///
+/// # Panics
+///
+/// Panics if `opts.penalty` does not support the per-row secular solve
+/// (only ℓ2,1 does — see [`crate::penalty::Penalty::supports_row_secular`]).
+/// The row update *is* the ℓ2,1 subproblem's exact minimizer; running it
+/// under another penalty would silently solve the wrong problem.
 pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> SolveResult {
+    use crate::penalty::Penalty;
+    let pen: &dyn Penalty = &opts.penalty;
+    assert!(
+        pen.supports_row_secular(),
+        "BCD's row update is the exact ℓ2,1 secular solve; penalty {} has a different \
+         row subproblem — use the FISTA solver for it",
+        pen.name()
+    );
     let t_count = ds.t();
     let d_full = ds.d;
     let mut w: Vec<f64> = match w0 {
@@ -154,14 +169,15 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
             if due_check || due_screen {
                 // the gap evaluation costs a forward pass + a corr sweep
                 col_ops += 2 * d;
-                let (o, gp, theta) = ops::duality_gap(dsc, &w, lam);
+                let (o, gp, theta) = ops::duality_gap_for(dsc, &w, lam, pen);
                 obj = o;
                 gap = gp;
                 if gap <= opts.tol * obj.abs().max(1.0) {
                     converged = true;
                 } else if due_screen {
                     col_ops += d; // and so is the score sweep
-                    if let Some(kept) = gap::dynamic_keep(dsc, &b2_all, &theta, gap, lam) {
+                    if let Some(kept) = gap::dynamic_keep_for(dsc, &b2_all, &theta, gap, lam, pen)
+                    {
                         if !kept.is_empty() {
                             // return the dropped rows' iterate mass to the
                             // residual before they leave the working set —
@@ -201,7 +217,7 @@ pub fn bcd(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> S
     }
 
     if !obj.is_finite() {
-        let (o, gp, _) = ops::duality_gap(ws.live(ds), &w, lam);
+        let (o, gp, _) = ops::duality_gap_for(ws.live(ds), &w, lam, pen);
         obj = o;
         gap = gp;
     }
@@ -298,6 +314,17 @@ mod tests {
             coarse.iters,
             coarse.iters.div_ceil(5)
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "row update is the exact ℓ2,1 secular solve")]
+    fn bcd_rejects_non_l21_penalties() {
+        let ds = problem();
+        let opts = SolveOptions {
+            penalty: crate::penalty::PenaltyKind::Sgl { alpha: 0.5 },
+            ..Default::default()
+        };
+        let _ = bcd(&ds, 1.0, None, &opts);
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //! restarts at each compaction and rejected rows are restored as zeros on
 //! exit.
 
-use super::{prox::prox21_inplace, DynamicSet, SolveOptions, SolveResult};
+use super::{DynamicSet, SolveOptions, SolveResult};
 use crate::data::Dataset;
 use crate::ops;
+use crate::penalty::Penalty;
 use crate::screening::gap;
 use crate::util::Pcg64;
 
@@ -61,8 +62,14 @@ pub fn lipschitz(ds: &Dataset, iters: usize) -> f64 {
     per_task.into_iter().fold(0.0f64, f64::max) * 1.0001 // small safety factor
 }
 
-/// Solve problem (1) at `lam`, warm-started from `w0` if given.
+/// Solve the generalized problem (1) at `lam`, warm-started from `w0` if
+/// given. The penalty comes from `opts.penalty` (DESIGN.md §14): the
+/// prox step, the duality-gap certificate, and the dynamic re-screen all
+/// use the same seam instance, so they stay mutually consistent for any
+/// penalty. With the default ℓ2,1 penalty every call delegates to the
+/// pre-seam kernels and the iterate sequence is bit-identical to before.
 pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) -> SolveResult {
+    let pen: &dyn Penalty = &opts.penalty;
     let t_count = ds.t();
     let d_full = ds.d;
     let lcap = lipschitz(ds, opts.power_iters).max(1e-12);
@@ -105,7 +112,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             // elementwise contract kernel
             w_buf.resize(dtc, 0.0);
             crate::linalg::scale_add(&v, -step, &g, &mut w_buf);
-            prox21_inplace(&mut w_buf, t_count, kappa);
+            pen.prox_inplace(&mut w_buf, t_count, kappa);
 
             // O'Donoghue–Candès adaptive restart: when the momentum
             // direction opposes the latest step (⟨v − w_new, w_new − w⟩ >
@@ -134,7 +141,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
             if due_check || due_screen {
                 // the gap evaluation costs a forward pass + a corr sweep
                 col_ops += 2 * dsc.d;
-                let (o, gp, theta) = ops::duality_gap(dsc, &w, lam);
+                let (o, gp, theta) = ops::duality_gap_for(dsc, &w, lam, pen);
                 obj = o;
                 gap = gp;
                 if gap <= opts.tol * obj.abs().max(1.0) {
@@ -142,7 +149,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
                 } else if due_screen {
                     col_ops += dsc.d; // and so is the score sweep
                     let b2c = b2.get_or_insert_with(|| dsc.col_sqnorms());
-                    if let Some(kept) = gap::dynamic_keep(dsc, b2c, &theta, gap, lam) {
+                    if let Some(kept) = gap::dynamic_keep_for(dsc, b2c, &theta, gap, lam, pen) {
                         if !kept.is_empty() {
                             shrink = Some((dsc.restrict(&kept), kept));
                         }
@@ -165,7 +172,7 @@ pub fn fista(ds: &Dataset, lam: f64, w0: Option<&[f64]>, opts: &SolveOptions) ->
     }
 
     if !obj.is_finite() {
-        let (o, gp, _) = ops::duality_gap(ws.live(ds), &w, lam);
+        let (o, gp, _) = ops::duality_gap_for(ws.live(ds), &w, lam, pen);
         obj = o;
         gap = gp;
     }
@@ -274,6 +281,27 @@ mod tests {
             dyn_res.col_ops,
             stat.col_ops
         );
+    }
+
+    #[test]
+    fn generic_penalties_converge_and_beat_their_zero_matrix() {
+        // sgl and gowl through the same solver: the gap certificate must
+        // close and the solution must beat W = 0 in its own objective
+        use crate::penalty::{Penalty, PenaltyKind};
+        let ds = problem();
+        for pk in [PenaltyKind::Sgl { alpha: 0.4 }, PenaltyKind::Gowl { gamma: 1.0 }] {
+            let (lmax, _) = ops::lambda_max_for(&ds, &pk);
+            let lam = 0.3 * lmax;
+            let opts = SolveOptions { penalty: pk, tol: 1e-8, ..Default::default() };
+            let res = fista(&ds, lam, None, &opts);
+            assert!(res.converged, "{pk}: gap={} after {} iters", res.gap, res.iters);
+            let at_zero = ops::primal_obj_for(&ds, &vec![0.0; ds.d * ds.t()], lam, &pk);
+            assert!(res.obj < at_zero, "{pk}: obj {} not below zero-matrix {at_zero}", res.obj);
+            // and above lambda_max the zero matrix must be optimal
+            let zopts = SolveOptions { penalty: pk, ..Default::default() };
+            let zres = fista(&ds, lmax * 1.001, None, &zopts);
+            assert!(zres.w.iter().all(|&v| v == 0.0), "{pk}: W != 0 above lambda_max");
+        }
     }
 
     #[test]

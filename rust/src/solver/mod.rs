@@ -1,11 +1,16 @@
 //! Exact (f64) solvers for the MTFL problem (1):
 //!
-//! * [`fista`] — accelerated proximal gradient with the ℓ2,1 prox and a
-//!   duality-gap stopping rule (the algorithm family behind SLEP's
-//!   `mtLeastR`, the paper's solver);
+//! * [`fista`] — accelerated proximal gradient with a duality-gap
+//!   stopping rule (the algorithm family behind SLEP's `mtLeastR`, the
+//!   paper's solver). Generic over the penalty seam: the prox, gap, and
+//!   dynamic-screen steps all go through
+//!   [`SolveOptions::penalty`](crate::penalty::Penalty) (DESIGN.md §14).
 //! * [`bcd`] — cyclic block-coordinate descent over feature rows (an
 //!   independent algorithm used to cross-validate FISTA and as a second
-//!   baseline for Table 1).
+//!   baseline for Table 1). ℓ2,1-only: its per-row secular solve is the
+//!   exact minimizer for the ℓ2,1 row subproblem and nothing else, so it
+//!   asserts `penalty.supports_row_secular()` instead of silently
+//!   solving the wrong problem.
 //!
 //! Both support warm starts — essential for the sequential λ-path.
 
@@ -92,6 +97,13 @@ pub struct SolveOptions {
     /// rejected rows are certified zero at the optimum and restored as
     /// zeros on exit. 0 disables (DESIGN.md §9).
     pub dynamic_every: usize,
+    /// The row-structured penalty Ω of the objective (DESIGN.md §14).
+    /// Part of the *problem definition*, carried here because every
+    /// consumer of a `SolveOptions` — solver, path runner, CV, stability,
+    /// experiments — needs the same penalty for its prox / gap / screen /
+    /// λ_max calls to be mutually consistent. Defaults to the paper's
+    /// ℓ2,1 norm, which reproduces the pre-seam behavior bit-for-bit.
+    pub penalty: crate::penalty::PenaltyKind,
 }
 
 impl Default for SolveOptions {
@@ -102,6 +114,7 @@ impl Default for SolveOptions {
             check_every: 25,
             power_iters: 60,
             dynamic_every: 0,
+            penalty: crate::penalty::PenaltyKind::L21,
         }
     }
 }

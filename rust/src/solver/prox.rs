@@ -1,12 +1,24 @@
 //! Proximal operator of κ‖·‖₂,₁ — the row-wise group soft-threshold.
+//! This is the concrete kernel behind [`crate::penalty::L21`]'s
+//! `prox_inplace`; the generic seam (DESIGN.md §14) delegates here so
+//! ℓ2,1 results stay bit-identical to the pre-seam code.
+
+use crate::penalty::ActiveRowCount;
 
 /// In-place prox on a row-major (d x T) matrix: each row shrinks by
-/// max(0, 1 − κ/‖row‖). Returns the number of surviving (nonzero) rows.
+/// max(0, 1 − κ/‖row‖).
+///
+/// Returns the **active-row count** ([`ActiveRowCount`]): the number of
+/// rows left nonzero by the prox. A row is counted iff its norm exceeded
+/// κ — equivalently, iff at least one of its entries is nonzero
+/// afterwards — so the count always equals the number of nonzero rows of
+/// the output (`active_count_equals_nonzero_rows` pins this, including
+/// the κ = 0 edge where already-zero rows still do not count).
 /// Row norms use the contract kernel ([`crate::linalg::nrm2_f64`]) — the
 /// same one `ops::l21_norm`/`ops::row_is_active` use, so the prox's
 /// survive/zero decision and the bookkeeping's activity predicate can
 /// never disagree on a row.
-pub fn prox21_inplace(w: &mut [f64], t_count: usize, kappa: f64) -> usize {
+pub fn prox21_inplace(w: &mut [f64], t_count: usize, kappa: f64) -> ActiveRowCount {
     debug_assert_eq!(w.len() % t_count, 0);
     let mut alive = 0usize;
     for row in w.chunks_exact_mut(t_count) {
@@ -43,6 +55,29 @@ mod tests {
         let mut w = vec![1.0, -2.0, 3.0];
         prox21_inplace(&mut w, 3, 0.0);
         assert_eq!(w, vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    fn active_count_equals_nonzero_rows() {
+        // the documented return contract: count == rows with any nonzero
+        // entry after the prox, across surviving / shrunk-to-zero /
+        // already-zero rows and the κ = 0 edge case
+        let cases: &[(Vec<f64>, f64)] = &[
+            (vec![3.0, 4.0, 0.3, 0.4, 0.0, 0.0, -1.0, 2.0], 1.0),
+            (vec![3.0, 4.0, 0.3, 0.4, 0.0, 0.0, -1.0, 2.0], 0.0),
+            (vec![0.0, 0.0, 0.0, 0.0], 0.5),
+            (vec![1e-12, 0.0, 5.0, -5.0], 1e-9),
+        ];
+        for (w0, kappa) in cases {
+            let mut w = w0.clone();
+            let alive = prox21_inplace(&mut w, 2, *kappa);
+            let nonzero_rows =
+                w.chunks_exact(2).filter(|row| row.iter().any(|&v| v != 0.0)).count();
+            assert_eq!(
+                alive, nonzero_rows,
+                "count contract broken for kappa={kappa}: w_out={w:?}"
+            );
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ use mtfl_dpc::coordinator::path::{run_path, EngineKind, PathOptions, ScreenerKin
 use mtfl_dpc::data::synthetic::{synthetic1, synthetic2, SynthOptions};
 use mtfl_dpc::screening::dpc::{DpcScreener, DualRef};
 use mtfl_dpc::solver::{fista, SolveOptions};
+use mtfl_dpc::PenaltyKind;
 
 fn loose_opts(k: ScreenerKind, dynamic_every: usize) -> PathOptions {
     PathOptions {
@@ -30,15 +31,26 @@ fn loose_opts(k: ScreenerKind, dynamic_every: usize) -> PathOptions {
 /// converges (its restricted gap still closes) but to a strictly worse
 /// objective, which this catches.
 fn assert_loose_path_safe(kind: ScreenerKind, dynamic_every: usize) {
+    assert_loose_path_safe_for(kind, dynamic_every, PenaltyKind::L21);
+}
+
+/// The same certification generalized over the penalty seam: the loose
+/// path carries `penalty` end to end (prox, gap, screen, verifier), and
+/// the independent tight reference solves the *same* penalized problem.
+fn assert_loose_path_safe_for(kind: ScreenerKind, dynamic_every: usize, penalty: PenaltyKind) {
     let (ds, _) =
         synthetic1(&SynthOptions { t: 3, n: 12, d: 80, seed: 77, ..Default::default() });
-    let run = run_path(&ds, &loose_opts(kind, dynamic_every), &EngineKind::Exact)
-        .unwrap_or_else(|e| panic!("{kind:?} loose path failed the safety verifier: {e}"));
+    let mut opts = loose_opts(kind, dynamic_every);
+    opts.solve.penalty = penalty;
+    let run = run_path(&ds, &opts, &EngineKind::Exact).unwrap_or_else(|e| {
+        panic!("{kind:?}/{penalty} loose path failed the safety verifier: {e}")
+    });
+    let tight_opts = SolveOptions { penalty, ..SolveOptions::tight() };
     for rec in run.records.iter().skip(1).step_by(3) {
-        let tight = fista(&ds, rec.lam, None, &SolveOptions::tight());
+        let tight = fista(&ds, rec.lam, None, &tight_opts);
         assert!(
             rec.obj <= tight.obj * (1.0 + 5e-3) + 1e-9,
-            "{kind:?}: ratio {} objective {} stuck above the true optimum {}",
+            "{kind:?}/{penalty}: ratio {} objective {} stuck above the true optimum {}",
             rec.ratio,
             rec.obj,
             tight.obj
@@ -79,6 +91,59 @@ fn loose_dynamic_dpc_path_is_safe() {
 #[test]
 fn loose_dynamic_gapsafe_path_is_safe() {
     assert_loose_path_safe(ScreenerKind::GapSafe, 5);
+}
+
+// --- penalty seam (DESIGN.md §14): the same loose-tolerance safety
+// certification for the non-ℓ2,1 instances, static and dynamic ---
+
+#[test]
+fn loose_sgl_path_is_safe() {
+    assert_loose_path_safe_for(ScreenerKind::GapSafe, 0, PenaltyKind::Sgl { alpha: 0.4 });
+}
+
+#[test]
+fn loose_dynamic_sgl_path_is_safe() {
+    assert_loose_path_safe_for(ScreenerKind::GapSafe, 5, PenaltyKind::Sgl { alpha: 0.4 });
+}
+
+#[test]
+fn loose_gowl_path_is_safe() {
+    assert_loose_path_safe_for(ScreenerKind::GapSafe, 0, PenaltyKind::Gowl { gamma: 1.0 });
+}
+
+#[test]
+fn loose_dynamic_gowl_path_is_safe() {
+    assert_loose_path_safe_for(ScreenerKind::GapSafe, 5, PenaltyKind::Gowl { gamma: 1.0 });
+}
+
+#[test]
+fn degenerate_knobs_recover_the_l21_path() {
+    // sgl at α = 0 and gowl at γ = 0 are the ℓ2,1 norm (numerically, not
+    // bitwise — their prox/scale formulas regroup the arithmetic), so the
+    // whole screened path must land on the same objectives and active sets
+    let (ds, _) =
+        synthetic2(&SynthOptions { t: 3, n: 12, d: 80, seed: 80, ..Default::default() });
+    let l21 = run_path(&ds, &loose_opts(ScreenerKind::GapSafe, 0), &EngineKind::Exact).unwrap();
+    for pk in [PenaltyKind::Sgl { alpha: 0.0 }, PenaltyKind::Gowl { gamma: 0.0 }] {
+        let mut opts = loose_opts(ScreenerKind::GapSafe, 0);
+        opts.solve.penalty = pk;
+        let run = run_path(&ds, &opts, &EngineKind::Exact).unwrap();
+        assert_eq!(run.records.len(), l21.records.len());
+        for (a, b) in run.records.iter().zip(&l21.records) {
+            assert!(
+                (a.lam - b.lam).abs() <= 1e-9 * b.lam,
+                "{pk}: λ_max drifted from ℓ2,1 at ratio {}",
+                b.ratio
+            );
+            assert!(
+                (a.obj - b.obj).abs() <= 3e-3 * b.obj.abs().max(1.0),
+                "{pk}: obj mismatch at ratio {}: {} vs {}",
+                a.ratio,
+                a.obj,
+                b.obj
+            );
+        }
+    }
 }
 
 #[test]

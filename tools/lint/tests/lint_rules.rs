@@ -55,6 +55,32 @@ fn kernel_reduction_is_scoped_to_library_code() {
 }
 
 #[test]
+fn penalty_module_is_library_scope_for_every_rule() {
+    // the penalty seam (rust/src/penalty/, PR 8) is library code producing
+    // pinned bit-streams: the determinism rules must treat it exactly like
+    // ops.rs — in scope, with no accidental allowlisting
+    for name in ["mod.rs", "l21.rs", "sgl.rs", "gowl.rs", "loss.rs"] {
+        let rel = format!("rust/src/penalty/{name}");
+        let r = lint_source(&rel, &fixture("bad_reduction.rs"));
+        assert!(
+            fired(&r).iter().all(|(_, rule)| rule == "kernel-reduction")
+                && r.diags.len() == 2,
+            "{rel} must be kernel-reduction scope: {:#?}",
+            r.diags
+        );
+        let r = lint_source(&rel, &fixture("bad_fma.rs"));
+        assert_eq!(r.diags.len(), 2, "{rel} must be no-fma scope: {:#?}", r.diags);
+        let r = lint_source(&rel, &fixture("bad_unsafe.rs"));
+        assert_eq!(
+            fired(&r),
+            vec![(4, "confined-unsafe".to_string())],
+            "{rel} must not join the unsafe allowlist: {:#?}",
+            r.diags
+        );
+    }
+}
+
+#[test]
 fn no_spawn_fires_on_spawn_and_scope() {
     let r = lint_source("rust/src/coordinator/cv.rs", &fixture("bad_spawn.rs"));
     assert_eq!(
