@@ -1,0 +1,74 @@
+//! Serving bench (DESIGN.md §15): drive the `repro load` RPS ramp
+//! against an in-process serve daemon — client pacing and server ticks
+//! interleaved on one thread through the `idle` hook — and record
+//! per-level latency percentiles, the saturation RPS, and the daemon's
+//! own per-op stats. Results land in `BENCH_serve.json` at the repo
+//! root (`provisional: false` — this file only writes after a real run).
+//!
+//!     cargo bench --bench serve
+
+use mtfl_dpc::coordinator::path::ScreenerKind;
+use mtfl_dpc::experiments::{build_by_name, exp_opts, Scale};
+use mtfl_dpc::serve::{proto, run_load, LoadOptions, Server, ServerOptions};
+use mtfl_dpc::util::num_threads;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let w = num_threads();
+    println!("== serve bench (num_threads = {w}) ==\n");
+
+    // a mid-size workload: big enough that a predict batch is real work,
+    // small enough that the prefit path fits in a bench budget
+    let d = 400usize;
+    let ds = build_by_name("synth1", d, Scale::Quick, 11)?;
+    let opts = ServerOptions {
+        path: exp_opts(12, ScreenerKind::Dpc),
+        prefit: true,
+        max_frame: proto::DEFAULT_MAX_FRAME,
+    };
+    let mut srv = Server::bind("127.0.0.1:0", ds, opts)?;
+    let addr = srv.local_addr()?.to_string();
+    let fitted = srv.fitted_ratios();
+    let ratio = fitted[fitted.len() / 2];
+    println!("daemon on {addr}: {} warm models, predicting at ratio {ratio:.4}", fitted.len());
+
+    let lopts = LoadOptions {
+        initial_rps: 50.0,
+        increment_rps: 50.0,
+        target_rps: 500.0,
+        step_secs: 2.0,
+        conns: 4,
+        rows: 4,
+        ratio,
+        seed: 0,
+        d,
+    };
+    let report = {
+        let srv = &mut srv;
+        run_load(&addr, &lopts, &mut || srv.tick().map(|_| ()))?
+    };
+
+    println!("\n{:>12} {:>12} {:>8} {:>9} {:>9} {:>9}", "offered", "achieved", "errors", "p50", "p95", "p99");
+    for l in &report.levels {
+        println!(
+            "{:>9.0}/s {:>9.1}/s {:>8} {:>7.2}ms {:>7.2}ms {:>7.2}ms",
+            l.offered_rps, l.achieved_rps, l.errors, l.p50_ms, l.p95_ms, l.p99_ms
+        );
+    }
+    match report.saturation_rps {
+        Some(rps) => println!("\nsaturated at {rps:.1} req/s achieved"),
+        None => println!(
+            "\nnever saturated (max achieved {:.1} req/s at target {:.0})",
+            report.max_achieved_rps, lopts.target_rps
+        ),
+    }
+
+    let out = report.to_json(false).to_json();
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_serve.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_serve.json"));
+    std::fs::write(&out_path, format!("{out}\n"))?;
+    println!("wrote {}", out_path.display());
+    Ok(())
+}

@@ -30,6 +30,12 @@
 //! programs against the [`penalty::Penalty`] trait, with the paper's ℓ2,1
 //! norm as the bit-identical default and sparse-group lasso / group OWL
 //! as drop-in instances (`--penalty sgl|gowl`).
+//!
+//! Long-lived serving (DESIGN.md §15): `repro serve` holds warm fitted
+//! models and answers predict/fit/cv over a length-prefixed JSON TCP
+//! protocol, batching request work onto the persistent executor —
+//! [`serve::Server`], with `repro load` ([`serve::run_load`]) as its
+//! RPS-ramp load harness.
 
 #![warn(missing_docs)]
 
@@ -43,6 +49,7 @@ pub mod ops;
 pub mod penalty;
 pub mod runtime;
 pub mod screening;
+pub mod serve;
 pub mod solver;
 pub mod testing;
 pub mod util;

@@ -390,6 +390,26 @@ pub fn centered_sumsq_serial_f64(v: &[f64], m: f64) -> f64 {
     acc
 }
 
+/// Serial `Σ_l a[l*stride + off] * (x_l as f64)` over ascending `l`,
+/// skipping `a`-zeros — the per-sample image of `ops::axpy_panel`'s
+/// accumulation order (each active column contributes one mul-then-add,
+/// columns in ascending order; skipped zeros match `axpy_f64`'s
+/// `alpha == 0` early return). `repro serve` replays one input row
+/// through a row-major d×T `W` with this helper (`stride = T`,
+/// `off = t`), so a served prediction carries bit-identical f64s to an
+/// offline [`crate::ops::forward`] on the same sample (DESIGN.md §15).
+#[inline]
+pub fn dot_strided_skipz_f64(a: &[f64], stride: usize, off: usize, x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (l, &xl) in x.iter().enumerate() {
+        let al = a[l * stride + off];
+        if al != 0.0 {
+            acc += al * xl as f64;
+        }
+    }
+    acc
+}
+
 /// Continue `acc` with the serial `Σ (yᵢ/λ − tᵢ)²` of one task — the
 /// dual-objective distance term. Takes and returns the running
 /// accumulator so a multi-task caller keeps one global left-to-right

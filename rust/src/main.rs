@@ -10,6 +10,8 @@
 //!   stability stability selection over half-subsamples (screened)
 //!   gen       generate a dataset and save it as .mtd
 //!   shard     convert a dataset to the sharded .mtd3 layout (out-of-core)
+//!   serve     long-lived solve/predict daemon (warm-model cache, TCP)
+//!   load      RPS-ramp load harness against a serve daemon
 //!   info      print the AOT artifact manifest
 
 use anyhow::{Context, Result};
@@ -21,7 +23,7 @@ use mtfl_dpc::runtime::AotEngine;
 use std::path::PathBuf;
 
 const USAGE: &str = "usage: \
-repro <table1|fig1|fig2|ablation|path|cv|stability|gen|shard|info> [options]
+repro <table1|fig1|fig2|ablation|path|cv|stability|gen|shard|serve|load|info> [options]
 
 common options:
   --scale quick|default|paper   experiment scale (default: default)
@@ -60,6 +62,26 @@ gen options:
 shard options:
   --in FILE.mtd | --dataset ... --d N --seed S
   --out FILE.mtd3 --shard-bytes N
+
+serve options (plus the path grid/screener/solver/penalty options above):
+  --addr HOST:PORT    listen address (default 127.0.0.1:7878; port 0 picks
+                      an ephemeral port, printed at startup)
+  --in FILE           serve a saved dataset (.mtd, or .mtd3 — materialized
+                      into RAM: serving is a latency path)
+  --no-prefit         skip the startup λ-path; models are fitted on demand
+  --max-frame-mb M    per-frame payload cap in MiB (default 8)
+
+load options:
+  --addr HOST:PORT    daemon to ramp against (default 127.0.0.1:7878)
+  --initial-rps R --increment-rps R --target-rps R --step-secs S
+                      the RPS ramp (defaults 20/20/100/2.0); each level
+                      holds step-secs, saturation = achieved < 0.9 offered
+  --conns C --rows N  pipelined connections / rows per predict (4/4)
+  --ratio R           fitted λ/λ_max to predict at (default: smallest
+                      fitted ratio from the daemon's info reply)
+  --seed S            workload-generator seed
+  --out FILE          JSON report path (default BENCH_serve.json)
+  --shutdown          send a shutdown op after the ramp (daemon drains)
 ";
 
 /// First four bytes of a file (container magic sniffing).
@@ -395,6 +417,126 @@ fn main() -> Result<()> {
                 "run it out-of-core with: repro path --in {}",
                 out.display()
             );
+        }
+        "serve" => {
+            let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+            let name = args.get_or("dataset", "synth1").to_string();
+            let d = args.get_usize("d", 500)?;
+            let seed = args.get_u64("seed", 0)?;
+            let grid = args.get_usize("grid", scale.grid_len())?;
+            let input = args.get("in").map(PathBuf::from);
+            let max_frame = args.get_usize("max-frame-mb", 8)? << 20;
+            let prefit = !args.flag("no-prefit");
+            let popts = grid_opts(&args, grid)?;
+            require_exact_engine(&args, "serve")?;
+            args.finish()?;
+            let ds = match &input {
+                Some(p) if sniff_magic(p)? == *b"MTD3" => {
+                    // serving is a latency path: materialize the shard
+                    let sh = mtfl_dpc::data::ShardedDataset::open(p)?;
+                    let all: Vec<usize> = (0..sh.d()).collect();
+                    println!(
+                        "materializing {} (d={}) from {} into RAM for serving",
+                        sh.name(),
+                        sh.d(),
+                        p.display()
+                    );
+                    sh.restrict(&all)?
+                }
+                Some(p) => mtfl_dpc::data::io::load(p)?,
+                None => experiments::build_by_name(&name, d, scale, seed)?,
+            };
+            let sopts = mtfl_dpc::serve::ServerOptions { path: popts, prefit, max_frame };
+            let mut srv = mtfl_dpc::serve::Server::bind(&addr, ds, sopts)?;
+            println!(
+                "serving on {} ({} models warm) — ops: \
+                 ping|info|predict|fit|cv|stats|shutdown",
+                srv.local_addr()?,
+                srv.fitted_ratios().len()
+            );
+            srv.run()?;
+            println!("shutdown: drained in-flight work, stopping");
+        }
+        "load" => {
+            use mtfl_dpc::serve::json::Value;
+            use mtfl_dpc::serve::proto;
+            let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+            let mut lopts = mtfl_dpc::serve::LoadOptions {
+                initial_rps: args.get_f64("initial-rps", 20.0)?,
+                increment_rps: args.get_f64("increment-rps", 20.0)?,
+                target_rps: args.get_f64("target-rps", 100.0)?,
+                step_secs: args.get_f64("step-secs", 2.0)?,
+                conns: args.get_usize("conns", 4)?,
+                rows: args.get_usize("rows", 4)?,
+                seed: args.get_u64("seed", 0)?,
+                ..Default::default()
+            };
+            let ratio_arg = args.get_f64("ratio", 0.0)?;
+            let out = PathBuf::from(args.get_or("out", "BENCH_serve.json"));
+            let do_shutdown = args.flag("shutdown");
+            args.finish()?;
+
+            // discover d and the fitted grid from the daemon
+            let mut probe = std::net::TcpStream::connect(&addr)
+                .with_context(|| format!("connect {addr} (is `repro serve` running?)"))?;
+            let info = proto::call(
+                &mut probe,
+                &Value::Obj(vec![("op".into(), Value::Str("info".into()))]),
+            )?;
+            lopts.d = info
+                .get("d")
+                .and_then(Value::as_usize)
+                .context("info reply missing d")?;
+            lopts.ratio = if ratio_arg > 0.0 {
+                ratio_arg
+            } else {
+                info.get("fitted")
+                    .and_then(Value::as_arr)
+                    .and_then(|a| a.last())
+                    .and_then(Value::as_f64)
+                    .context(
+                        "daemon has no fitted models — run serve without --no-prefit, \
+                         send a fit op first, or pass --ratio",
+                    )?
+            };
+            println!(
+                "ramping {} → {} rps (step {} rps / {}s) against {addr}: d={} ratio={} \
+                 conns={} rows={}",
+                lopts.initial_rps,
+                lopts.target_rps,
+                lopts.increment_rps,
+                lopts.step_secs,
+                lopts.d,
+                lopts.ratio,
+                lopts.conns,
+                lopts.rows
+            );
+            let report = mtfl_dpc::serve::run_load(&addr, &lopts, &mut || Ok(()))?;
+            for l in &report.levels {
+                println!(
+                    "offered {:>7.1} rps | achieved {:>7.1} | p50 {:>7.2}ms | \
+                     p95 {:>7.2}ms | p99 {:>7.2}ms | errors {}",
+                    l.offered_rps, l.achieved_rps, l.p50_ms, l.p95_ms, l.p99_ms, l.errors
+                );
+            }
+            match report.saturation_rps {
+                Some(r) => println!("saturated at {r:.1} rps achieved"),
+                None => println!(
+                    "no saturation up to {:.1} rps (max achieved {:.1})",
+                    lopts.target_rps, report.max_achieved_rps
+                ),
+            }
+            // a CLI-run ramp is a real measurement: provisional=false
+            std::fs::write(&out, report.to_json(false).to_json() + "\n")
+                .with_context(|| format!("write {}", out.display()))?;
+            println!("wrote {}", out.display());
+            if do_shutdown {
+                proto::call(
+                    &mut probe,
+                    &Value::Obj(vec![("op".into(), Value::Str("shutdown".into()))]),
+                )?;
+                println!("sent shutdown; daemon is draining");
+            }
         }
         "info" => {
             let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));

@@ -1,0 +1,148 @@
+//! Warm-model cache: the daemon's reason to be long-lived.
+//!
+//! One entry per fitted λ/λ_max ratio, holding the full row-major `W`
+//! (d×T) plus its optimality certificate (objective, duality gap).
+//! Lookup is exact on the ratio's f64 bits — `predict` must apply the
+//! *same* model every time, never a silently-nearest one. Warm starts
+//! go the other way: [`ModelCache::nearest`] hands `fit` the cached `W`
+//! whose log-ratio is closest, the same neighbor-in-log-space heuristic
+//! the λ-path coordinator exploits (Corollary 9 sequential screening
+//! feeds on exactly this continuity).
+//!
+//! Entries are never evicted: a grid of models is a few d×T f64 arrays —
+//! memory is bounded by the fit requests the operator chose to send, and
+//! dropping a model a client might still predict against would turn a
+//! cache policy into a correctness event (DESIGN.md §15).
+
+/// One fitted model at a grid point.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// λ/λ_max this model was fitted at
+    pub ratio: f64,
+    /// absolute λ
+    pub lam: f64,
+    /// row-major weights, d×T
+    pub w: Vec<f64>,
+    /// primal objective at the solution
+    pub obj: f64,
+    /// duality gap at the solution (the optimality certificate)
+    pub gap: f64,
+    /// solver iterations spent
+    pub iters: usize,
+}
+
+/// The daemon's model store, with hit/miss accounting for `stats`.
+#[derive(Debug, Default)]
+pub struct ModelCache {
+    entries: Vec<ModelEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ModelCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace, on identical ratio bits) a fitted model.
+    pub fn insert(&mut self, e: ModelEntry) {
+        match self.entries.iter_mut().find(|x| x.ratio.to_bits() == e.ratio.to_bits()) {
+            Some(slot) => *slot = e,
+            None => self.entries.push(e),
+        }
+    }
+
+    /// Exact-bits lookup, counted as a hit or miss.
+    pub fn get(&mut self, ratio: f64) -> Option<&ModelEntry> {
+        let found = self.entries.iter().position(|e| e.ratio.to_bits() == ratio.to_bits());
+        match found {
+            Some(i) => {
+                self.hits += 1;
+                Some(&self.entries[i])
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Exact-bits lookup without touching the hit/miss counters (used by
+    /// `fit` to distinguish "already fitted" from a predict-path hit).
+    pub fn peek(&self, ratio: f64) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.ratio.to_bits() == ratio.to_bits())
+    }
+
+    /// The fitted model nearest `ratio` in log-space (warm-start donor).
+    pub fn nearest(&self, ratio: f64) -> Option<&ModelEntry> {
+        self.entries.iter().min_by(|a, b| {
+            let da = (a.ratio.ln() - ratio.ln()).abs();
+            let db = (b.ratio.ln() - ratio.ln()).abs();
+            da.total_cmp(&db)
+        })
+    }
+
+    /// Fitted ratios, descending (for actionable "unfitted λ" errors).
+    pub fn ratios(&self) -> Vec<f64> {
+        let mut r: Vec<f64> = self.entries.iter().map(|e| e.ratio).collect();
+        r.sort_by(|a, b| b.total_cmp(a));
+        r
+    }
+
+    /// Number of cached models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if nothing is fitted yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// (hits, misses) counters for `stats`.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(ratio: f64) -> ModelEntry {
+        ModelEntry { ratio, lam: ratio * 2.0, w: vec![ratio; 4], obj: 0.0, gap: 0.0, iters: 1 }
+    }
+
+    #[test]
+    fn exact_bits_lookup_and_counters() {
+        let mut c = ModelCache::new();
+        c.insert(entry(0.5));
+        assert!(c.get(0.5).is_some());
+        assert!(c.get(0.5000001).is_none(), "no silent nearest on predict");
+        assert_eq!(c.counters(), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn replace_on_same_ratio() {
+        let mut c = ModelCache::new();
+        c.insert(entry(0.5));
+        let mut e = entry(0.5);
+        e.iters = 99;
+        c.insert(e);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.peek(0.5).unwrap().iters, 99);
+    }
+
+    #[test]
+    fn nearest_is_log_space() {
+        let mut c = ModelCache::new();
+        c.insert(entry(1.0));
+        c.insert(entry(0.1));
+        // 0.35 is closer to 0.1 linearly but closer to 1.0 in log-space
+        let n = c.nearest(0.35).unwrap();
+        assert_eq!(n.ratio, 1.0);
+        assert_eq!(c.ratios(), vec![1.0, 0.1]);
+    }
+}

@@ -1,0 +1,353 @@
+//! RPS-ramp load harness for the serve daemon (`repro load`), in the
+//! style of the Internet-Computer scalability suite: offer
+//! `initial_rps`, step by `increment_rps` up to `target_rps`, hold each
+//! level for `step_secs`, and declare saturation when the achieved
+//! throughput falls below 90% of the offered rate. The report carries
+//! per-level latency percentiles (client-side, send → reply) and the
+//! saturation RPS — the numbers written to `BENCH_serve.json`.
+//!
+//! The generator is deterministic: a seeded [`Pcg64`] pre-builds a
+//! small pool of predict payloads (random rows of the served model's
+//! d), and the pacing clock is a [`Stopwatch`] (the repro-lint
+//! `nondeterminism` rule applies to this file like any other library
+//! code — wall-clock reads route through the timing substrate).
+//!
+//! Like the server, the client is single-threaded and nonblocking: it
+//! keeps `conns` pipelined connections, each with a FIFO of send
+//! timestamps — the protocol guarantees per-connection reply order, so
+//! the head of the FIFO always matches the next decoded reply. The
+//! `idle` hook runs once per pacing iteration; benches pass the
+//! in-process server's `tick` so one thread can drive both ends
+//! deterministically, the CLI passes a no-op.
+
+use super::json::{self, Value};
+use super::proto::{self, FrameDecoder};
+use super::stats::percentile;
+use crate::util::{Pcg64, Stopwatch};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Ramp configuration for [`run_load`].
+#[derive(Debug, Clone)]
+pub struct LoadOptions {
+    /// first level's offered request rate (req/s)
+    pub initial_rps: f64,
+    /// offered-rate increase per level
+    pub increment_rps: f64,
+    /// stop ramping past this offered rate
+    pub target_rps: f64,
+    /// seconds to hold each level
+    pub step_secs: f64,
+    /// pipelined connections
+    pub conns: usize,
+    /// rows per predict request
+    pub rows: usize,
+    /// λ/λ_max of the model to predict against (must be fitted)
+    pub ratio: f64,
+    /// workload-generator seed
+    pub seed: u64,
+    /// feature dimension of generated rows (from the `info` op)
+    pub d: usize,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions {
+            initial_rps: 20.0,
+            increment_rps: 20.0,
+            target_rps: 100.0,
+            step_secs: 2.0,
+            conns: 4,
+            rows: 4,
+            ratio: 0.1,
+            seed: 0,
+            d: 0,
+        }
+    }
+}
+
+/// One ramp level's outcome.
+#[derive(Debug, Clone)]
+pub struct LevelStats {
+    /// offered request rate
+    pub offered_rps: f64,
+    /// completed replies per second over the level window
+    pub achieved_rps: f64,
+    /// requests sent
+    pub sent: u64,
+    /// replies received
+    pub completed: u64,
+    /// `ok:false` replies + transport failures
+    pub errors: u64,
+    /// median latency, ms
+    pub p50_ms: f64,
+    /// 95th-percentile latency, ms
+    pub p95_ms: f64,
+    /// 99th-percentile latency, ms
+    pub p99_ms: f64,
+}
+
+/// The full ramp report ([`run_load`]'s result, → `BENCH_serve.json`).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// per-level outcomes, in ramp order
+    pub levels: Vec<LevelStats>,
+    /// achieved RPS at the first saturated level (None: never saturated)
+    pub saturation_rps: Option<f64>,
+    /// best achieved RPS across levels
+    pub max_achieved_rps: f64,
+    /// total requests completed across the ramp
+    pub total_completed: u64,
+    /// the options the ramp ran with
+    pub opts: LoadOptions,
+}
+
+impl LoadReport {
+    /// JSON form (the `levels`/`saturation_rps` schema of
+    /// `BENCH_serve.json`).
+    pub fn to_json(&self, provisional: bool) -> Value {
+        let levels = self
+            .levels
+            .iter()
+            .map(|l| {
+                Value::Obj(vec![
+                    ("offered_rps".into(), Value::Num(l.offered_rps)),
+                    ("achieved_rps".into(), Value::Num(l.achieved_rps)),
+                    ("sent".into(), Value::Num(l.sent as f64)),
+                    ("completed".into(), Value::Num(l.completed as f64)),
+                    ("errors".into(), Value::Num(l.errors as f64)),
+                    ("p50_ms".into(), Value::Num(l.p50_ms)),
+                    ("p95_ms".into(), Value::Num(l.p95_ms)),
+                    ("p99_ms".into(), Value::Num(l.p99_ms)),
+                ])
+            })
+            .collect();
+        Value::Obj(vec![
+            ("bench".into(), Value::Str("serve".into())),
+            ("provisional".into(), Value::Bool(provisional)),
+            ("d".into(), Value::Num(self.opts.d as f64)),
+            ("rows_per_request".into(), Value::Num(self.opts.rows as f64)),
+            ("ratio".into(), Value::Num(self.opts.ratio)),
+            ("conns".into(), Value::Num(self.opts.conns as f64)),
+            ("step_secs".into(), Value::Num(self.opts.step_secs)),
+            (
+                "saturation_rps".into(),
+                self.saturation_rps.map(Value::Num).unwrap_or(Value::Null),
+            ),
+            ("saturated".into(), Value::Bool(self.saturation_rps.is_some())),
+            ("max_achieved_rps".into(), Value::Num(self.max_achieved_rps)),
+            ("total_completed".into(), Value::Num(self.total_completed as f64)),
+            ("levels".into(), Value::Arr(levels)),
+        ])
+    }
+}
+
+struct LoadConn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    out: Vec<u8>,
+    outpos: usize,
+    /// send timestamps of in-flight requests (replies are in-order)
+    inflight: VecDeque<f64>,
+}
+
+/// Run the ramp against a serve daemon at `addr`. `idle` runs once per
+/// pacing iteration — pass the in-process server's `tick` to co-drive
+/// client and daemon on one thread (benches/tests), or a no-op when the
+/// daemon is a separate process (the CLI).
+pub fn run_load(
+    addr: &str,
+    opts: &LoadOptions,
+    idle: &mut dyn FnMut() -> Result<()>,
+) -> Result<LoadReport> {
+    anyhow::ensure!(opts.d > 0, "LoadOptions.d must be set (from the info op)");
+    anyhow::ensure!(opts.conns > 0 && opts.rows > 0, "conns and rows must be >= 1");
+    let payloads = build_payloads(opts);
+    let mut conns = Vec::with_capacity(opts.conns);
+    for _ in 0..opts.conns {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        stream.set_nodelay(true).ok();
+        conns.push(LoadConn {
+            stream,
+            dec: FrameDecoder::new(),
+            out: Vec::new(),
+            outpos: 0,
+            inflight: VecDeque::new(),
+        });
+    }
+
+    let clock = Stopwatch::started();
+    let mut levels = Vec::new();
+    let mut saturation_rps = None;
+    let mut total_completed = 0u64;
+    let mut offered = opts.initial_rps;
+    let mut payload_rr = 0usize;
+    let mut conn_rr = 0usize;
+
+    while offered <= opts.target_rps + 1e-9 {
+        let t0 = clock.secs();
+        let mut sent = 0u64;
+        let mut completed = 0u64;
+        let mut errors = 0u64;
+        let mut latencies: Vec<f64> = Vec::new();
+
+        // hold the level, then grace-drain stragglers (up to step_secs)
+        let mut draining = false;
+        loop {
+            let now = clock.secs() - t0;
+            if !draining && now >= opts.step_secs {
+                draining = true;
+            }
+            if draining {
+                let outstanding: usize = conns.iter().map(|c| c.inflight.len()).sum();
+                if outstanding == 0 || now >= 2.0 * opts.step_secs {
+                    break;
+                }
+            } else {
+                // open-loop pacing: sends due so far at the offered rate
+                let due = (now * offered) as u64;
+                while sent < due {
+                    let c = &mut conns[conn_rr % conns.len()];
+                    conn_rr += 1;
+                    proto::encode_frame(
+                        payloads[payload_rr % payloads.len()].as_bytes(),
+                        &mut c.out,
+                    );
+                    payload_rr += 1;
+                    c.inflight.push_back(clock.secs());
+                    sent += 1;
+                }
+            }
+            pump(&mut conns, &clock, &mut latencies, &mut completed, &mut errors)?;
+            idle()?;
+            std::thread::sleep(Duration::from_micros(200));
+        }
+
+        // level wall time includes the drain: a saturated server either
+        // stretches the drain or strands replies — both depress this
+        let elapsed = (clock.secs() - t0).max(1e-9);
+        let achieved = completed as f64 / elapsed;
+        total_completed += completed;
+        levels.push(LevelStats {
+            offered_rps: offered,
+            achieved_rps: achieved,
+            sent,
+            completed,
+            errors,
+            p50_ms: percentile(&latencies, 0.50) * 1e3,
+            p95_ms: percentile(&latencies, 0.95) * 1e3,
+            p99_ms: percentile(&latencies, 0.99) * 1e3,
+        });
+        if achieved < 0.9 * offered {
+            saturation_rps = Some(achieved);
+            break;
+        }
+        offered += opts.increment_rps;
+        if opts.increment_rps <= 0.0 {
+            break;
+        }
+    }
+
+    let max_achieved_rps =
+        levels.iter().map(|l| l.achieved_rps).fold(0.0f64, f64::max);
+    Ok(LoadReport {
+        levels,
+        saturation_rps,
+        max_achieved_rps,
+        total_completed,
+        opts: opts.clone(),
+    })
+}
+
+/// Deterministic request pool: a few distinct predict payloads with
+/// seeded-random rows (values in [-1, 1]).
+fn build_payloads(opts: &LoadOptions) -> Vec<String> {
+    let mut rng = Pcg64::new(opts.seed);
+    (0..8)
+        .map(|_| {
+            let rows: Vec<Value> = (0..opts.rows)
+                .map(|_| {
+                    Value::Arr(
+                        (0..opts.d)
+                            // f32 images so the wire trip is exact
+                            .map(|_| Value::Num(rng.uniform_in(-1.0, 1.0) as f32 as f64))
+                            .collect(),
+                    )
+                })
+                .collect();
+            Value::Obj(vec![
+                ("op".into(), Value::Str("predict".into())),
+                ("ratio".into(), Value::Num(opts.ratio)),
+                ("rows".into(), Value::Arr(rows)),
+            ])
+            .to_json()
+        })
+        .collect()
+}
+
+/// Flush writes, read replies, account latencies/errors.
+fn pump(
+    conns: &mut [LoadConn],
+    clock: &Stopwatch,
+    latencies: &mut Vec<f64>,
+    completed: &mut u64,
+    errors: &mut u64,
+) -> Result<()> {
+    let mut buf = [0u8; 16 * 1024];
+    for c in conns.iter_mut() {
+        // writes
+        while c.outpos < c.out.len() {
+            match c.stream.write(&c.out[c.outpos..]) {
+                Ok(0) => anyhow::bail!("server closed the connection mid-write"),
+                Ok(n) => c.outpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("write"),
+            }
+        }
+        if c.outpos == c.out.len() && c.outpos > 0 {
+            c.out.clear();
+            c.outpos = 0;
+        }
+        // reads
+        loop {
+            match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    if !c.inflight.is_empty() {
+                        anyhow::bail!("server closed with {} replies outstanding", c.inflight.len());
+                    }
+                    break;
+                }
+                Ok(n) => c.dec.extend(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("read"),
+            }
+        }
+        // decode
+        while let Some(payload) = c
+            .dec
+            .next(proto::DEFAULT_MAX_FRAME)
+            .map_err(|e| anyhow::anyhow!("reply framing: {e}"))?
+        {
+            let sent_at = c
+                .inflight
+                .pop_front()
+                .ok_or_else(|| anyhow::anyhow!("reply with no request in flight"))?;
+            latencies.push(clock.secs() - sent_at);
+            *completed += 1;
+            let ok = json::parse(std::str::from_utf8(&payload).unwrap_or("{}"))
+                .ok()
+                .and_then(|v| v.get("ok").and_then(Value::as_bool))
+                .unwrap_or(false);
+            if !ok {
+                *errors += 1;
+            }
+        }
+    }
+    Ok(())
+}

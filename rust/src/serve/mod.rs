@@ -1,0 +1,33 @@
+//! The serving layer (DESIGN.md §15): `repro serve`, a long-lived
+//! solve/predict daemon over a length-prefixed JSON TCP protocol, and
+//! `repro load`, its RPS-ramp load harness.
+//!
+//! The daemon holds warm fitted models — one full `W` per λ/λ_max grid
+//! ratio, captured through the same [`crate::coordinator::path::PathObserver`]
+//! seam CV and stability selection consume — and answers:
+//!
+//! | op        | does                                                        |
+//! |-----------|-------------------------------------------------------------|
+//! | `ping`    | liveness                                                    |
+//! | `info`    | dataset shape, λ_max, penalty, fitted ratios                |
+//! | `predict` | batched rows × cached `W`, bit-identical to offline forward |
+//! | `fit`     | single-λ solve, warm-started from the nearest cached model  |
+//! | `cv`      | k-fold CV over the configured grid                          |
+//! | `stats`   | per-op latency percentiles, cache + executor counters       |
+//! | `shutdown`| stop accepting, drain in-flight work, exit 0                |
+//!
+//! Submodules: [`json`] (in-tree parser/serializer with bit-exact f64
+//! round-trip), [`proto`] (frame codec + request/reply model), [`cache`]
+//! (warm-model store), [`stats`] (latency rings), [`server`] (the
+//! tick-driven event loop), [`load`] (the ramp harness).
+
+pub mod cache;
+pub mod json;
+pub mod load;
+pub mod proto;
+pub mod server;
+pub mod stats;
+
+pub use cache::{ModelCache, ModelEntry};
+pub use load::{run_load, LoadOptions, LoadReport};
+pub use server::{Server, ServerOptions};

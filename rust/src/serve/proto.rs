@@ -1,0 +1,327 @@
+//! Wire protocol for `repro serve` (DESIGN.md §15).
+//!
+//! A frame is `[u32 big-endian payload length][payload]` where the
+//! payload is one UTF-8 JSON document. Requests are objects with an
+//! `"op"` member; replies are `{"ok":true,"result":…}` or
+//! `{"ok":false,"error":"…"}`, written strictly in per-connection
+//! request order (clients may pipeline).
+//!
+//! The length prefix is the protocol's whole failure surface, so it is
+//! policed at the seam: a frame longer than the server's `max_frame`
+//! yields an actionable error reply and the connection is closed (the
+//! stream offset can no longer be trusted); a truncated frame is simply
+//! an incomplete read — the decoder waits for more bytes, and a peer
+//! that hangs up mid-frame costs nothing but the buffer.
+
+use super::json::{self, Value};
+use std::io::{Read, Write};
+
+/// Default cap on a single frame's payload (8 MiB — a 1000-row predict
+/// batch at d=10⁵ needs chunking anyway; see `--max-frame-mb`).
+pub const DEFAULT_MAX_FRAME: usize = 8 << 20;
+
+/// Bytes in the length prefix.
+pub const HEADER_LEN: usize = 4;
+
+/// Append one frame (header + payload) to `out`.
+pub fn encode_frame(payload: &[u8], out: &mut Vec<u8>) {
+    debug_assert!(payload.len() <= u32::MAX as usize);
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Why a decoder rejected its stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The declared payload length exceeds the server's cap. The
+    /// connection must be closed: the next header offset is unknowable.
+    Oversize {
+        /// declared payload length
+        declared: usize,
+        /// the cap it exceeded
+        max: usize,
+    },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversize { declared, max } => write!(
+                f,
+                "frame of {declared} bytes exceeds the {max}-byte limit; split the \
+                 request (e.g. fewer predict rows per frame) or restart the server \
+                 with a larger --max-frame-mb"
+            ),
+        }
+    }
+}
+
+/// Incremental frame decoder over an arbitrary byte stream.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl FrameDecoder {
+    /// An empty decoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed freshly-read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete payload, if one is buffered. `Ok(None)`
+    /// means "incomplete — feed more bytes"; [`FrameError::Oversize`]
+    /// poisons the stream (close the connection).
+    pub fn next(&mut self, max_frame: usize) -> Result<Option<Vec<u8>>, FrameError> {
+        let avail = self.buf.len() - self.pos;
+        if avail < HEADER_LEN {
+            self.compact();
+            return Ok(None);
+        }
+        let h = &self.buf[self.pos..self.pos + HEADER_LEN];
+        let declared = u32::from_be_bytes([h[0], h[1], h[2], h[3]]) as usize;
+        if declared > max_frame {
+            return Err(FrameError::Oversize { declared, max: max_frame });
+        }
+        if avail < HEADER_LEN + declared {
+            self.compact();
+            return Ok(None);
+        }
+        let start = self.pos + HEADER_LEN;
+        let payload = self.buf[start..start + declared].to_vec();
+        self.pos = start + declared;
+        self.compact();
+        Ok(Some(payload))
+    }
+
+    /// True if undecoded bytes remain (a partial frame in flight).
+    pub fn has_partial(&self) -> bool {
+        self.pos < self.buf.len()
+    }
+
+    fn compact(&mut self) {
+        if self.pos > 0 && (self.pos == self.buf.len() || self.pos >= 64 * 1024) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// requests and replies
+// ---------------------------------------------------------------------------
+
+/// A decoded client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// liveness probe; replies `"pong"`
+    Ping,
+    /// dataset + model-cache metadata (the client's d/T discovery call)
+    Info,
+    /// predictions for `rows` under the model fitted at `ratio` (λ/λ_max)
+    Predict {
+        /// λ/λ_max of the cached model to apply
+        ratio: f64,
+        /// row-major input rows, each of length d (f32 images as f64)
+        rows: Vec<Vec<f32>>,
+    },
+    /// fit (or return the cached) model at `ratio`, warm-starting from
+    /// the nearest fitted neighbor
+    Fit {
+        /// λ/λ_max to fit
+        ratio: f64,
+    },
+    /// k-fold CV over the server's configured grid
+    Cv {
+        /// fold count
+        folds: usize,
+        /// fold-split seed
+        seed: u64,
+    },
+    /// serving statistics (latency percentiles, cache + executor counters)
+    Stats,
+    /// stop accepting, drain in-flight work, exit the serve loop
+    Shutdown,
+}
+
+impl Request {
+    /// Endpoint label used for per-op latency stats.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Info => "info",
+            Request::Predict { .. } => "predict",
+            Request::Fit { .. } => "fit",
+            Request::Cv { .. } => "cv",
+            Request::Stats => "stats",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
+    /// Decode a request object; errors name the missing/invalid member.
+    pub fn from_json(v: &Value) -> Result<Request, String> {
+        let op = v
+            .get("op")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "request must be an object with a string \"op\"".to_string())?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "info" => Ok(Request::Info),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "predict" => {
+                let ratio = need_ratio(v)?;
+                let rows = v
+                    .get("rows")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| "predict needs \"rows\": [[...], ...]".to_string())?;
+                let rows: Result<Vec<Vec<f32>>, String> = rows
+                    .iter()
+                    .map(|row| {
+                        row.as_arr()
+                            .ok_or_else(|| "each row must be an array of numbers".to_string())?
+                            .iter()
+                            .map(|x| {
+                                x.as_f64()
+                                    .map(|v| v as f32)
+                                    .ok_or_else(|| "each row must be an array of numbers".into())
+                            })
+                            .collect()
+                    })
+                    .collect();
+                Ok(Request::Predict { ratio, rows: rows? })
+            }
+            "fit" => Ok(Request::Fit { ratio: need_ratio(v)? }),
+            "cv" => {
+                let folds = v.get("folds").and_then(Value::as_usize).unwrap_or(5);
+                let seed = v.get("seed").and_then(Value::as_u64).unwrap_or(0);
+                if folds < 2 {
+                    return Err("cv needs \"folds\" >= 2".into());
+                }
+                Ok(Request::Cv { folds, seed })
+            }
+            other => Err(format!(
+                "unknown op '{other}' (ping|info|predict|fit|cv|stats|shutdown)"
+            )),
+        }
+    }
+}
+
+fn need_ratio(v: &Value) -> Result<f64, String> {
+    let r = v
+        .get("ratio")
+        .and_then(Value::as_f64)
+        .ok_or_else(|| "missing numeric \"ratio\" (λ/λ_max)".to_string())?;
+    if r.is_finite() && r > 0.0 && r <= 1.0 {
+        Ok(r)
+    } else {
+        Err(format!("\"ratio\" must be in (0, 1], got {r}"))
+    }
+}
+
+/// Serialize a success reply.
+pub fn ok_reply(result: Value) -> String {
+    Value::Obj(vec![("ok".into(), Value::Bool(true)), ("result".into(), result)]).to_json()
+}
+
+/// Serialize an error reply.
+pub fn err_reply(msg: &str) -> String {
+    Value::Obj(vec![
+        ("ok".into(), Value::Bool(false)),
+        ("error".into(), Value::Str(msg.into())),
+    ])
+    .to_json()
+}
+
+// ---------------------------------------------------------------------------
+// blocking client side (tests, `repro load`, the CLI shutdown helper)
+// ---------------------------------------------------------------------------
+
+/// Write one frame to a blocking stream.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_frame(payload, &mut buf);
+    w.write_all(&buf)
+}
+
+/// Read one complete frame from a blocking stream.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> std::io::Result<Vec<u8>> {
+    let mut h = [0u8; HEADER_LEN];
+    r.read_exact(&mut h)?;
+    let declared = u32::from_be_bytes(h) as usize;
+    if declared > max_frame {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            FrameError::Oversize { declared, max: max_frame }.to_string(),
+        ));
+    }
+    let mut payload = vec![0u8; declared];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// One blocking request/reply round trip; errors carry the server's
+/// `"error"` text when the reply is `ok:false`.
+pub fn call(stream: &mut std::net::TcpStream, req: &Value) -> anyhow::Result<Value> {
+    write_frame(stream, req.to_json().as_bytes())?;
+    let reply = read_frame(stream, DEFAULT_MAX_FRAME)?;
+    let v = json::parse(std::str::from_utf8(&reply)?)
+        .map_err(|e| anyhow::anyhow!("bad reply json: {e}"))?;
+    match v.get("ok").and_then(Value::as_bool) {
+        Some(true) => Ok(v.get("result").cloned().unwrap_or(Value::Null)),
+        Some(false) => anyhow::bail!(
+            "server error: {}",
+            v.get("error").and_then(Value::as_str).unwrap_or("unknown")
+        ),
+        None => anyhow::bail!("malformed reply (no \"ok\" member)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoder_reassembles_split_frames() {
+        let mut wire = Vec::new();
+        encode_frame(b"{\"op\":\"ping\"}", &mut wire);
+        encode_frame(b"{\"op\":\"info\"}", &mut wire);
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for chunk in wire.chunks(3) {
+            dec.extend(chunk);
+            while let Some(p) = dec.next(1024).unwrap() {
+                got.push(String::from_utf8(p).unwrap());
+            }
+        }
+        assert_eq!(got, vec!["{\"op\":\"ping\"}", "{\"op\":\"info\"}"]);
+        assert!(!dec.has_partial());
+    }
+
+    #[test]
+    fn oversize_header_poisons_the_stream() {
+        let mut dec = FrameDecoder::new();
+        dec.extend(&(1_000_000u32).to_be_bytes());
+        let err = dec.next(1024).unwrap_err();
+        assert_eq!(err, FrameError::Oversize { declared: 1_000_000, max: 1024 });
+        assert!(err.to_string().contains("--max-frame-mb"), "{err}");
+    }
+
+    #[test]
+    fn requests_parse_and_validate() {
+        let v = crate::serve::json::parse(
+            r#"{"op":"predict","ratio":0.5,"rows":[[1.0,2.0]]}"#,
+        )
+        .unwrap();
+        assert!(matches!(Request::from_json(&v).unwrap(), Request::Predict { .. }));
+        let v = crate::serve::json::parse(r#"{"op":"fit","ratio":1.5}"#).unwrap();
+        assert!(Request::from_json(&v).unwrap_err().contains("(0, 1]"));
+        let v = crate::serve::json::parse(r#"{"op":"nope"}"#).unwrap();
+        assert!(Request::from_json(&v).unwrap_err().contains("unknown op"));
+    }
+}

@@ -1,0 +1,577 @@
+//! The `repro serve` daemon core: a tick-driven, single-threaded TCP
+//! event loop that batches request work onto the persistent executor.
+//!
+//! ## Why a tick loop and not a thread per connection
+//!
+//! The repo's concurrency contract confines `thread::spawn` to the
+//! executor (repro-lint `no-spawn`, DESIGN.md §11/§13), and the
+//! executor's scopes are synchronous fork-join — ideal for data-parallel
+//! sweeps, wrong for an unbounded set of blocking socket reads. So the
+//! daemon owns every socket on one thread in nonblocking mode and makes
+//! progress in discrete [`Server::tick`]s: accept, read, decode, process
+//! the decoded batch, flush replies. CPU work — the only part that
+//! scales with load — is fanned out per tick as one executor scope over
+//! every predict row decoded this tick, so concurrent clients batch onto
+//! the same `scoped_pool` lanes the offline solvers use, bounded by
+//! `MTFL_THREADS`. Fit/CV jobs run inline on the coordinator thread
+//! (their solvers parallelize internally through the same executor) and
+//! simply make the current tick long; predict traffic queues in kernel
+//! socket buffers meanwhile and drains next tick — the protocol is
+//! pipelined, replies stay in per-connection order (DESIGN.md §15).
+//!
+//! Tests drive [`Server::tick`] directly (client and daemon interleave
+//! deterministically on one thread at any `MTFL_THREADS`); the CLI runs
+//! [`Server::run`], which is the same tick in a sleep loop plus
+//! drain-on-shutdown.
+//!
+//! ## Bit-parity contract
+//!
+//! A served prediction at ratio r must equal the offline pipeline
+//! (`run_path` → [`crate::ops::forward`]) bit-for-bit. Per sample,
+//! `forward` accumulates active columns in ascending `l` with one
+//! mul-then-add each ([`crate::ops`]'s `axpy_panel` over
+//! [`crate::linalg::simd::axpy_f64`]); the serve path replays exactly
+//! that order through [`crate::linalg::simd::dot_strided_skipz_f64`],
+//! and the JSON layer round-trips every f64 bit-exactly
+//! ([`crate::serve::json`]). The warm-model cache stores the path's own
+//! `W` arrays unchanged, so there is nothing left to drift.
+
+use crate::coordinator::path::{
+    run_path_with, EngineKind, FnObserver, PathOptions, ScreenerKind, SolverKind,
+};
+use crate::data::Dataset;
+use crate::linalg::simd;
+use crate::penalty::Penalty;
+use crate::screening::dpc::DualRef;
+use crate::serve::cache::{ModelCache, ModelEntry};
+use crate::serve::json::{self, Value};
+use crate::serve::proto::{self, FrameDecoder, Request};
+use crate::serve::stats::ServeStats;
+use crate::solver::{bcd, fista};
+use crate::util::{executor, num_threads, ShutdownFlag, Stopwatch};
+use anyhow::{Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Idle sleep between ticks when nothing was processed ([`Server::run`]).
+const IDLE: Duration = Duration::from_millis(1);
+
+/// Drain window after shutdown: in-flight frames and unflushed replies
+/// get this long to complete before sockets are dropped.
+const DRAIN_SECS: f64 = 2.0;
+
+/// Daemon configuration (the CLI builds this from `repro serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// grid/screener/solver/penalty configuration — the same
+    /// [`PathOptions`] the offline coordinator takes, so a daemon fit is
+    /// the offline fit
+    pub path: PathOptions,
+    /// run the full λ-path at startup, caching every grid model
+    pub prefit: bool,
+    /// per-frame payload cap in bytes ([`proto::DEFAULT_MAX_FRAME`])
+    pub max_frame: usize,
+}
+
+/// One client connection's sockets + buffers.
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    outbox: Vec<u8>,
+    outpos: usize,
+    /// still accepting request frames (false after EOF or a poisoned
+    /// stream; queued replies still flush)
+    open: bool,
+    /// framing poisoned (oversize header): buffered bytes are garbage,
+    /// stop decoding — the one-shot error reply still flushes
+    poisoned: bool,
+    /// socket usable at all (false after a hard I/O error)
+    alive: bool,
+}
+
+/// A deferred predict decoded this tick, awaiting the executor batch.
+struct PendingPredict {
+    ratio: f64,
+    rows: Vec<Vec<f32>>,
+    sw: Stopwatch,
+}
+
+/// Reply slot for one decoded frame, in per-connection arrival order.
+enum Slot {
+    Ready(&'static str, String, Stopwatch),
+    Predict(usize),
+}
+
+/// The `repro serve` daemon: dataset + warm-model cache + event loop.
+pub struct Server {
+    ds: Dataset,
+    lam_max: f64,
+    opts: ServerOptions,
+    cache: ModelCache,
+    stats: ServeStats,
+    listener: TcpListener,
+    conns: Vec<Conn>,
+    shutdown: ShutdownFlag,
+    uptime: Stopwatch,
+    requests: u64,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port), validate the
+    /// penalty/solver capability gates, and optionally prefit the grid.
+    pub fn bind(addr: &str, ds: Dataset, opts: ServerOptions) -> Result<Server> {
+        ds.validate()?;
+        let pen: &dyn Penalty = &opts.path.solve.penalty;
+        if !opts.path.solve.penalty.is_l21() {
+            // same capability gates as the path coordinator (DESIGN.md
+            // §14): fail at bind, not on the first client request
+            anyhow::ensure!(
+                matches!(opts.path.screener, ScreenerKind::None | ScreenerKind::GapSafe),
+                "screener {:?} is ℓ2,1-only; penalty {} serves with --screener gap or none",
+                opts.path.screener,
+                pen.name()
+            );
+            anyhow::ensure!(
+                matches!(opts.path.solver, SolverKind::Fista),
+                "solver Bcd is ℓ2,1-only; penalty {} serves with --solver fista",
+                pen.name()
+            );
+        }
+        let lam_max = if opts.path.solve.penalty.is_l21() {
+            DualRef::at_lambda_max(&ds).1
+        } else {
+            crate::ops::lambda_max_for(&ds, pen).0
+        };
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        executor::ensure_init();
+        let mut srv = Server {
+            ds,
+            lam_max,
+            opts,
+            cache: ModelCache::new(),
+            stats: ServeStats::new(),
+            listener,
+            conns: Vec::new(),
+            shutdown: ShutdownFlag::new(),
+            uptime: Stopwatch::started(),
+            requests: 0,
+        };
+        if srv.opts.prefit {
+            srv.prefit()?;
+        }
+        Ok(srv)
+    }
+
+    /// The bound address (read the ephemeral port from here).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A clone of the shutdown latch (trip it to stop [`Server::run`]).
+    pub fn shutdown_flag(&self) -> ShutdownFlag {
+        self.shutdown.clone()
+    }
+
+    /// Fitted ratios, descending (test hook + CLI logging).
+    pub fn fitted_ratios(&self) -> Vec<f64> {
+        self.cache.ratios()
+    }
+
+    /// Run the configured λ-path once, caching every per-λ `W` through
+    /// the observer seam — the same `run_path_with` hook CV and
+    /// stability selection consume, so the cached models *are* the
+    /// offline path's models.
+    pub fn prefit(&mut self) -> Result<()> {
+        let mut captured: Vec<ModelEntry> = Vec::new();
+        let mut obs = FnObserver(
+            |ratio: f64, lam: f64, w: &[f64], rec: &crate::coordinator::path::LambdaRecord| {
+                captured.push(ModelEntry {
+                    ratio,
+                    lam,
+                    w: w.to_vec(),
+                    obj: rec.obj,
+                    gap: rec.gap,
+                    iters: rec.solver_iters,
+                });
+            },
+        );
+        run_path_with(&self.ds, &self.opts.path, &EngineKind::Exact, &mut obs)?;
+        for e in captured {
+            self.cache.insert(e);
+        }
+        Ok(())
+    }
+
+    /// Serve until the shutdown latch trips, then drain and return.
+    /// This is `tick` + idle sleep; exit code 0 is the contract — every
+    /// failure mode that isn't a bind/prefit error is an error *reply*.
+    pub fn run(&mut self) -> Result<()> {
+        while !self.shutdown.is_requested() {
+            if self.tick()? == 0 {
+                std::thread::sleep(IDLE);
+            }
+        }
+        self.drain()
+    }
+
+    /// Post-shutdown drain: finish work already on the wire (decoded or
+    /// decodable frames, unflushed replies) within [`DRAIN_SECS`], then
+    /// drop every socket. Nothing in-flight is abandoned unless the
+    /// deadline passes — a wedged peer cannot hold the process hostage.
+    pub fn drain(&mut self) -> Result<()> {
+        let sw = Stopwatch::started();
+        loop {
+            let n = self.tick()?;
+            let flushed = self.conns.iter().all(|c| c.outpos == c.outbox.len());
+            if n == 0 && flushed {
+                break;
+            }
+            if sw.secs() > DRAIN_SECS {
+                break;
+            }
+            std::thread::sleep(IDLE);
+        }
+        self.conns.clear();
+        Ok(())
+    }
+
+    /// One scheduling quantum: accept new connections (unless shutting
+    /// down), read and decode every connection, process the decoded
+    /// request batch (predict rows fan out as one executor scope), queue
+    /// and flush replies. Returns the number of requests processed, so
+    /// callers can idle-sleep on 0. Tests call this directly to
+    /// interleave client and daemon deterministically on one thread.
+    pub fn tick(&mut self) -> Result<usize> {
+        if !self.shutdown.is_requested() {
+            self.accept_new()?;
+        }
+        self.read_all();
+
+        // decode + dispatch, building per-conn ordered reply slots
+        let mut slots: Vec<(usize, Slot)> = Vec::new();
+        let mut pendings: Vec<PendingPredict> = Vec::new();
+        for ci in 0..self.conns.len() {
+            loop {
+                if !self.conns[ci].alive || self.conns[ci].poisoned {
+                    break;
+                }
+                let frame = match self.conns[ci].dec.next(self.opts.max_frame) {
+                    Ok(Some(f)) => f,
+                    Ok(None) => break,
+                    Err(e) => {
+                        // poisoned framing: reply once, then close after flush
+                        slots.push((
+                            ci,
+                            Slot::Ready(
+                                "error",
+                                proto::err_reply(&e.to_string()),
+                                Stopwatch::started(),
+                            ),
+                        ));
+                        self.conns[ci].open = false;
+                        self.conns[ci].poisoned = true;
+                        break;
+                    }
+                };
+                let slot = self.dispatch(&frame, &mut pendings);
+                slots.push((ci, slot));
+            }
+        }
+
+        // batch every predict row decoded this tick onto one executor
+        // scope; results come back in item order
+        let flat: Vec<(usize, usize)> = pendings
+            .iter()
+            .enumerate()
+            .flat_map(|(pi, p)| (0..p.rows.len()).map(move |ri| (pi, ri)))
+            .collect();
+        let t_count = self.ds.t();
+        let preds: Vec<Vec<f64>> = {
+            let cache = &self.cache;
+            let pend = &pendings;
+            executor::scoped_pool(flat.clone(), usize::MAX, move |(pi, ri)| {
+                let p = &pend[pi];
+                // model presence was checked (and counted) at dispatch
+                let w = &cache.peek(p.ratio).expect("checked at dispatch").w;
+                let row = &p.rows[ri];
+                (0..t_count)
+                    .map(|t| simd::dot_strided_skipz_f64(w, t_count, t, row))
+                    .collect()
+            })
+        };
+        let mut by_pending: Vec<Vec<Vec<f64>>> =
+            pendings.iter().map(|p| Vec::with_capacity(p.rows.len())).collect();
+        for ((pi, _ri), pred) in flat.into_iter().zip(preds) {
+            by_pending[pi].push(pred);
+        }
+
+        // resolve slots into framed replies, in per-conn arrival order
+        let processed = slots.len();
+        for (ci, slot) in slots {
+            let (op, reply, sw) = match slot {
+                Slot::Ready(op, reply, sw) => (op, reply, sw),
+                Slot::Predict(pi) => {
+                    let rows = std::mem::take(&mut by_pending[pi]);
+                    let result = Value::Arr(rows.into_iter().map(|p| Value::num_arr(&p)).collect());
+                    ("predict", proto::ok_reply(result), pendings[pi].sw.clone())
+                }
+            };
+            self.stats.record(op, sw.secs());
+            self.requests += 1;
+            let conn = &mut self.conns[ci];
+            proto::encode_frame(reply.as_bytes(), &mut conn.outbox);
+        }
+
+        self.flush_all();
+        self.conns.retain(|c| c.alive && (c.open || c.outpos < c.outbox.len()));
+        Ok(processed)
+    }
+
+    // -- tick phases --------------------------------------------------------
+
+    fn accept_new(&mut self) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nonblocking(true).context("conn set_nonblocking")?;
+                    stream.set_nodelay(true).ok();
+                    self.conns.push(Conn {
+                        stream,
+                        dec: FrameDecoder::new(),
+                        outbox: Vec::new(),
+                        outpos: 0,
+                        open: true,
+                        poisoned: false,
+                        alive: true,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+    }
+
+    fn read_all(&mut self) {
+        let mut buf = [0u8; 16 * 1024];
+        for c in &mut self.conns {
+            if !c.open || !c.alive {
+                continue;
+            }
+            loop {
+                match c.stream.read(&mut buf) {
+                    Ok(0) => {
+                        // EOF: no more requests; queued replies still flush
+                        c.open = false;
+                        break;
+                    }
+                    Ok(n) => c.dec.extend(&buf[..n]),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.open = false;
+                        c.alive = false;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    fn flush_all(&mut self) {
+        for c in &mut self.conns {
+            if !c.alive {
+                continue;
+            }
+            while c.outpos < c.outbox.len() {
+                match c.stream.write(&c.outbox[c.outpos..]) {
+                    Ok(0) => {
+                        c.alive = false;
+                        break;
+                    }
+                    Ok(n) => c.outpos += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.alive = false;
+                        break;
+                    }
+                }
+            }
+            if c.outpos == c.outbox.len() && c.outpos > 0 {
+                c.outbox.clear();
+                c.outpos = 0;
+            }
+        }
+    }
+
+    /// Decode + handle one frame; predicts defer to the tick's batch.
+    fn dispatch(&mut self, frame: &[u8], pendings: &mut Vec<PendingPredict>) -> Slot {
+        let sw = Stopwatch::started();
+        let req = std::str::from_utf8(frame)
+            .map_err(|_| "frame payload is not utf-8".to_string())
+            .and_then(|s| json::parse(s).map_err(|e| format!("bad json: {e}")))
+            .and_then(|v| Request::from_json(&v));
+        let req = match req {
+            Ok(r) => r,
+            Err(e) => return Slot::Ready("error", proto::err_reply(&e), sw),
+        };
+        let op = req.op_name();
+        match req {
+            Request::Ping => Slot::Ready(op, proto::ok_reply(Value::Str("pong".into())), sw),
+            Request::Info => Slot::Ready(op, proto::ok_reply(self.info()), sw),
+            Request::Stats => Slot::Ready(op, proto::ok_reply(self.stats_json()), sw),
+            Request::Shutdown => {
+                self.shutdown.request();
+                let v = Value::Obj(vec![("stopping".into(), Value::Bool(true))]);
+                Slot::Ready(op, proto::ok_reply(v), sw)
+            }
+            Request::Fit { ratio } => {
+                let reply = match self.handle_fit(ratio) {
+                    Ok(v) => proto::ok_reply(v),
+                    Err(e) => proto::err_reply(&e),
+                };
+                Slot::Ready(op, reply, sw)
+            }
+            Request::Cv { folds, seed } => {
+                let reply = match self.handle_cv(folds, seed) {
+                    Ok(v) => proto::ok_reply(v),
+                    Err(e) => proto::err_reply(&e),
+                };
+                Slot::Ready(op, reply, sw)
+            }
+            Request::Predict { ratio, rows } => {
+                if let Some(bad) = rows.iter().position(|r| r.len() != self.ds.d) {
+                    let e = format!(
+                        "row {bad} has {} values; this model expects d={}",
+                        rows[bad].len(),
+                        self.ds.d
+                    );
+                    return Slot::Ready(op, proto::err_reply(&e), sw);
+                }
+                // counted lookup: predicts are the cache's hit/miss story
+                if self.cache.get(ratio).is_none() {
+                    let fitted = self.cache.ratios();
+                    let e = format!(
+                        "no fitted model at ratio {ratio}; fitted ratios: {fitted:?}; \
+                         fit it first with {{\"op\":\"fit\",\"ratio\":{ratio}}}"
+                    );
+                    return Slot::Ready(op, proto::err_reply(&e), sw);
+                }
+                pendings.push(PendingPredict { rows, sw, ratio });
+                Slot::Predict(pendings.len() - 1)
+            }
+        }
+    }
+
+    // -- op handlers --------------------------------------------------------
+
+    fn info(&self) -> Value {
+        let n = match self.ds.uniform_n() {
+            Some(n) => Value::Num(n as f64),
+            None => Value::Null,
+        };
+        Value::Obj(vec![
+            ("dataset".into(), Value::Str(self.ds.name.clone())),
+            ("d".into(), Value::Num(self.ds.d as f64)),
+            ("tasks".into(), Value::Num(self.ds.t() as f64)),
+            ("n".into(), n),
+            ("lam_max".into(), Value::Num(self.lam_max)),
+            ("penalty".into(), Value::Str(self.opts.path.solve.penalty.name().into())),
+            ("fitted".into(), Value::num_arr(&self.cache.ratios())),
+            ("threads".into(), Value::Num(num_threads() as f64)),
+        ])
+    }
+
+    fn stats_json(&self) -> Value {
+        let endpoints = self
+            .stats
+            .rows()
+            .into_iter()
+            .map(|(op, count, p50, p95, p99)| {
+                Value::Obj(vec![
+                    ("op".into(), Value::Str(op.into())),
+                    ("count".into(), Value::Num(count as f64)),
+                    ("p50_ms".into(), Value::Num(p50)),
+                    ("p95_ms".into(), Value::Num(p95)),
+                    ("p99_ms".into(), Value::Num(p99)),
+                ])
+            })
+            .collect();
+        let (hits, misses) = self.cache.counters();
+        Value::Obj(vec![
+            ("uptime_secs".into(), Value::Num(self.uptime.secs())),
+            ("requests".into(), Value::Num(self.requests as f64)),
+            ("connections".into(), Value::Num(self.conns.len() as f64)),
+            ("models".into(), Value::Num(self.cache.len() as f64)),
+            ("cache_hits".into(), Value::Num(hits as f64)),
+            ("cache_misses".into(), Value::Num(misses as f64)),
+            ("executor_peak_active".into(), Value::Num(executor::peak_active() as f64)),
+            ("executor_spawns".into(), Value::Num(executor::spawn_count() as f64)),
+            ("endpoints".into(), Value::Arr(endpoints)),
+        ])
+    }
+
+    /// Fit at `ratio`, warm-starting from the nearest cached model; a
+    /// ratio already fitted returns its cached certificate unchanged.
+    fn handle_fit(&mut self, ratio: f64) -> Result<Value, String> {
+        if let Some(e) = self.cache.peek(ratio) {
+            return Ok(fit_reply(e, true, None, 0.0));
+        }
+        let warm: Option<(f64, Vec<f64>)> =
+            self.cache.nearest(ratio).map(|e| (e.ratio, e.w.clone()));
+        let lam = ratio * self.lam_max;
+        let sw = Stopwatch::started();
+        let w0 = warm.as_ref().map(|(_, w)| w.as_slice());
+        // single-λ fits solve the full (unscreened) problem — screening
+        // is the path coordinator's cross-λ optimization; gap tolerance
+        // and penalty come from the same SolveOptions the path uses
+        let sr = match self.opts.path.solver {
+            SolverKind::Fista => fista(&self.ds, lam, w0, &self.opts.path.solve),
+            SolverKind::Bcd => bcd(&self.ds, lam, w0, &self.opts.path.solve),
+        };
+        let secs = sw.secs();
+        if !sr.converged {
+            return Err(format!(
+                "fit at ratio {ratio} did not converge in {} iters (gap {:.3e}); \
+                 raise max_iters or loosen tol",
+                sr.iters, sr.gap
+            ));
+        }
+        let entry = ModelEntry { ratio, lam, w: sr.w, obj: sr.obj, gap: sr.gap, iters: sr.iters };
+        let reply = fit_reply(&entry, false, warm.as_ref().map(|(r, _)| *r), secs);
+        self.cache.insert(entry);
+        Ok(reply)
+    }
+
+    fn handle_cv(&mut self, folds: usize, seed: u64) -> Result<Value, String> {
+        let cv = crate::coordinator::cv::cross_validate(&self.ds, &self.opts.path, folds, seed)
+            .map_err(|e| format!("cv failed: {e:#}"))?;
+        Ok(Value::Obj(vec![
+            ("best_ratio".into(), Value::Num(cv.best_ratio)),
+            ("best_index".into(), Value::Num(cv.best_index as f64)),
+            ("ratios".into(), Value::num_arr(&cv.ratios)),
+            ("mse".into(), Value::num_arr(&cv.mse)),
+            ("col_ops".into(), Value::Num(cv.col_ops as f64)),
+            ("total_secs".into(), Value::Num(cv.total_secs)),
+        ]))
+    }
+}
+
+fn fit_reply(e: &ModelEntry, cached: bool, warm_from: Option<f64>, secs: f64) -> Value {
+    Value::Obj(vec![
+        ("ratio".into(), Value::Num(e.ratio)),
+        ("lam".into(), Value::Num(e.lam)),
+        ("obj".into(), Value::Num(e.obj)),
+        ("gap".into(), Value::Num(e.gap)),
+        ("iters".into(), Value::Num(e.iters as f64)),
+        ("cached".into(), Value::Bool(cached)),
+        (
+            "warm_from".into(),
+            warm_from.map(Value::Num).unwrap_or(Value::Null),
+        ),
+        ("solve_secs".into(), Value::Num(secs)),
+    ])
+}

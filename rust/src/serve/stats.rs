@@ -1,0 +1,113 @@
+//! Per-endpoint latency accounting for the `stats` op.
+//!
+//! Each endpoint keeps a bounded ring of recent latencies (seconds, via
+//! [`crate::util::Stopwatch`] — the repro-lint `nondeterminism` rule
+//! keeps raw `Instant` out of this layer) plus a lifetime request
+//! counter. Percentiles are nearest-rank over the ring, so `stats` is
+//! O(ring log ring) and the daemon's memory is bounded no matter how
+//! long it runs.
+
+/// Retained samples per endpoint (~the last 4096 requests).
+const RING: usize = 4096;
+
+/// Nearest-rank percentile of an **unsorted** sample set (`q` in [0,1]).
+/// Returns 0.0 on an empty set. Shared with the load harness so the
+/// server- and client-side reports agree on the estimator.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(f64::total_cmp);
+    let rank = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len());
+    s[rank - 1]
+}
+
+/// Latency ring for one endpoint.
+#[derive(Debug)]
+struct Endpoint {
+    name: &'static str,
+    ring: Vec<f64>,
+    next: usize,
+    count: u64,
+}
+
+impl Endpoint {
+    fn record(&mut self, secs: f64) {
+        self.count += 1;
+        if self.ring.len() < RING {
+            self.ring.push(secs);
+        } else {
+            self.ring[self.next] = secs;
+            self.next = (self.next + 1) % RING;
+        }
+    }
+}
+
+/// All endpoint recorders; one per op name, created on first use.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    endpoints: Vec<Endpoint>,
+}
+
+impl ServeStats {
+    /// An empty recorder set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request's latency under its op name.
+    pub fn record(&mut self, op: &'static str, secs: f64) {
+        match self.endpoints.iter_mut().find(|e| e.name == op) {
+            Some(e) => e.record(secs),
+            None => {
+                let mut e = Endpoint { name: op, ring: Vec::new(), next: 0, count: 0 };
+                e.record(secs);
+                self.endpoints.push(e);
+            }
+        }
+    }
+
+    /// Per-endpoint summary rows: `(op, count, p50_ms, p95_ms, p99_ms)`.
+    pub fn rows(&self) -> Vec<(&'static str, u64, f64, f64, f64)> {
+        self.endpoints
+            .iter()
+            .map(|e| {
+                (
+                    e.name,
+                    e.count,
+                    percentile(&e.ring, 0.50) * 1e3,
+                    percentile(&e.ring, 0.95) * 1e3,
+                    percentile(&e.ring, 0.99) * 1e3,
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 0.5), 2.0, "sorts internally");
+    }
+
+    #[test]
+    fn ring_is_bounded_but_count_is_not() {
+        let mut s = ServeStats::new();
+        for i in 0..(RING as u64 + 100) {
+            s.record("ping", i as f64);
+        }
+        let rows = s.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].1, RING as u64 + 100);
+    }
+}

@@ -16,10 +16,12 @@ pub mod logging;
 #[cfg(feature = "loom-model")]
 pub mod loom_model;
 pub mod rng;
+pub mod shutdown;
 pub mod threads;
 pub mod timer;
 
 pub use executor::{join, parallel_chunks, scoped_pool};
 pub use rng::Pcg64;
+pub use shutdown::ShutdownFlag;
 pub use threads::{num_threads, serial_below};
 pub use timer::{Stopwatch, format_duration};

@@ -1,0 +1,54 @@
+//! Cooperative shutdown signal for long-lived processes (`repro serve`).
+//!
+//! A [`ShutdownFlag`] is a cloneable latch: any holder may
+//! [`ShutdownFlag::request`] it, and loops that honor it finish their
+//! current unit of work, drain what they already accepted, and return —
+//! nothing is aborted mid-kernel. The executor needs no flag of its own:
+//! its scopes are synchronous (a `scoped_pool` call returns only after
+//! every job signed off, DESIGN.md §11), so "drain the executor" is
+//! simply "return from the jobs you already submitted", which the serve
+//! loop does by finishing its final tick before exiting (DESIGN.md §15).
+//!
+//! The latch is one `AtomicBool`; `Relaxed` ordering suffices because
+//! the flag carries no data — every consumer re-checks it at a loop
+//! boundary and the transition is one-way.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A one-way, cloneable "please stop" latch.
+#[derive(Debug, Clone, Default)]
+pub struct ShutdownFlag(Arc<AtomicBool>);
+
+impl ShutdownFlag {
+    /// A fresh latch in the running state.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Trip the latch (idempotent).
+    pub fn request(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// True once any holder has requested shutdown.
+    pub fn is_requested(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_latch() {
+        let a = ShutdownFlag::new();
+        let b = a.clone();
+        assert!(!a.is_requested());
+        b.request();
+        assert!(a.is_requested());
+        b.request(); // idempotent
+        assert!(b.is_requested());
+    }
+}

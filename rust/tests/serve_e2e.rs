@@ -1,0 +1,435 @@
+//! End-to-end serving suite (ISSUE 9 / DESIGN.md §15): the daemon runs
+//! in-process on an ephemeral port and the test interleaves client I/O
+//! with explicit `Server::tick` calls, so client and daemon share one
+//! thread and the schedule is deterministic at any `MTFL_THREADS`.
+//!
+//! Contracts pinned here:
+//! * `predict` replies are **bit-identical** to the offline pipeline
+//!   (`run_path` observer `W` + `ops::forward`) on the same dataset/λ —
+//!   including the JSON round trip.
+//! * four pipelined clients get the same bits as the same requests
+//!   issued serially (the executor batch is order-stable).
+//! * a warm-started `fit` matches a cold solve within the documented
+//!   tolerance: both carry duality-gap certificates, so the two
+//!   objectives differ by at most `gap_warm + gap_cold` (plus f64 noise).
+//! * fault injection: malformed JSON, truncated frames, oversized
+//!   frames, unfitted-λ requests — all are error *replies* (or clean
+//!   connection drops), never panics, and the daemon keeps serving.
+//! * shutdown drains: a predict pipelined ahead of `shutdown` on the
+//!   same connection is answered before the daemon stops, and
+//!   `Server::run` returns `Ok`.
+//!
+//! Problem sizes route through `testing::scale` so cfg(miri)/cfg(loom)
+//! runs shrink them without changing the contracts.
+
+use mtfl_dpc::coordinator::path::{
+    run_path_with, EngineKind, FnObserver, LambdaRecord, ScreenerKind,
+};
+use mtfl_dpc::experiments::{build_by_name, exp_opts, Scale};
+use mtfl_dpc::ops;
+use mtfl_dpc::serve::json::{self, Value};
+use mtfl_dpc::serve::proto::{self, FrameDecoder};
+use mtfl_dpc::serve::{Server, ServerOptions};
+use mtfl_dpc::solver::fista;
+use mtfl_dpc::testing::scale;
+use mtfl_dpc::Dataset;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+const MAX_FRAME: usize = 1 << 20;
+const TICK_BUDGET: usize = 50_000;
+
+fn dataset() -> Dataset {
+    build_by_name("synth1", scale::d(60), Scale::Quick, 7).unwrap()
+}
+
+fn server(ds: Dataset, prefit: bool) -> Server {
+    let opts = ServerOptions {
+        path: exp_opts(scale::grid(8), ScreenerKind::Dpc),
+        prefit,
+        max_frame: MAX_FRAME,
+    };
+    Server::bind("127.0.0.1:0", ds, opts).unwrap()
+}
+
+/// A nonblocking test client owning its half of the framed stream.
+struct Client {
+    stream: TcpStream,
+    dec: FrameDecoder,
+}
+
+impl Client {
+    fn connect(srv: &Server) -> Client {
+        let addr = srv.local_addr().unwrap();
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nonblocking(true).unwrap();
+        Client { stream, dec: FrameDecoder::new() }
+    }
+
+    /// Queue one request frame (ticking the server if the write blocks).
+    fn send(&mut self, srv: &mut Server, req: &Value) {
+        let mut bytes = Vec::new();
+        proto::encode_frame(req.to_json().as_bytes(), &mut bytes);
+        self.send_raw(srv, &bytes);
+    }
+
+    fn send_raw(&mut self, srv: &mut Server, bytes: &[u8]) {
+        let mut pos = 0;
+        while pos < bytes.len() {
+            match self.stream.write(&bytes[pos..]) {
+                Ok(n) => pos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    srv.tick().unwrap();
+                }
+                Err(e) => panic!("client write: {e}"),
+            }
+        }
+    }
+
+    /// Tick the server until one reply frame decodes.
+    fn recv(&mut self, srv: &mut Server) -> Value {
+        for _ in 0..TICK_BUDGET {
+            srv.tick().unwrap();
+            self.pump_reads();
+            if let Some(p) = self.dec.next(MAX_FRAME).unwrap() {
+                return json::parse(std::str::from_utf8(&p).unwrap()).unwrap();
+            }
+        }
+        panic!("no reply within {TICK_BUDGET} ticks");
+    }
+
+    /// Read without expecting a frame; true once the server closed.
+    fn saw_eof(&mut self, srv: &mut Server) -> bool {
+        for _ in 0..200 {
+            srv.tick().unwrap();
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => return true,
+                Ok(n) => self.dec.extend(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(_) => return true,
+            }
+        }
+        false
+    }
+
+    fn pump_reads(&mut self) {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => self.dec.extend(&buf[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => panic!("client read: {e}"),
+            }
+        }
+    }
+
+    fn call(&mut self, srv: &mut Server, req: &Value) -> Value {
+        self.send(srv, req);
+        self.recv(srv)
+    }
+}
+
+fn op(name: &str) -> Value {
+    Value::Obj(vec![("op".into(), Value::Str(name.into()))])
+}
+
+fn predict_req(ratio: f64, rows: &[Vec<f32>]) -> Value {
+    let rows = rows
+        .iter()
+        .map(|r| Value::Arr(r.iter().map(|&x| Value::Num(x as f64)).collect()))
+        .collect();
+    Value::Obj(vec![
+        ("op".into(), Value::Str("predict".into())),
+        ("ratio".into(), Value::Num(ratio)),
+        ("rows".into(), Value::Arr(rows)),
+    ])
+}
+
+fn result_of(reply: &Value) -> &Value {
+    assert_eq!(reply.get("ok").and_then(Value::as_bool), Some(true), "{}", reply.to_json());
+    reply.get("result").unwrap()
+}
+
+fn error_of(reply: &Value) -> &str {
+    assert_eq!(reply.get("ok").and_then(Value::as_bool), Some(false), "{}", reply.to_json());
+    reply.get("error").and_then(Value::as_str).unwrap()
+}
+
+/// Row i of task t's design matrix, as the f32 vector a client would send.
+fn training_row(ds: &Dataset, t: usize, i: usize) -> Vec<f32> {
+    (0..ds.d).map(|l| ds.tasks[t].col(l).to_vec()[i]).collect()
+}
+
+/// Offline reference: the path's W at `ratio` + `ops::forward`.
+fn offline_model(ds: &Dataset, ratio: f64) -> Vec<f64> {
+    let opts = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let mut w_at = None;
+    let mut obs = FnObserver(|r: f64, _lam: f64, w: &[f64], _rec: &LambdaRecord| {
+        if r.to_bits() == ratio.to_bits() {
+            w_at = Some(w.to_vec());
+        }
+    });
+    run_path_with(ds, &opts, &EngineKind::Exact, &mut obs).unwrap();
+    w_at.expect("ratio is on the grid")
+}
+
+#[test]
+fn predict_is_bit_identical_to_offline_forward() {
+    let ds = dataset();
+    let opts = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let ratio = opts.ratios[opts.ratios.len() / 2];
+    let w = offline_model(&ds, ratio);
+    let z = ops::forward(&ds, &w);
+
+    let mut srv = server(ds.clone(), true);
+    let mut cl = Client::connect(&srv);
+    for t in 0..ds.t() {
+        let n = ds.tasks[t].n;
+        let rows: Vec<Vec<f32>> = (0..n.min(3)).map(|i| training_row(&ds, t, i)).collect();
+        let reply = cl.call(&mut srv, &predict_req(ratio, &rows));
+        let preds = result_of(&reply).as_arr().unwrap();
+        for (i, pred) in preds.iter().enumerate() {
+            let got = pred.as_arr().unwrap()[t].as_f64().unwrap();
+            assert_eq!(
+                got.to_bits(),
+                z[t][i].to_bits(),
+                "task {t} sample {i}: served {got:e} vs offline {:e}",
+                z[t][i]
+            );
+        }
+    }
+}
+
+#[test]
+fn four_pipelined_clients_match_serial_bits() {
+    let ds = dataset();
+    let opts = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let ratio = opts.ratios[opts.ratios.len() / 2];
+    let mut srv = server(ds.clone(), true);
+
+    let reqs: Vec<Value> = (0..4)
+        .map(|k| {
+            let rows: Vec<Vec<f32>> =
+                (0..2).map(|i| training_row(&ds, k % ds.t(), (i + k) % ds.tasks[0].n)).collect();
+            predict_req(ratio, &rows)
+        })
+        .collect();
+
+    // serial: one client, one request at a time
+    let mut serial = Vec::new();
+    {
+        let mut cl = Client::connect(&srv);
+        for r in &reqs {
+            serial.push(cl.call(&mut srv, r).to_json());
+        }
+    }
+
+    // concurrent: four clients, all requests on the wire before any tick
+    let mut clients: Vec<Client> = (0..4).map(|_| Client::connect(&srv)).collect();
+    for (cl, r) in clients.iter_mut().zip(&reqs) {
+        cl.send(&mut srv, r);
+    }
+    let concurrent: Vec<String> =
+        clients.iter_mut().map(|cl| cl.recv(&mut srv).to_json()).collect();
+
+    assert_eq!(serial, concurrent, "width-4 batch must reproduce serial bits");
+}
+
+#[test]
+fn warm_fit_matches_cold_solve_within_gap_tolerance() {
+    let ds = dataset();
+    let mut srv = server(ds.clone(), true);
+    let mut cl = Client::connect(&srv);
+
+    let info = cl.call(&mut srv, &op("info"));
+    let lam_max = result_of(&info).get("lam_max").unwrap().as_f64().unwrap();
+    let fitted = result_of(&info).get("fitted").unwrap().as_arr().unwrap().len();
+    assert!(fitted >= 2, "prefit should cache the grid");
+
+    // an off-grid ratio: warm-started on the daemon, cold offline
+    let grid = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let ratio = (grid.ratios[1] * grid.ratios[2]).sqrt();
+    let fit = cl.call(
+        &mut srv,
+        &Value::Obj(vec![
+            ("op".into(), Value::Str("fit".into())),
+            ("ratio".into(), Value::Num(ratio)),
+        ]),
+    );
+    let r = result_of(&fit);
+    assert_eq!(r.get("cached").unwrap().as_bool(), Some(false));
+    assert!(r.get("warm_from").unwrap().as_f64().is_some(), "must warm-start");
+    let obj_warm = r.get("obj").unwrap().as_f64().unwrap();
+    let gap_warm = r.get("gap").unwrap().as_f64().unwrap();
+
+    let cold = fista(&ds, ratio * lam_max, None, &grid.solve);
+    assert!(cold.converged);
+
+    // documented tolerance: each objective sits within its own duality
+    // gap of the shared optimum, so the difference is bounded by the sum
+    // of the two certificates (plus f64 noise)
+    let tol = gap_warm + cold.gap + 1e-9 * obj_warm.abs().max(1.0);
+    assert!(
+        (obj_warm - cold.obj).abs() <= tol,
+        "warm {obj_warm} vs cold {} exceeds gap tolerance {tol}",
+        cold.obj
+    );
+
+    // refitting the same ratio must come straight from the cache
+    let again = cl.call(
+        &mut srv,
+        &Value::Obj(vec![
+            ("op".into(), Value::Str("fit".into())),
+            ("ratio".into(), Value::Num(ratio)),
+        ]),
+    );
+    assert_eq!(result_of(&again).get("cached").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn malformed_frames_get_error_replies_not_panics() {
+    let ds = dataset();
+    let mut srv = server(ds, false);
+    let mut cl = Client::connect(&srv);
+
+    // not JSON at all
+    let mut bytes = Vec::new();
+    proto::encode_frame(b"this is not json", &mut bytes);
+    cl.send_raw(&mut srv, &bytes);
+    assert!(error_of(&cl.recv(&mut srv)).contains("bad json"));
+
+    // JSON but not a request
+    let mut bytes = Vec::new();
+    proto::encode_frame(b"[1,2,3]", &mut bytes);
+    cl.send_raw(&mut srv, &bytes);
+    assert!(error_of(&cl.recv(&mut srv)).contains("op"));
+
+    // unknown op
+    assert!(error_of(&cl.call(&mut srv, &op("frobnicate"))).contains("unknown op"));
+
+    // the connection survived all three
+    assert_eq!(result_of(&cl.call(&mut srv, &op("ping"))).as_str(), Some("pong"));
+}
+
+#[test]
+fn truncated_frame_then_hangup_is_a_clean_drop() {
+    let ds = dataset();
+    let mut srv = server(ds, false);
+
+    let mut cl = Client::connect(&srv);
+    // header promises 100 bytes; send 10 and hang up
+    let mut partial = (100u32).to_be_bytes().to_vec();
+    partial.extend_from_slice(b"0123456789");
+    cl.send_raw(&mut srv, &partial);
+    for _ in 0..20 {
+        srv.tick().unwrap();
+    }
+    drop(cl);
+    for _ in 0..200 {
+        srv.tick().unwrap();
+    }
+
+    // the daemon is unbothered
+    let mut probe = Client::connect(&srv);
+    assert_eq!(result_of(&probe.call(&mut srv, &op("ping"))).as_str(), Some("pong"));
+}
+
+#[test]
+fn oversized_frame_is_rejected_actionably_and_closed() {
+    let ds = dataset();
+    let mut srv = server(ds, false);
+    let mut cl = Client::connect(&srv);
+
+    // header declares 2x the cap; no payload needed to trigger
+    cl.send_raw(&mut srv, &((2 * MAX_FRAME) as u32).to_be_bytes());
+    let err = error_of(&cl.recv(&mut srv)).to_string();
+    assert!(err.contains("exceeds"), "{err}");
+    assert!(err.contains("--max-frame-mb"), "actionable cure: {err}");
+    assert!(cl.saw_eof(&mut srv), "poisoned framing must close the connection");
+
+    let mut probe = Client::connect(&srv);
+    assert_eq!(result_of(&probe.call(&mut srv, &op("ping"))).as_str(), Some("pong"));
+}
+
+#[test]
+fn unfitted_ratio_names_the_fitted_grid() {
+    let ds = dataset();
+    let mut srv = server(ds.clone(), true);
+    let mut cl = Client::connect(&srv);
+
+    let rows = vec![vec![0.0f32; ds.d]];
+    let err = error_of(&cl.call(&mut srv, &predict_req(0.123456789, &rows))).to_string();
+    assert!(err.contains("no fitted model at ratio 0.123456789"), "{err}");
+    assert!(err.contains("fitted ratios"), "{err}");
+    assert!(err.contains("\"op\":\"fit\""), "cure must name the fit op: {err}");
+
+    // wrong row width is caught before the batch
+    let bad = vec![vec![0.0f32; ds.d + 1]];
+    let grid = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let err = error_of(&cl.call(&mut srv, &predict_req(grid.ratios[1], &bad))).to_string();
+    assert!(err.contains(&format!("expects d={}", ds.d)), "{err}");
+}
+
+#[test]
+fn shutdown_drains_pipelined_work_and_run_returns_ok() {
+    let ds = dataset();
+    let opts = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let ratio = opts.ratios[1];
+    let mut srv = server(ds.clone(), true);
+    let mut cl = Client::connect(&srv);
+
+    // predict + shutdown pipelined in one write: the daemon must answer
+    // the predict (in order) before stopping
+    let rows = vec![training_row(&ds, 0, 0)];
+    let mut bytes = Vec::new();
+    proto::encode_frame(predict_req(ratio, &rows).to_json().as_bytes(), &mut bytes);
+    proto::encode_frame(op("shutdown").to_json().as_bytes(), &mut bytes);
+    cl.send_raw(&mut srv, &bytes);
+
+    // run() owns the loop from here: process both frames, drain, return
+    srv.run().unwrap();
+
+    cl.pump_reads();
+    let first = json::parse(
+        std::str::from_utf8(&cl.dec.next(MAX_FRAME).unwrap().unwrap()).unwrap(),
+    )
+    .unwrap();
+    let preds = result_of(&first).as_arr().unwrap();
+    assert_eq!(preds.len(), 1, "the in-flight predict was answered");
+    let second = json::parse(
+        std::str::from_utf8(&cl.dec.next(MAX_FRAME).unwrap().unwrap()).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(
+        result_of(&second).get("stopping").unwrap().as_bool(),
+        Some(true),
+        "shutdown ack follows the drained predict"
+    );
+}
+
+#[test]
+fn stats_reports_endpoints_cache_and_executor() {
+    let ds = dataset();
+    let opts = exp_opts(scale::grid(8), ScreenerKind::Dpc);
+    let ratio = opts.ratios[1];
+    let mut srv = server(ds.clone(), true);
+    let mut cl = Client::connect(&srv);
+
+    let rows = vec![training_row(&ds, 0, 0)];
+    cl.call(&mut srv, &predict_req(ratio, &rows));
+    cl.call(&mut srv, &predict_req(0.987654, &rows)); // a miss
+    let stats = cl.call(&mut srv, &op("stats"));
+    let r = result_of(&stats);
+    assert!(r.get("cache_hits").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(r.get("cache_misses").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(r.get("executor_peak_active").is_some());
+    let eps = r.get("endpoints").unwrap().as_arr().unwrap();
+    let predict_row = eps
+        .iter()
+        .find(|e| e.get("op").and_then(Value::as_str) == Some("predict"))
+        .expect("predict endpoint row");
+    assert!(predict_row.get("p99_ms").unwrap().as_f64().unwrap() >= 0.0);
+}

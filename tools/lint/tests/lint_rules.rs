@@ -81,6 +81,45 @@ fn penalty_module_is_library_scope_for_every_rule() {
 }
 
 #[test]
+fn serve_module_is_library_scope_for_every_rule() {
+    // the serving layer (rust/src/serve/, PR 9) is long-lived daemon code
+    // whose predict path feeds the bit-parity contract: all five rules
+    // must treat it exactly like ops.rs. The nondeterminism check is the
+    // load-bearing one — a daemon is where ad-hoc `Instant` reads would
+    // creep in, and every wall-clock read must route through Stopwatch.
+    let files = ["mod.rs", "json.rs", "proto.rs", "cache.rs", "stats.rs", "server.rs", "load.rs"];
+    for rel in files
+        .iter()
+        .map(|name| format!("rust/src/serve/{name}"))
+        .chain(std::iter::once("rust/src/util/shutdown.rs".to_string()))
+    {
+        let r = lint_source(&rel, &fixture("bad_reduction.rs"));
+        assert!(
+            fired(&r).iter().all(|(_, rule)| rule == "kernel-reduction") && r.diags.len() == 2,
+            "{rel} must be kernel-reduction scope: {:#?}",
+            r.diags
+        );
+        let r = lint_source(&rel, &fixture("bad_fma.rs"));
+        assert_eq!(r.diags.len(), 2, "{rel} must be no-fma scope: {:#?}", r.diags);
+        let r = lint_source(&rel, &fixture("bad_unsafe.rs"));
+        assert_eq!(
+            fired(&r),
+            vec![(4, "confined-unsafe".to_string())],
+            "{rel} must not join the unsafe allowlist: {:#?}",
+            r.diags
+        );
+        let r = lint_source(&rel, &fixture("bad_spawn.rs"));
+        assert_eq!(r.diags.len(), 2, "{rel} must be no-spawn scope: {:#?}", r.diags);
+        let r = lint_source(&rel, &fixture("bad_nondet.rs"));
+        assert!(
+            fired(&r).iter().all(|(_, rule)| rule == "nondeterminism") && r.diags.len() == 3,
+            "{rel} must not join the timing allowlist: {:#?}",
+            r.diags
+        );
+    }
+}
+
+#[test]
 fn no_spawn_fires_on_spawn_and_scope() {
     let r = lint_source("rust/src/coordinator/cv.rs", &fixture("bad_spawn.rs"));
     assert_eq!(
