@@ -1,0 +1,204 @@
+//! Distributed shard-sweep bench (DESIGN.md §16): the same λ-path run
+//! single-process (`run_path_sharded`) and distributed across 1/2/4
+//! worker processes, recording sweep throughput (block-sweeps per
+//! second), the reply bytes shipped over the wire, and each worker's
+//! disk I/O and busy time — plus a bitwise-parity check against the
+//! single-process run at every width. Results land in
+//! `BENCH_distrib.json` at the repo root.
+//!
+//!     cargo bench --bench distrib
+//!
+//! Workers are spawned here as real `repro worker` subprocesses (the
+//! library's `spawn_local` re-executes the *current* binary, which for a
+//! bench target is the bench itself, not `repro`), connecting to a
+//! bind-and-drop free port — `run_worker`'s connect-retry window makes
+//! the start order irrelevant.
+
+use mtfl_dpc::coordinator::path::{
+    run_path_sharded, FnObserver, LambdaRecord, PathOptions, ScreenerKind, ShardRunResult,
+};
+use mtfl_dpc::coordinator::{lambda_grid, run_path_distributed, DistribOptions};
+use mtfl_dpc::data::io::save_sharded;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::ShardedDataset;
+use mtfl_dpc::solver::SolveOptions;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+/// Bind-and-drop a localhost listener to reserve a fresh port; workers
+/// retry the connect, so the coordinator re-binding it later is safe.
+fn free_addr() -> anyhow::Result<String> {
+    let l = TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?.to_string())
+}
+
+fn spawn_worker(addr: &str) -> anyhow::Result<Child> {
+    Ok(Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["worker", "--connect", addr, "--cache-mb", "64"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()?)
+}
+
+fn run_distributed(
+    sh: &ShardedDataset,
+    shard_path: &Path,
+    opts: &PathOptions,
+    n: usize,
+) -> anyhow::Result<ShardRunResult> {
+    let addr = free_addr()?;
+    let mut children: Vec<Child> = Vec::new();
+    for _ in 0..n {
+        children.push(spawn_worker(&addr)?);
+    }
+    let dopts = DistribOptions {
+        workers: n,
+        listen: addr,
+        spawn_local: false,
+        worker_timeout_secs: 60.0,
+        cache_mb: 64,
+    };
+    let mut noop = FnObserver(|_: f64, _: f64, _: &[f64], _: &LambdaRecord| {});
+    let res = run_path_distributed(sh, shard_path, opts, &dopts, &mut noop, None);
+    match res {
+        Ok(r) => {
+            // the coordinator already sent shutdown; reap the exits
+            for mut c in children {
+                c.wait().ok();
+            }
+            Ok(r)
+        }
+        Err(e) => {
+            for mut c in children {
+                c.kill().ok();
+                c.wait().ok();
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Bit-level parity with the single-process sharded run: λ_max, the
+/// final solution, and every grid point's kept count, objective, and gap.
+fn bitwise_match(a: &ShardRunResult, b: &ShardRunResult) -> bool {
+    a.path.lam_max.to_bits() == b.path.lam_max.to_bits()
+        && a.path.last_w.len() == b.path.last_w.len()
+        && a.path
+            .last_w
+            .iter()
+            .zip(&b.path.last_w)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.path.records.len() == b.path.records.len()
+        && a.path.records.iter().zip(&b.path.records).all(|(r, s)| {
+            r.kept == s.kept
+                && r.obj.to_bits() == s.obj.to_bits()
+                && r.gap.to_bits() == s.gap.to_bits()
+        })
+}
+
+fn main() -> anyhow::Result<()> {
+    let (t, n, d) = (4usize, 16usize, 2000usize);
+    let (ds, _) = synthetic1(&SynthOptions {
+        t,
+        n,
+        d,
+        support_frac: 0.05,
+        noise: 0.05,
+        seed: 42,
+    });
+    let opts = PathOptions {
+        ratios: lambda_grid(12, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-6, ..Default::default() },
+        screener: ScreenerKind::Dpc,
+        ..Default::default()
+    };
+
+    let shard_path = std::env::temp_dir()
+        .join(format!("mtfl_bench_distrib_{}.mtd3", std::process::id()));
+    let summary = save_sharded(&ds, &shard_path, 64 << 10)?;
+    let sh = ShardedDataset::open(&shard_path)?;
+
+    println!(
+        "== distributed shard sweeps: 1/2/4 workers vs single-process \
+         (T={t}, N={n}, d={d}, {} blocks) ==\n",
+        summary.blocks
+    );
+    let single = run_path_sharded(&sh, &opts)?;
+    println!(
+        "single    total {:>7.2}s  screen {:>6.2}s  {:.2} MiB read over {} block loads",
+        single.path.total_secs,
+        single.path.screen_secs,
+        single.bytes_read as f64 / (1024.0 * 1024.0),
+        single.blocks_loaded
+    );
+
+    let mut run_rows: Vec<String> = Vec::new();
+    for &w in &[1usize, 2, 4] {
+        let res = run_distributed(&sh, &shard_path, &opts, w)?;
+        let ok = bitwise_match(&res, &single);
+        anyhow::ensure!(ok, "distributed run at {w} workers diverged from single-process");
+        let blocks_swept: u64 =
+            res.workers.iter().map(|l| l.sweeps * l.blocks as u64).sum();
+        let bytes_shipped: u64 = res.workers.iter().map(|l| l.bytes_shipped).sum();
+        let bytes_read: u64 = res.workers.iter().map(|l| l.bytes_read).sum();
+        let blocks_loaded: u64 = res.workers.iter().map(|l| l.blocks_loaded).sum();
+        let blocks_per_sec = blocks_swept as f64 / res.path.total_secs.max(1e-9);
+        println!(
+            "{w} worker{}  total {:>7.2}s  {:>8.0} block-sweeps/s  \
+             {:.2} MiB shipped  {:.2} MiB read  bitwise match: {ok}",
+            if w == 1 { " " } else { "s" },
+            res.path.total_secs,
+            blocks_per_sec,
+            bytes_shipped as f64 / (1024.0 * 1024.0),
+            bytes_read as f64 / (1024.0 * 1024.0),
+        );
+        let per_worker: Vec<String> = res
+            .workers
+            .iter()
+            .map(|l| {
+                format!(
+                    "        {{\"blocks\": {}, \"sweeps\": {}, \"bytes_shipped\": {}, \
+                     \"bytes_read\": {}, \"blocks_loaded\": {}, \"busy_secs\": {:.4}}}",
+                    l.blocks, l.sweeps, l.bytes_shipped, l.bytes_read, l.blocks_loaded,
+                    l.busy_secs
+                )
+            })
+            .collect();
+        run_rows.push(format!(
+            "    {{\"workers\": {w}, \"total_secs\": {:.3}, \"screen_secs\": {:.3}, \
+             \"blocks_swept\": {blocks_swept}, \"blocks_per_sec\": {blocks_per_sec:.1}, \
+             \"bytes_shipped\": {bytes_shipped}, \"bytes_read\": {bytes_read}, \
+             \"blocks_loaded\": {blocks_loaded}, \"bitwise_match\": {ok}, \
+             \"per_worker\": [\n{}\n    ]}}",
+            res.path.total_secs,
+            res.path.screen_secs,
+            per_worker.join(",\n")
+        ));
+    }
+    std::fs::remove_file(&shard_path).ok();
+
+    let json = format!(
+        "{{\n  \"bench\": \"distrib\",\n  \"generated_by\": \
+         \"cargo bench --bench distrib\",\n  \"provisional\": false,\n  \
+         \"shape\": {{\"t\": {t}, \"n\": {n}, \"d\": {d}}},\n  \
+         \"shard\": {{\"block_cols\": {}, \"blocks\": {}}},\n  \
+         \"single\": {{\"total_secs\": {:.3}, \"screen_secs\": {:.3}, \
+         \"bytes_read\": {}, \"blocks_loaded\": {}}},\n  \
+         \"runs\": [\n{}\n  ]\n}}\n",
+        summary.block_cols,
+        summary.blocks,
+        single.path.total_secs,
+        single.path.screen_secs,
+        single.bytes_read,
+        single.blocks_loaded,
+        run_rows.join(",\n")
+    );
+    let out_path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_distrib.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_distrib.json"));
+    std::fs::write(&out_path, &json)?;
+    println!("\nwrote {}", out_path.display());
+    Ok(())
+}

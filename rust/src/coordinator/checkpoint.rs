@@ -1,0 +1,529 @@
+//! Per-λ checkpoint/resume for the out-of-core path runner (DESIGN.md
+//! §16). After every grid point the sharded path core persists one MTC1
+//! record (`ckpt_<step>.mtc1`, written atomically via
+//! [`crate::data::io::write_record_atomic`]) carrying everything the
+//! next step reads: the per-λ records so far, the sequential dual
+//! reference, the warm start, and the streamed-gap state. `--resume`
+//! loads the newest valid record, verifies it against the current run
+//! configuration through a **prefix grid digest**, and re-enters the
+//! grid loop at the next step.
+//!
+//! The resumed path is bit-identical to an uninterrupted run because
+//! every input the loop reads at step k+1 is restored exactly — and
+//! because checkpointed runs never skip the final reference update (the
+//! single-process fast path does, since nothing reads the reference
+//! after the last grid point; a checkpoint *is* a reader).
+//!
+//! The digest is a prefix digest on purpose: it binds the shard identity
+//! (name/d/t), penalty, screener, solver, λ_max bits, and the bits of
+//! every grid ratio **up to and including the checkpointed step** — so a
+//! run over the first k points of a grid checkpoints identically to an
+//! interrupted full-grid run, and resuming the longer grid from the
+//! shorter prefix is legitimate, while any drift in what the restored
+//! state actually depends on is refused.
+
+use super::path::LambdaRecord;
+use crate::data::io::{read_record, write_record_atomic, Fnv64};
+use crate::ops::Stacked;
+use crate::screening::dpc::DualRef;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Magic of one checkpoint record.
+pub(crate) const MAGIC_CKPT: &[u8; 4] = b"MTC1";
+
+/// Where checkpoints go and whether to resume from them (`repro path
+/// --checkpoint DIR [--resume]`).
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// directory holding `ckpt_<step>.mtc1` records (created on demand)
+    pub dir: PathBuf,
+    /// load the newest valid record and continue from the next grid step
+    pub resume: bool,
+}
+
+/// Everything the grid loop reads at step k+1, persisted after step k.
+#[derive(Debug, Clone)]
+pub struct PathCheckpoint {
+    /// last completed grid step (0-based)
+    pub step: usize,
+    /// λ_max the run screened against (bit-compared on resume)
+    pub lam_max: f64,
+    /// per-λ records for steps `0..=step`
+    pub records: Vec<LambdaRecord>,
+    /// per-λ materialized-bytes ledger for steps `0..=step`
+    pub materialized_bytes: Vec<usize>,
+    /// sequential DPC reference after this step (ℓ2,1 screeners only)
+    pub dref: Option<DualRef>,
+    /// full-size warm start W (d × T, row-major)
+    pub prev_w: Vec<f64>,
+    /// residual of `prev_w` (the streamed-gap state)
+    pub prev_r: Stacked,
+    /// penalty value Ω(`prev_w`)
+    pub prev_penval: f64,
+}
+
+/// The prefix grid digest (module docs): fnv64 over the run
+/// configuration and `ratios[0..=step]`. `ratios_prefix` must be exactly
+/// that inclusive prefix.
+#[allow(clippy::too_many_arguments)]
+pub fn grid_digest(
+    name: &str,
+    d: usize,
+    t: usize,
+    penalty: &str,
+    screener: &str,
+    solver: &str,
+    lam_max: f64,
+    ratios_prefix: &[f64],
+) -> u64 {
+    let mut h = Fnv64::new();
+    for s in [name, penalty, screener, solver] {
+        h.update(&(s.len() as u64).to_le_bytes());
+        h.update(s.as_bytes());
+    }
+    h.update(&(d as u64).to_le_bytes());
+    h.update(&(t as u64).to_le_bytes());
+    h.update(&lam_max.to_bits().to_le_bytes());
+    for &r in ratios_prefix {
+        h.update(&r.to_bits().to_le_bytes());
+    }
+    h.digest()
+}
+
+/// Path of the step-`step` record inside `dir`.
+pub fn step_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("ckpt_{step}.mtc1"))
+}
+
+// -- binary layout helpers (LE throughout, like every repo format) --
+
+fn push_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_str(b: &mut Vec<u8>, s: &str) {
+    push_u64(b, s.len() as u64);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn push_f64s(b: &mut Vec<u8>, v: &[f64]) {
+    push_u64(b, v.len() as u64);
+    for &x in v {
+        push_f64(b, x);
+    }
+}
+
+fn push_stacked(b: &mut Vec<u8>, s: &Stacked) {
+    push_u64(b, s.len() as u64);
+    for task in s {
+        push_f64s(b, task);
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.b.len(),
+            "checkpoint payload truncated at byte {} (want {n} more of {})",
+            self.pos,
+            self.b.len()
+        );
+        let out = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn us(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.us()?;
+        String::from_utf8(self.take(n)?.to_vec()).context("checkpoint string not utf8")
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.us()?;
+        let bytes = self.take(n.checked_mul(8).context("checkpoint vector overflows")?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn stacked(&mut self) -> Result<Stacked> {
+        let t = self.us()?;
+        anyhow::ensure!(t <= 100_000, "checkpoint stacked vector has {t} tasks");
+        (0..t).map(|_| self.f64s()).collect()
+    }
+
+    fn done(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.b.len(),
+            "checkpoint payload has {} trailing bytes",
+            self.b.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+fn encode(ck: &PathCheckpoint, digest: u64, name: &str, d: usize, t: usize) -> Vec<u8> {
+    let mut b = Vec::new();
+    push_str(&mut b, name);
+    push_u64(&mut b, d as u64);
+    push_u64(&mut b, t as u64);
+    push_u64(&mut b, ck.step as u64);
+    push_u64(&mut b, digest);
+    push_f64(&mut b, ck.lam_max);
+    push_u64(&mut b, ck.records.len() as u64);
+    for r in &ck.records {
+        push_f64(&mut b, r.ratio);
+        push_f64(&mut b, r.lam);
+        push_u64(&mut b, r.rejected as u64);
+        push_u64(&mut b, r.kept as u64);
+        push_u64(&mut b, r.inactive as u64);
+        push_f64(&mut b, r.rejection_ratio);
+        push_f64(&mut b, r.screen_secs);
+        push_f64(&mut b, r.solve_secs);
+        push_u64(&mut b, r.solver_iters as u64);
+        push_u64(&mut b, r.col_ops as u64);
+        push_f64(&mut b, r.obj);
+        push_f64(&mut b, r.gap);
+    }
+    push_u64(&mut b, ck.materialized_bytes.len() as u64);
+    for &m in &ck.materialized_bytes {
+        push_u64(&mut b, m as u64);
+    }
+    match &ck.dref {
+        None => b.push(0),
+        Some(dr) => {
+            b.push(1);
+            push_f64(&mut b, dr.lam0);
+            push_f64(&mut b, dr.eps);
+            push_stacked(&mut b, &dr.theta0);
+            push_stacked(&mut b, &dr.normal);
+        }
+    }
+    push_f64s(&mut b, &ck.prev_w);
+    push_stacked(&mut b, &ck.prev_r);
+    push_f64(&mut b, ck.prev_penval);
+    b
+}
+
+fn decode(payload: &[u8]) -> Result<(PathCheckpoint, u64, String, usize, usize)> {
+    let mut c = Dec { b: payload, pos: 0 };
+    let name = c.str()?;
+    let d = c.us()?;
+    let t = c.us()?;
+    let step = c.us()?;
+    let digest = c.u64()?;
+    let lam_max = c.f64()?;
+    let n_rec = c.us()?;
+    anyhow::ensure!(n_rec <= 1_000_000, "checkpoint claims {n_rec} records");
+    let mut records = Vec::with_capacity(n_rec);
+    for _ in 0..n_rec {
+        records.push(LambdaRecord {
+            ratio: c.f64()?,
+            lam: c.f64()?,
+            rejected: c.us()?,
+            kept: c.us()?,
+            inactive: c.us()?,
+            rejection_ratio: c.f64()?,
+            screen_secs: c.f64()?,
+            solve_secs: c.f64()?,
+            solver_iters: c.us()?,
+            col_ops: c.us()?,
+            obj: c.f64()?,
+            gap: c.f64()?,
+        });
+    }
+    let n_mat = c.us()?;
+    anyhow::ensure!(n_mat <= 1_000_000, "checkpoint claims {n_mat} ledger rows");
+    let materialized_bytes = (0..n_mat).map(|_| c.us()).collect::<Result<Vec<_>>>()?;
+    let dref = match c.take(1)?[0] {
+        0 => None,
+        1 => {
+            let lam0 = c.f64()?;
+            let eps = c.f64()?;
+            let theta0 = c.stacked()?;
+            let normal = c.stacked()?;
+            Some(DualRef { lam0, theta0, normal, eps })
+        }
+        other => anyhow::bail!("unknown dual-reference tag {other}"),
+    };
+    let prev_w = c.f64s()?;
+    let prev_r = c.stacked()?;
+    let prev_penval = c.f64()?;
+    c.done()?;
+    let ck = PathCheckpoint {
+        step,
+        lam_max,
+        records,
+        materialized_bytes,
+        dref,
+        prev_w,
+        prev_r,
+        prev_penval,
+    };
+    Ok((ck, digest, name, d, t))
+}
+
+/// Persist the step-`ck.step` record into `dir` (created on demand),
+/// atomically — a crash mid-save leaves the previous step's record as
+/// the newest valid one, never a torn file.
+pub fn save(
+    dir: &Path,
+    ck: &PathCheckpoint,
+    digest: u64,
+    name: &str,
+    d: usize,
+    t: usize,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("--checkpoint {}: cannot create directory", dir.display()))?;
+    let payload = encode(ck, digest, name, d, t);
+    write_record_atomic(&step_path(dir, ck.step), MAGIC_CKPT, &payload)
+        .with_context(|| format!("--checkpoint {}: cannot save step {}", dir.display(), ck.step))
+}
+
+/// Load the newest checkpoint in `dir`, validating shard identity.
+/// Returns `None` when the directory holds no checkpoints (a fresh
+/// `--resume` run simply starts at the grid head). A present-but-invalid
+/// newest record — truncated, bit-flipped, or written against a
+/// different shard — is a hard error naming `--checkpoint`: resuming is
+/// an explicit request, and silently restarting would discard work (or
+/// worse, mix states).
+pub fn load_latest(
+    dir: &Path,
+    name: &str,
+    d: usize,
+    t: usize,
+) -> Result<Option<(PathCheckpoint, u64)>> {
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let mut newest: Option<(usize, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("--checkpoint {}: cannot list directory", dir.display()))?
+    {
+        let path = entry?.path();
+        let fname = match path.file_name().and_then(|s| s.to_str()) {
+            Some(f) => f,
+            None => continue,
+        };
+        let step = match fname
+            .strip_prefix("ckpt_")
+            .and_then(|s| s.strip_suffix(".mtc1"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            Some(s) => s,
+            None => continue,
+        };
+        let replace = match &newest {
+            None => true,
+            Some((s, _)) => step > *s,
+        };
+        if replace {
+            newest = Some((step, path));
+        }
+    }
+    let (step, path) = match newest {
+        Some(n) => n,
+        None => return Ok(None),
+    };
+    let payload = read_record(&path, MAGIC_CKPT).with_context(|| {
+        format!(
+            "--checkpoint {}: cannot resume from {} — delete the corrupt record \
+             (older steps remain usable) or restart without --resume",
+            dir.display(),
+            path.display()
+        )
+    })?;
+    let (ck, digest, ck_name, ck_d, ck_t) = decode(&payload)
+        .with_context(|| format!("--checkpoint {}: malformed record {}", dir.display(), path.display()))?;
+    anyhow::ensure!(
+        ck.step == step,
+        "--checkpoint {}: record {} claims step {} but is named step {step}",
+        dir.display(),
+        path.display(),
+        ck.step
+    );
+    anyhow::ensure!(
+        ck_name == name && ck_d == d && ck_t == t,
+        "--checkpoint {}: record {} was written for dataset '{ck_name}' \
+         (d={ck_d}, T={ck_t}), not '{name}' (d={d}, T={t})",
+        dir.display(),
+        path.display()
+    );
+    anyhow::ensure!(
+        ck.records.len() == ck.step + 1 && ck.materialized_bytes.len() == ck.step + 1,
+        "--checkpoint {}: record {} carries {} records for step {}",
+        dir.display(),
+        path.display(),
+        ck.records.len(),
+        ck.step
+    );
+    Ok(Some((ck, digest)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("mtfl_ckpt_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn rec(ratio: f64) -> LambdaRecord {
+        LambdaRecord {
+            ratio,
+            lam: ratio * 2.5,
+            rejected: 7,
+            kept: 3,
+            inactive: 8,
+            rejection_ratio: 7.0 / 8.0,
+            screen_secs: 0.25,
+            solve_secs: 0.5,
+            solver_iters: 12,
+            col_ops: 99,
+            obj: 1.5,
+            gap: 1e-9,
+        }
+    }
+
+    fn ckpt(step: usize) -> PathCheckpoint {
+        PathCheckpoint {
+            step,
+            lam_max: 2.5,
+            records: (0..=step).map(|s| rec(1.0 - 0.1 * s as f64)).collect(),
+            materialized_bytes: (0..=step).map(|s| 1000 + s).collect(),
+            dref: Some(DualRef {
+                lam0: 2.5,
+                theta0: vec![vec![0.5, -0.25], vec![0.125]],
+                normal: vec![vec![1.0, 2.0], vec![-3.0]],
+                eps: 1e-6,
+            }),
+            prev_w: vec![0.0, 1.0, -2.0, 0.5],
+            prev_r: vec![vec![0.1, 0.2], vec![-0.3]],
+            prev_penval: 3.75,
+        }
+    }
+
+    #[test]
+    fn round_trip_restores_every_field_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let ck = ckpt(2);
+        save(&dir, &ck, 0xdead_beef, "ds", 2, 2).unwrap();
+        let (back, digest) = load_latest(&dir, "ds", 2, 2).unwrap().unwrap();
+        assert_eq!(digest, 0xdead_beef);
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.lam_max.to_bits(), ck.lam_max.to_bits());
+        assert_eq!(back.records.len(), ck.records.len());
+        for (a, b) in back.records.iter().zip(&ck.records) {
+            assert_eq!(a.ratio.to_bits(), b.ratio.to_bits());
+            assert_eq!(a.lam.to_bits(), b.lam.to_bits());
+            assert_eq!((a.rejected, a.kept, a.inactive), (b.rejected, b.kept, b.inactive));
+            assert_eq!(a.obj.to_bits(), b.obj.to_bits());
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        }
+        assert_eq!(back.materialized_bytes, ck.materialized_bytes);
+        let (da, db) = (back.dref.unwrap(), ck.dref.unwrap());
+        assert_eq!(da.lam0.to_bits(), db.lam0.to_bits());
+        assert_eq!(da.eps.to_bits(), db.eps.to_bits());
+        assert_eq!(da.theta0, db.theta0);
+        assert_eq!(da.normal, db.normal);
+        assert_eq!(back.prev_w, ck.prev_w);
+        assert_eq!(back.prev_r, ck.prev_r);
+        assert_eq!(back.prev_penval.to_bits(), ck.prev_penval.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_wins_and_a_missing_dref_survives() {
+        let dir = tmpdir("latest");
+        let mut ck0 = ckpt(0);
+        ck0.dref = None;
+        save(&dir, &ck0, 1, "ds", 2, 2).unwrap();
+        save(&dir, &ckpt(1), 2, "ds", 2, 2).unwrap();
+        let (back, digest) = load_latest(&dir, "ds", 2, 2).unwrap().unwrap();
+        assert_eq!((back.step, digest), (1, 2));
+        std::fs::remove_file(step_path(&dir, 1)).unwrap();
+        let (back, _) = load_latest(&dir, "ds", 2, 2).unwrap().unwrap();
+        assert_eq!(back.step, 0);
+        assert!(back.dref.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_or_absent_dir_resumes_fresh() {
+        let dir = tmpdir("empty");
+        assert!(load_latest(&dir, "ds", 2, 2).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(load_latest(&dir, "ds", 2, 2).unwrap().is_none());
+    }
+
+    #[test]
+    fn corruption_truncation_and_wrong_shard_error_name_the_flag() {
+        let dir = tmpdir("corrupt");
+        save(&dir, &ckpt(0), 7, "ds", 2, 2).unwrap();
+        let p = step_path(&dir, 0);
+
+        // bit flip inside the payload
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", load_latest(&dir, "ds", 2, 2).unwrap_err());
+        assert!(err.contains("--checkpoint"), "unactionable error: {err}");
+
+        // truncation
+        save(&dir, &ckpt(0), 7, "ds", 2, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
+        let err = format!("{:#}", load_latest(&dir, "ds", 2, 2).unwrap_err());
+        assert!(err.contains("--checkpoint"), "unactionable error: {err}");
+
+        // written against a different shard
+        save(&dir, &ckpt(0), 7, "ds", 2, 2).unwrap();
+        let err = format!("{:#}", load_latest(&dir, "other", 2, 2).unwrap_err());
+        assert!(err.contains("--checkpoint") && err.contains("other"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_digest_is_a_prefix_digest() {
+        let long = [1.0, 0.8, 0.6, 0.4];
+        let short = &long[..2];
+        let dig = |r: &[f64]| grid_digest("ds", 10, 3, "l21", "Dpc", "Fista", 2.5, r);
+        // the digest at step 1 must not see ratios beyond step 1 — that is
+        // what makes prefix-run checkpoints resumable into a longer grid
+        assert_eq!(dig(&long[..2]), dig(short));
+        assert_ne!(dig(&long[..2]), dig(&long[..3]));
+        // and every configuration field is load-bearing
+        assert_ne!(dig(short), grid_digest("ds", 11, 3, "l21", "Dpc", "Fista", 2.5, short));
+        assert_ne!(dig(short), grid_digest("ds", 10, 3, "sgl(0.5)", "Dpc", "Fista", 2.5, short));
+        assert_ne!(dig(short), grid_digest("ds", 10, 3, "l21", "Gap", "Fista", 2.5, short));
+        assert_ne!(dig(short), grid_digest("ds", 10, 3, "l21", "Dpc", "Bcd", 2.5, short));
+        assert_ne!(dig(short), grid_digest("ds", 10, 3, "l21", "Dpc", "Fista", 2.4, short));
+    }
+}

@@ -1,0 +1,842 @@
+//! Cluster-scale screening (DESIGN.md §16): a coordinator that fans the
+//! streamed shard sweeps out to worker *processes* over TCP, and the
+//! worker loop itself (`repro worker --connect HOST:PORT`).
+//!
+//! The distribution unit is the MTD3 block range. Every streamed sweep
+//! writes disjoint per-block slices of a d-length vector and folds
+//! scalars only on the assembled whole (screening::shard module docs),
+//! so distributing is: partition `0..n_blocks` into contiguous ranges,
+//! have each worker stream its ranges through its own `BlockCache` +
+//! prefetch pipeline, and concatenate the returned [`SweepPart`]s in
+//! fixed column order ([`merge_parts`]). The merged vector is
+//! bit-identical to the single-process sweep by construction, so the
+//! whole path run (keep-sets, solutions, records) is too — the
+//! coordinator still materializes survivors and solves locally.
+//!
+//! Wire protocol: the serve layer's length-prefixed JSON frames
+//! ([`crate::serve::proto`], [`crate::serve::json`] — bit-exact f64
+//! round-trip), with a worker op-set disjoint from the serving ops:
+//!
+//! | op               | does                                              |
+//! |------------------|---------------------------------------------------|
+//! | `hello`          | open + validate the shard, fix the penalty        |
+//! | `sweep_blocks`   | stream one block range (`scores`/`infeas`/`sqnorms`) |
+//! | `merge`          | per-λ barrier: ack the merged grid step           |
+//! | `checkpoint_ack` | ship the worker ledger (I/O + busy counters)      |
+//! | `shutdown`       | reply, then exit the worker loop                  |
+//!
+//! Failure policy: a worker that drops its connection mid-sweep is
+//! marked dead and its block ranges are reassigned round-robin to the
+//! survivors — the sweep completes with identical bits because the merge
+//! is by column offset, not by worker. A worker that *answers* with an
+//! error (`ok:false`, e.g. a block checksum failure) is a hard stop:
+//! that is a data problem reassignment must not paper over. Zero
+//! survivors is a hard stop naming `--checkpoint` as the recovery path.
+
+use super::checkpoint::CheckpointCfg;
+use super::path::{
+    run_path_sharded_core, PathObserver, PathOptions, ShardRunResult, WorkerLedger,
+};
+use crate::data::ShardedDataset;
+use crate::ops::{self, Stacked};
+use crate::penalty::PenaltyKind;
+use crate::screening::shard::{merge_parts, ShardSweeps, SweepPart};
+use crate::serve::json::{self, Value};
+use crate::serve::proto;
+use crate::util::Stopwatch;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Frame cap for worker traffic: a sweep reply carries one f64 per
+/// column of the range (≈24 text bytes each), so 64 MiB covers ranges
+/// into the millions of columns — far past where block partitioning
+/// would have split them anyway.
+pub const WORKER_MAX_FRAME: usize = 64 << 20;
+
+/// Everything `repro path --distributed` needs besides the path options.
+#[derive(Debug, Clone)]
+pub struct DistribOptions {
+    /// worker processes to run the sweeps on
+    pub workers: usize,
+    /// coordinator listen address (`127.0.0.1:0` = loopback, OS port)
+    pub listen: String,
+    /// spawn the workers as local child processes (default); with
+    /// `--no-spawn` the coordinator waits for externally started
+    /// `repro worker --connect` processes instead
+    pub spawn_local: bool,
+    /// seconds to wait for workers to connect / for any single reply
+    pub worker_timeout_secs: f64,
+    /// block-cache megabytes forwarded to spawned workers
+    pub cache_mb: usize,
+}
+
+impl Default for DistribOptions {
+    fn default() -> Self {
+        DistribOptions {
+            workers: 2,
+            listen: "127.0.0.1:0".into(),
+            spawn_local: true,
+            worker_timeout_secs: 120.0,
+            cache_mb: 256,
+        }
+    }
+}
+
+/// Contiguous near-equal partition of `0..nb` into `w` ranges (range `i`
+/// is `[i·nb/w, (i+1)·nb/w)` — deterministic, order-preserving, exact
+/// tiling; trailing ranges may be empty when `w > nb`).
+pub fn partition_blocks(nb: usize, w: usize) -> Vec<Range<usize>> {
+    assert!(w > 0, "partition needs at least one worker");
+    (0..w).map(|i| (i * nb / w)..((i + 1) * nb / w)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// wire helpers (stacked vectors as nested JSON arrays; f64s round-trip
+// bit-exactly through serve::json's shortest-decimal formatting)
+// ---------------------------------------------------------------------------
+
+fn stacked_to_json(s: &Stacked) -> Value {
+    Value::Arr(s.iter().map(|t| Value::num_arr(t)).collect())
+}
+
+fn f64s_from_json(v: &Value) -> Result<Vec<f64>> {
+    v.as_arr()
+        .context("expected a number array")?
+        .iter()
+        .map(|x| x.as_f64().context("expected a number array"))
+        .collect()
+}
+
+fn stacked_from_json(v: &Value) -> Result<Stacked> {
+    v.as_arr()
+        .context("expected a stacked (array-of-arrays) vector")?
+        .iter()
+        .map(f64s_from_json)
+        .collect()
+}
+
+fn num_u64(v: u64) -> Value {
+    Value::Num(v as f64)
+}
+
+fn penalty_wire(pen: &PenaltyKind) -> (&'static str, f64, f64) {
+    match *pen {
+        PenaltyKind::L21 => ("l21", 0.0, 0.0),
+        PenaltyKind::Sgl { alpha } => ("sgl", alpha, 0.0),
+        PenaltyKind::Gowl { gamma } => ("gowl", 0.0, gamma),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the worker loop (`repro worker --connect HOST:PORT`)
+// ---------------------------------------------------------------------------
+
+struct WorkerState {
+    sh: ShardedDataset,
+    pen: PenaltyKind,
+    /// per-block b² tables, computed on first touch and cached — the
+    /// worker-side twin of `ShardScreener`'s d×T table, restricted to
+    /// the blocks this worker actually serves (bit-identical slices)
+    b2: HashMap<usize, Vec<f64>>,
+}
+
+enum Handled {
+    Reply(Value),
+    Shutdown(Value),
+}
+
+/// The blocking worker loop: connect to the coordinator, answer framed
+/// requests until `shutdown` or EOF (a vanished coordinator is a clean
+/// exit — the worker owns no durable state). Single-threaded by design:
+/// sweep parallelism inside a block uses the same data-parallel kernels
+/// as every backend, process parallelism comes from running more workers.
+pub fn run_worker(connect: &str, cache_mb: usize) -> Result<()> {
+    // retry the connect briefly: workers and coordinator are started in
+    // arbitrary order (`--no-spawn`, CI scripts), and the coordinator
+    // only listens once it has bound its port
+    let sw = Stopwatch::started();
+    let mut stream = loop {
+        match TcpStream::connect(connect) {
+            Ok(s) => break s,
+            Err(_) if sw.secs() < 30.0 => {
+                std::thread::sleep(Duration::from_millis(100))
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("connect to coordinator at {connect}"))
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let mut state: Option<WorkerState> = None;
+    let mut busy = Stopwatch::new();
+    let mut sweeps_served = 0u64;
+    loop {
+        let payload = match proto::read_frame(&mut stream, WORKER_MAX_FRAME) {
+            Ok(p) => p,
+            Err(_) => return Ok(()), // coordinator hung up — clean exit
+        };
+        let reply =
+            match handle_frame(&payload, &mut state, cache_mb, &mut busy, &mut sweeps_served) {
+                Ok(Handled::Reply(v)) => proto::ok_reply(v),
+                Ok(Handled::Shutdown(v)) => {
+                    proto::write_frame(&mut stream, proto::ok_reply(v).as_bytes())?;
+                    return Ok(());
+                }
+                Err(e) => proto::err_reply(&format!("{e:#}")),
+            };
+        proto::write_frame(&mut stream, reply.as_bytes())?;
+    }
+}
+
+fn handle_frame(
+    payload: &[u8],
+    state: &mut Option<WorkerState>,
+    cache_mb: usize,
+    busy: &mut Stopwatch,
+    sweeps_served: &mut u64,
+) -> Result<Handled> {
+    let v = json::parse(std::str::from_utf8(payload).context("request not utf8")?)
+        .map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    let op = v.get("op").and_then(Value::as_str).context("request needs a string \"op\"")?;
+    match op {
+        "hello" => {
+            let shard = v.get("shard").and_then(Value::as_str).context("hello needs \"shard\"")?;
+            let name = v.get("name").and_then(Value::as_str).context("hello needs \"name\"")?;
+            let d = v.get("d").and_then(Value::as_usize).context("hello needs \"d\"")?;
+            let t = v.get("t").and_then(Value::as_usize).context("hello needs \"t\"")?;
+            let nb = v
+                .get("n_blocks")
+                .and_then(Value::as_usize)
+                .context("hello needs \"n_blocks\"")?;
+            let pname = v
+                .get("penalty")
+                .and_then(Value::as_str)
+                .context("hello needs \"penalty\"")?;
+            let alpha = v.get("alpha").and_then(Value::as_f64).unwrap_or(0.0);
+            let gamma = v.get("gamma").and_then(Value::as_f64).unwrap_or(0.0);
+            let pen = PenaltyKind::parse(pname, alpha, gamma)?;
+            let sh = ShardedDataset::open_with_cache(Path::new(shard), cache_mb << 20)?;
+            anyhow::ensure!(
+                sh.name() == name && sh.d() == d && sh.t() == t && sh.n_blocks() == nb,
+                "shard mismatch: coordinator expects '{name}' (d={d}, T={t}, {nb} \
+                 blocks) but {shard} holds '{}' (d={}, T={}, {} blocks) — are both \
+                 sides pointing at the same file?",
+                sh.name(),
+                sh.d(),
+                sh.t(),
+                sh.n_blocks()
+            );
+            *state = Some(WorkerState { sh, pen, b2: HashMap::new() });
+            Ok(Handled::Reply(Value::Obj(vec![
+                ("d".into(), num_u64(d as u64)),
+                ("t".into(), num_u64(t as u64)),
+                ("n_blocks".into(), num_u64(nb as u64)),
+            ])))
+        }
+        "sweep_blocks" => {
+            let st = state.as_mut().context("hello must precede sweep_blocks")?;
+            let kind = v
+                .get("kind")
+                .and_then(Value::as_str)
+                .context("sweep_blocks needs \"kind\"")?;
+            let blocks = v
+                .get("blocks")
+                .and_then(Value::as_arr)
+                .context("sweep_blocks needs \"blocks\": [start, end]")?;
+            anyhow::ensure!(blocks.len() == 2, "\"blocks\" must be [start, end]");
+            let s = blocks[0].as_usize().context("block start must be a non-negative int")?;
+            let e = blocks[1].as_usize().context("block end must be a non-negative int")?;
+            anyhow::ensure!(
+                s < e && e <= st.sh.n_blocks(),
+                "block range {s}..{e} out of bounds for {} blocks",
+                st.sh.n_blocks()
+            );
+            let payload_vec = match v.get("payload") {
+                Some(p) => Some(stacked_from_json(p)?),
+                None => None,
+            };
+            let delta = v.get("delta").and_then(Value::as_f64).unwrap_or(0.0);
+            let t_count = st.sh.t();
+            let span = st.sh.block_range(s).start..st.sh.block_range(e - 1).end;
+            let stride = if kind == "sqnorms" { t_count } else { 1 };
+            let mut values: Vec<f64> = Vec::with_capacity((span.end - span.start) * stride);
+            let WorkerState { sh, pen, b2 } = st;
+            let pen = *pen;
+            busy.time(|| -> Result<()> {
+                sh.for_each_block_range_pipelined(s..e, |b, blk| {
+                    let part = match kind {
+                        "scores" => {
+                            let o = payload_vec
+                                .as_ref()
+                                .context("kind \"scores\" needs \"payload\" (the ball center)")?;
+                            let b2 = b2.entry(b).or_insert_with(|| blk.col_sqnorms());
+                            crate::screening::ball_scores_for(blk, b2, o, delta, &pen)
+                        }
+                        "infeas" => {
+                            let z = payload_vec
+                                .as_ref()
+                                .context("kind \"infeas\" needs \"payload\" (the dual point)")?;
+                            let corr = ops::task_corr(blk, z);
+                            pen.infeas_features(&corr, t_count)
+                        }
+                        "sqnorms" => blk.col_sqnorms(),
+                        other => anyhow::bail!(
+                            "unknown sweep kind '{other}' (scores|infeas|sqnorms)"
+                        ),
+                    };
+                    values.extend_from_slice(&part);
+                    Ok(())
+                })
+            })?;
+            *sweeps_served += 1;
+            Ok(Handled::Reply(Value::Obj(vec![
+                (
+                    "cols".into(),
+                    Value::Arr(vec![num_u64(span.start as u64), num_u64(span.end as u64)]),
+                ),
+                ("values".into(), Value::num_arr(&values)),
+            ])))
+        }
+        "merge" => {
+            anyhow::ensure!(state.is_some(), "hello must precede merge");
+            Ok(Handled::Reply(Value::Str("ack".into())))
+        }
+        "checkpoint_ack" => {
+            let st = state.as_ref().context("hello must precede checkpoint_ack")?;
+            Ok(Handled::Reply(Value::Obj(vec![
+                ("bytes_read".into(), num_u64(st.sh.bytes_read())),
+                ("blocks_loaded".into(), num_u64(st.sh.blocks_loaded())),
+                ("busy_secs".into(), Value::Num(busy.secs())),
+                ("sweeps".into(), num_u64(*sweeps_served)),
+            ])))
+        }
+        "shutdown" => Ok(Handled::Shutdown(Value::Str("bye".into()))),
+        other => anyhow::bail!(
+            "unknown worker op '{other}' (hello|sweep_blocks|merge|checkpoint_ack|shutdown)"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the coordinator
+// ---------------------------------------------------------------------------
+
+/// Accepts worker connections for a distributed path run.
+pub struct Coordinator {
+    listener: TcpListener,
+    addr: String,
+}
+
+impl Coordinator {
+    /// Bind the listen address (use port 0 to let the OS pick).
+    pub fn bind(listen: &str) -> Result<Self> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("bind coordinator listener on {listen}"))?;
+        let addr = listener.local_addr()?.to_string();
+        Ok(Coordinator { listener, addr })
+    }
+
+    /// The bound address workers connect to (resolved port included).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Accept exactly `n` workers within the deadline (polled
+    /// non-blocking so a missing worker yields an actionable error
+    /// instead of hanging forever).
+    pub fn accept_workers(&self, n: usize, timeout_secs: f64) -> Result<Vec<TcpStream>> {
+        self.listener.set_nonblocking(true)?;
+        let sw = Stopwatch::started();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    out.push(s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    anyhow::ensure!(
+                        sw.secs() < timeout_secs,
+                        "only {} of {n} workers connected within {timeout_secs}s — \
+                         start them with `repro worker --connect {}` or raise \
+                         --worker-timeout",
+                        out.len(),
+                        self.addr
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(out)
+    }
+}
+
+struct WorkerConn {
+    stream: TcpStream,
+    addr: String,
+    alive: bool,
+    /// block ranges this worker currently owns (grows on reassignment)
+    ranges: Vec<Range<usize>>,
+    sweeps: u64,
+    bytes_shipped: u64,
+    bytes_read: u64,
+    blocks_loaded: u64,
+    busy_secs: f64,
+}
+
+enum ReplyErr {
+    /// connection-level failure: mark the worker dead, reassign its work
+    Dead,
+    /// the worker answered `ok:false` — a data/protocol error that
+    /// reassignment must not paper over
+    Fatal(String),
+}
+
+fn read_reply(stream: &mut TcpStream) -> std::result::Result<(usize, Value), ReplyErr> {
+    let payload = proto::read_frame(stream, WORKER_MAX_FRAME).map_err(|_| ReplyErr::Dead)?;
+    let text = std::str::from_utf8(&payload).map_err(|_| ReplyErr::Dead)?;
+    let v = json::parse(text).map_err(|_| ReplyErr::Dead)?;
+    match v.get("ok").and_then(Value::as_bool) {
+        Some(true) => {
+            let result = v.get("result").cloned().unwrap_or(Value::Null);
+            Ok((payload.len(), result))
+        }
+        Some(false) => Err(ReplyErr::Fatal(
+            v.get("error").and_then(Value::as_str).unwrap_or("unknown").to_string(),
+        )),
+        None => Err(ReplyErr::Dead),
+    }
+}
+
+/// [`ShardSweeps`] over a fleet of worker processes: fan each sweep out
+/// as one `sweep_blocks` request per owned block range, reassemble the
+/// [`SweepPart`] replies in fixed column order, and survive worker
+/// deaths by round-robin reassignment (module docs).
+pub struct DistribSweeps<'a> {
+    sh: &'a ShardedDataset,
+    workers: Vec<WorkerConn>,
+}
+
+impl<'a> DistribSweeps<'a> {
+    /// Accept `n` workers, hello each with the shard identity + penalty,
+    /// and hand out the initial contiguous block partition.
+    pub fn connect(
+        sh: &'a ShardedDataset,
+        shard_path: &Path,
+        pen: PenaltyKind,
+        coord: &Coordinator,
+        n: usize,
+        timeout_secs: f64,
+    ) -> Result<Self> {
+        anyhow::ensure!(n > 0, "--distributed needs at least one worker");
+        let streams = coord.accept_workers(n, timeout_secs)?;
+        let (pname, alpha, gamma) = penalty_wire(&pen);
+        let hello = Value::Obj(vec![
+            ("op".into(), Value::Str("hello".into())),
+            ("shard".into(), Value::Str(shard_path.display().to_string())),
+            ("name".into(), Value::Str(sh.name().into())),
+            ("d".into(), num_u64(sh.d() as u64)),
+            ("t".into(), num_u64(sh.t() as u64)),
+            ("n_blocks".into(), num_u64(sh.n_blocks() as u64)),
+            ("penalty".into(), Value::Str(pname.into())),
+            ("alpha".into(), Value::Num(alpha)),
+            ("gamma".into(), Value::Num(gamma)),
+        ])
+        .to_json();
+        let parts = partition_blocks(sh.n_blocks(), n);
+        let mut workers = Vec::with_capacity(n);
+        for (i, mut stream) in streams.into_iter().enumerate() {
+            stream.set_nodelay(true).ok();
+            stream
+                .set_read_timeout(Some(Duration::from_secs_f64(timeout_secs.max(0.001))))?;
+            let addr =
+                stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+            proto::write_frame(&mut stream, hello.as_bytes())
+                .with_context(|| format!("hello worker {addr}"))?;
+            match read_reply(&mut stream) {
+                Ok(_) => {}
+                Err(ReplyErr::Fatal(e)) => anyhow::bail!("worker {addr} refused hello: {e}"),
+                Err(ReplyErr::Dead) => {
+                    anyhow::bail!("worker {addr} hung up during hello")
+                }
+            }
+            workers.push(WorkerConn {
+                stream,
+                addr,
+                alive: true,
+                ranges: vec![parts[i].clone()],
+                sweeps: 0,
+                bytes_shipped: 0,
+                bytes_read: 0,
+                blocks_loaded: 0,
+                busy_secs: 0.0,
+            });
+        }
+        Ok(DistribSweeps { sh, workers })
+    }
+
+    fn col_span(&self, r: &Range<usize>) -> Range<usize> {
+        self.sh.block_range(r.start).start..self.sh.block_range(r.end - 1).end
+    }
+
+    /// One distributed sweep: request every live worker's owned ranges,
+    /// read replies in request order, reassign orphaned ranges of dead
+    /// workers to survivors, repeat until the parts tile `0..d`.
+    fn fan_out(&mut self, build: &dyn Fn(Range<usize>) -> Value, stride: usize) -> Result<Vec<f64>> {
+        let d = self.sh.d();
+        let mut parts: Vec<SweepPart> = Vec::new();
+        let mut pending: Vec<Vec<Range<usize>>> = self
+            .workers
+            .iter()
+            .map(|w| w.ranges.iter().filter(|r| !r.is_empty()).cloned().collect())
+            .collect();
+        loop {
+            // send phase: one request per pending range, per live worker
+            for (i, w) in self.workers.iter_mut().enumerate() {
+                if !w.alive {
+                    continue;
+                }
+                for r in &pending[i] {
+                    let req = build(r.clone()).to_json();
+                    if proto::write_frame(&mut w.stream, req.as_bytes()).is_err() {
+                        w.alive = false;
+                        break;
+                    }
+                }
+            }
+            // read phase: replies arrive in request order per connection
+            for i in 0..self.workers.len() {
+                if !self.workers[i].alive {
+                    continue;
+                }
+                let mut answered = 0usize;
+                for k in 0..pending[i].len() {
+                    let r = pending[i][k].clone();
+                    let w = &mut self.workers[i];
+                    match read_reply(&mut w.stream) {
+                        Ok((len, result)) => {
+                            let part = part_from_json(&result)?;
+                            let want = self.col_span(&r);
+                            anyhow::ensure!(
+                                part.cols == want,
+                                "worker {} answered columns {:?} for blocks {r:?} \
+                                 (want {want:?})",
+                                self.workers[i].addr,
+                                part.cols
+                            );
+                            self.workers[i].sweeps += 1;
+                            self.workers[i].bytes_shipped += len as u64;
+                            parts.push(part);
+                            answered += 1;
+                        }
+                        Err(ReplyErr::Fatal(e)) => {
+                            anyhow::bail!("worker {}: {e}", self.workers[i].addr)
+                        }
+                        Err(ReplyErr::Dead) => {
+                            self.workers[i].alive = false;
+                            break;
+                        }
+                    }
+                }
+                pending[i].drain(..answered);
+            }
+            // orphan collection: a dead worker's unanswered ranges move on
+            let mut orphans: Vec<Range<usize>> = Vec::new();
+            for (i, w) in self.workers.iter_mut().enumerate() {
+                if !w.alive {
+                    orphans.append(&mut pending[i]);
+                    w.ranges.clear();
+                }
+            }
+            if orphans.is_empty() {
+                break;
+            }
+            let live: Vec<usize> = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter_map(|(i, w)| w.alive.then_some(i))
+                .collect();
+            anyhow::ensure!(
+                !live.is_empty(),
+                "all {} workers died mid-sweep — restart them and rerun (a \
+                 --checkpoint run resumes at the interrupted grid step)",
+                self.workers.len()
+            );
+            for (k, r) in orphans.into_iter().enumerate() {
+                let i = live[k % live.len()];
+                self.workers[i].ranges.push(r.clone());
+                pending[i].push(r);
+            }
+        }
+        merge_parts(d, stride, parts)
+    }
+
+    /// Broadcast one op to every live worker and read the acks; dead
+    /// workers are marked (their ranges reassign at the next sweep).
+    /// Returns each live worker's reply.
+    fn broadcast(&mut self, req: &str) -> Result<Vec<(usize, Value)>> {
+        let mut replies = Vec::new();
+        for i in 0..self.workers.len() {
+            let w = &mut self.workers[i];
+            if !w.alive {
+                continue;
+            }
+            if proto::write_frame(&mut w.stream, req.as_bytes()).is_err() {
+                w.alive = false;
+                continue;
+            }
+            match read_reply(&mut w.stream) {
+                Ok((_, v)) => replies.push((i, v)),
+                Err(ReplyErr::Fatal(e)) => {
+                    anyhow::bail!("worker {}: {e}", self.workers[i].addr)
+                }
+                Err(ReplyErr::Dead) => self.workers[i].alive = false,
+            }
+        }
+        Ok(replies)
+    }
+
+    /// Pull fresh I/O + busy counters from every live worker.
+    fn sync_ledgers(&mut self) -> Result<()> {
+        let req =
+            Value::Obj(vec![("op".into(), Value::Str("checkpoint_ack".into()))]).to_json();
+        for (i, v) in self.broadcast(&req)? {
+            let w = &mut self.workers[i];
+            w.bytes_read = v.get("bytes_read").and_then(Value::as_u64).unwrap_or(w.bytes_read);
+            w.blocks_loaded =
+                v.get("blocks_loaded").and_then(Value::as_u64).unwrap_or(w.blocks_loaded);
+            w.busy_secs = v.get("busy_secs").and_then(Value::as_f64).unwrap_or(w.busy_secs);
+        }
+        Ok(())
+    }
+
+    /// Best-effort shutdown broadcast (workers also exit cleanly on EOF).
+    pub fn shutdown(&mut self) {
+        let req = Value::Obj(vec![("op".into(), Value::Str("shutdown".into()))]).to_json();
+        let _ = self.broadcast(&req);
+        for w in &mut self.workers {
+            w.alive = false;
+        }
+    }
+
+    /// The per-worker ledger for [`ShardRunResult::workers`].
+    pub fn ledgers(&self) -> Vec<WorkerLedger> {
+        self.workers
+            .iter()
+            .map(|w| WorkerLedger {
+                addr: w.addr.clone(),
+                blocks: w.ranges.iter().map(|r| r.len()).sum(),
+                sweeps: w.sweeps,
+                bytes_shipped: w.bytes_shipped,
+                bytes_read: w.bytes_read,
+                blocks_loaded: w.blocks_loaded,
+                busy_secs: w.busy_secs,
+            })
+            .collect()
+    }
+}
+
+fn part_from_json(v: &Value) -> Result<SweepPart> {
+    let cols = v.get("cols").and_then(Value::as_arr).context("reply needs \"cols\"")?;
+    anyhow::ensure!(cols.len() == 2, "\"cols\" must be [start, end]");
+    let start = cols[0].as_usize().context("cols start must be a non-negative int")?;
+    let end = cols[1].as_usize().context("cols end must be a non-negative int")?;
+    let values = f64s_from_json(v.get("values").context("reply needs \"values\"")?)?;
+    Ok(SweepPart { cols: start..end, values })
+}
+
+impl ShardSweeps for DistribSweeps<'_> {
+    fn ball_scores(&mut self, o: &Stacked, delta: f64) -> Result<Vec<f64>> {
+        let payload = stacked_to_json(o);
+        self.fan_out(
+            &|r| {
+                Value::Obj(vec![
+                    ("op".into(), Value::Str("sweep_blocks".into())),
+                    ("kind".into(), Value::Str("scores".into())),
+                    (
+                        "blocks".into(),
+                        Value::Arr(vec![num_u64(r.start as u64), num_u64(r.end as u64)]),
+                    ),
+                    ("delta".into(), Value::Num(delta)),
+                    ("payload".into(), payload.clone()),
+                ])
+            },
+            1,
+        )
+    }
+
+    fn infeas_features(&mut self, z: &Stacked) -> Result<Vec<f64>> {
+        let payload = stacked_to_json(z);
+        self.fan_out(
+            &|r| {
+                Value::Obj(vec![
+                    ("op".into(), Value::Str("sweep_blocks".into())),
+                    ("kind".into(), Value::Str("infeas".into())),
+                    (
+                        "blocks".into(),
+                        Value::Arr(vec![num_u64(r.start as u64), num_u64(r.end as u64)]),
+                    ),
+                    ("payload".into(), payload.clone()),
+                ])
+            },
+            1,
+        )
+    }
+
+    fn step_done(&mut self, step: usize, lam: f64, kept: usize) -> Result<()> {
+        // merge barrier: every live worker acknowledges the merged step…
+        let req = Value::Obj(vec![
+            ("op".into(), Value::Str("merge".into())),
+            ("step".into(), num_u64(step as u64)),
+            ("lam".into(), Value::Num(lam)),
+            ("kept".into(), num_u64(kept as u64)),
+        ])
+        .to_json();
+        self.broadcast(&req)?;
+        // …then ships its ledger, so a checkpoint written right after
+        // this barrier reflects the step's true I/O accounting
+        self.sync_ledgers()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the distributed path entry point
+// ---------------------------------------------------------------------------
+
+/// Kills leftover children on error paths; a clean run waits for them
+/// after the shutdown broadcast.
+struct ChildGuard(Vec<std::process::Child>);
+
+impl ChildGuard {
+    fn finish(&mut self) {
+        for mut c in self.0.drain(..) {
+            let _ = c.wait();
+        }
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for c in self.0.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// `repro path --backend sharded --distributed N`: run the out-of-core
+/// grid loop ([`run_path_sharded_core`]) with the sweeps fanned out to
+/// `N` worker processes. `shard_path` is handed to the workers verbatim
+/// (same machine or shared filesystem). Keep-sets, solutions, and
+/// records are bit-identical to the single-process
+/// [`super::path::run_path_sharded`] — under worker loss included —
+/// because every merged sweep vector is (module docs). Composes with
+/// checkpoint/resume exactly like the single-process runner.
+pub fn run_path_distributed(
+    sh: &ShardedDataset,
+    shard_path: &Path,
+    opts: &PathOptions,
+    dopts: &DistribOptions,
+    obs: &mut dyn PathObserver,
+    ckpt: Option<&CheckpointCfg>,
+) -> Result<ShardRunResult> {
+    let coord = Coordinator::bind(&dopts.listen)?;
+    let mut children = ChildGuard(Vec::new());
+    if dopts.spawn_local {
+        let exe: PathBuf = std::env::current_exe()
+            .context("locate the running binary to spawn local workers")?;
+        for _ in 0..dopts.workers {
+            children.0.push(
+                std::process::Command::new(&exe)
+                    .args([
+                        "worker",
+                        "--connect",
+                        coord.local_addr(),
+                        "--cache-mb",
+                        &dopts.cache_mb.to_string(),
+                    ])
+                    .stdin(std::process::Stdio::null())
+                    .stdout(std::process::Stdio::null())
+                    .spawn()
+                    .context("spawn local worker process")?,
+            );
+        }
+    }
+    let mut sweeps = DistribSweeps::connect(
+        sh,
+        shard_path,
+        opts.solve.penalty,
+        &coord,
+        dopts.workers,
+        dopts.worker_timeout_secs,
+    )?;
+    let run = run_path_sharded_core(sh, opts, obs, &mut sweeps, ckpt);
+    sweeps.shutdown();
+    children.finish();
+    let mut res = run?;
+    res.workers = sweeps.ledgers();
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_tiles_exactly_and_stays_contiguous() {
+        for (nb, w) in [(10, 3), (7, 7), (5, 8), (1, 1), (100, 16)] {
+            let parts = partition_blocks(nb, w);
+            assert_eq!(parts.len(), w);
+            let mut next = 0;
+            for p in &parts {
+                assert_eq!(p.start, next, "gap/overlap at {p:?} (nb={nb}, w={w})");
+                next = p.end;
+            }
+            assert_eq!(next, nb, "partition must cover all blocks");
+            // near-equal: no range more than one block bigger than another
+            let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (lo, hi) =
+                (lens.iter().copied().min().unwrap(), lens.iter().copied().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced partition {lens:?}");
+        }
+    }
+
+    #[test]
+    fn penalty_wire_round_trips_through_parse() {
+        for pen in [
+            PenaltyKind::L21,
+            PenaltyKind::Sgl { alpha: 0.35 },
+            PenaltyKind::Gowl { gamma: 2.0 },
+        ] {
+            let (name, alpha, gamma) = penalty_wire(&pen);
+            assert_eq!(PenaltyKind::parse(name, alpha, gamma).unwrap(), pen);
+        }
+    }
+
+    #[test]
+    fn sweep_parts_round_trip_the_json_wire_bit_exactly() {
+        let vals = vec![1.0 / 3.0, -0.0, f64::MIN_POSITIVE, 2.5e300, 7.0];
+        let reply = Value::Obj(vec![
+            ("cols".into(), Value::Arr(vec![num_u64(3), num_u64(8)])),
+            ("values".into(), Value::num_arr(&vals)),
+        ]);
+        // through the serializer and parser, as the coordinator sees it
+        let back = json::parse(&reply.to_json()).unwrap();
+        let part = part_from_json(&back).unwrap();
+        assert_eq!(part.cols, 3..8);
+        for (a, b) in part.values.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "wire must not perturb f64 bits");
+        }
+        // stacked payloads too
+        let z: Stacked = vec![vec![0.1, 0.2, 0.3], vec![-1.0 / 7.0]];
+        let back = json::parse(&stacked_to_json(&z).to_json()).unwrap();
+        assert_eq!(stacked_from_json(&back).unwrap(), z);
+    }
+}

@@ -2,16 +2,20 @@
 //! (Corollary 9), the experiment metrics, and the report renderers that
 //! regenerate the paper's tables and figures.
 
+pub mod checkpoint;
 pub mod cv;
+pub mod distrib;
 pub mod grid;
 pub mod stability;
 pub mod metrics;
 pub mod path;
 pub mod report;
 
+pub use checkpoint::CheckpointCfg;
+pub use distrib::{run_path_distributed, run_worker, DistribOptions};
 pub use grid::lambda_grid;
 pub use path::{
-    run_path, run_path_sharded, run_path_sharded_with, run_path_with, EngineKind, FnObserver,
-    LambdaRecord, PathObserver, PathOptions, PathRunResult, ScreenerKind, ShardRunResult,
-    SolverKind,
+    run_path, run_path_sharded, run_path_sharded_checkpointed, run_path_sharded_with,
+    run_path_with, EngineKind, FnObserver, LambdaRecord, PathObserver, PathOptions,
+    PathRunResult, ScreenerKind, ShardRunResult, SolverKind, WorkerLedger,
 };

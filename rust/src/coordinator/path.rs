@@ -41,16 +41,18 @@
 //! match the in-RAM backends; [`ShardRunResult`] adds the bytes-
 //! materialized accounting benched in `BENCH_shard.json`.
 
+use super::checkpoint::{self, CheckpointCfg, PathCheckpoint};
 use crate::data::{Dataset, ShardedDataset};
 use crate::ops;
 use crate::runtime::{buckets, AotEngine};
 use crate::screening::bounds::CsScreener;
-use crate::screening::dpc::{DpcScreener, DualRef};
+use crate::screening::dpc::{ball_from_y, DpcScreener, DualRef};
 use crate::screening::gap::{certified_radius, GapScreener};
 use crate::screening::safety;
 use crate::screening::shard::{
-    dual_ref_at_lambda_max, dual_ref_from_streamed, streamed_gap, ShardScreener,
+    dual_ref_from_streamed, dual_ref_from_witness, gap_from_sweep, LocalSweeps, ShardSweeps,
 };
+use crate::screening::ScreenOutcome;
 use crate::solver::{bcd, fista, SolveOptions};
 use crate::util::Stopwatch;
 use anyhow::{Context, Result};
@@ -480,6 +482,32 @@ pub struct ShardRunResult {
     /// next-block prefetches, those consumed while still resident (decode
     /// fully hidden behind compute), and wall time stalled on cold loads
     pub prefetch: crate::data::PrefetchStats,
+    /// per-worker ledger of a distributed run (DESIGN.md §16) — empty for
+    /// single-process runs; `BENCH_distrib.json` feeds from this
+    pub workers: Vec<WorkerLedger>,
+}
+
+/// What one worker process contributed to a distributed run
+/// (`coordinator::distrib`): its block assignment, the sweeps it served,
+/// the bytes it shipped back over the wire, its own disk I/O, and the
+/// wall time it spent busy (the utilization numerator — the denominator
+/// is the run's `total_secs`).
+#[derive(Debug, Clone)]
+pub struct WorkerLedger {
+    /// the worker's peer address as the coordinator saw it
+    pub addr: String,
+    /// blocks assigned to this worker (after any reassignment)
+    pub blocks: usize,
+    /// sweep requests this worker answered
+    pub sweeps: u64,
+    /// reply payload bytes shipped to the coordinator
+    pub bytes_shipped: u64,
+    /// bytes the worker read from its shard (cache misses only)
+    pub bytes_read: u64,
+    /// block loads the worker paid (cache misses only)
+    pub blocks_loaded: u64,
+    /// wall time the worker spent computing sweeps
+    pub busy_secs: f64,
 }
 
 /// Run the λ-path out-of-core with a no-op observer (see
@@ -507,6 +535,31 @@ pub fn run_path_sharded_with(
     opts: &PathOptions,
     obs: &mut dyn PathObserver,
 ) -> Result<ShardRunResult> {
+    run_path_sharded_checkpointed(sh, opts, obs, None)
+}
+
+/// [`run_path_sharded_with`] plus per-λ checkpoint/resume (DESIGN.md
+/// §16): with a [`CheckpointCfg`], every completed grid point persists an
+/// atomic `ckpt_<step>.mtc1` record, and `resume` re-enters the grid at
+/// the step after the newest valid record. Restored steps do **not**
+/// replay the observer — they were already streamed by the interrupted
+/// run. The resumed path is bit-identical to an uninterrupted one.
+pub fn run_path_sharded_checkpointed(
+    sh: &ShardedDataset,
+    opts: &PathOptions,
+    obs: &mut dyn PathObserver,
+    ckpt: Option<&CheckpointCfg>,
+) -> Result<ShardRunResult> {
+    shard_caps(opts)?; // fail before the b² streaming pass
+    let mut sweeps = LocalSweeps::new(sh, opts.solve.penalty)?;
+    run_path_sharded_core(sh, opts, obs, &mut sweeps, ckpt)
+}
+
+/// The out-of-core capability gates, shared by every sharded entry point
+/// (single-process and distributed): which screeners have O(N) balls,
+/// why `verify_safety` cannot run here, and which components non-ℓ2,1
+/// penalties are restricted to.
+fn shard_caps(opts: &PathOptions) -> Result<()> {
     anyhow::ensure!(
         matches!(
             opts.screener,
@@ -521,13 +574,44 @@ pub fn run_path_sharded_with(
         "verify_safety re-solves the unrestricted problem and needs the matrix \
          in RAM — run it on the dense/CSC backends"
     );
-    anyhow::ensure!(
-        opts.solve.penalty.is_l21(),
-        "penalty {} is not supported out-of-core: the streamed gap scaling \
-         (screening::shard::streamed_gap) is the ℓ2,1 feasibility rule — run \
-         this penalty on the dense/CSC backends",
-        opts.solve.penalty
-    );
+    if !opts.solve.penalty.is_l21() {
+        // same capability seam as the exact engine (DESIGN.md §14): the
+        // DPC ball and the BCD row update are ℓ2,1 geometry; the streamed
+        // sweeps themselves are penalty-generic (ROADMAP 4a)
+        anyhow::ensure!(
+            matches!(opts.screener, ScreenerKind::GapSafe),
+            "screener {:?} is ℓ2,1-only (DPC's Theorem-5 ball is ℓ2,1 dual \
+             geometry); penalty {} screens out-of-core with --screener gap",
+            opts.screener,
+            opts.solve.penalty
+        );
+        anyhow::ensure!(
+            matches!(opts.solver, SolverKind::Fista),
+            "solver Bcd is ℓ2,1-only (its row update is the ℓ2,1 secular solve); \
+             penalty {} solves with --solver fista",
+            opts.solve.penalty
+        );
+    }
+    Ok(())
+}
+
+/// The grid loop every sharded mode executes, written against the
+/// [`ShardSweeps`] seam: single-process runs pass [`LocalSweeps`], the
+/// distributed coordinator passes its fan-out provider
+/// (`coordinator::distrib`) — same loop, same fold order, same bits.
+/// Scalar folds (λ_max, screening thresholds, gap scaling) always run
+/// here on fully assembled sweep vectors; only the per-block vector
+/// production is behind the seam. Public so tests (and exotic
+/// deployments) can drive the loop with their own sweep provider.
+pub fn run_path_sharded_core(
+    sh: &ShardedDataset,
+    opts: &PathOptions,
+    obs: &mut dyn PathObserver,
+    sweeps: &mut dyn ShardSweeps,
+    ckpt: Option<&CheckpointCfg>,
+) -> Result<ShardRunResult> {
+    shard_caps(opts)?;
+    let pen: &dyn crate::penalty::Penalty = &opts.solve.penalty;
     let t_count = sh.t();
     let d = sh.d();
     let bytes0 = sh.bytes_read();
@@ -536,9 +620,17 @@ pub fn run_path_sharded_with(
     let mut total = Stopwatch::new();
     total.start();
 
-    let screener = ShardScreener::new(sh)?;
     let y = sh.y64();
-    let (dref0, lam_max) = dual_ref_at_lambda_max(sh)?;
+    // λ_max from the penalty's infeasibility sweep (one pass over all
+    // blocks — through the seam, so a distributed run fans it out); the
+    // witness feature's single block load builds the closed-form DPC
+    // reference, which exists only in ℓ2,1 geometry
+    let (lam_max, lstar) = pen.infeas_finish(&sweeps.infeas_features(&y)?);
+    let dref0 = if opts.solve.penalty.is_l21() {
+        Some(dual_ref_from_witness(sh, &y, lam_max, lstar)?)
+    } else {
+        None
+    };
     let mut dref = dref0.clone();
 
     // residual of W = 0, written as the in-RAM `ops::residual` computes it
@@ -547,47 +639,113 @@ pub fn run_path_sharded_with(
         y.iter().map(|yt| yt.iter().map(|&v| 0.0 - v).collect()).collect()
     };
 
+    let digest_at = |step: usize| {
+        checkpoint::grid_digest(
+            sh.name(),
+            d,
+            t_count,
+            &opts.solve.penalty.to_string(),
+            &format!("{:?}", opts.screener),
+            &format!("{:?}", opts.solver),
+            lam_max,
+            &opts.ratios[..=step],
+        )
+    };
+
     let mut prev_w = vec![0.0f64; d * t_count];
     let mut prev_r = zero_residual(&y);
-    let mut prev_l21 = 0.0f64;
+    let mut prev_penval = 0.0f64;
     let mut records = Vec::with_capacity(opts.ratios.len());
     let mut materialized_bytes = Vec::with_capacity(opts.ratios.len());
+    let mut start_step = 0usize;
 
-    for (step, &ratio) in opts.ratios.iter().enumerate() {
+    if let Some(cfg) = ckpt {
+        if cfg.resume {
+            if let Some((ck, digest)) =
+                checkpoint::load_latest(&cfg.dir, sh.name(), d, t_count)?
+            {
+                anyhow::ensure!(
+                    ck.step < opts.ratios.len(),
+                    "--checkpoint {}: newest record is at grid step {} but this \
+                     grid has only {} points",
+                    cfg.dir.display(),
+                    ck.step,
+                    opts.ratios.len()
+                );
+                anyhow::ensure!(
+                    digest == digest_at(ck.step),
+                    "--checkpoint {}: the step-{} record was written by a \
+                     different run configuration (dataset, grid prefix, penalty, \
+                     screener, solver or λ_max changed) — restart without \
+                     --resume or point --checkpoint at the matching directory",
+                    cfg.dir.display(),
+                    ck.step
+                );
+                records = ck.records;
+                materialized_bytes = ck.materialized_bytes;
+                prev_w = ck.prev_w;
+                prev_r = ck.prev_r;
+                prev_penval = ck.prev_penval;
+                if ck.dref.is_some() {
+                    dref = ck.dref;
+                }
+                start_step = ck.step + 1;
+            }
+        }
+    }
+
+    for (step, &ratio) in opts.ratios.iter().enumerate().skip(start_step) {
         let lam = ratio * lam_max;
-        // -- screening phase (streamed over the shard) --
+        // -- screening phase (streamed over the shard via the seam) --
         let mut step_screen = Stopwatch::new();
         let keep: Vec<usize> = if ratio >= 1.0 - 1e-12 {
             Vec::new() // Theorem 1: W* = 0, keep nothing
         } else {
             match opts.screener {
-                ScreenerKind::Dpc => step_screen
-                    .time(|| screener.screen(sh, &y, &dref, lam))?
-                    .kept_indices(),
-                ScreenerKind::DpcOneShot => step_screen
-                    .time(|| screener.screen(sh, &y, &dref0, lam))?
-                    .kept_indices(),
+                ScreenerKind::Dpc | ScreenerKind::DpcOneShot => {
+                    let dr = if matches!(opts.screener, ScreenerKind::Dpc) {
+                        dref.as_ref().unwrap()
+                    } else {
+                        dref0.as_ref().unwrap()
+                    };
+                    assert!(
+                        lam <= dr.lam0 * (1.0 + 1e-12),
+                        "DPC requires lam <= lam0 (got {lam} > {})",
+                        dr.lam0
+                    );
+                    let (o, delta) = ball_from_y(&y, dr, lam);
+                    step_screen
+                        .time(|| -> Result<ScreenOutcome> {
+                            let scores = sweeps.ball_scores(&o, delta)?;
+                            let rejected = scores.iter().map(|&s| s < 1.0).collect();
+                            Ok(ScreenOutcome { rejected, scores, delta })
+                        })?
+                        .kept_indices()
+                }
                 ScreenerKind::GapSafe => step_screen
-                    .time(|| {
-                        let sg = streamed_gap(sh, &y, lam, &prev_r, prev_l21)?;
-                        screener.screen_ball(
-                            sh,
-                            &sg.theta,
-                            certified_radius(sg.gap, lam),
-                        )
+                    .time(|| -> Result<ScreenOutcome> {
+                        let sg = gap_from_sweep(&y, lam, &prev_r, prev_penval, pen, &mut |z| {
+                            sweeps.infeas_features(z)
+                        })?;
+                        let delta = certified_radius(sg.gap, lam);
+                        let scores = sweeps.ball_scores(&sg.theta, delta)?;
+                        let rejected = scores.iter().map(|&s| s < 1.0).collect();
+                        Ok(ScreenOutcome { rejected, scores, delta })
                     })?
                     .kept_indices(),
                 _ => unreachable!("rejected by the capability check above"),
             }
         };
 
-        // -- materialize survivors + solve in RAM --
+        // -- materialize survivors + solve in RAM (coordinator-local) --
         let mut step_solve = Stopwatch::new();
         let mut w_full = vec![0.0f64; d * t_count];
         let mut materialized = 0usize;
-        let (obj, gap, iters, col_ops, r_cur, l21_cur) = if keep.is_empty() {
+        let (obj, gap, iters, col_ops, r_cur, penval_cur) = if keep.is_empty() {
             let r0 = zero_residual(&y);
-            let sg = streamed_gap(sh, &y, lam, &r0, 0.0)?;
+            let sg = gap_from_sweep(&y, lam, &r0, 0.0, pen, &mut |z| {
+                sweeps.infeas_features(z)
+            })?;
             (sg.obj, sg.gap, 0, 0, r0, 0.0)
         } else {
             let ds_r = sh.restrict(&keep)?;
@@ -606,8 +764,11 @@ pub fn run_path_sharded_with(
                     .copy_from_slice(&res.w[j * t_count..(j + 1) * t_count]);
             }
             let r = ops::residual(&ds_r, &res.w);
-            let l21 = ops::l21_norm(&res.w, t_count);
-            (res.obj, res.gap, res.iters, res.col_ops, r, l21)
+            // Ω on the restricted solution — identical to Ω on w_full for
+            // every supported penalty: zero rows contribute +0.0 terms and
+            // (for GOWL) sort behind every nonzero row norm
+            let penval = pen.value(&res.w, t_count);
+            (res.obj, res.gap, res.iters, res.col_ops, r, penval)
         };
 
         // -- bookkeeping (same ground-truth accounting as the exact path) --
@@ -639,16 +800,48 @@ pub fn run_path_sharded_with(
         // sequential reference update (Cor. 9): re-streams the shard once
         // for the feasibility scaling of the new reference — the per-grid-
         // point re-stream the screen-before-load design pays for safety.
-        // Skipped after the last grid point: nothing reads the reference
-        // again, and on a shard the wasted sweep is a full disk pass
+        // Skipped after the last grid point when nothing will read the
+        // reference again (on a shard the wasted sweep is a full disk
+        // pass) — but a checkpoint *is* a reader: a resumed longer grid
+        // continues from this reference, so checkpointed runs always pay
+        // the update
         let last = step + 1 == opts.ratios.len();
-        if matches!(opts.screener, ScreenerKind::Dpc) && ratio < 1.0 - 1e-12 && !last {
-            let sg = streamed_gap(sh, &y, lam, &r_cur, l21_cur)?;
-            dref = dual_ref_from_streamed(&y, lam, &sg);
+        if matches!(opts.screener, ScreenerKind::Dpc)
+            && ratio < 1.0 - 1e-12
+            && (!last || ckpt.is_some())
+        {
+            let sg = gap_from_sweep(&y, lam, &r_cur, penval_cur, pen, &mut |z| {
+                sweeps.infeas_features(z)
+            })?;
+            dref = Some(dual_ref_from_streamed(&y, lam, &sg));
         }
         prev_w = w_full;
         prev_r = r_cur;
-        prev_l21 = l21_cur;
+        prev_penval = penval_cur;
+
+        // grid-step barrier (no-op single-process; the distributed
+        // provider broadcasts the step summary and syncs worker ledgers)
+        sweeps.step_done(step, lam, keep.len())?;
+
+        if let Some(cfg) = ckpt {
+            checkpoint::save(
+                &cfg.dir,
+                &PathCheckpoint {
+                    step,
+                    lam_max,
+                    records: records.clone(),
+                    materialized_bytes: materialized_bytes.clone(),
+                    dref: dref.clone(),
+                    prev_w: prev_w.clone(),
+                    prev_r: prev_r.clone(),
+                    prev_penval,
+                },
+                digest_at(step),
+                sh.name(),
+                d,
+                t_count,
+            )?;
+        }
     }
 
     total.stop();
@@ -680,6 +873,7 @@ pub fn run_path_sharded_with(
                 stall_secs: (pf.stall_secs - pf0.stall_secs).max(0.0),
             }
         },
+        workers: Vec::new(),
     })
 }
 

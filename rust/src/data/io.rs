@@ -401,6 +401,60 @@ pub fn save_sharded(ds: &Dataset, path: &Path, shard_bytes: usize) -> Result<Sha
     Ok(ShardSummary { block_cols, blocks: n_blocks, payload_bytes })
 }
 
+// ---------------------------------------------------------------------------
+// Generic checksummed records (checkpoints and other small sidecar files)
+// ---------------------------------------------------------------------------
+
+/// Write `magic | payload | fnv64(magic+payload)` to `path` atomically:
+/// the bytes land in `path.tmp` first and are renamed into place, so a
+/// crash mid-write leaves either the old record or no record — never a
+/// torn one. Used for the per-λ path checkpoints (DESIGN.md §16); the
+/// payload layout is the caller's contract.
+pub fn write_record_atomic(path: &Path, magic: &[u8; 4], payload: &[u8]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(4 + payload.len() + 8);
+    bytes.extend_from_slice(magic);
+    bytes.extend_from_slice(payload);
+    let mut h = Fnv64::new();
+    h.update(&bytes);
+    bytes.extend_from_slice(&h.digest().to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Read a record written by [`write_record_atomic`], verifying the magic
+/// and the trailing checksum; returns the payload bytes. Truncated or
+/// bit-flipped files fail loudly rather than decoding garbage.
+pub fn read_record(path: &Path, magic: &[u8; 4]) -> Result<Vec<u8>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() >= 12,
+        "{}: truncated record ({} bytes, need at least 12)",
+        path.display(),
+        bytes.len()
+    );
+    anyhow::ensure!(
+        &bytes[..4] == magic,
+        "{}: bad magic (expected {:?})",
+        path.display(),
+        String::from_utf8_lossy(magic)
+    );
+    let body = &bytes[..bytes.len() - 8];
+    let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    let mut h = Fnv64::new();
+    h.update(body);
+    anyhow::ensure!(
+        h.digest() == want,
+        "{}: checksum mismatch — record corrupt or truncated",
+        path.display()
+    );
+    Ok(body[4..].to_vec())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -499,5 +553,32 @@ mod tests {
         let err = load(&p);
         std::fs::remove_file(&p).ok();
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn record_round_trip_and_corruption() {
+        let p = tmp("record.mtc1");
+        let payload = b"hello checkpoint payload".to_vec();
+        write_record_atomic(&p, b"MTC1", &payload).unwrap();
+        assert_eq!(read_record(&p, b"MTC1").unwrap(), payload);
+        // the tmp staging file must not linger
+        assert!(!p.with_extension("tmp").exists());
+
+        // wrong magic is rejected by name
+        let err = read_record(&p, b"MTXX").unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        // a flipped payload bit trips the checksum
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[7] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_record(&p, b"MTC1").unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // truncation below the minimum record size is its own error
+        std::fs::write(&p, b"MTC1").unwrap();
+        let err = read_record(&p, b"MTC1").unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -373,18 +373,41 @@ impl ShardedDataset {
     ///
     /// Errors: a failing sweep surfaces first (as in the serial loop); a
     /// failing read (I/O, checksum) surfaces when its block is reached.
-    pub fn for_each_block_pipelined<F>(&self, mut f: F) -> Result<()>
+    pub fn for_each_block_pipelined<F>(&self, f: F) -> Result<()>
+    where
+        F: FnMut(usize, &Dataset) -> Result<()> + Send,
+    {
+        self.for_each_block_range_pipelined(0..self.n_blocks(), f)
+    }
+
+    /// [`Self::for_each_block_pipelined`] over a contiguous *sub-range*
+    /// of blocks — the unit a distributed worker sweeps (DESIGN.md §16):
+    /// a worker assigned blocks `[s, e)` streams exactly those through
+    /// its own cache + prefetch pipeline, and because every sweep writes
+    /// per-block output slices, the concatenation over workers equals
+    /// the full-range stream bit-for-bit. Consumption stays strictly in
+    /// block order within the range; the same overlap ledger applies.
+    pub fn for_each_block_range_pipelined<F>(
+        &self,
+        blocks: Range<usize>,
+        mut f: F,
+    ) -> Result<()>
     where
         F: FnMut(usize, &Dataset) -> Result<()> + Send,
     {
         let nb = self.n_blocks();
-        if nb == 0 {
+        anyhow::ensure!(
+            blocks.start <= blocks.end && blocks.end <= nb,
+            "block range {blocks:?} out of bounds for {nb} blocks"
+        );
+        if blocks.is_empty() {
             return Ok(());
         }
-        let mut cur = self.consume_block(0, false)?;
+        let mut cur = self.consume_block(blocks.start, false)?;
         let mut prefetched_next = false;
-        for b in 0..nb {
+        for b in blocks.clone() {
             let next = b + 1;
+            let nb = blocks.end;
             // only pipeline when the next block genuinely needs decoding:
             // on a warm cache the sweep keeps its full width and the
             // issued/hits ledger measures real decode-behind-compute
@@ -785,6 +808,39 @@ mod tests {
         }
         let stats = sh.prefetch_stats();
         assert!(stats.hits <= stats.issued, "hits {} > issued {}", stats.hits, stats.issued);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn range_stream_concatenation_matches_full_stream() {
+        // the distribution invariant (DESIGN.md §16): sweeping [0, m) and
+        // [m, nb) separately and concatenating the per-block outputs must
+        // visit the same blocks with the same contents as one full sweep
+        let ds = small();
+        let p = tmp("rangestream.mtd3");
+        save_sharded(&ds, &p, 150).unwrap();
+        let sh = ShardedDataset::open(&p).unwrap();
+        let nb = sh.n_blocks();
+        assert!(nb > 3);
+        let mut full: Vec<(usize, usize)> = Vec::new();
+        sh.for_each_block_pipelined(|b, blk| {
+            full.push((b, blk.d));
+            Ok(())
+        })
+        .unwrap();
+        let mid = nb / 2;
+        let mut split: Vec<(usize, usize)> = Vec::new();
+        for range in [0..mid, mid..nb] {
+            sh.for_each_block_range_pipelined(range, |b, blk| {
+                split.push((b, blk.d));
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert_eq!(full, split);
+        // empty ranges are fine; out-of-bounds ranges are not
+        sh.for_each_block_range_pipelined(mid..mid, |_, _| panic!("must not run")).unwrap();
+        assert!(sh.for_each_block_range_pipelined(0..nb + 1, |_, _| Ok(())).is_err());
         std::fs::remove_file(&p).ok();
     }
 

@@ -11,7 +11,8 @@
 //!   gen       generate a dataset and save it as .mtd
 //!   shard     convert a dataset to the sharded .mtd3 layout (out-of-core)
 //!   serve     long-lived solve/predict daemon (warm-model cache, TCP)
-//!   load      RPS-ramp load harness against a serve daemon
+//!   load      RPS-ramp / fixed-rate-soak load harness against a daemon
+//!   worker    shard-sweep worker for a distributed path coordinator
 //!   info      print the AOT artifact manifest
 
 use anyhow::{Context, Result};
@@ -23,7 +24,7 @@ use mtfl_dpc::runtime::AotEngine;
 use std::path::PathBuf;
 
 const USAGE: &str = "usage: \
-repro <table1|fig1|fig2|ablation|path|cv|stability|gen|shard|serve|load|info> [options]
+repro <table1|fig1|fig2|ablation|path|cv|stability|gen|shard|serve|load|worker|info> [options]
 
 common options:
   --scale quick|default|paper   experiment scale (default: default)
@@ -54,6 +55,22 @@ path options (storage backend):
   --shard-bytes N     target bytes per column block (default 4 MiB)
   --cache-mb M        block-cache budget for sharded runs (default 256)
 
+path options (distributed sweeps + checkpointing, sharded backend only):
+  --distributed N     fan the block sweeps out to N worker processes
+                      (spawned locally by default; bit-identical results)
+  --no-spawn          don't spawn workers; wait for external
+                      `repro worker --connect ADDR` processes instead
+  --listen HOST:PORT  coordinator listen address (default 127.0.0.1:0)
+  --worker-timeout S  worker connect/reply deadline (default 120)
+  --checkpoint DIR    write a resumable record after every λ step
+  --resume            continue from the newest checkpoint in DIR
+  --out FILE          write the timing-free path result as JSON (the
+                      deterministic fields only, for bitwise comparison)
+
+worker options:
+  --connect HOST:PORT coordinator to serve sweeps for (required)
+  --cache-mb M        worker block-cache budget (default 256)
+
 cv options:       --folds K (default 5)
 stability options: --subsamples B (default 20) --threshold F (default 0.8)
 
@@ -80,8 +97,14 @@ load options:
   --ratio R           fitted λ/λ_max to predict at (default: smallest
                       fitted ratio from the daemon's info reply)
   --seed S            workload-generator seed
-  --out FILE          JSON report path (default BENCH_serve.json)
-  --shutdown          send a shutdown op after the ramp (daemon drains)
+  --out FILE          JSON report path (default BENCH_serve.json, or
+                      BENCH_soak.json in soak mode)
+  --shutdown          send a shutdown op after the run (daemon drains)
+  --soak RPS          soak mode: hold one fixed rate instead of ramping
+  --duration S        soak hold time (default 30)
+  --window S          soak drift-window size (default 5); drifted =
+                      second-half mean windowed p95 > threshold x first
+  --drift-threshold F latency-drift trip factor (default 1.5)
 ";
 
 /// First four bytes of a file (container magic sniffing).
@@ -114,6 +137,43 @@ fn print_path_summary(res: &mtfl_dpc::coordinator::PathRunResult, title: &str) {
     let curve: Vec<(f64, f64)> =
         res.records.iter().map(|r| (r.ratio, r.rejection_ratio)).collect();
     println!("{}", report::render_rejection_curve(title, &curve));
+}
+
+/// Timing-free JSON view of a path run (`path --out`): only fields the
+/// determinism contract bit-pins (DESIGN.md §12), plus an fnv64 digest
+/// of the final solution's f64 bits — so two runs of the same problem
+/// at different worker or thread counts, or a resumed grid, must
+/// produce byte-identical files (`cmp` in CI).
+fn path_result_json(res: &mtfl_dpc::coordinator::PathRunResult) -> mtfl_dpc::serve::json::Value {
+    use mtfl_dpc::serve::json::Value;
+    let records = res
+        .records
+        .iter()
+        .map(|r| {
+            Value::Obj(vec![
+                ("ratio".into(), Value::Num(r.ratio)),
+                ("lam".into(), Value::Num(r.lam)),
+                ("rejected".into(), Value::Num(r.rejected as f64)),
+                ("kept".into(), Value::Num(r.kept as f64)),
+                ("inactive".into(), Value::Num(r.inactive as f64)),
+                ("solver_iters".into(), Value::Num(r.solver_iters as f64)),
+                ("col_ops".into(), Value::Num(r.col_ops as f64)),
+                ("obj".into(), Value::Num(r.obj)),
+                ("gap".into(), Value::Num(r.gap)),
+            ])
+        })
+        .collect();
+    let mut h = mtfl_dpc::data::io::Fnv64::new();
+    for x in &res.last_w {
+        h.update(&x.to_bits().to_le_bytes());
+    }
+    Value::Obj(vec![
+        ("dataset".into(), Value::Str(res.dataset.clone())),
+        ("d".into(), Value::Num(res.d as f64)),
+        ("lam_max".into(), Value::Num(res.lam_max)),
+        ("last_w_fnv64".into(), Value::Str(format!("{:016x}", h.digest()))),
+        ("records".into(), Value::Arr(records)),
+    ])
 }
 
 fn parse_screener(args: &Args) -> Result<ScreenerKind> {
@@ -212,11 +272,23 @@ fn main() -> Result<()> {
             let grid = args.get_usize("grid", scale.grid_len())?;
             let backend = args.get_or("backend", "auto").to_string();
             let shard_bytes = args.get_usize("shard-bytes", 4 << 20)?;
-            let cache_bytes = args.get_usize("cache-mb", 256)? << 20;
+            let cache_mb = args.get_usize("cache-mb", 256)?;
+            let cache_bytes = cache_mb << 20;
             let input = args.get("in").map(PathBuf::from);
+            let distributed = args.get_usize("distributed", 0)?;
+            let listen = args.get_or("listen", "127.0.0.1:0").to_string();
+            let no_spawn = args.flag("no-spawn");
+            let worker_timeout = args.get_f64("worker-timeout", 120.0)?;
+            let ckpt_dir = args.get("checkpoint").map(PathBuf::from);
+            let resume = args.flag("resume");
+            let out = args.get("out").map(PathBuf::from);
             let mut opts = grid_opts(&args, grid)?;
             let engine = engine_kind(&args, &mut engine_holder)?;
             args.finish()?;
+            anyhow::ensure!(
+                !resume || ckpt_dir.is_some(),
+                "--resume needs --checkpoint DIR (the directory to resume from)"
+            );
 
             anyhow::ensure!(
                 matches!(backend.as_str(), "auto" | "dense" | "csc" | "sharded"),
@@ -238,6 +310,12 @@ fn main() -> Result<()> {
                     matches!(engine, EngineKind::Exact),
                     "the sharded backend runs on the exact engine only"
                 );
+                let ckpt_cfg = ckpt_dir
+                    .as_ref()
+                    .map(|d| mtfl_dpc::coordinator::CheckpointCfg {
+                        dir: d.clone(),
+                        resume,
+                    });
                 // run an existing shard in place, or shard the requested
                 // dataset into a temp file first (the zero-setup demo)
                 let (shard_path, temp) = match (&input, input_is_shard) {
@@ -267,7 +345,33 @@ fn main() -> Result<()> {
                         &shard_path,
                         cache_bytes,
                     )?;
-                    let res = mtfl_dpc::coordinator::run_path_sharded(&sh, &opts)?;
+                    let mut noop = mtfl_dpc::coordinator::FnObserver(
+                        |_: f64, _: f64, _: &[f64], _: &mtfl_dpc::coordinator::LambdaRecord| {},
+                    );
+                    let res = if distributed > 0 {
+                        let dopts = mtfl_dpc::coordinator::DistribOptions {
+                            workers: distributed,
+                            listen: listen.clone(),
+                            spawn_local: !no_spawn,
+                            worker_timeout_secs: worker_timeout,
+                            cache_mb,
+                        };
+                        mtfl_dpc::coordinator::run_path_distributed(
+                            &sh,
+                            &shard_path,
+                            &opts,
+                            &dopts,
+                            &mut noop,
+                            ckpt_cfg.as_ref(),
+                        )?
+                    } else {
+                        mtfl_dpc::coordinator::run_path_sharded_checkpointed(
+                            &sh,
+                            &opts,
+                            &mut noop,
+                            ckpt_cfg.as_ref(),
+                        )?
+                    };
                     Ok::<_, anyhow::Error>((sh, res))
                 })();
                 if temp {
@@ -297,11 +401,34 @@ fn main() -> Result<()> {
                      cold block loads",
                     res.prefetch.hits, res.prefetch.issued, res.prefetch.stall_secs
                 );
+                for w in &res.workers {
+                    println!(
+                        "worker {}: {} blocks, {} sweeps, {:.2} MiB shipped, \
+                         {:.2} MiB read over {} block loads, {:.0}% busy",
+                        w.addr,
+                        w.blocks,
+                        w.sweeps,
+                        mib(w.bytes_shipped),
+                        mib(w.bytes_read),
+                        w.blocks_loaded,
+                        100.0 * w.busy_secs / res.path.total_secs.max(1e-9)
+                    );
+                }
                 print_path_summary(
                     &res.path,
                     &format!("path {} (sharded)", res.path.dataset),
                 );
+                if let Some(out) = &out {
+                    std::fs::write(out, path_result_json(&res.path).to_json() + "\n")
+                        .with_context(|| format!("write {}", out.display()))?;
+                    println!("wrote {}", out.display());
+                }
             } else {
+                anyhow::ensure!(
+                    distributed == 0 && ckpt_dir.is_none() && out.is_none(),
+                    "--distributed, --checkpoint and --out apply to the sharded \
+                     backend only (pass --backend sharded or --in FILE.mtd3)"
+                );
                 let ds = match &input {
                     Some(p) => mtfl_dpc::data::io::load(p)?,
                     None => experiments::build_by_name(&name, d, scale, seed)?,
@@ -472,7 +599,12 @@ fn main() -> Result<()> {
                 ..Default::default()
             };
             let ratio_arg = args.get_f64("ratio", 0.0)?;
-            let out = PathBuf::from(args.get_or("out", "BENCH_serve.json"));
+            let soak_rps = args.get_f64("soak", 0.0)?;
+            let duration = args.get_f64("duration", 30.0)?;
+            let window = args.get_f64("window", 5.0)?;
+            let drift_threshold = args.get_f64("drift-threshold", 1.5)?;
+            let default_out = if soak_rps > 0.0 { "BENCH_soak.json" } else { "BENCH_serve.json" };
+            let out = PathBuf::from(args.get_or("out", default_out));
             let do_shutdown = args.flag("shutdown");
             args.finish()?;
 
@@ -499,36 +631,82 @@ fn main() -> Result<()> {
                          send a fit op first, or pass --ratio",
                     )?
             };
-            println!(
-                "ramping {} → {} rps (step {} rps / {}s) against {addr}: d={} ratio={} \
-                 conns={} rows={}",
-                lopts.initial_rps,
-                lopts.target_rps,
-                lopts.increment_rps,
-                lopts.step_secs,
-                lopts.d,
-                lopts.ratio,
-                lopts.conns,
-                lopts.rows
-            );
-            let report = mtfl_dpc::serve::run_load(&addr, &lopts, &mut || Ok(()))?;
-            for l in &report.levels {
+            if soak_rps > 0.0 {
+                let sopts = mtfl_dpc::serve::SoakOptions {
+                    rps: soak_rps,
+                    duration_secs: duration,
+                    window_secs: window,
+                    drift_threshold,
+                    conns: lopts.conns,
+                    rows: lopts.rows,
+                    ratio: lopts.ratio,
+                    seed: lopts.seed,
+                    d: lopts.d,
+                };
                 println!(
-                    "offered {:>7.1} rps | achieved {:>7.1} | p50 {:>7.2}ms | \
-                     p95 {:>7.2}ms | p99 {:>7.2}ms | errors {}",
-                    l.offered_rps, l.achieved_rps, l.p50_ms, l.p95_ms, l.p99_ms, l.errors
+                    "soaking {addr} at {soak_rps} rps for {duration}s ({window}s \
+                     drift windows): d={} ratio={} conns={} rows={}",
+                    sopts.d, sopts.ratio, sopts.conns, sopts.rows
                 );
+                let report = mtfl_dpc::serve::run_soak(&addr, &sopts, &mut || Ok(()))?;
+                for w in &report.windows {
+                    println!(
+                        "  t={:>6.1}s | completed {:>6} | p95 {:>7.2}ms",
+                        w.t0_secs, w.completed, w.p95_ms
+                    );
+                }
+                println!(
+                    "achieved {:.1}/{:.1} rps, p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms, \
+                     errors {}",
+                    report.achieved_rps,
+                    report.offered_rps,
+                    report.p50_ms,
+                    report.p95_ms,
+                    report.p99_ms,
+                    report.errors
+                );
+                println!(
+                    "latency drift: ratio {:.3} (threshold {:.2}) — {}{}",
+                    report.drift_ratio,
+                    drift_threshold,
+                    if report.drifted { "DRIFTED" } else { "stable" },
+                    if report.saturated { " (and saturated: achieved < 90% offered)" } else { "" }
+                );
+                // a CLI-run soak is a real measurement: provisional=false
+                std::fs::write(&out, report.to_json(false).to_json() + "\n")
+                    .with_context(|| format!("write {}", out.display()))?;
+            } else {
+                println!(
+                    "ramping {} → {} rps (step {} rps / {}s) against {addr}: d={} ratio={} \
+                     conns={} rows={}",
+                    lopts.initial_rps,
+                    lopts.target_rps,
+                    lopts.increment_rps,
+                    lopts.step_secs,
+                    lopts.d,
+                    lopts.ratio,
+                    lopts.conns,
+                    lopts.rows
+                );
+                let report = mtfl_dpc::serve::run_load(&addr, &lopts, &mut || Ok(()))?;
+                for l in &report.levels {
+                    println!(
+                        "offered {:>7.1} rps | achieved {:>7.1} | p50 {:>7.2}ms | \
+                         p95 {:>7.2}ms | p99 {:>7.2}ms | errors {}",
+                        l.offered_rps, l.achieved_rps, l.p50_ms, l.p95_ms, l.p99_ms, l.errors
+                    );
+                }
+                match report.saturation_rps {
+                    Some(r) => println!("saturated at {r:.1} rps achieved"),
+                    None => println!(
+                        "no saturation up to {:.1} rps (max achieved {:.1})",
+                        lopts.target_rps, report.max_achieved_rps
+                    ),
+                }
+                // a CLI-run ramp is a real measurement: provisional=false
+                std::fs::write(&out, report.to_json(false).to_json() + "\n")
+                    .with_context(|| format!("write {}", out.display()))?;
             }
-            match report.saturation_rps {
-                Some(r) => println!("saturated at {r:.1} rps achieved"),
-                None => println!(
-                    "no saturation up to {:.1} rps (max achieved {:.1})",
-                    lopts.target_rps, report.max_achieved_rps
-                ),
-            }
-            // a CLI-run ramp is a real measurement: provisional=false
-            std::fs::write(&out, report.to_json(false).to_json() + "\n")
-                .with_context(|| format!("write {}", out.display()))?;
             println!("wrote {}", out.display());
             if do_shutdown {
                 proto::call(
@@ -537,6 +715,15 @@ fn main() -> Result<()> {
                 )?;
                 println!("sent shutdown; daemon is draining");
             }
+        }
+        "worker" => {
+            let connect = args
+                .get("connect")
+                .context("--connect HOST:PORT is required for worker")?
+                .to_string();
+            let cache_mb = args.get_usize("cache-mb", 256)?;
+            args.finish()?;
+            mtfl_dpc::coordinator::run_worker(&connect, cache_mb)?;
         }
         "info" => {
             let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));

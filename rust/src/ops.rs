@@ -458,6 +458,30 @@ pub fn stream_lambda_max(sh: &ShardedDataset) -> anyhow::Result<(f64, usize, Vec
     Ok((gmax.max(0.0).sqrt(), lstar, g))
 }
 
+/// The penalty's per-feature infeasibility statistics
+/// ([`crate::penalty::Penalty::infeas_features`]) streamed one column
+/// block at a time — the generalized half of [`stream_gscore`] (for ℓ2,1
+/// the two produce identical bits: both are `gscore` per block). The
+/// caller folds the assembled vector with
+/// [`crate::penalty::Penalty::infeas_finish`]; feature statistics are
+/// row-local, so block-order concatenation equals one full-width call.
+pub fn stream_infeas_features(
+    sh: &ShardedDataset,
+    v: &Stacked,
+    pen: &dyn crate::penalty::Penalty,
+) -> anyhow::Result<Vec<f64>> {
+    debug_assert_eq!(v.len(), sh.t());
+    let t_count = sh.t();
+    let mut out = vec![0.0f64; sh.d()];
+    sh.for_each_block_pipelined(|b, blk| {
+        let corr = task_corr(blk, v);
+        let part = pen.infeas_features(&corr, t_count);
+        out[sh.block_range(b)].copy_from_slice(&part);
+        Ok(())
+    })?;
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -136,8 +136,18 @@ impl Penalty for GroupOwl {
         alive
     }
 
-    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
-        let sorted = self.sorted_row_norms(corr, t_count);
+    /// Per-row ℓ2 norm in row order — the only row-local ingredient the
+    /// prefix fold needs, so it is what the sharded path streams.
+    fn infeas_features(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
+        corr.chunks_exact(t_count).map(nrm2_f64).collect()
+    }
+
+    /// Sorted-prefix fold over *all* row norms. The sort is why group
+    /// OWL's finish half cannot stream: it needs the full feature vector
+    /// (which is exactly what [`Penalty::infeas_features`] assembles).
+    fn infeas_finish(&self, feats: &[f64]) -> (f64, usize) {
+        let mut sorted: Vec<(usize, f64)> = feats.iter().cloned().enumerate().collect();
+        sorted.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         if sorted.is_empty() {
             return (0.0, 0);
         }

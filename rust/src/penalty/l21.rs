@@ -27,13 +27,19 @@ impl Penalty for L21 {
         crate::solver::prox::prox21_inplace(w, t_count, kappa)
     }
 
-    /// Eq. 15 scale: `max(1, max_l √g_l)` with the identical
-    /// first-strict-maximum fold as `ops::lambda_max`, so both the dual
-    /// projection (`ops::dual_feasible`) and the Theorem-1 argmax witness
-    /// come out bit-for-bit as before the seam.
-    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
-        let g = crate::ops::gscore_from_corr(corr, t_count);
-        let (lstar, gmax) = g
+    /// The paper's per-feature `g_l = Σ_t c_{l,t}²` — row-local, so the
+    /// sharded path streams it per block (identically to
+    /// `ops::stream_gscore`, which computes the same numbers).
+    fn infeas_features(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
+        crate::ops::gscore_from_corr(corr, t_count)
+    }
+
+    /// Eq. 15 scale: `max_l √g_l` with the identical first-strict-maximum
+    /// fold as `ops::lambda_max`, so both the dual projection
+    /// (`ops::dual_feasible`) and the Theorem-1 argmax witness come out
+    /// bit-for-bit as before the seam.
+    fn infeas_finish(&self, feats: &[f64]) -> (f64, usize) {
+        let (lstar, gmax) = feats
             .iter()
             .enumerate()
             .fold((0usize, f64::MIN), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });

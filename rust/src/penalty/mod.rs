@@ -18,6 +18,7 @@
 //! | [`Penalty::value`] | `ops` (primal objective, duality gap), path records |
 //! | [`Penalty::prox_inplace`] | FISTA's iterate update |
 //! | [`Penalty::infeasibility`] | `ops::dual_feasible_for` (dual projection) **and** `ops::lambda_max_for` — they are the same computation, see below |
+//! | [`Penalty::infeas_features`] + [`Penalty::infeas_finish`] | the streamed split of `infeasibility`: `ops::stream_infeas_features` runs the per-feature half block-by-block over an MTD3 shard (or ships it to distributed workers) and the coordinator folds the finish half once — out-of-core and cluster paths for every penalty (DESIGN.md §16) |
 //! | [`Penalty::ball_scores`] | DPC / GAP-safe / dynamic screening sweeps |
 //! | [`Penalty::dual_constraints`] | `screening::safety` (post-hoc KKT certificate) |
 //!
@@ -92,7 +93,30 @@ pub trait Penalty: std::fmt::Debug + Send + Sync {
     /// with correlations `c(z)` is projected into the feasible set as
     /// `z / max(1, s)`; evaluated at `z = y` this same `s` *is* λ_max
     /// (module docs).
-    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize);
+    ///
+    /// Provided: the composition of [`Self::infeas_features`] and
+    /// [`Self::infeas_finish`]. Implementations supply the two halves —
+    /// the split is what lets the sharded and distributed paths stream
+    /// the per-feature half block-by-block and fold the finish once.
+    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+        self.infeas_finish(&self.infeas_features(corr, t_count))
+    }
+
+    /// Per-feature half of [`Self::infeasibility`]: one statistic per
+    /// correlation row (ℓ2,1: the paper's `g_l`; SGL: the per-row
+    /// feasibility scale; GOWL: the row norm). Feature `l`'s statistic
+    /// depends only on row `l` of `corr`, so the buffer may be any
+    /// contiguous *chunk* of features — the sharded path evaluates this
+    /// per MTD3 block and concatenates in block order, bit-identical to
+    /// one full-width call (DESIGN.md §16).
+    fn infeas_features(&self, corr: &[f64], t_count: usize) -> Vec<f64>;
+
+    /// Global fold of [`Self::infeas_features`] over all `d` features:
+    /// the `(scale, witness-feature)` pair of [`Self::infeasibility`].
+    /// Runs once on the coordinator, on the fully assembled feature
+    /// vector — GOWL's sorted-prefix fold is why this half cannot
+    /// stream.
+    fn infeas_finish(&self, feats: &[f64]) -> (f64, usize);
 
     /// λ_max = the smallest λ for which W = 0 is optimal, from the
     /// correlation buffer of the response `c(y)`. Provided: identical to
@@ -226,13 +250,21 @@ impl Penalty for PenaltyKind {
         }
     }
 
-    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+    fn infeas_features(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
         match *self {
-            PenaltyKind::L21 => L21.infeasibility(corr, t_count),
+            PenaltyKind::L21 => L21.infeas_features(corr, t_count),
             PenaltyKind::Sgl { alpha } => {
-                SparseGroupLasso { alpha }.infeasibility(corr, t_count)
+                SparseGroupLasso { alpha }.infeas_features(corr, t_count)
             }
-            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.infeasibility(corr, t_count),
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.infeas_features(corr, t_count),
+        }
+    }
+
+    fn infeas_finish(&self, feats: &[f64]) -> (f64, usize) {
+        match *self {
+            PenaltyKind::L21 => L21.infeas_finish(feats),
+            PenaltyKind::Sgl { alpha } => SparseGroupLasso { alpha }.infeas_finish(feats),
+            PenaltyKind::Gowl { gamma } => GroupOwl { gamma }.infeas_finish(feats),
         }
     }
 

@@ -130,12 +130,19 @@ impl Penalty for SparseGroupLasso {
         alive
     }
 
-    fn infeasibility(&self, corr: &[f64], t_count: usize) -> (f64, usize) {
+    /// Per-row minimal feasibility scale (the bisection) — row-local, so
+    /// the sharded path streams it block-by-block.
+    fn infeas_features(&self, corr: &[f64], t_count: usize) -> Vec<f64> {
         let mut scratch = vec![0.0f64; t_count];
+        corr.chunks_exact(t_count).map(|c| self.feature_scale(c, &mut scratch)).collect()
+    }
+
+    /// First-strict-maximum of the per-row scales — the global scale is
+    /// the max because every row constraint must hold simultaneously.
+    fn infeas_finish(&self, feats: &[f64]) -> (f64, usize) {
         let mut best = f64::MIN;
         let mut arg = 0usize;
-        for (l, c) in corr.chunks_exact(t_count).enumerate() {
-            let s = self.feature_scale(c, &mut scratch);
+        for (l, &s) in feats.iter().enumerate() {
             if s > best {
                 best = s;
                 arg = l;

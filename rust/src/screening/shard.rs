@@ -14,13 +14,24 @@
 //! [`super::dpc::DualRef::from_solution`]), so a sharded screen produces
 //! **bit-identical keep-sets** to the dense/CSC path on the same data —
 //! the parity contract `rust/tests/shard_backend.rs` pins down.
+//!
+//! Every streamed sweep writes one contiguous per-block slice of a d- (or
+//! d×T-) length output and the scalar folds happen once on the fully
+//! assembled vector — that shape is what makes the sweeps distributable
+//! (DESIGN.md §16): the [`ShardSweeps`] seam abstracts "produce the full
+//! sweep vector", [`LocalSweeps`] streams it from the local shard, and
+//! `coordinator::distrib` fans block ranges out to worker processes and
+//! reassembles [`SweepPart`]s in fixed block order ([`merge_parts`]) —
+//! bit-identical to the single-process sweep by construction.
 
 use super::dpc::{ball_from_y, DualRef};
 use super::gap::certified_radius;
-use super::{ball_scores, ScreenOutcome};
+use super::ScreenOutcome;
 use crate::data::ShardedDataset;
 use crate::ops::{self, Stacked};
+use crate::penalty::{Penalty, PenaltyKind};
 use anyhow::Result;
+use std::ops::Range;
 
 /// The out-of-core screener: caches the λ-independent b² column-norm
 /// table (one streaming pass at construction) and scores every later ball
@@ -43,12 +54,26 @@ impl ShardScreener {
     /// materialized dataset: consumption order is block order regardless
     /// of prefetch.
     pub fn scores(&self, sh: &ShardedDataset, o: &Stacked, delta: f64) -> Result<Vec<f64>> {
+        self.scores_for(sh, o, delta, &crate::penalty::L21)
+    }
+
+    /// [`Self::scores`] generalized over the penalty seam: the per-block
+    /// score math is the penalty's [`Penalty::ball_scores`] (via
+    /// [`super::ball_scores_for`]), the streaming layout is unchanged.
+    /// For ℓ2,1 this is the identical call chain as [`Self::scores`].
+    pub fn scores_for(
+        &self,
+        sh: &ShardedDataset,
+        o: &Stacked,
+        delta: f64,
+        pen: &dyn Penalty,
+    ) -> Result<Vec<f64>> {
         let t_count = sh.t();
         let mut out = vec![0.0f64; sh.d()];
         sh.for_each_block_pipelined(|b, blk| {
             let range = sh.block_range(b);
             let b2_slice = &self.b2[range.start * t_count..range.end * t_count];
-            let part = ball_scores(blk, b2_slice, o, delta);
+            let part = super::ball_scores_for(blk, b2_slice, o, delta, pen);
             out[range].copy_from_slice(&part);
             Ok(())
         })?;
@@ -102,27 +127,46 @@ pub struct StreamedGap {
 
 /// Evaluate the duality-gap state at `lam` from a residual `r = X W − y`
 /// and `penalty_value` = Ω(W), the penalty value of the W that produced
-/// it (the ℓ2,1 norm here — see below). The feasibility scaling needs
-/// max_l g_l over *all* features — that is the one full streamed sweep
-/// sequential screening re-pays per grid point. Matches
-/// [`crate::ops::duality_gap`] on the materialized dataset bit-for-bit
-/// (same residual, same per-column dots, same fold).
-///
-/// Penalty scope (DESIGN.md §14): the streamed feasibility scaling is the
-/// ℓ2,1 rule (max √g over streamed g-scores), so the sharded path is
-/// ℓ2,1-only for now; `run_path_sharded` rejects other penalties up
-/// front. Generalizing needs a streamed analogue of
-/// `Penalty::infeasibility` — noted in ROADMAP.
+/// it. The feasibility scaling needs the penalty's infeasibility over
+/// *all* features — that is the one full streamed sweep sequential
+/// screening re-pays per grid point. The per-feature half streams
+/// block-by-block ([`crate::ops::stream_infeas_features`]) and the
+/// global fold runs once ([`Penalty::infeas_finish`]); for ℓ2,1 this
+/// matches [`crate::ops::duality_gap`] on the materialized dataset
+/// bit-for-bit (same residual, same per-column dots, same
+/// first-strict-maximum fold — `g_l ≥ 0` makes the witness-carrying fold
+/// equal to the plain `max` the pre-seam code used).
 pub fn streamed_gap(
     sh: &ShardedDataset,
     y: &Stacked,
     lam: f64,
     r: &Stacked,
     penalty_value: f64,
+    pen: &dyn Penalty,
+) -> Result<StreamedGap> {
+    gap_from_sweep(y, lam, r, penalty_value, pen, &mut |z| {
+        ops::stream_infeas_features(sh, z, pen)
+    })
+}
+
+/// The engine behind [`streamed_gap`], parameterized over how the
+/// per-feature infeasibility statistics of the scaled residual are
+/// produced — a local block stream ([`streamed_gap`]) or a distributed
+/// fan-out (`coordinator::distrib`). Everything else (objective, dual
+/// scaling, dual objective) is O(N)/O(d) math on the coordinator, so the
+/// two providers yield bit-identical gap states whenever their sweep
+/// vectors are bit-identical.
+pub fn gap_from_sweep(
+    y: &Stacked,
+    lam: f64,
+    r: &Stacked,
+    penalty_value: f64,
+    pen: &dyn Penalty,
+    infeas: &mut dyn FnMut(&Stacked) -> Result<Vec<f64>>,
 ) -> Result<StreamedGap> {
     let obj = 0.5 * ops::stacked_sqnorm(r) + lam * penalty_value;
     let z = ops::stacked_scale(r, -1.0 / lam);
-    let m = ops::stream_gscore(sh, &z)?.into_iter().fold(0.0f64, f64::max).sqrt();
+    let (m, _) = pen.infeas_finish(&infeas(&z)?);
     let theta = if m > 1.0 { ops::stacked_scale(&z, 1.0 / m) } else { z };
     let dual = ops::dual_obj(y, &theta, lam);
     Ok(StreamedGap { obj, gap: obj - dual, theta })
@@ -147,8 +191,23 @@ pub fn dual_ref_from_streamed(y: &Stacked, lam0: f64, sg: &StreamedGap) -> DualR
 /// column's gradient normal. Returns (reference, λ_max).
 pub fn dual_ref_at_lambda_max(sh: &ShardedDataset) -> Result<(DualRef, f64)> {
     let (lmax, lstar, _) = ops::stream_lambda_max(sh)?;
-    let y = sh.y64();
-    let theta0 = ops::stacked_scale(&y, 1.0 / lmax);
+    let dref = dual_ref_from_witness(sh, &sh.y64(), lmax, lstar)?;
+    Ok((dref, lmax))
+}
+
+/// Build the λ_max [`DualRef`] from an already-computed (λ_max, witness
+/// feature) pair — the tail of [`dual_ref_at_lambda_max`], split out so
+/// a caller that obtained the pair from a *distributed* infeasibility
+/// sweep (or any [`ShardSweeps`]) pays only the single witness-block
+/// load here. The g-sweep fold and this constructor compose to exactly
+/// [`dual_ref_at_lambda_max`].
+pub fn dual_ref_from_witness(
+    sh: &ShardedDataset,
+    y: &Stacked,
+    lmax: f64,
+    lstar: usize,
+) -> Result<DualRef> {
+    let theta0 = ops::stacked_scale(y, 1.0 / lmax);
     let b = sh.block_of(lstar);
     let blk = sh.block(b)?;
     let local = lstar - sh.block_range(b).start;
@@ -167,7 +226,108 @@ pub fn dual_ref_at_lambda_max(sh: &ShardedDataset) -> Result<(DualRef, f64)> {
             out
         })
         .collect();
-    Ok((DualRef { lam0: lmax, theta0, normal, eps: 0.0 }, lmax))
+    Ok(DualRef { lam0: lmax, theta0, normal, eps: 0.0 })
+}
+
+// ---------------------------------------------------------------------------
+// the distribution seam (DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+/// One contiguous slice of a streamed sweep: the values for columns
+/// `cols` of the full d-length (stride 1) or d×T-length (stride T)
+/// sweep vector. Workers return these; [`merge_parts`] reassembles.
+#[derive(Debug, Clone)]
+pub struct SweepPart {
+    /// the feature (column) range this part covers
+    pub cols: Range<usize>,
+    /// `(cols.len() × stride)` values, in ascending column order
+    pub values: Vec<f64>,
+}
+
+/// Merge sweep parts into the full `d × stride` vector **in fixed column
+/// order** — the bit-parity rule of DESIGN.md §16: every per-block slice
+/// lands at the offset the single-process sweep would have written it
+/// to, so the merged vector is bit-identical no matter which worker
+/// produced which part or in what order replies arrived. Errors if the
+/// parts do not tile `0..d` exactly (a gap, overlap, or short part means
+/// a lost or duplicated block range — never silently screen on that).
+pub fn merge_parts(d: usize, stride: usize, mut parts: Vec<SweepPart>) -> Result<Vec<f64>> {
+    parts.sort_by_key(|p| p.cols.start);
+    let mut out = Vec::with_capacity(d * stride);
+    let mut next = 0usize;
+    for p in &parts {
+        anyhow::ensure!(
+            p.cols.start == next && p.cols.end <= d,
+            "sweep parts do not tile the column range: part {:?} at column {next} of {d}",
+            p.cols
+        );
+        anyhow::ensure!(
+            p.values.len() == (p.cols.end - p.cols.start) * stride,
+            "sweep part {:?} carries {} values, want {} (stride {stride})",
+            p.cols,
+            p.values.len(),
+            (p.cols.end - p.cols.start) * stride
+        );
+        out.extend_from_slice(&p.values);
+        next = p.cols.end;
+    }
+    anyhow::ensure!(next == d, "sweep parts cover only {next} of {d} columns");
+    Ok(out)
+}
+
+/// The sweep provider a sharded path run screens through: "produce the
+/// full d-length sweep vector for this ball / this dual point". The
+/// single-process path streams from the local shard ([`LocalSweeps`]);
+/// the distributed coordinator (`coordinator::distrib`) fans block
+/// ranges out to worker processes and merges their [`SweepPart`]s. The
+/// path core is written against this trait, so both modes execute the
+/// *same* grid loop — the bit-parity contract reduces to "same sweep
+/// vectors in, same keep-sets and solutions out".
+pub trait ShardSweeps {
+    /// Theorem-7 / penalty ball scores over the ball `(o, delta)`, one
+    /// per feature (the screening sweep).
+    fn ball_scores(&mut self, o: &Stacked, delta: f64) -> Result<Vec<f64>>;
+
+    /// Per-feature infeasibility statistics of the dual point `z`
+    /// ([`Penalty::infeas_features`] streamed over all blocks) — the
+    /// caller folds with [`Penalty::infeas_finish`].
+    fn infeas_features(&mut self, z: &Stacked) -> Result<Vec<f64>>;
+
+    /// Grid-step barrier: called once after every λ step with the step
+    /// index, λ, and the surviving feature count. Single-process sweeps
+    /// ignore it; the distributed provider uses it to broadcast the
+    /// merged step summary and collect worker ledgers (DESIGN.md §16).
+    fn step_done(&mut self, _step: usize, _lam: f64, _kept: usize) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// [`ShardSweeps`] over the local shard: the screener's cached b² table
+/// plus the block-streamed sweeps this module already provides. This is
+/// exactly what `run_path_sharded` always executed — the trait's methods
+/// delegate to the same functions in the same order.
+pub struct LocalSweeps<'a> {
+    sh: &'a ShardedDataset,
+    pen: PenaltyKind,
+    screener: ShardScreener,
+}
+
+impl<'a> LocalSweeps<'a> {
+    /// Build the provider (one streaming b² pass, as
+    /// [`ShardScreener::new`] always cost).
+    pub fn new(sh: &'a ShardedDataset, pen: PenaltyKind) -> Result<Self> {
+        Ok(LocalSweeps { sh, pen, screener: ShardScreener::new(sh)? })
+    }
+}
+
+impl ShardSweeps for LocalSweeps<'_> {
+    fn ball_scores(&mut self, o: &Stacked, delta: f64) -> Result<Vec<f64>> {
+        self.screener.scores_for(self.sh, o, delta, &self.pen)
+    }
+
+    fn infeas_features(&mut self, z: &Stacked) -> Result<Vec<f64>> {
+        ops::stream_infeas_features(self.sh, z, &self.pen)
+    }
 }
 
 #[cfg(test)]
@@ -244,7 +404,7 @@ mod tests {
         let r = ops::residual(&ds, &sol.w);
         let l21 = ops::l21_norm(&sol.w, ds.t());
         let y = sh.y64();
-        let sg = streamed_gap(&sh, &y, lam, &r, l21).unwrap();
+        let sg = streamed_gap(&sh, &y, lam, &r, l21, &crate::penalty::L21).unwrap();
         assert_eq!(sg.obj.to_bits(), obj_ram.to_bits());
         assert_eq!(sg.gap.to_bits(), gap_ram.to_bits());
         assert_eq!(sg.theta, theta_ram);
@@ -255,5 +415,91 @@ mod tests {
         assert_eq!(dref_sh.normal, dref_ram.normal);
         assert_eq!(dref_sh.eps.to_bits(), dref_ram.eps.to_bits());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn streamed_infeasibility_matches_in_ram_for_every_penalty() {
+        // satellite of ROADMAP 4a: infeas_features streamed per block +
+        // one infeas_finish fold must equal the in-RAM infeasibility
+        // bit-for-bit for all three penalties (GOWL's sort runs on the
+        // assembled vector, so block order must not matter)
+        let ds = problem();
+        let (sh, p) = sharded(&ds, "inf");
+        let y = ops::y64(&ds);
+        let corr = ops::task_corr(&ds, &y);
+        for pk in [
+            PenaltyKind::L21,
+            PenaltyKind::Sgl { alpha: 0.4 },
+            PenaltyKind::Gowl { gamma: 1.5 },
+        ] {
+            let (want_s, want_l) = pk.infeasibility(&corr, ds.t());
+            let feats = ops::stream_infeas_features(&sh, &y, &pk).unwrap();
+            let (got_s, got_l) = pk.infeas_finish(&feats);
+            assert_eq!(got_s.to_bits(), want_s.to_bits(), "{pk}: scale mismatch");
+            assert_eq!(got_l, want_l, "{pk}: witness mismatch");
+        }
+        // ... and for ℓ2,1 the streamed pair IS stream_lambda_max
+        let (lmax, lstar, _) = ops::stream_lambda_max(&sh).unwrap();
+        let feats = ops::stream_infeas_features(&sh, &y, &PenaltyKind::L21).unwrap();
+        let (s, l) = PenaltyKind::L21.infeas_finish(&feats);
+        assert_eq!(s.to_bits(), lmax.to_bits());
+        assert_eq!(l, lstar);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn local_sweeps_match_the_raw_streamed_sweeps() {
+        let ds = problem();
+        let (sh, p) = sharded(&ds, "lsweeps");
+        let (dref, lmax) = DualRef::at_lambda_max(&ds);
+        let y = sh.y64();
+        let lam = 0.5 * lmax;
+        let (o, delta) = ball_from_y(&y, &dref, lam);
+        let screener = ShardScreener::new(&sh).unwrap();
+        let want_scores = screener.scores(&sh, &o, delta).unwrap();
+        let mut sweeps = LocalSweeps::new(&sh, PenaltyKind::L21).unwrap();
+        let got_scores = sweeps.ball_scores(&o, delta).unwrap();
+        for (a, b) in want_scores.iter().zip(&got_scores) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let want_g = ops::stream_gscore(&sh, &y).unwrap();
+        let got_g = sweeps.infeas_features(&y).unwrap();
+        for (a, b) in want_g.iter().zip(&got_g) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        sweeps.step_done(0, lam, 3).unwrap(); // default barrier is a no-op
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn merge_parts_reassembles_in_column_order() {
+        // arrival order must not matter; only column offsets do
+        let parts = vec![
+            SweepPart { cols: 3..5, values: vec![3.0, 4.0] },
+            SweepPart { cols: 0..3, values: vec![0.0, 1.0, 2.0] },
+        ];
+        let v = merge_parts(5, 1, parts).unwrap();
+        assert_eq!(v, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        // stride > 1 (the b² table shape)
+        let parts = vec![
+            SweepPart { cols: 1..2, values: vec![2.0, 3.0] },
+            SweepPart { cols: 0..1, values: vec![0.0, 1.0] },
+        ];
+        assert_eq!(merge_parts(2, 2, parts).unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn merge_parts_rejects_gaps_overlaps_and_short_parts() {
+        let gap = vec![SweepPart { cols: 1..3, values: vec![1.0, 2.0] }];
+        assert!(merge_parts(3, 1, gap).is_err(), "gap at the head must error");
+        let overlap = vec![
+            SweepPart { cols: 0..2, values: vec![0.0, 1.0] },
+            SweepPart { cols: 1..3, values: vec![1.0, 2.0] },
+        ];
+        assert!(merge_parts(3, 1, overlap).is_err(), "overlap must error");
+        let short = vec![SweepPart { cols: 0..2, values: vec![0.0] }];
+        assert!(merge_parts(2, 1, short).is_err(), "wrong value count must error");
+        let missing_tail = vec![SweepPart { cols: 0..2, values: vec![0.0, 1.0] }];
+        assert!(merge_parts(3, 1, missing_tail).is_err(), "uncovered tail must error");
     }
 }

@@ -19,6 +19,15 @@
 //! `idle` hook runs once per pacing iteration; benches pass the
 //! in-process server's `tick` so one thread can drive both ends
 //! deterministically, the CLI passes a no-op.
+//!
+//! Besides the ramp there is a *soak* mode ([`run_soak`], `repro load
+//! --soak RPS --duration S`): hold one fixed offered rate for a long
+//! window and watch for latency **drift** — the slow p95 climb of a
+//! leak or an unbounded queue that a short ramp level never sees. The
+//! run is sliced into fixed windows; if the mean windowed p95 of the
+//! second half exceeds the first half by more than the drift threshold,
+//! the report flags `drifted` (saturation is flagged separately, same
+//! 90%-of-offered rule as the ramp).
 
 use super::json::{self, Value};
 use super::proto::{self, FrameDecoder};
@@ -165,20 +174,8 @@ pub fn run_load(
 ) -> Result<LoadReport> {
     anyhow::ensure!(opts.d > 0, "LoadOptions.d must be set (from the info op)");
     anyhow::ensure!(opts.conns > 0 && opts.rows > 0, "conns and rows must be >= 1");
-    let payloads = build_payloads(opts);
-    let mut conns = Vec::with_capacity(opts.conns);
-    for _ in 0..opts.conns {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-        stream.set_nonblocking(true).context("set_nonblocking")?;
-        stream.set_nodelay(true).ok();
-        conns.push(LoadConn {
-            stream,
-            dec: FrameDecoder::new(),
-            out: Vec::new(),
-            outpos: 0,
-            inflight: VecDeque::new(),
-        });
-    }
+    let payloads = build_payloads(opts.d, opts.rows, opts.ratio, opts.seed);
+    let mut conns = connect_pool(addr, opts.conns)?;
 
     let clock = Stopwatch::started();
     let mut levels = Vec::new();
@@ -193,7 +190,7 @@ pub fn run_load(
         let mut sent = 0u64;
         let mut completed = 0u64;
         let mut errors = 0u64;
-        let mut latencies: Vec<f64> = Vec::new();
+        let mut samples: Vec<(f64, f64)> = Vec::new();
 
         // hold the level, then grace-drain stragglers (up to step_secs)
         let mut draining = false;
@@ -222,7 +219,7 @@ pub fn run_load(
                     sent += 1;
                 }
             }
-            pump(&mut conns, &clock, &mut latencies, &mut completed, &mut errors)?;
+            pump(&mut conns, &clock, &mut samples, &mut completed, &mut errors)?;
             idle()?;
             std::thread::sleep(Duration::from_micros(200));
         }
@@ -232,6 +229,7 @@ pub fn run_load(
         let elapsed = (clock.secs() - t0).max(1e-9);
         let achieved = completed as f64 / elapsed;
         total_completed += completed;
+        let latencies: Vec<f64> = samples.iter().map(|s| s.1).collect();
         levels.push(LevelStats {
             offered_rps: offered,
             achieved_rps: achieved,
@@ -265,14 +263,14 @@ pub fn run_load(
 
 /// Deterministic request pool: a few distinct predict payloads with
 /// seeded-random rows (values in [-1, 1]).
-fn build_payloads(opts: &LoadOptions) -> Vec<String> {
-    let mut rng = Pcg64::new(opts.seed);
+fn build_payloads(d: usize, rows: usize, ratio: f64, seed: u64) -> Vec<String> {
+    let mut rng = Pcg64::new(seed);
     (0..8)
         .map(|_| {
-            let rows: Vec<Value> = (0..opts.rows)
+            let rows: Vec<Value> = (0..rows)
                 .map(|_| {
                     Value::Arr(
-                        (0..opts.d)
+                        (0..d)
                             // f32 images so the wire trip is exact
                             .map(|_| Value::Num(rng.uniform_in(-1.0, 1.0) as f32 as f64))
                             .collect(),
@@ -281,7 +279,7 @@ fn build_payloads(opts: &LoadOptions) -> Vec<String> {
                 .collect();
             Value::Obj(vec![
                 ("op".into(), Value::Str("predict".into())),
-                ("ratio".into(), Value::Num(opts.ratio)),
+                ("ratio".into(), Value::Num(ratio)),
                 ("rows".into(), Value::Arr(rows)),
             ])
             .to_json()
@@ -289,11 +287,31 @@ fn build_payloads(opts: &LoadOptions) -> Vec<String> {
         .collect()
 }
 
-/// Flush writes, read replies, account latencies/errors.
+/// Open `n` nonblocking pipelined connections to the daemon.
+fn connect_pool(addr: &str, n: usize) -> Result<Vec<LoadConn>> {
+    let mut conns = Vec::with_capacity(n);
+    for _ in 0..n {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        stream.set_nodelay(true).ok();
+        conns.push(LoadConn {
+            stream,
+            dec: FrameDecoder::new(),
+            out: Vec::new(),
+            outpos: 0,
+            inflight: VecDeque::new(),
+        });
+    }
+    Ok(conns)
+}
+
+/// Flush writes, read replies, account latencies/errors. Each completed
+/// reply appends `(completed_at, latency)` in clock seconds — the ramp
+/// uses only the latency, the soak's drift windows also need the time.
 fn pump(
     conns: &mut [LoadConn],
     clock: &Stopwatch,
-    latencies: &mut Vec<f64>,
+    samples: &mut Vec<(f64, f64)>,
     completed: &mut u64,
     errors: &mut u64,
 ) -> Result<()> {
@@ -338,7 +356,8 @@ fn pump(
                 .inflight
                 .pop_front()
                 .ok_or_else(|| anyhow::anyhow!("reply with no request in flight"))?;
-            latencies.push(clock.secs() - sent_at);
+            let done_at = clock.secs();
+            samples.push((done_at, done_at - sent_at));
             *completed += 1;
             let ok = json::parse(std::str::from_utf8(&payload).unwrap_or("{}"))
                 .ok()
@@ -350,4 +369,310 @@ fn pump(
         }
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// soak mode: fixed rate, long hold, latency-drift detection
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`run_soak`] (`repro load --soak RPS --duration S`).
+#[derive(Debug, Clone)]
+pub struct SoakOptions {
+    /// the one fixed offered rate (req/s)
+    pub rps: f64,
+    /// seconds to hold it
+    pub duration_secs: f64,
+    /// seconds per drift window (the p95 sampling grain)
+    pub window_secs: f64,
+    /// `drifted` when mean p95 of the run's second half exceeds the
+    /// first half by more than this factor
+    pub drift_threshold: f64,
+    /// pipelined connections
+    pub conns: usize,
+    /// rows per predict request
+    pub rows: usize,
+    /// λ/λ_max of the model to predict against (must be fitted)
+    pub ratio: f64,
+    /// workload-generator seed
+    pub seed: u64,
+    /// feature dimension of generated rows (from the `info` op)
+    pub d: usize,
+}
+
+impl Default for SoakOptions {
+    fn default() -> Self {
+        SoakOptions {
+            rps: 50.0,
+            duration_secs: 30.0,
+            window_secs: 5.0,
+            drift_threshold: 1.5,
+            conns: 4,
+            rows: 4,
+            ratio: 0.1,
+            seed: 0,
+            d: 0,
+        }
+    }
+}
+
+/// One drift window of a soak run.
+#[derive(Debug, Clone)]
+pub struct SoakWindow {
+    /// window start, seconds since the soak began
+    pub t0_secs: f64,
+    /// replies completed inside the window
+    pub completed: u64,
+    /// windowed 95th-percentile latency, ms
+    pub p95_ms: f64,
+}
+
+/// [`run_soak`]'s result (→ `BENCH_soak.json`).
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    /// the fixed offered rate
+    pub offered_rps: f64,
+    /// completed replies per second over the whole run (drain included)
+    pub achieved_rps: f64,
+    /// requests sent
+    pub sent: u64,
+    /// replies received
+    pub completed: u64,
+    /// `ok:false` replies + transport failures
+    pub errors: u64,
+    /// whole-run median latency, ms
+    pub p50_ms: f64,
+    /// whole-run 95th-percentile latency, ms
+    pub p95_ms: f64,
+    /// whole-run 99th-percentile latency, ms
+    pub p99_ms: f64,
+    /// per-window p95 series, in time order (empty windows skipped)
+    pub windows: Vec<SoakWindow>,
+    /// mean windowed p95 of the second half over the first half
+    pub drift_ratio: f64,
+    /// `drift_ratio > drift_threshold`: latency is climbing under a
+    /// constant load — a leak or an unbounded queue, not saturation
+    pub drifted: bool,
+    /// achieved < 90% of offered (the ramp's saturation rule)
+    pub saturated: bool,
+    /// the options the soak ran with
+    pub opts: SoakOptions,
+}
+
+impl SoakReport {
+    /// JSON form (the schema of `BENCH_soak.json`).
+    pub fn to_json(&self, provisional: bool) -> Value {
+        let windows = self
+            .windows
+            .iter()
+            .map(|w| {
+                Value::Obj(vec![
+                    ("t0_secs".into(), Value::Num(w.t0_secs)),
+                    ("completed".into(), Value::Num(w.completed as f64)),
+                    ("p95_ms".into(), Value::Num(w.p95_ms)),
+                ])
+            })
+            .collect();
+        Value::Obj(vec![
+            ("bench".into(), Value::Str("soak".into())),
+            ("provisional".into(), Value::Bool(provisional)),
+            ("d".into(), Value::Num(self.opts.d as f64)),
+            ("rows_per_request".into(), Value::Num(self.opts.rows as f64)),
+            ("ratio".into(), Value::Num(self.opts.ratio)),
+            ("conns".into(), Value::Num(self.opts.conns as f64)),
+            ("duration_secs".into(), Value::Num(self.opts.duration_secs)),
+            ("window_secs".into(), Value::Num(self.opts.window_secs)),
+            ("offered_rps".into(), Value::Num(self.offered_rps)),
+            ("achieved_rps".into(), Value::Num(self.achieved_rps)),
+            ("sent".into(), Value::Num(self.sent as f64)),
+            ("completed".into(), Value::Num(self.completed as f64)),
+            ("errors".into(), Value::Num(self.errors as f64)),
+            ("p50_ms".into(), Value::Num(self.p50_ms)),
+            ("p95_ms".into(), Value::Num(self.p95_ms)),
+            ("p99_ms".into(), Value::Num(self.p99_ms)),
+            ("drift_ratio".into(), Value::Num(self.drift_ratio)),
+            ("drift_threshold".into(), Value::Num(self.opts.drift_threshold)),
+            ("drifted".into(), Value::Bool(self.drifted)),
+            ("saturated".into(), Value::Bool(self.saturated)),
+            ("windows".into(), Value::Arr(windows)),
+        ])
+    }
+}
+
+/// Hold one fixed offered rate for the soak duration, then fold the
+/// completion stream into drift windows (module docs). Same client
+/// machinery and `idle` contract as [`run_load`].
+pub fn run_soak(
+    addr: &str,
+    opts: &SoakOptions,
+    idle: &mut dyn FnMut() -> Result<()>,
+) -> Result<SoakReport> {
+    anyhow::ensure!(opts.d > 0, "SoakOptions.d must be set (from the info op)");
+    anyhow::ensure!(opts.conns > 0 && opts.rows > 0, "conns and rows must be >= 1");
+    anyhow::ensure!(opts.rps > 0.0, "--soak needs an offered rate > 0");
+    anyhow::ensure!(opts.duration_secs > 0.0, "--duration must be > 0");
+    anyhow::ensure!(opts.window_secs > 0.0, "--window must be > 0");
+    let payloads = build_payloads(opts.d, opts.rows, opts.ratio, opts.seed);
+    let mut conns = connect_pool(addr, opts.conns)?;
+
+    let clock = Stopwatch::started();
+    let mut sent = 0u64;
+    let mut completed = 0u64;
+    let mut errors = 0u64;
+    let mut samples: Vec<(f64, f64)> = Vec::new();
+    let mut payload_rr = 0usize;
+    let mut conn_rr = 0usize;
+
+    // hold the rate, then grace-drain stragglers (up to one window)
+    let mut draining = false;
+    loop {
+        let now = clock.secs();
+        if !draining && now >= opts.duration_secs {
+            draining = true;
+        }
+        if draining {
+            let outstanding: usize = conns.iter().map(|c| c.inflight.len()).sum();
+            if outstanding == 0 || now >= opts.duration_secs + opts.window_secs {
+                break;
+            }
+        } else {
+            let due = (now * opts.rps) as u64;
+            while sent < due {
+                let c = &mut conns[conn_rr % conns.len()];
+                conn_rr += 1;
+                proto::encode_frame(
+                    payloads[payload_rr % payloads.len()].as_bytes(),
+                    &mut c.out,
+                );
+                payload_rr += 1;
+                c.inflight.push_back(clock.secs());
+                sent += 1;
+            }
+        }
+        pump(&mut conns, &clock, &mut samples, &mut completed, &mut errors)?;
+        idle()?;
+        std::thread::sleep(Duration::from_micros(200));
+    }
+
+    let elapsed = clock.secs().max(1e-9);
+    let latencies: Vec<f64> = samples.iter().map(|s| s.1).collect();
+    let (windows, drift_ratio) = drift_windows(&samples, opts.window_secs);
+    let achieved = completed as f64 / elapsed;
+    Ok(SoakReport {
+        offered_rps: opts.rps,
+        achieved_rps: achieved,
+        sent,
+        completed,
+        errors,
+        p50_ms: percentile(&latencies, 0.50) * 1e3,
+        p95_ms: percentile(&latencies, 0.95) * 1e3,
+        p99_ms: percentile(&latencies, 0.99) * 1e3,
+        windows,
+        drift_ratio,
+        drifted: drift_ratio > opts.drift_threshold,
+        saturated: achieved < 0.9 * opts.rps,
+        opts: opts.clone(),
+    })
+}
+
+/// Slice `(completed_at, latency)` samples into fixed windows and
+/// compare the halves: ratio of the second half's mean windowed p95 to
+/// the first half's. 1.0 (no drift) when fewer than two non-empty
+/// windows exist or the first half saw no latency.
+fn drift_windows(samples: &[(f64, f64)], window_secs: f64) -> (Vec<SoakWindow>, f64) {
+    let mut windows: Vec<SoakWindow> = Vec::new();
+    if samples.is_empty() {
+        return (windows, 1.0);
+    }
+    let end = samples.iter().map(|s| s.0).fold(0.0f64, f64::max);
+    let n_win = (end / window_secs).floor() as usize + 1;
+    for w in 0..n_win {
+        let (lo, hi) = (w as f64 * window_secs, (w as f64 + 1.0) * window_secs);
+        let lats: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.0 >= lo && s.0 < hi)
+            .map(|s| s.1)
+            .collect();
+        if lats.is_empty() {
+            continue;
+        }
+        windows.push(SoakWindow {
+            t0_secs: lo,
+            completed: lats.len() as u64,
+            p95_ms: percentile(&lats, 0.95) * 1e3,
+        });
+    }
+    if windows.len() < 2 {
+        return (windows, 1.0);
+    }
+    let p95s: Vec<f64> = windows.iter().map(|w| w.p95_ms).collect();
+    let half = p95s.len() / 2;
+    let first = crate::linalg::simd::mean_serial_f64(&p95s[..half]);
+    let last = crate::linalg::simd::mean_serial_f64(&p95s[half..]);
+    let ratio = if first > 0.0 { last / first } else { 1.0 };
+    (windows, ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_samples(spec: &[(f64, f64, u64)]) -> Vec<(f64, f64)> {
+        // (window_center, latency, count) triples → flat samples
+        let mut out = Vec::new();
+        for &(t, lat, n) in spec {
+            for k in 0..n {
+                out.push((t + k as f64 * 1e-3, lat));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn flat_latency_does_not_drift() {
+        let s = fake_samples(&[
+            (0.5, 0.010, 20),
+            (1.5, 0.010, 20),
+            (2.5, 0.010, 20),
+            (3.5, 0.010, 20),
+        ]);
+        let (windows, ratio) = drift_windows(&s, 1.0);
+        assert_eq!(windows.len(), 4);
+        assert!((ratio - 1.0).abs() < 1e-12, "flat p95 must give ratio 1 (got {ratio})");
+    }
+
+    #[test]
+    fn climbing_latency_drifts() {
+        // p95 doubles twice across the run: second half ≫ 1.5× first
+        let s = fake_samples(&[
+            (0.5, 0.010, 20),
+            (1.5, 0.012, 20),
+            (2.5, 0.030, 20),
+            (3.5, 0.040, 20),
+        ]);
+        let (windows, ratio) = drift_windows(&s, 1.0);
+        assert_eq!(windows.len(), 4);
+        assert!(ratio > 1.5, "climbing p95 must trip the 1.5 threshold (got {ratio})");
+    }
+
+    #[test]
+    fn sparse_runs_fall_back_to_no_drift() {
+        let (w, ratio) = drift_windows(&[], 1.0);
+        assert!(w.is_empty());
+        assert_eq!(ratio, 1.0);
+        let (w, ratio) = drift_windows(&[(0.1, 0.01), (0.2, 0.01)], 1.0);
+        assert_eq!(w.len(), 1, "one non-empty window");
+        assert_eq!(ratio, 1.0, "a single window cannot drift");
+    }
+
+    #[test]
+    fn empty_windows_are_skipped_not_zeroed() {
+        // a gap in completions (stalled server) must not fabricate a
+        // zero-latency window that would mask drift on either side
+        let s = fake_samples(&[(0.5, 0.010, 20), (4.5, 0.030, 20)]);
+        let (windows, ratio) = drift_windows(&s, 1.0);
+        assert_eq!(windows.len(), 2);
+        assert_eq!(windows[0].t0_secs, 0.0);
+        assert_eq!(windows[1].t0_secs, 4.0);
+        assert!(ratio > 1.5);
+    }
 }

@@ -29,5 +29,5 @@ pub mod server;
 pub mod stats;
 
 pub use cache::{ModelCache, ModelEntry};
-pub use load::{run_load, LoadOptions, LoadReport};
+pub use load::{run_load, run_soak, LoadOptions, LoadReport, SoakOptions, SoakReport};
 pub use server::{Server, ServerOptions};

@@ -1,0 +1,275 @@
+//! Distributed shard-sweep integration (DESIGN.md §16): a coordinator
+//! plus real `repro worker` subprocesses must reproduce the
+//! single-process sharded path **bitwise** — identical keep-sets,
+//! identical objective/gap bits, identical final solutions — at any
+//! worker count, under an injected worker failure mid-sweep, and across
+//! a checkpoint interrupt/resume. Corrupted checkpoints must fail with
+//! an error that names `--checkpoint`.
+
+use mtfl_dpc::coordinator::checkpoint::step_path;
+use mtfl_dpc::coordinator::distrib::{Coordinator, DistribSweeps};
+use mtfl_dpc::coordinator::lambda_grid;
+use mtfl_dpc::coordinator::path::{
+    run_path_sharded, run_path_sharded_checkpointed, run_path_sharded_core, FnObserver,
+    LambdaRecord, PathOptions, ScreenerKind, ShardRunResult,
+};
+use mtfl_dpc::coordinator::{run_path_distributed, CheckpointCfg, DistribOptions};
+use mtfl_dpc::data::io::save_sharded;
+use mtfl_dpc::data::synthetic::{synthetic1, SynthOptions};
+use mtfl_dpc::data::{Dataset, ShardedDataset};
+use mtfl_dpc::solver::SolveOptions;
+use mtfl_dpc::PenaltyKind;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mtfl_distrib_{}_{}", std::process::id(), name))
+}
+
+fn dense_problem() -> Dataset {
+    synthetic1(&SynthOptions {
+        t: 3,
+        n: 14,
+        d: 120,
+        support_frac: 0.08,
+        noise: 0.05,
+        seed: 77,
+    })
+    .0
+}
+
+fn shard_of(ds: &Dataset, tag: &str) -> (ShardedDataset, PathBuf) {
+    let p = tmp(tag);
+    save_sharded(ds, &p, 2500).unwrap();
+    (ShardedDataset::open(&p).unwrap(), p)
+}
+
+fn path_opts(screener: ScreenerKind, pen: PenaltyKind) -> PathOptions {
+    let mut opts = PathOptions {
+        ratios: lambda_grid(10, 1.0, 0.05),
+        solve: SolveOptions { tol: 1e-7, ..Default::default() },
+        screener,
+        ..Default::default()
+    };
+    opts.solve.penalty = pen;
+    opts
+}
+
+fn noop() -> FnObserver<impl FnMut(f64, f64, &[f64], &LambdaRecord)> {
+    FnObserver(|_: f64, _: f64, _: &[f64], _: &LambdaRecord| {})
+}
+
+/// Grab an ephemeral port the OS considers free right now. The
+/// bind-and-drop race is theoretical at test scale, and it lets the
+/// workers be launched before the coordinator binds (they retry).
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["worker", "--connect", addr, "--cache-mb", "64"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn repro worker")
+}
+
+/// records + final solution must agree bit for bit.
+fn assert_bitwise(a: &ShardRunResult, b: &ShardRunResult, what: &str) {
+    assert_eq!(a.path.lam_max.to_bits(), b.path.lam_max.to_bits(), "{what}: lam_max");
+    assert_eq!(a.path.records.len(), b.path.records.len(), "{what}: record count");
+    for (x, y) in a.path.records.iter().zip(&b.path.records) {
+        assert_eq!(x.lam.to_bits(), y.lam.to_bits(), "{what}: lam at {}", x.ratio);
+        assert_eq!(x.kept, y.kept, "{what}: kept at ratio {}", x.ratio);
+        assert_eq!(x.rejected, y.rejected, "{what}: rejected at ratio {}", x.ratio);
+        assert_eq!(x.obj.to_bits(), y.obj.to_bits(), "{what}: obj at ratio {}", x.ratio);
+        assert_eq!(x.gap.to_bits(), y.gap.to_bits(), "{what}: gap at ratio {}", x.ratio);
+    }
+    assert_eq!(a.path.last_w.len(), b.path.last_w.len());
+    for (i, (x, y)) in a.path.last_w.iter().zip(&b.path.last_w).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: last_w[{i}]");
+    }
+}
+
+/// Run the path distributed over `workers` externally launched worker
+/// processes (the `--no-spawn` topology, which is also what CI uses
+/// implicitly through `--distributed N`'s self-spawning).
+fn distributed_run(
+    sh: &ShardedDataset,
+    shard_path: &PathBuf,
+    opts: &PathOptions,
+    workers: usize,
+) -> ShardRunResult {
+    let addr = free_addr();
+    let mut children: Vec<Child> = (0..workers).map(|_| spawn_worker(&addr)).collect();
+    let dopts = DistribOptions {
+        workers,
+        listen: addr,
+        spawn_local: false,
+        worker_timeout_secs: 60.0,
+        cache_mb: 64,
+    };
+    let mut obs = noop();
+    let res = run_path_distributed(sh, shard_path, opts, &dopts, &mut obs, None).unwrap();
+    for c in &mut children {
+        let _ = c.wait();
+    }
+    res
+}
+
+#[test]
+fn distributed_matches_single_process_bitwise_at_widths_1_and_4() {
+    let ds = dense_problem();
+    let (sh, p) = shard_of(&ds, "parity.mtd3");
+    assert!(sh.n_blocks() > 2, "want a multi-block shard, got {}", sh.n_blocks());
+    let opts = path_opts(ScreenerKind::Dpc, PenaltyKind::L21);
+    let single = run_path_sharded(&sh, &opts).unwrap();
+    for workers in [1usize, 4] {
+        let dist = distributed_run(&sh, &p, &opts, workers);
+        assert_bitwise(&single, &dist, &format!("{workers} workers"));
+        // the ledger accounts for every block exactly once
+        let assigned: usize = dist.workers.iter().map(|w| w.blocks).sum();
+        assert_eq!(assigned, sh.n_blocks(), "{workers} workers: block coverage");
+        assert!(
+            dist.workers.iter().all(|w| w.sweeps > 0),
+            "{workers} workers: every worker should have swept something"
+        );
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn distributed_streams_non_l21_penalties_too() {
+    // satellite of the Penalty::infeasibility seam: the distributed
+    // infeas sweep is penalty-generic, so sgl + gap screening must also
+    // match the single-process run bitwise
+    let ds = dense_problem();
+    let (sh, p) = shard_of(&ds, "parity_sgl.mtd3");
+    let opts = path_opts(ScreenerKind::GapSafe, PenaltyKind::Sgl { alpha: 0.5 });
+    let single = run_path_sharded(&sh, &opts).unwrap();
+    let dist = distributed_run(&sh, &p, &opts, 2);
+    assert_bitwise(&single, &dist, "sgl/gap 2 workers");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn a_worker_death_mid_sweep_reassigns_and_stays_bitwise() {
+    // 2 real workers + 1 scripted fake: the fake answers hello (the
+    // reply is pre-written into the socket before the coordinator even
+    // asks — per-connection streams make that legal) and then FINs its
+    // write side, so its first sweep request reads EOF at the
+    // coordinator. Its block ranges must be reassigned to the survivors
+    // and the merged result must not change by a single bit.
+    let ds = dense_problem();
+    let (sh, p) = shard_of(&ds, "fault.mtd3");
+    let opts = path_opts(ScreenerKind::Dpc, PenaltyKind::L21);
+    let single = run_path_sharded(&sh, &opts).unwrap();
+
+    let coord = Coordinator::bind("127.0.0.1:0").unwrap();
+    let addr = coord.local_addr().to_string();
+    let mut children = vec![spawn_worker(&addr), spawn_worker(&addr)];
+    let mut fake = std::net::TcpStream::connect(&addr).unwrap();
+    mtfl_dpc::serve::proto::write_frame(
+        &mut fake,
+        mtfl_dpc::serve::proto::ok_reply(mtfl_dpc::serve::json::Value::Null).as_bytes(),
+    )
+    .unwrap();
+    fake.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let mut sweeps =
+        DistribSweeps::connect(&sh, &p, opts.solve.penalty, &coord, 3, 60.0).unwrap();
+    let mut obs = noop();
+    let res = run_path_sharded_core(&sh, &opts, &mut obs, &mut sweeps, None).unwrap();
+    sweeps.shutdown();
+    let ledgers = sweeps.ledgers();
+    drop(sweeps);
+    drop(fake);
+    for c in &mut children {
+        let _ = c.wait();
+    }
+    std::fs::remove_file(&p).ok();
+
+    assert_bitwise(&single, &res, "2 survivors + 1 dead");
+    // the dead worker ends owning nothing; survivors cover every block
+    let assigned: usize = ledgers.iter().map(|w| w.blocks).sum();
+    assert_eq!(assigned, sh.n_blocks(), "surviving coverage");
+    let idle = ledgers.iter().filter(|w| w.sweeps == 0).count();
+    assert_eq!(idle, 1, "exactly the fake worker served zero sweeps: {ledgers:?}");
+}
+
+#[test]
+fn resume_mid_grid_reproduces_the_path_bitwise() {
+    let ds = dense_problem();
+    let (sh, p) = shard_of(&ds, "ckpt.mtd3");
+    let opts = path_opts(ScreenerKind::Dpc, PenaltyKind::L21);
+    let dir = tmp("ckpt_dir");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let cfg = CheckpointCfg { dir: dir.clone(), resume: false };
+    let mut obs = noop();
+    let full = run_path_sharded_checkpointed(&sh, &opts, &mut obs, Some(&cfg)).unwrap();
+
+    // interrupt after step 3: drop every later record, resume, compare
+    for step in 4..opts.ratios.len() {
+        std::fs::remove_file(step_path(&dir, step)).unwrap();
+    }
+    let cfg = CheckpointCfg { dir: dir.clone(), resume: true };
+    let mut obs = noop();
+    let resumed = run_path_sharded_checkpointed(&sh, &opts, &mut obs, Some(&cfg)).unwrap();
+    assert_bitwise(&full, &resumed, "resume from step 3");
+
+    // a completed run resumes to itself (empty remaining grid)
+    let mut obs = noop();
+    let again = run_path_sharded_checkpointed(&sh, &opts, &mut obs, Some(&cfg)).unwrap();
+    assert_bitwise(&full, &again, "resume with nothing left to do");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn corrupt_or_truncated_checkpoints_error_naming_the_flag() {
+    let ds = dense_problem();
+    let (sh, p) = shard_of(&ds, "ckpt_bad.mtd3");
+    let opts = path_opts(ScreenerKind::Dpc, PenaltyKind::L21);
+    let dir = tmp("ckpt_bad_dir");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let cfg = CheckpointCfg { dir: dir.clone(), resume: false };
+    let mut obs = noop();
+    run_path_sharded_checkpointed(&sh, &opts, &mut obs, Some(&cfg)).unwrap();
+
+    // flip one byte in the newest record: resume must refuse, loudly
+    let newest = step_path(&dir, opts.ratios.len() - 1);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&newest, &bytes).unwrap();
+    let cfg = CheckpointCfg { dir: dir.clone(), resume: true };
+    let mut obs = noop();
+    let err = run_path_sharded_checkpointed(&sh, &opts, &mut obs, Some(&cfg)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--checkpoint"),
+        "corruption error must name the flag, got: {msg}"
+    );
+
+    // truncation (a crash mid-write of a non-atomic copy) is also caught
+    bytes[mid] ^= 0xff; // restore …
+    bytes.truncate(bytes.len() - 5); // … then tear the tail off
+    std::fs::write(&newest, &bytes).unwrap();
+    let mut obs = noop();
+    let err = run_path_sharded_checkpointed(&sh, &opts, &mut obs, Some(&cfg)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--checkpoint"),
+        "truncation error must name the flag, got: {msg}"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&p).ok();
+}

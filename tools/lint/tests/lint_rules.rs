@@ -120,6 +120,41 @@ fn serve_module_is_library_scope_for_every_rule() {
 }
 
 #[test]
+fn distrib_and_checkpoint_modules_are_library_scope_for_every_rule() {
+    // the cluster layer (PR 10) is the most tempting place to cheat on
+    // the contracts: a coordinator "just timing a worker" with Instant,
+    // a worker thread instead of a process, an ad-hoc float fold while
+    // merging sweep parts. All five rules must treat distrib.rs and
+    // checkpoint.rs exactly like ops.rs — in scope, no allowlists.
+    let files = ["rust/src/coordinator/distrib.rs", "rust/src/coordinator/checkpoint.rs"];
+    for rel in files {
+        let r = lint_source(rel, &fixture("bad_reduction.rs"));
+        assert!(
+            fired(&r).iter().all(|(_, rule)| rule == "kernel-reduction") && r.diags.len() == 2,
+            "{rel} must be kernel-reduction scope: {:#?}",
+            r.diags
+        );
+        let r = lint_source(rel, &fixture("bad_fma.rs"));
+        assert_eq!(r.diags.len(), 2, "{rel} must be no-fma scope: {:#?}", r.diags);
+        let r = lint_source(rel, &fixture("bad_unsafe.rs"));
+        assert_eq!(
+            fired(&r),
+            vec![(4, "confined-unsafe".to_string())],
+            "{rel} must not join the unsafe allowlist: {:#?}",
+            r.diags
+        );
+        let r = lint_source(rel, &fixture("bad_spawn.rs"));
+        assert_eq!(r.diags.len(), 2, "{rel} must be no-spawn scope: {:#?}", r.diags);
+        let r = lint_source(rel, &fixture("bad_nondet.rs"));
+        assert!(
+            fired(&r).iter().all(|(_, rule)| rule == "nondeterminism") && r.diags.len() == 3,
+            "{rel} must not join the timing allowlist: {:#?}",
+            r.diags
+        );
+    }
+}
+
+#[test]
 fn no_spawn_fires_on_spawn_and_scope() {
     let r = lint_source("rust/src/coordinator/cv.rs", &fixture("bad_spawn.rs"));
     assert_eq!(
